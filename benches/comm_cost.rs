@@ -1,0 +1,59 @@
+//! §IV communication-model bench + verification table.
+//!
+//! Prints the paper's uplink cost for every scheme across models and α,
+//! verifying the headline `O(3dq) → O(3kq+3d) → O(3kq+d)` reduction, and
+//! times the real wire codecs (encode+decode round trips).
+//!
+//! Run: `cargo bench --bench comm_cost`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::sparse::codec::{self, cost};
+use fedadam_ssm::sparse::{top_k_indices, SparseVec};
+
+fn main() {
+    // --- cost table (exact, no timing) ----------------------------------
+    println!("=== §IV uplink bits per device/round (q = 32) ===");
+    println!(
+        "{:>10} {:>7} {:>14} {:>14} {:>14} {:>12} {:>14}",
+        "d", "alpha", "FedAdam", "FedAdam-Top", "FedAdam-SSM", "1-bit", "Efficient(16)"
+    );
+    for &d in &[54_314usize, 176_778, 1_663_370, 9_750_922] {
+        for &alpha in &[0.01f64, 0.05, 0.2] {
+            let k = (d as f64 * alpha) as usize;
+            println!(
+                "{:>10} {:>7} {:>14} {:>14} {:>14} {:>12} {:>14}",
+                d,
+                alpha,
+                cost::fedadam_dense(d),
+                cost::fedadam_top(d, k),
+                cost::fedadam_ssm(d, k),
+                cost::onebit(d),
+                cost::uniform(d, 16),
+            );
+            assert!(cost::fedadam_ssm(d, k) < cost::fedadam_top(d, k));
+            assert!(cost::fedadam_top(d, k) < cost::fedadam_dense(d));
+        }
+    }
+    println!("(SSM < Top < dense verified at every point)");
+
+    // --- codec timing ----------------------------------------------------
+    let mut bench = from_env();
+    let mut rng = Rng::new(1);
+    let d = 176_778;
+    for &alpha in &[0.01f64, 0.05, 0.5] {
+        let k = (d as f64 * alpha) as usize;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let idx = top_k_indices(&x, k);
+        let sv = SparseVec::gather(&x, &idx);
+        bench.run(format!("encode d={d} alpha={alpha}"), || {
+            black_box(codec::encode(&sv));
+        });
+        let es = codec::encode(&sv);
+        bench.run(format!("decode d={d} alpha={alpha} ({:?})", es.encoding), || {
+            black_box(codec::decode(&es));
+        });
+    }
+    bench.report("wire codec");
+    println!("\n{}", bench.to_csv());
+}

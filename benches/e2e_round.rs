@@ -1,0 +1,50 @@
+//! End-to-end FL round bench: one full communication round per algorithm
+//! (local training + compression + aggregation + apply), the number the
+//! §Perf pass optimizes.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench e2e_round`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+
+fn main() {
+    let mut bench = from_env();
+    // One round is already ~100ms-scale; cap iterations regardless of budget.
+    bench.max_iters = 20;
+
+    for algo in [
+        "fedadam-ssm",
+        "fedadam-top",
+        "fairness-top",
+        "fedadam",
+        "onebit-adam",
+        "efficient-adam",
+        "fedsgd",
+    ] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "cnn_small".into();
+        cfg.algorithm = algo.into();
+        cfg.rounds = usize::MAX; // stepped manually
+        cfg.devices = 4;
+        cfg.local_epochs = 1;
+        cfg.max_batches_per_epoch = 2;
+        cfg.train_samples = 512;
+        cfg.test_samples = 64;
+        cfg.eval_every = usize::MAX - 1; // exclude eval from the round cost
+        cfg.warmup_rounds = 0; // bench the compression phase of onebit
+        let mut coord = match Coordinator::new(cfg, "artifacts") {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("skipping e2e bench: {e}");
+                return;
+            }
+        };
+        bench.run(format!("round: {algo} (cnn_small, 4 dev, 2 batches)"), || {
+            black_box(coord.step_round().unwrap());
+        });
+    }
+
+    bench.report("end-to-end FL round");
+    println!("\n{}", bench.to_csv());
+}

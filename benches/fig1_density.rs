@@ -1,0 +1,90 @@
+//! Fig.-1 harness in bench form: times the delta-extraction pipeline
+//! (local round → ΔW/ΔM/ΔV → histogram) and re-verifies the magnitude
+//! ordering that justifies the SSM (ΔW ≫ ΔM ≫ ΔV).
+//!
+//! The full figure (density series) is produced by
+//! `cargo run --release --example fig1_density`.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench fig1_density`.
+
+use fedadam_ssm::algorithms::LocalMode;
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::coordinator::device::{Device, LocalRunConfig};
+use fedadam_ssm::data::{partition, synthetic, Partition, Shard};
+use fedadam_ssm::runtime::{Engine, Manifest};
+use fedadam_ssm::tensor;
+
+fn median_log10(x: &[f32]) -> f64 {
+    let mut logs: Vec<f64> = x
+        .iter()
+        .filter(|&&v| v != 0.0)
+        .map(|&v| (v.abs() as f64).log10())
+        .collect();
+    logs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    logs[logs.len() / 2]
+}
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping fig1 bench: {e}");
+            return;
+        }
+    };
+    let mut bench = from_env();
+    bench.max_iters = 10;
+
+    let engine = Engine::load(&manifest, "cnn_small").unwrap();
+    let h = engine.handle();
+    let meta = h.meta().clone();
+    let spec = synthetic::SyntheticSpec::for_input_shape(&meta.input_shape, 1024, 1);
+    let task = synthetic::generate(&spec, 7);
+    let shards = partition(&task.train, 1, Partition::Iid, 7);
+    let mut device = Device::new(
+        0,
+        Shard {
+            data: shards.into_iter().next().unwrap(),
+        },
+        h.clone(),
+    );
+    let run = LocalRunConfig {
+        local_epochs: 1,
+        max_batches_per_epoch: 4,
+        lr: 0.001,
+        use_epoch_program: true,
+    };
+    let w0 = h.init(7).unwrap();
+    let zeros = vec![0.0f32; meta.dim];
+
+    let mut deltas = (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]);
+    bench.run("local round -> (dW,dM,dV) extraction", || {
+        let r = device
+            .train_round(LocalMode::Adam, w0.clone(), zeros.clone(), zeros.clone(), &run)
+            .unwrap();
+        deltas = (
+            tensor::sub(&r.w, &w0),
+            tensor::sub(&r.m, &zeros),
+            tensor::sub(&r.v, &zeros),
+        );
+        black_box(&deltas);
+    });
+    bench.run("log-histogram of 3 x d deltas", || {
+        black_box((
+            median_log10(&deltas.0),
+            median_log10(&deltas.1),
+            median_log10(&deltas.2),
+        ));
+    });
+
+    let (mw, mm, mv) = (
+        median_log10(&deltas.0),
+        median_log10(&deltas.1),
+        median_log10(&deltas.2),
+    );
+    println!("medians: dW {mw:.2}  dM {mm:.2}  dV {mv:.2}");
+    assert!(mw > mm && mm > mv, "Fig. 1 ordering must hold");
+
+    bench.report("Fig. 1 pipeline");
+    println!("\n{}", bench.to_csv());
+}

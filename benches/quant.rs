@@ -1,0 +1,29 @@
+//! Quantizer microbench: 1-bit EF and s-level uniform compressors
+//! (the baselines' hot path) across model dimensions.
+//!
+//! Run: `cargo bench --bench quant`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::quant::{onebit_compress, uniform_compress, ErrorFeedback};
+use fedadam_ssm::rng::Rng;
+
+fn main() {
+    let mut bench = from_env();
+    let mut rng = Rng::new(3);
+
+    for &d in &[54_314usize, 176_778, 1_663_370] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let mut ef = ErrorFeedback::new(d);
+        bench.run(format!("onebit+EF d={d}"), || {
+            black_box(onebit_compress(&x, &mut ef));
+        });
+        for &s in &[4u32, 16, 256] {
+            bench.run(format!("uniform s={s} d={d}"), || {
+                black_box(uniform_compress(&x, s));
+            });
+        }
+    }
+
+    bench.report("quantizers");
+    println!("\n{}", bench.to_csv());
+}

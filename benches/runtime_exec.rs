@@ -1,0 +1,86 @@
+//! PJRT dispatch bench (DESIGN.md §Perf L2): per-program latency of the
+//! AOT artifacts, including the per-batch `train` vs fused `epoch`
+//! comparison that motivates the scan variant.
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench runtime_exec`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::runtime::{Engine, Manifest};
+
+fn main() {
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime bench: {e}");
+            return;
+        }
+    };
+    let mut bench = from_env();
+    let mut rng = Rng::new(5);
+
+    for model in ["mlp_tiny", "cnn_small"] {
+        if !manifest.models.contains_key(model) {
+            continue;
+        }
+        let engine = Engine::load(&manifest, model).unwrap();
+        let h = engine.handle();
+        let meta = h.meta().clone();
+        let d = meta.dim;
+        let row = meta.row();
+        let b = meta.batch;
+        let nb = meta.epoch_batches;
+
+        let w = h.init(0).unwrap();
+        let zeros = vec![0.0f32; d];
+        let x: Vec<f32> = (0..b * row).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+        let xs: Vec<f32> = (0..nb).flat_map(|_| x.clone()).collect();
+        let ys: Vec<i32> = (0..nb).flat_map(|_| y.clone()).collect();
+
+        bench.run(format!("{model}: init"), || {
+            black_box(h.init(1).unwrap());
+        });
+        bench.run(format!("{model}: train step (B={b})"), || {
+            black_box(
+                h.train_step(w.clone(), zeros.clone(), zeros.clone(), x.clone(), y.clone(), 1e-3)
+                    .unwrap(),
+            );
+        });
+        bench.run(format!("{model}: epoch ({nb} batches, 1 dispatch)"), || {
+            black_box(
+                h.epoch_step(w.clone(), zeros.clone(), zeros.clone(), xs.clone(), ys.clone(), 1e-3)
+                    .unwrap(),
+            );
+        });
+        bench.run(format!("{model}: {nb}x train ({nb} dispatches)"), || {
+            let mut s = (w.clone(), zeros.clone(), zeros.clone());
+            for _ in 0..nb {
+                let r = h
+                    .train_step(s.0, s.1, s.2, x.clone(), y.clone(), 1e-3)
+                    .unwrap();
+                s = (r.0, r.1, r.2);
+            }
+            black_box(s);
+        });
+
+        let e = meta.eval_batch;
+        let ex: Vec<f32> = (0..e * row).map(|_| rng.normal() as f32).collect();
+        let ey: Vec<i32> = (0..e).map(|i| (i % 10) as i32).collect();
+        let wt = vec![1.0f32; e];
+        bench.run(format!("{model}: eval batch (E={e})"), || {
+            black_box(h.eval_batch(&w, ex.clone(), ey.clone(), wt.clone()).unwrap());
+        });
+
+        let dw: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        bench.run(format!("{model}: xla sparsify k=d/20"), || {
+            black_box(
+                h.sparsify(dw.clone(), dw.clone(), dw.clone(), (d / 20) as i32)
+                    .unwrap(),
+            );
+        });
+    }
+
+    bench.report("PJRT program dispatch");
+    println!("\n{}", bench.to_csv());
+}

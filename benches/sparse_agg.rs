@@ -1,0 +1,57 @@
+//! Server aggregation microbench (DESIGN.md §Perf L3).
+//!
+//! FedAvg reduce over N device uploads: sparse accumulation (`O(Σ nnz)`)
+//! vs densified accumulation (`O(N·d)`) — the win that keeps the server
+//! out of the critical path at low α.
+//!
+//! Run: `cargo bench --bench sparse_agg`.
+
+use fedadam_ssm::algorithms::{Recon, Upload};
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::coordinator::server::aggregate;
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::sparse::{top_k_indices, SparseVec};
+
+fn make_uploads(d: usize, n: usize, k: usize, rng: &mut Rng, dense: bool) -> Vec<Upload> {
+    (0..n)
+        .map(|_| {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let dw = if dense {
+                let idx = top_k_indices(&x, k);
+                Recon::Dense(SparseVec::gather(&x, &idx).to_dense())
+            } else {
+                let idx = top_k_indices(&x, k);
+                Recon::Sparse(SparseVec::gather(&x, &idx))
+            };
+            Upload {
+                dw,
+                dm: None,
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut bench = from_env();
+    let mut rng = Rng::new(7);
+    let d = 176_778; // resnet_mini
+    let n = 20; // paper's device count
+
+    for &alpha in &[0.01f64, 0.05, 0.2] {
+        let k = (d as f64 * alpha) as usize;
+        let sparse = make_uploads(d, n, k, &mut rng, false);
+        let dense = make_uploads(d, n, k, &mut rng, true);
+        bench.run(format!("sparse reduce N={n} d={d} alpha={alpha}"), || {
+            black_box(aggregate(&sparse, d));
+        });
+        bench.run(format!("dense reduce  N={n} d={d} alpha={alpha}"), || {
+            black_box(aggregate(&dense, d));
+        });
+    }
+
+    bench.report("server FedAvg aggregation");
+    println!("\n{}", bench.to_csv());
+}

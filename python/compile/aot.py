@@ -1,0 +1,147 @@
+"""AOT compiler: lower every Layer-2 program to HLO text + manifest.
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out-dir ../artifacts \
+        --models cnn_small,vgg_mini,resnet_mini [--batch 32] [--eval-batch 256]
+
+Emits one ``<prog>_<model>.hlo.txt`` per (program, model) and a
+``manifest.json`` the rust runtime reads to learn shapes, parameter counts
+and artifact paths.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  Programs are lowered with ``return_tuple=True``; the rust side
+unwraps with ``to_tupleN``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import train
+from compile.models import get_model
+
+DEFAULT_MODELS = "mlp_tiny,cnn_small"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _tuplize(fn):
+    """Wrap so the output is a flat tuple (stable rust-side unwrap order)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return tuple(out) if isinstance(out, (tuple, list)) else (out,)
+
+    return wrapped
+
+
+def lower_program(fn, example_args):
+    return jax.jit(_tuplize(fn)).lower(*example_args)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_model(model_name: str, out_dir: str, batch: int, eval_batch: int, epoch_batches: int):
+    """Export all programs for one model; returns its manifest entry."""
+    model = get_model(model_name)
+    d = model.dim
+    ish = model.input_shape
+    flat = f32(d)
+    programs = {
+        "init": (train.make_init(model), (i32(),)),
+        "train": (
+            train.make_train_step(model),
+            (flat, flat, flat, f32(batch, *ish), i32(batch), f32()),
+        ),
+        "epoch": (
+            train.make_epoch_step(model, epoch_batches),
+            (flat, flat, flat, f32(epoch_batches, batch, *ish), i32(epoch_batches, batch), f32()),
+        ),
+        "eval": (
+            train.make_eval(model),
+            (flat, f32(eval_batch, *ish), i32(eval_batch), f32(eval_batch)),
+        ),
+        "sgd": (train.make_sgd_step(model), (flat, f32(batch, *ish), i32(batch), f32())),
+        "grads": (train.make_grads(model), (flat, f32(batch, *ish), i32(batch))),
+        "sparsify": (train.make_sparsify(), (flat, flat, flat, i32())),
+    }
+    artifacts = {}
+    for prog, (fn, args) in programs.items():
+        fname = f"{prog}_{model_name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = to_hlo_text(lower_program(fn, args))
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts[prog] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        }
+        print(f"  {fname}: {len(text)} chars", file=sys.stderr)
+    return {
+        "dim": d,
+        "input_shape": list(ish),
+        "num_classes": model.num_classes,
+        "batch": batch,
+        "eval_batch": eval_batch,
+        "epoch_batches": epoch_batches,
+        "params": [{"name": s.name, "shape": list(s.shape)} for s in model.specs],
+        "artifacts": artifacts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=DEFAULT_MODELS)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--epoch-batches", type=int, default=4)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text/v1",
+        "adam": {"beta1": train.BETA1, "beta2": train.BETA2, "eps": train.EPS},
+        "models": {},
+    }
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"[aot] exporting {name}", file=sys.stderr)
+        manifest["models"][name] = export_model(
+            name, args.out_dir, args.batch, args.eval_batch, args.epoch_batches
+        )
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest with {len(manifest['models'])} models", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

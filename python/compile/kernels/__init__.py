@@ -1,0 +1,32 @@
+"""Layer-1 Pallas kernels for FedAdam-SSM.
+
+Every kernel here is authored with ``jax.experimental.pallas`` and lowered
+with ``interpret=True`` so the resulting HLO runs on any PJRT backend
+(including the rust CPU client).  Real-TPU lowering would emit Mosaic
+custom-calls that the CPU plugin cannot execute; on TPU these kernels are
+compile-only targets and their numerics are validated through the interpret
+path against the pure-jnp oracles in :mod:`compile.kernels.ref`.
+
+Kernels
+-------
+- :func:`adam_update`       fused Adam moment + parameter update (paper eq. 3-5)
+- :func:`ssm_sparsify3`     shared-sparse-mask application to (dW, dM, dV) (eq. 10-12)
+- :func:`topk_threshold`    k-th largest |x| (the SSM selection rule, eq. 28)
+- :func:`onebit_quantize`   sign quantization with error feedback (1-bit Adam baseline)
+- :func:`uniform_quantize`  s-level uniform quantization (Efficient-Adam baseline)
+"""
+
+from compile.kernels.adam_update import adam_update
+from compile.kernels.ssm_sparsify import ssm_sparsify3, apply_mask
+from compile.kernels.topk import topk_threshold, topk_mask
+from compile.kernels.quantize import onebit_quantize, uniform_quantize
+
+__all__ = [
+    "adam_update",
+    "ssm_sparsify3",
+    "apply_mask",
+    "topk_threshold",
+    "topk_mask",
+    "onebit_quantize",
+    "uniform_quantize",
+]

@@ -1,0 +1,119 @@
+"""Layer-1 performance model: VMEM footprint + roofline estimates.
+
+interpret=True gives CPU-numpy timings which are NOT a TPU proxy, so the
+perf pass for L1 optimizes *structure*: bytes moved per element, operands
+resident in VMEM per block, and arithmetic intensity against the TPU
+roofline.  This module computes those numbers for every kernel and block
+size; ``python -m compile.kernels.analysis`` prints the §Perf table used
+in DESIGN.md / EXPERIMENTS.md.
+
+Model (TPU v4 per-core, representative): 16 MiB VMEM, ~1.2 TB/s HBM,
+VPU ~4.4e12 f32 FLOP/s (element-wise path; the MXU is irrelevant here —
+all L1 kernels are bandwidth-bound).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+VMEM_BYTES = 16 * 2**20
+HBM_BW = 1.2e12  # bytes/s
+VPU_FLOPS = 4.4e12  # f32 element-wise
+
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProfile:
+    name: str
+    #: f32 operands streamed in per element of the flat vector.
+    reads_per_elem: int
+    #: f32 operands streamed out per element.
+    writes_per_elem: int
+    #: approximate FLOPs per element (fused arithmetic).
+    flops_per_elem: int
+    #: operand blocks resident simultaneously (in + out + scratch).
+    resident_blocks: int
+
+    def vmem_footprint(self, block: int) -> int:
+        """Bytes of VMEM at the chosen block size."""
+        return self.resident_blocks * block * F32
+
+    def fits_vmem(self, block: int) -> bool:
+        # Leave half of VMEM for double buffering + compiler scratch.
+        return self.vmem_footprint(block) * 2 <= VMEM_BYTES
+
+    def bytes_per_elem(self) -> int:
+        return (self.reads_per_elem + self.writes_per_elem) * F32
+
+    def arithmetic_intensity(self) -> float:
+        """FLOP per HBM byte — far below the ridge => bandwidth-bound."""
+        return self.flops_per_elem / self.bytes_per_elem()
+
+    def roofline_time(self, d: int) -> float:
+        """Lower-bound runtime (s) on the memory roofline."""
+        mem = d * self.bytes_per_elem() / HBM_BW
+        compute = d * self.flops_per_elem / VPU_FLOPS
+        return max(mem, compute)
+
+    def bound(self) -> str:
+        ridge = VPU_FLOPS / HBM_BW  # FLOP/byte at the roofline ridge
+        return "memory" if self.arithmetic_intensity() < ridge else "compute"
+
+
+#: The kernels as written in this package (single fused pass each).
+PROFILES = [
+    # adam_update: reads w,m,v,g; writes w',m',v'; ~10 flops (2 fma, mul,
+    # add, sqrt≈4, div, sub).
+    KernelProfile("adam_update", 4, 3, 10, 7),
+    # ssm_sparsify3: reads dw,dm,dv (+tau scalar); writes 3 outs; compare+3 muls.
+    KernelProfile("ssm_sparsify3", 3, 3, 4, 6),
+    # topk_mask compare pass.
+    KernelProfile("topk_mask", 1, 1, 2, 2),
+    # onebit: reads x,e; writes q,e'; add, cmp, select, sub.
+    KernelProfile("onebit_quantize", 2, 2, 4, 4),
+    # uniform: read x; write q; div, clamp, fma, round, fma.
+    KernelProfile("uniform_quantize", 1, 1, 6, 2),
+]
+
+
+def naive_adam_passes() -> int:
+    """Bytes/elem of an UNFUSED Adam (separate m, v, w updates + temps):
+    m-pass (r m,g; w m), v-pass (r v,g; w v), w-pass (r w,m,v; w w)."""
+    return (2 + 1 + 2 + 1 + 3 + 1) * F32
+
+
+def report(block: int = 64 * 1024, d: int = 9_750_922) -> str:
+    """Markdown §Perf table for dimension `d` (default: VGG-11)."""
+    lines = [
+        f"L1 roofline model at d={d:,} (VGG-11), block={block} f32 "
+        f"({block * F32 // 1024} KiB):",
+        "",
+        "| kernel | B/elem | resident VMEM | AI (FLOP/B) | bound | roofline t | vs unfused |",
+        "|--------|--------|---------------|-------------|-------|------------|------------|",
+    ]
+    for p in PROFILES:
+        fit = "OK" if p.fits_vmem(block) else "OVERFLOW"
+        speedup = (
+            f"{naive_adam_passes() / p.bytes_per_elem():.2f}x"
+            if p.name == "adam_update"
+            else "-"
+        )
+        lines.append(
+            f"| {p.name} | {p.bytes_per_elem()} | "
+            f"{p.vmem_footprint(block) / 2**20:.2f} MiB ({fit}) | "
+            f"{p.arithmetic_intensity():.2f} | {p.bound()} | "
+            f"{p.roofline_time(d) * 1e6:.0f} µs | {speedup} |"
+        )
+    ridge = VPU_FLOPS / HBM_BW
+    lines += [
+        "",
+        f"ridge point {ridge:.1f} FLOP/B — every kernel sits below it: the "
+        "correct optimization is minimizing bytes/element, which the fused "
+        "single-pass formulation achieves (1 read + 1 write per operand).",
+    ]
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

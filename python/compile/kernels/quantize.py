@@ -1,0 +1,113 @@
+"""Quantization kernels for the baseline algorithms (paper §VII-A).
+
+- :func:`onebit_quantize` — the compression step of **1-bit Adam** [29]:
+  error-compensated sign quantization.  The compressed representation is
+  ``scale * sign(x + e)`` where ``scale = mean(|x + e|)`` and the new error
+  feedback memory is ``(x + e) - scale * sign(x + e)``.
+- :func:`uniform_quantize` — the two-way compressor of **Efficient-Adam**
+  [28]: s-level uniform quantization on ``[-max|x|, max|x|]`` with
+  deterministic rounding (the rust L3 mirrors both, bit-packing included).
+
+Both kernels are single fused element-wise passes; the global reductions
+(mean / max of ``|x|``) run as XLA reductions before the Pallas pass, same
+structure as the SSM kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.adam_update import BLOCK
+
+
+def _onebit_kernel(x_ref, e_ref, s_ref, q_ref, eo_ref):
+    c = x_ref[...] + e_ref[...]
+    scale = s_ref[0]
+    # sign(0) := +1 so every lane carries exactly one bit.
+    q = jnp.where(c >= 0.0, scale, -scale)
+    q_ref[...] = q
+    eo_ref[...] = c - q
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def onebit_quantize(x, err, *, block=BLOCK):
+    """Error-compensated 1-bit (sign) quantization.
+
+    Args:
+      x: ``f32[d]`` vector to compress.
+      err: ``f32[d]`` error-feedback memory from the previous round.
+
+    Returns:
+      ``(q, err')`` where ``q = scale * sign(x + err)`` is the dequantized
+      representation (1 bit/lane + one f32 scale on the wire) and ``err'``
+      is the updated memory.
+    """
+    d = x.shape[0]
+    c = x + err
+    scale = jnp.mean(jnp.abs(c))
+    dpad = (d + block - 1) // block * block
+    pad = dpad - d
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    ep = jnp.pad(err, (0, pad)) if pad else err
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    sspec = pl.BlockSpec((1,), lambda i: (0,))
+    q, eo = pl.pallas_call(
+        _onebit_kernel,
+        grid=(dpad // block,),
+        in_specs=[spec, spec, sspec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((dpad,), jnp.float32)] * 2,
+        interpret=True,
+    )(xp, ep, scale[None])
+    if pad:
+        q, eo = q[:d], eo[:d]
+    return q, eo
+
+
+def _uniform_kernel(x_ref, p_ref, q_ref):
+    # p = [scale, levels]; levels = s - 1 bins over [-scale, scale].
+    scale = p_ref[0]
+    levels = p_ref[1]
+    x = x_ref[...]
+    # Guard scale == 0 (all-zero input): emit zeros.
+    safe = jnp.maximum(scale, 1e-30)
+    t = jnp.clip(x / safe, -1.0, 1.0)  # [-1, 1]
+    q = jnp.round((t + 1.0) * 0.5 * levels)  # {0..levels}
+    deq = (q / levels * 2.0 - 1.0) * safe
+    q_ref[...] = jnp.where(scale > 0.0, deq, jnp.zeros_like(x))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def uniform_quantize(x, s_levels, *, block=BLOCK):
+    """Deterministic s-level uniform quantization over ``[-max|x|, max|x|]``.
+
+    Args:
+      x: ``f32[d]``.
+      s_levels: number of representable values ``s >= 2`` (wire cost
+        ``ceil(log2 s)`` bits/lane + one f32 scale); may be traced.
+
+    Returns:
+      Dequantized ``f32[d]`` (the value the server reconstructs).
+    """
+    d = x.shape[0]
+    scale = jnp.max(jnp.abs(x))
+    levels = jnp.asarray(s_levels, jnp.float32) - 1.0
+    dpad = (d + block - 1) // block * block
+    pad = dpad - d
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    pspec = pl.BlockSpec((2,), lambda i: (0,))
+    params = jnp.stack([scale, levels])
+    q = pl.pallas_call(
+        _uniform_kernel,
+        grid=(dpad // block,),
+        in_specs=[spec, pspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((dpad,), jnp.float32),
+        interpret=True,
+    )(xp, params)
+    return q[:d] if pad else q

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the CORE correctness signal: each Pallas kernel in this package
+must agree with its oracle to float32 tolerance across the shape/dtype sweep
+in ``python/tests/test_kernels.py`` (hypothesis drives the sweep).  The
+oracles are deliberately written as straight-line jnp — no Pallas, no
+blocking, no padding — so a disagreement always implicates the kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def adam_update_ref(w, m, v, g, eta, beta1=0.9, beta2=0.999, eps=1e-6):
+    """Paper eq. 3-5 (eps inside the sqrt, no bias correction)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    w_new = w - eta * m_new / jnp.sqrt(v_new + eps)
+    return w_new, m_new, v_new
+
+
+def topk_threshold_ref(x, k):
+    """k-th largest |x| via a full sort."""
+    mag = jnp.abs(x)
+    k = int(k)
+    k = max(1, min(k, x.shape[0]))
+    return jnp.sort(mag)[::-1][k - 1]
+
+
+def topk_mask_ref(x, k):
+    """Binary mask keeping every element with |x| >= (k-th largest |x|)."""
+    tau = topk_threshold_ref(x, k)
+    return (jnp.abs(x) >= tau).astype(jnp.float32)
+
+
+def ssm_sparsify3_ref(dw, dm, dv, k):
+    """Eq. 10-12 with the optimal SSM of eq. 28 (mask from |dw|)."""
+    mask = topk_mask_ref(dw, k)
+    return dw * mask, dm * mask, dv * mask
+
+
+def onebit_quantize_ref(x, err):
+    """Error-compensated sign quantization (1-bit Adam compressor)."""
+    c = x + err
+    scale = jnp.mean(jnp.abs(c))
+    q = jnp.where(c >= 0.0, scale, -scale)
+    return q, c - q
+
+
+def uniform_quantize_ref(x, s_levels):
+    """Deterministic s-level uniform quantization on [-max|x|, max|x|]."""
+    scale = jnp.max(jnp.abs(x))
+    levels = jnp.float32(s_levels) - 1.0
+    safe = jnp.maximum(scale, 1e-30)
+    t = jnp.clip(x / safe, -1.0, 1.0)
+    q = jnp.round((t + 1.0) * 0.5 * levels)
+    deq = (q / levels * 2.0 - 1.0) * safe
+    return jnp.where(scale > 0.0, deq, jnp.zeros_like(x))

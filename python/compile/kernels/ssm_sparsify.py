@@ -1,0 +1,89 @@
+"""Shared-sparse-mask sparsification (paper eq. 10-12, 28) as Pallas kernels.
+
+FedAdam-SSM uploads ``(dW, dM, dV)`` all masked by ONE mask — the top-k mask
+of ``|dW|`` (eq. 28).  The hot loop is therefore: one global threshold
+reduction over ``|dW|`` followed by a *single* fused element-wise pass that
+masks all three vectors.  Fusing the three mask-applies into one kernel
+reads ``dW`` once for both the compare and the multiply, which matters on a
+bandwidth-bound roofline (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.adam_update import BLOCK
+from compile.kernels.topk import topk_threshold
+
+
+def _sparsify3_kernel(dw_ref, dm_ref, dv_ref, t_ref, wo_ref, mo_ref, vo_ref):
+    dw = dw_ref[...]
+    keep = (jnp.abs(dw) >= t_ref[0]).astype(jnp.float32)
+    wo_ref[...] = dw * keep
+    mo_ref[...] = dm_ref[...] * keep
+    vo_ref[...] = dv_ref[...] * keep
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ssm_sparsify3(dw, dm, dv, k, *, block=BLOCK):
+    """Apply the SSM (top-k mask of ``|dw|``) to all three update vectors.
+
+    Args:
+      dw, dm, dv: ``f32[d]`` updates of local model parameters and first /
+        second moment estimates (paper's \\Delta W_n^t, \\Delta M_n^t,
+        \\Delta V_n^t).
+      k: scalar int32 number of kept coordinates; may be traced (runtime
+        sparsification-ratio knob, Fig. 5).
+
+    Returns:
+      ``(dw_hat, dm_hat, dv_hat)`` — the sparse triple of eq. 10-12.
+    """
+    d = dw.shape[0]
+    tau = topk_threshold(dw, k)
+    dpad = (d + block - 1) // block * block
+    pad = dpad - d
+
+    def padf(x):
+        return jnp.pad(x, (0, pad)) if pad else x
+
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    tspec = pl.BlockSpec((1,), lambda i: (0,))
+    outs = pl.pallas_call(
+        _sparsify3_kernel,
+        grid=(dpad // block,),
+        in_specs=[spec, spec, spec, tspec],
+        out_specs=[spec, spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((dpad,), jnp.float32)] * 3,
+        interpret=True,
+    )(padf(dw), padf(dm), padf(dv), tau[None])
+    if pad:
+        outs = tuple(o[:d] for o in outs)
+    return tuple(outs)
+
+
+def _apply_mask_kernel(x_ref, m_ref, o_ref):
+    o_ref[...] = x_ref[...] * m_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def apply_mask(x, mask, *, block=BLOCK):
+    """Element-wise ``x * mask`` as a blocked Pallas pass (eq. 6)."""
+    d = x.shape[0]
+    dpad = (d + block - 1) // block * block
+    pad = dpad - d
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    mp = jnp.pad(mask, (0, pad)) if pad else mask
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        _apply_mask_kernel,
+        grid=(dpad // block,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((dpad,), jnp.float32),
+        interpret=True,
+    )(xp, mp)
+    return out[:d] if pad else out

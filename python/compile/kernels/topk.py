@@ -1,0 +1,82 @@
+"""Top-k selection utilities (the SSM selection rule, paper eq. 6-7, 28).
+
+The shared sparse mask of FedAdam-SSM is the top-k mask of ``|dW|``
+(eq. 28).  Selection splits into two parts:
+
+1. :func:`topk_threshold` — find ``tau``, the k-th largest ``|x|``.  This is
+   a global reduction; we express it with a full sort (XLA's sort is a
+   bitonic network on TPU) followed by a dynamic slice so that **k can be a
+   runtime scalar** — the sparsification-ratio sweep of paper Fig. 5 runs
+   against a single compiled artifact.
+2. :func:`topk_mask` — the embarrassingly-parallel compare against ``tau``,
+   written as a Pallas kernel (it fuses with the mask-apply pass in
+   :mod:`compile.kernels.ssm_sparsify`).
+
+Tie handling: elements equal to ``tau`` are all kept, so the mask can hold
+slightly more than ``k`` ones when ``|x|`` has duplicates.  The rust L3
+implementation (``sparse::topk``) breaks ties by index to give exactly-k
+masks; the cross-layer tests treat masks as equivalent when the kept value
+*sets* agree on non-tied inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.kernels.adam_update import BLOCK
+
+
+@jax.jit
+def topk_threshold(x, k):
+    """Return ``tau`` = k-th largest value of ``|x|`` (runtime ``k``).
+
+    Args:
+      x: ``f32[d]``.
+      k: scalar int32 in ``[1, d]``; may be traced.
+
+    Returns:
+      Scalar f32 threshold such that ``|x| >= tau`` keeps the top-k
+      (ties included).
+    """
+    mag = jnp.abs(x)
+    sorted_desc = jnp.sort(mag)[::-1]
+    k = jnp.clip(jnp.asarray(k, jnp.int32), 1, x.shape[0])
+    return jax.lax.dynamic_index_in_dim(sorted_desc, k - 1, keepdims=False)
+
+
+def _mask_kernel(x_ref, t_ref, o_ref):
+    o_ref[...] = (jnp.abs(x_ref[...]) >= t_ref[0]).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def topk_mask(x, k, *, block=BLOCK):
+    """Binary f32 mask of the top-k elements of ``|x|`` (ties kept).
+
+    The threshold is computed once (sort) and the compare runs as a blocked
+    Pallas pass.
+    """
+    d = x.shape[0]
+    tau = topk_threshold(x, k)
+    dpad = (d + block - 1) // block * block
+    pad = dpad - d
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    tspec = pl.BlockSpec((1,), lambda i: (0,))
+    mask = pl.pallas_call(
+        _mask_kernel,
+        grid=(dpad // block,),
+        in_specs=[spec, tspec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((dpad,), jnp.float32),
+        interpret=True,
+    )(xp, tau[None])
+    if pad:
+        mask = mask[:d]
+    # Padded lanes are zero (|0| >= tau only if tau == 0; guard below).
+    # When tau == 0 every real element is kept anyway, so zeroing the pad
+    # region keeps the mask semantics intact.
+    return mask

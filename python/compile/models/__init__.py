@@ -1,0 +1,45 @@
+"""Layer-2 model zoo (paper §VII-A workloads).
+
+Every model is a :class:`compile.models.common.Model`: a named list of
+parameter specs plus a pure ``apply(flat_params, x) -> logits`` function.
+All parameters live in ONE flat ``f32[d]`` vector so the rust runtime's ABI
+is a plain buffer; the unflatten happens inside the traced function and is
+free after XLA fusion.
+
+Registry
+--------
+- ``cnn`` / ``cnn_small``        paper's Fashion-MNIST CNN (2x conv5x5 + 2 FC)
+- ``vgg11`` / ``vgg_mini``       VGG-11 for CIFAR-10-shaped inputs
+- ``resnet18`` / ``resnet_mini`` ResNet-18 (GroupNorm variant) for SVHN-shaped inputs
+- ``mlp_tiny``                   2-layer MLP used by fast unit tests
+
+The ``*_small`` / ``*_mini`` variants shrink channel widths so the CPU +
+interpret-mode-Pallas testbed trains in minutes; the full-size definitions
+are identical code with the paper's widths (DESIGN.md §Substitutions).
+"""
+
+from compile.models.common import Model, ParamSpec
+from compile.models.cnn import make_cnn, make_mlp_tiny
+from compile.models.vgg import make_vgg
+from compile.models.resnet import make_resnet
+
+REGISTRY = {
+    "mlp_tiny": lambda: make_mlp_tiny(),
+    "cnn_small": lambda: make_cnn(width=(8, 16), hidden=64, name="cnn_small"),
+    "cnn": lambda: make_cnn(width=(32, 64), hidden=512, name="cnn"),
+    "vgg_mini": lambda: make_vgg(scale=8, name="vgg_mini"),
+    "vgg11": lambda: make_vgg(scale=1, name="vgg11"),
+    "resnet_mini": lambda: make_resnet(scale=8, name="resnet_mini"),
+    "resnet18": lambda: make_resnet(scale=1, name="resnet18"),
+}
+
+
+def get_model(name: str) -> Model:
+    """Instantiate a model from the registry by name."""
+    try:
+        return REGISTRY[name]()
+    except KeyError:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}") from None
+
+
+__all__ = ["Model", "ParamSpec", "REGISTRY", "get_model"]

@@ -1,0 +1,78 @@
+"""The paper's Fashion-MNIST CNN (§VII-A) and a tiny MLP for unit tests.
+
+Paper description: "two 5x5 convolutional layers (each followed by ReLU
+activation and a 2x2 max pooling layer), two fully connected layers, and a
+final softmax output layer."  Channel widths are not given; we use the
+conventional 32/64 + 512-hidden configuration for ``cnn`` and an 8/16 +
+64-hidden configuration for the CPU-scale ``cnn_small``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from compile.models.common import (
+    Model,
+    ParamSpec,
+    conv2d,
+    dense,
+    max_pool,
+    softmax_xent,  # noqa: F401  (re-exported for tests)
+)
+
+
+def make_cnn(width=(32, 64), hidden=512, name="cnn", input_shape=(28, 28, 1), classes=10):
+    """Build the 2-conv CNN over ``input_shape`` images."""
+    c1, c2 = width
+    h, w, cin = input_shape
+    # Two 2x2 max-pools halve H and W twice (SAME conv keeps size).
+    fh, fw = h // 4, w // 4
+    feat = fh * fw * c2
+    specs = (
+        ParamSpec("conv1/kernel", (5, 5, cin, c1), "he"),
+        ParamSpec("conv1/bias", (c1,), "zeros"),
+        ParamSpec("conv2/kernel", (5, 5, c1, c2), "he"),
+        ParamSpec("conv2/bias", (c2,), "zeros"),
+        ParamSpec("fc1/kernel", (feat, hidden), "he"),
+        ParamSpec("fc1/bias", (hidden,), "zeros"),
+        ParamSpec("fc2/kernel", (hidden, classes), "he"),
+        ParamSpec("fc2/bias", (classes,), "zeros"),
+    )
+
+    def apply(flat, x):
+        model = _self[0]
+        k1, b1, k2, b2, f1k, f1b, f2k, f2b = model.unflatten(flat)
+        y = jax.nn.relu(conv2d(x, k1, b1))
+        y = max_pool(y)
+        y = jax.nn.relu(conv2d(y, k2, b2))
+        y = max_pool(y)
+        y = y.reshape(y.shape[0], -1)
+        y = jax.nn.relu(dense(y, f1k, f1b))
+        return dense(y, f2k, f2b)
+
+    model = Model(name=name, specs=specs, apply=apply, input_shape=input_shape, num_classes=classes)
+    _self = [model]
+    return model
+
+
+def make_mlp_tiny(name="mlp_tiny", input_shape=(8, 8, 1), classes=10, hidden=32):
+    """Small MLP: the fast path for unit tests and the theory harness."""
+    h, w, c = input_shape
+    feat = h * w * c
+    specs = (
+        ParamSpec("fc1/kernel", (feat, hidden), "he"),
+        ParamSpec("fc1/bias", (hidden,), "zeros"),
+        ParamSpec("fc2/kernel", (hidden, classes), "he"),
+        ParamSpec("fc2/bias", (classes,), "zeros"),
+    )
+
+    def apply(flat, x):
+        model = _self[0]
+        f1k, f1b, f2k, f2b = model.unflatten(flat)
+        y = x.reshape(x.shape[0], -1)
+        y = jax.nn.relu(dense(y, f1k, f1b))
+        return dense(y, f2k, f2b)
+
+    model = Model(name=name, specs=specs, apply=apply, input_shape=input_shape, num_classes=classes)
+    _self = [model]
+    return model

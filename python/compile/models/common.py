@@ -1,0 +1,155 @@
+"""Shared model machinery: flat-parameter ABI, layers, losses.
+
+The rust coordinator only ever sees ``f32[d]`` buffers, so a model here is:
+
+- ``specs``: ordered list of :class:`ParamSpec` (name, shape, init kind);
+- ``apply(flat, x)``: pure forward pass that unflattens internally;
+- ``input_shape`` / ``num_classes``: workload metadata for the manifest.
+
+Initialization follows He-normal for conv/dense kernels, zeros for biases,
+ones for norm scales — deterministic given a PRNG key, and exported as its
+own HLO program so the *rust* side owns the seed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One named parameter tensor inside the flat vector."""
+
+    name: str
+    shape: tuple
+    init: str  # "he" | "zeros" | "ones"
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """A functional model over a single flat parameter vector."""
+
+    name: str
+    specs: tuple
+    apply: Callable  # (flat f32[d], x f32[B,...]) -> logits f32[B,C]
+    input_shape: tuple
+    num_classes: int
+
+    @property
+    def dim(self) -> int:
+        """Total parameter count ``d``."""
+        return sum(s.size for s in self.specs)
+
+    def unflatten(self, flat):
+        """Split ``f32[d]`` into the per-parameter tensors."""
+        out = []
+        off = 0
+        for s in self.specs:
+            out.append(lax.dynamic_slice_in_dim(flat, off, s.size).reshape(s.shape))
+            off += s.size
+        return out
+
+    def init_flat(self, key):
+        """Deterministic flat initialization (He / zeros / ones)."""
+        chunks = []
+        for i, s in enumerate(self.specs):
+            k = jax.random.fold_in(key, i)
+            if s.init == "he":
+                fan_in = int(math.prod(s.shape[:-1])) or 1
+                std = math.sqrt(2.0 / fan_in)
+                chunks.append(jax.random.normal(k, s.shape, jnp.float32).reshape(-1) * std)
+            elif s.init == "zeros":
+                chunks.append(jnp.zeros((s.size,), jnp.float32))
+            elif s.init == "ones":
+                chunks.append(jnp.ones((s.size,), jnp.float32))
+            else:  # pragma: no cover - registry is static
+                raise ValueError(f"unknown init {s.init}")
+        return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Layers (NHWC, HWIO kernels)
+# ---------------------------------------------------------------------------
+
+DIMNUMS = ("NHWC", "HWIO", "NHWC")
+
+
+def conv2d(x, kernel, bias, stride=1, padding="SAME"):
+    """3/5-wide conv + bias, NHWC."""
+    y = lax.conv_general_dilated(
+        x,
+        kernel,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=DIMNUMS,
+    )
+    return y + bias
+
+
+def max_pool(x, window=2, stride=2):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        "VALID",
+    )
+
+
+def avg_pool_global(x):
+    """Global average pool NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def group_norm(x, scale, bias, groups=8, eps=1e-5):
+    """GroupNorm (running-stats-free BatchNorm substitute, DESIGN.md).
+
+    BatchNorm's running statistics are extra cross-device state that the
+    paper's algorithms never aggregate; GroupNorm is a pure function of the
+    parameters, which keeps the FL state exactly (W, M, V) as in the paper.
+    """
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    while c % g:
+        g -= 1
+    xg = x.reshape(n, h, w, g, c // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) / jnp.sqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def dense(x, kernel, bias):
+    return x @ kernel + bias
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; ``labels`` int32 class ids."""
+    logz = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logz, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def weighted_xent_and_correct(logits, labels, weights):
+    """(weighted loss sum, weighted correct count) for padded eval batches."""
+    logz = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logz, labels[:, None], axis=1)[:, 0]
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    correct = (pred == labels).astype(jnp.float32)
+    return jnp.sum(nll * weights), jnp.sum(correct * weights)

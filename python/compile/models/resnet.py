@@ -1,0 +1,100 @@
+"""ResNet-18 (GroupNorm variant) for SVHN-shaped inputs (paper §VII-A).
+
+Paper description: "a 2x2 convolutional layer, two pooling layers, eight
+residual units (each with two 3x3 convolutional layers), a fully connected
+layer, and a final softmax output layer" — i.e. standard ResNet-18 with the
+CIFAR-style 3x3 stem.  BatchNorm is replaced by GroupNorm so the federated
+state is exactly (W, M, V) — no running statistics to aggregate
+(DESIGN.md §Substitutions).
+
+``scale`` divides the stage widths (``scale=8`` -> ``resnet_mini``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from compile.models.common import (
+    Model,
+    ParamSpec,
+    avg_pool_global,
+    conv2d,
+    dense,
+    group_norm,
+    max_pool,
+)
+
+# (width, stride) per residual unit; standard ResNet-18: 4 stages x 2 units.
+_UNITS = ((64, 1), (64, 1), (128, 2), (128, 1), (256, 2), (256, 1), (512, 2), (512, 1))
+
+
+def make_resnet(scale=1, name="resnet18", input_shape=(32, 32, 3), classes=10):
+    """Build ResNet-18/GroupNorm with stage widths divided by ``scale``."""
+    specs = []
+    stem = max(4, 64 // scale)
+    cin = input_shape[2]
+    specs.append(ParamSpec("stem/kernel", (3, 3, cin, stem), "he"))
+    specs.append(ParamSpec("stem/bias", (stem,), "zeros"))
+    specs.append(ParamSpec("stem/gn_scale", (1, 1, 1, stem), "ones"))
+    specs.append(ParamSpec("stem/gn_bias", (1, 1, 1, stem), "zeros"))
+
+    cin = stem
+    unit_meta = []  # (width, stride, has_proj)
+    for ui, (w0, stride) in enumerate(_UNITS):
+        w = max(4, w0 // scale)
+        has_proj = stride != 1 or cin != w
+        p = f"unit{ui}"
+        specs.append(ParamSpec(f"{p}/conv1/kernel", (3, 3, cin, w), "he"))
+        specs.append(ParamSpec(f"{p}/conv1/bias", (w,), "zeros"))
+        specs.append(ParamSpec(f"{p}/gn1_scale", (1, 1, 1, w), "ones"))
+        specs.append(ParamSpec(f"{p}/gn1_bias", (1, 1, 1, w), "zeros"))
+        specs.append(ParamSpec(f"{p}/conv2/kernel", (3, 3, w, w), "he"))
+        specs.append(ParamSpec(f"{p}/conv2/bias", (w,), "zeros"))
+        specs.append(ParamSpec(f"{p}/gn2_scale", (1, 1, 1, w), "ones"))
+        specs.append(ParamSpec(f"{p}/gn2_bias", (1, 1, 1, w), "zeros"))
+        if has_proj:
+            specs.append(ParamSpec(f"{p}/proj/kernel", (1, 1, cin, w), "he"))
+            specs.append(ParamSpec(f"{p}/proj/bias", (w,), "zeros"))
+        unit_meta.append((w, stride, has_proj))
+        cin = w
+
+    specs.append(ParamSpec("fc/kernel", (cin, classes), "he"))
+    specs.append(ParamSpec("fc/bias", (classes,), "zeros"))
+    specs = tuple(specs)
+    meta = tuple(unit_meta)
+
+    def apply(flat, x):
+        model = _self[0]
+        params = model.unflatten(flat)
+        i = 0
+
+        def take(n):
+            nonlocal i
+            out = params[i : i + n]
+            i += n
+            return out
+
+        k, b, gs, gb = take(4)
+        y = conv2d(x, k, b)
+        y = jax.nn.relu(group_norm(y, gs, gb))
+        y = max_pool(y)  # first pooling layer (paper: "two pooling layers")
+
+        for w, stride, has_proj in meta:
+            k1, b1, g1s, g1b, k2, b2, g2s, g2b = take(8)
+            shortcut = y
+            z = conv2d(y, k1, b1, stride=stride)
+            z = jax.nn.relu(group_norm(z, g1s, g1b))
+            z = conv2d(z, k2, b2)
+            z = group_norm(z, g2s, g2b)
+            if has_proj:
+                pk, pb = take(2)
+                shortcut = conv2d(y, pk, pb, stride=stride)
+            y = jax.nn.relu(z + shortcut)
+
+        y = avg_pool_global(y)  # second pooling layer
+        fk, fb = take(2)
+        return dense(y, fk, fb)
+
+    model = Model(name=name, specs=specs, apply=apply, input_shape=input_shape, num_classes=classes)
+    _self = [model]
+    return model

@@ -1,0 +1,69 @@
+"""VGG-11 for CIFAR-10-shaped inputs (paper §VII-A).
+
+Paper description: "eight 3x3 convolutional layers, three fully connected
+layers, and a final softmax output layer" — the standard VGG-11 'A'
+configuration adapted to 32x32 inputs (five max-pools reduce the spatial
+extent to 1x1, classifier is 512-512-10).
+
+``scale`` divides every channel width (``scale=8`` -> ``vgg_mini``), keeping
+the architecture — depth, pooling schedule, classifier shape — identical to
+the full model.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from compile.models.common import Model, ParamSpec, conv2d, dense, max_pool
+
+# VGG-11 'A' config: channels, 'M' = 2x2 max pool.
+_CFG = (64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M")
+
+
+def make_vgg(scale=1, name="vgg11", input_shape=(32, 32, 3), classes=10):
+    """Build VGG-11 with channel widths divided by ``scale``."""
+    specs = []
+    cin = input_shape[2]
+    conv_layers = []  # (spec-index, pool-after?)
+    idx = 0
+    for item in _CFG:
+        if item == "M":
+            if conv_layers:
+                conv_layers[-1] = (conv_layers[-1][0], conv_layers[-1][1] + 1)
+            continue
+        cout = max(4, item // scale)
+        specs.append(ParamSpec(f"conv{idx}/kernel", (3, 3, cin, cout), "he"))
+        specs.append(ParamSpec(f"conv{idx}/bias", (cout,), "zeros"))
+        conv_layers.append((idx, 0))
+        cin = cout
+        idx += 1
+    # After 5 pools: 32 -> 1; feature dim = last conv width.
+    feat = cin
+    fc = max(8, 512 // scale)
+    specs.append(ParamSpec("fc1/kernel", (feat, fc), "he"))
+    specs.append(ParamSpec("fc1/bias", (fc,), "zeros"))
+    specs.append(ParamSpec("fc2/kernel", (fc, fc), "he"))
+    specs.append(ParamSpec("fc2/bias", (fc,), "zeros"))
+    specs.append(ParamSpec("fc3/kernel", (fc, classes), "he"))
+    specs.append(ParamSpec("fc3/bias", (classes,), "zeros"))
+    specs = tuple(specs)
+    pools_after = tuple(p for _, p in conv_layers)
+
+    def apply(flat, x):
+        model = _self[0]
+        params = model.unflatten(flat)
+        y = x
+        for li, pools in enumerate(pools_after):
+            k, b = params[2 * li], params[2 * li + 1]
+            y = jax.nn.relu(conv2d(y, k, b))
+            for _ in range(pools):
+                y = max_pool(y)
+        y = y.reshape(y.shape[0], -1)
+        off = 2 * len(pools_after)
+        y = jax.nn.relu(dense(y, params[off], params[off + 1]))
+        y = jax.nn.relu(dense(y, params[off + 2], params[off + 3]))
+        return dense(y, params[off + 4], params[off + 5])
+
+    model = Model(name=name, specs=specs, apply=apply, input_shape=input_shape, num_classes=classes)
+    _self = [model]
+    return model

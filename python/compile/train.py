@@ -1,0 +1,122 @@
+"""Layer-2 training/eval program builders.
+
+Each ``make_*`` returns a jittable pure function over flat ``f32[d]``
+buffers; ``compile/aot.py`` lowers them to HLO text for the rust runtime.
+The Adam arithmetic runs through the Layer-1 Pallas kernel
+(:func:`compile.kernels.adam_update`), so the kernel lowers into the same
+HLO module as the model fwd/bwd.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+from compile.models.common import Model, softmax_xent, weighted_xent_and_correct
+
+# Paper defaults (§VII-A): beta1=0.9, beta2=0.999, eps=1e-6.
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-6
+
+
+def make_loss_fn(model: Model):
+    """Mean cross-entropy over a batch, as a function of the flat params."""
+
+    def loss_fn(flat, x, y):
+        return softmax_xent(model.apply(flat, x), y)
+
+    return loss_fn
+
+
+def make_train_step(model: Model):
+    """One minibatch Adam step (paper eq. 3-5 through the Pallas kernel).
+
+    Signature: ``(w, m, v, x[B,...], y[B], eta) -> (w', m', v', loss)``.
+    ``L`` local epochs = the rust device loops this over its batches, so the
+    paper's Fig.-3 local-epoch sweep is a runtime knob.
+    """
+    loss_fn = make_loss_fn(model)
+
+    def step(w, m, v, x, y, eta):
+        loss, g = jax.value_and_grad(loss_fn)(w, x, y)
+        w2, m2, v2 = kernels.adam_update(w, m, v, g, eta, BETA1, BETA2, EPS)
+        return w2, m2, v2, loss
+
+    return step
+
+
+def make_epoch_step(model: Model, num_batches: int):
+    """A full local epoch as one program: ``lax.scan`` over ``nb`` batches.
+
+    Signature: ``(w, m, v, X[nb,B,...], Y[nb,B], eta) -> (w', m', v',
+    mean_loss)``.  This is the perf-pass variant — one PJRT dispatch per
+    epoch instead of per batch (DESIGN.md §Perf L2).
+    """
+    step = make_train_step(model)
+
+    def epoch(w, m, v, xs, ys, eta):
+        def body(carry, batch):
+            w, m, v = carry
+            x, y = batch
+            w, m, v, loss = step(w, m, v, x, y, eta)
+            return (w, m, v), loss
+
+        (w, m, v), losses = jax.lax.scan(body, (w, m, v), (xs, ys), length=num_batches)
+        return w, m, v, jnp.mean(losses)
+
+    return epoch
+
+
+def make_sgd_step(model: Model):
+    """FedSGD baseline step: ``w' = w - eta * g`` (paper eq. 2)."""
+    loss_fn = make_loss_fn(model)
+
+    def step(w, x, y, eta):
+        loss, g = jax.value_and_grad(loss_fn)(w, x, y)
+        return w - eta * g, loss
+
+    return step
+
+
+def make_grads(model: Model):
+    """Flat minibatch gradient — Fig.-1 harness and the theory example."""
+    loss_fn = make_loss_fn(model)
+
+    def grads(w, x, y):
+        loss, g = jax.value_and_grad(loss_fn)(w, x, y)
+        return g, loss
+
+    return grads
+
+
+def make_eval(model: Model):
+    """Weighted eval batch: ``(w, x[E,...], y[E], wt[E]) -> (loss_sum,
+    correct, weight_sum)``.  Padding lanes carry weight 0 so the rust side
+    can evaluate arbitrary test-set sizes against one compiled shape."""
+
+    def ev(w, x, y, wt):
+        logits = model.apply(w, x)
+        loss_sum, correct = weighted_xent_and_correct(logits, y, wt)
+        return loss_sum, correct, jnp.sum(wt)
+
+    return ev
+
+
+def make_init(model: Model):
+    """Seeded flat init: ``(seed int32) -> f32[d]``."""
+
+    def init(seed):
+        return model.init_flat(jax.random.PRNGKey(seed))
+
+    return init
+
+
+def make_sparsify():
+    """Standalone SSM program: ``(dw, dm, dv, k) -> masked triple``."""
+
+    def sp(dw, dm, dv, k):
+        return kernels.ssm_sparsify3(dw, dm, dv, k)
+
+    return sp

@@ -1,0 +1,37 @@
+"""The L1 perf model's invariants (used by DESIGN.md §Perf)."""
+
+from compile.kernels import analysis as A
+
+
+def test_all_kernels_fit_vmem_at_default_block():
+    for p in A.PROFILES:
+        assert p.fits_vmem(64 * 1024), p.name
+
+
+def test_all_kernels_memory_bound():
+    # Element-wise kernels must sit below the roofline ridge.
+    for p in A.PROFILES:
+        assert p.bound() == "memory", p.name
+
+
+def test_fused_adam_beats_unfused():
+    adam = next(p for p in A.PROFILES if p.name == "adam_update")
+    assert A.naive_adam_passes() / adam.bytes_per_elem() >= 1.4
+
+
+def test_roofline_monotone_in_d():
+    p = A.PROFILES[0]
+    assert p.roofline_time(2_000_000) > p.roofline_time(1_000_000)
+
+
+def test_report_renders():
+    r = A.report()
+    assert "adam_update" in r and "ridge" in r
+    # Every profile appears.
+    for p in A.PROFILES:
+        assert p.name in r
+
+
+def test_block_too_large_overflows():
+    p = A.PROFILES[0]  # 7 resident blocks
+    assert not p.fits_vmem(2**20)  # 7 * 4 MiB * 2 > 16 MiB

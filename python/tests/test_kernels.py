@@ -1,0 +1,182 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value distributions; tolerances follow the
+f32 analysis in DESIGN.md (the `w` output of the Adam kernel divides by
+`sqrt(v+eps)` which amplifies rounding near v ~ 0, hence the looser bound
+there; moments and masks are tight).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+
+# Keep hypothesis deadlines off: interpret-mode pallas is slow per call.
+SET = settings(max_examples=20, deadline=None)
+
+
+def vec(rng, d, scale=1.0):
+    return jnp.asarray(rng.normal(size=d) * scale, jnp.float32)
+
+
+dims = st.sampled_from([1, 7, 128, 1000, 65536, 70001])
+seeds = st.integers(0, 2**31 - 1)
+
+
+class TestAdamUpdate:
+    @SET
+    @given(d=dims, seed=seeds, eta=st.sampled_from([1e-4, 1e-3, 1e-2, 0.1]))
+    def test_matches_ref(self, d, seed, eta):
+        rng = np.random.default_rng(seed)
+        w, m, g = vec(rng, d), vec(rng, d), vec(rng, d)
+        v = jnp.abs(vec(rng, d))  # v is a running mean of squares: >= 0
+        kw, km, kv = K.adam_update(w, m, v, g, eta)
+        rw, rm, rv = R.adam_update_ref(w, m, v, g, eta)
+        np.testing.assert_allclose(km, rm, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(kv, rv, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(kw, rw, rtol=5e-4, atol=5e-4)
+
+    def test_zero_gradient_decays_moments_only(self):
+        d = 256
+        rng = np.random.default_rng(0)
+        w, m = vec(rng, d), vec(rng, d)
+        v = jnp.abs(vec(rng, d))
+        g = jnp.zeros(d, jnp.float32)
+        kw, km, kv = K.adam_update(w, m, v, g, 0.0)
+        np.testing.assert_allclose(km, 0.9 * m, rtol=1e-6)
+        np.testing.assert_allclose(kv, 0.999 * v, rtol=1e-6)
+        np.testing.assert_allclose(kw, w, rtol=1e-6)
+
+    def test_custom_betas(self):
+        d = 100
+        rng = np.random.default_rng(1)
+        w, m, g = vec(rng, d), vec(rng, d), vec(rng, d)
+        v = jnp.abs(vec(rng, d))
+        kw, km, kv = K.adam_update(w, m, v, g, 1e-3, beta1=0.5, beta2=0.9, eps=1e-4)
+        rw, rm, rv = R.adam_update_ref(w, m, v, g, 1e-3, beta1=0.5, beta2=0.9, eps=1e-4)
+        np.testing.assert_allclose(km, rm, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(kv, rv, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(kw, rw, rtol=5e-4, atol=5e-4)
+
+    def test_non_multiple_block_padding(self):
+        # d deliberately not a multiple of the 64Ki block.
+        d = 64 * 1024 + 3
+        rng = np.random.default_rng(2)
+        w, m, g = vec(rng, d), vec(rng, d), vec(rng, d)
+        v = jnp.abs(vec(rng, d))
+        kw, _, _ = K.adam_update(w, m, v, g, 1e-3)
+        rw, _, _ = R.adam_update_ref(w, m, v, g, 1e-3)
+        np.testing.assert_allclose(kw, rw, rtol=5e-4, atol=5e-4)
+
+
+class TestTopK:
+    @SET
+    @given(d=dims, seed=seeds)
+    def test_threshold_matches_ref(self, d, seed):
+        rng = np.random.default_rng(seed)
+        x = vec(rng, d)
+        k = max(1, d // 7)
+        tau_k = K.topk_threshold(x, k)
+        tau_r = R.topk_threshold_ref(x, k)
+        np.testing.assert_allclose(tau_k, tau_r, rtol=1e-6)
+
+    @SET
+    @given(d=st.sampled_from([16, 1000, 65536]), seed=seeds,
+           frac=st.sampled_from([0.01, 0.1, 0.5, 1.0]))
+    def test_mask_matches_ref(self, d, seed, frac):
+        rng = np.random.default_rng(seed)
+        x = vec(rng, d)
+        k = max(1, int(d * frac))
+        mk = K.topk_mask(x, k)
+        mr = R.topk_mask_ref(x, k)
+        np.testing.assert_array_equal(np.asarray(mk), np.asarray(mr))
+        # Continuous input: ties have measure zero, so exactly k kept.
+        assert int(mk.sum()) == k
+
+    def test_k_boundaries(self):
+        x = jnp.asarray([3.0, -1.0, 2.0], jnp.float32)
+        assert int(K.topk_mask(x, 1).sum()) == 1
+        assert int(K.topk_mask(x, 3).sum()) == 3
+        # k out of range is clamped
+        assert int(K.topk_mask(x, 100).sum()) == 3
+
+
+class TestSsmSparsify:
+    @SET
+    @given(d=dims, seed=seeds)
+    def test_matches_ref(self, d, seed):
+        rng = np.random.default_rng(seed)
+        dw, dm, dv = vec(rng, d), vec(rng, d, 0.01), vec(rng, d, 1e-4)
+        k = max(1, d // 20)
+        kk = K.ssm_sparsify3(dw, dm, dv, k)
+        rr = R.ssm_sparsify3_ref(dw, dm, dv, k)
+        for a, b in zip(kk, rr):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_shared_mask_property(self):
+        # Kept lanes of dm/dv are exactly where dw survives (eq. 10-12).
+        rng = np.random.default_rng(3)
+        d = 4096
+        dw, dm, dv = vec(rng, d), vec(rng, d), vec(rng, d)
+        sw, sm, sv = K.ssm_sparsify3(dw, dm, dv, 100)
+        keep = np.asarray(sw) != 0.0
+        assert keep.sum() == 100
+        assert ((np.asarray(sm) != 0.0) == keep).all()
+        assert ((np.asarray(sv) != 0.0) == keep).all()
+        # and the kept values are unmodified
+        np.testing.assert_array_equal(np.asarray(sm)[keep], np.asarray(dm)[keep])
+
+    def test_apply_mask(self):
+        rng = np.random.default_rng(4)
+        x = vec(rng, 1000)
+        mask = R.topk_mask_ref(x, 50)
+        np.testing.assert_allclose(K.apply_mask(x, mask), x * mask, rtol=1e-7)
+
+
+class TestQuantizers:
+    @SET
+    @given(d=dims, seed=seeds)
+    def test_onebit_matches_ref(self, d, seed):
+        rng = np.random.default_rng(seed)
+        x, e = vec(rng, d), vec(rng, d, 0.1)
+        kq, ke = K.onebit_quantize(x, e)
+        rq, re = R.onebit_quantize_ref(x, e)
+        np.testing.assert_allclose(kq, rq, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ke, re, rtol=1e-4, atol=1e-5)
+
+    @SET
+    @given(d=dims, seed=seeds, s=st.sampled_from([2, 3, 16, 256]))
+    def test_uniform_matches_ref(self, d, seed, s):
+        rng = np.random.default_rng(seed)
+        x = vec(rng, d)
+        np.testing.assert_allclose(
+            K.uniform_quantize(x, s), R.uniform_quantize_ref(x, s), rtol=1e-5, atol=1e-6
+        )
+
+    def test_uniform_error_bounded(self):
+        rng = np.random.default_rng(5)
+        x = vec(rng, 4096)
+        for s in (2, 16, 256):
+            q = np.asarray(K.uniform_quantize(x, s))
+            bin_w = 2 * float(jnp.max(jnp.abs(x))) / (s - 1)
+            assert np.max(np.abs(q - np.asarray(x))) <= bin_w / 2 + 1e-5
+
+    def test_onebit_zero_input(self):
+        z = jnp.zeros(64, jnp.float32)
+        q, e = K.onebit_quantize(z, z)
+        np.testing.assert_array_equal(np.asarray(q), 0.0)
+        np.testing.assert_array_equal(np.asarray(e), 0.0)
+
+
+@pytest.mark.parametrize("d", [1, 63, 64 * 1024, 64 * 1024 + 1])
+def test_all_kernels_handle_block_edges(d):
+    """Every kernel must survive block-boundary dims (padding paths)."""
+    rng = np.random.default_rng(6)
+    x = vec(rng, d)
+    K.adam_update(x, x, jnp.abs(x), x, 1e-3)
+    K.ssm_sparsify3(x, x, x, max(1, d // 2))
+    K.onebit_quantize(x, jnp.zeros_like(x))
+    K.uniform_quantize(x, 16)

@@ -1,0 +1,127 @@
+//! Centralized Adam — the "desired model" of Theorem 1.
+//!
+//! Runs the paper's Adam update (eq. 13-15) in pure rust given a gradient
+//! oracle (the AOT `grads` program over the pooled dataset).  Used by the
+//! theory harness (`examples/theory_bounds.rs`) to measure the actual
+//! divergence `‖w_n^{l,t} − w̌^{l,t}‖` against the Theorem-1 bound, and by
+//! unit tests as an independent reference implementation of eq. 3-5.
+
+/// Paper Adam constants.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamParams {
+    pub eta: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamParams {
+    fn default() -> Self {
+        AdamParams {
+            eta: 0.001,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+        }
+    }
+}
+
+/// In-place Adam state over flat vectors.
+#[derive(Clone, Debug)]
+pub struct CentralizedAdam {
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub params: AdamParams,
+}
+
+impl CentralizedAdam {
+    pub fn new(w0: Vec<f32>, params: AdamParams) -> Self {
+        let d = w0.len();
+        CentralizedAdam {
+            w: w0,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            params,
+        }
+    }
+
+    /// Seed the moments (Theorem 1 starts the auxiliary sequence from the
+    /// non-sparse global state M̃, Ṽ).
+    pub fn with_moments(mut self, m: Vec<f32>, v: Vec<f32>) -> Self {
+        assert_eq!(m.len(), self.w.len());
+        assert_eq!(v.len(), self.w.len());
+        self.m = m;
+        self.v = v;
+        self
+    }
+
+    /// One Adam step with gradient `g` (paper eq. 3-5 / 13-15: eps inside
+    /// the sqrt, no bias correction). Identical arithmetic to the Layer-1
+    /// Pallas kernel.
+    pub fn step(&mut self, g: &[f32]) {
+        let AdamParams {
+            eta,
+            beta1,
+            beta2,
+            eps,
+        } = self.params;
+        for i in 0..self.w.len() {
+            let gi = g[i];
+            self.m[i] = beta1 * self.m[i] + (1.0 - beta1) * gi;
+            self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * gi * gi;
+            self.w[i] -= eta * self.m[i] / (self.v[i] + eps).sqrt();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_step_matches_formula() {
+        let p = AdamParams {
+            eta: 0.1,
+            beta1: 0.9,
+            beta2: 0.99,
+            eps: 1e-6,
+        };
+        let mut opt = CentralizedAdam::new(vec![1.0], p);
+        opt.step(&[2.0]);
+        let m = 0.1 * 2.0;
+        let v = 0.01 * 4.0;
+        let w = 1.0 - 0.1 * m / ((v + 1e-6) as f32).sqrt();
+        assert!((opt.m[0] - m).abs() < 1e-7);
+        assert!((opt.v[0] - v).abs() < 1e-7);
+        assert!((opt.w[0] - w).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // f(w) = 0.5 * ||w - target||^2, grad = w - target.
+        let target = [3.0f32, -2.0, 0.5];
+        let mut opt = CentralizedAdam::new(
+            vec![0.0; 3],
+            AdamParams {
+                eta: 0.05,
+                ..Default::default()
+            },
+        );
+        for _ in 0..2000 {
+            let g: Vec<f32> = opt.w.iter().zip(&target).map(|(w, t)| w - t).collect();
+            opt.step(&g);
+        }
+        for (w, t) in opt.w.iter().zip(&target) {
+            assert!((w - t).abs() < 0.05, "{w} vs {t}");
+        }
+    }
+
+    #[test]
+    fn with_moments_seeds_state() {
+        let opt = CentralizedAdam::new(vec![0.0; 2], AdamParams::default())
+            .with_moments(vec![1.0, 2.0], vec![3.0, 4.0]);
+        assert_eq!(opt.m, vec![1.0, 2.0]);
+        assert_eq!(opt.v, vec![3.0, 4.0]);
+    }
+}

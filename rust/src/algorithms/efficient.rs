@@ -1,0 +1,129 @@
+//! Efficient-Adam baseline [28]: two-way s-level uniform quantization with
+//! two-way error feedback.
+//!
+//! Workers keep their Adam state local (never aggregated — moments drift
+//! apart across devices, the degradation §II-B describes); only the model
+//! update ΔW travels, uniformly quantized: device→server with per-device
+//! EF, and server→devices re-quantized with a server-side EF.
+
+use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
+use crate::quant::{uniform_compress, uniform_decompress, ErrorFeedback};
+use crate::sparse::codec::cost;
+
+pub struct EfficientAdam {
+    dim: usize,
+    levels: u32,
+    /// Device-side EF memories.
+    ef_up: Vec<ErrorFeedback>,
+    /// Server-side EF memory for the broadcast direction.
+    ef_down: ErrorFeedback,
+}
+
+impl EfficientAdam {
+    pub fn new(dim: usize, devices: usize, levels: u32) -> Self {
+        assert!(levels >= 2);
+        EfficientAdam {
+            dim,
+            levels,
+            ef_up: (0..devices).map(|_| ErrorFeedback::new(dim)).collect(),
+            ef_down: ErrorFeedback::new(dim),
+        }
+    }
+}
+
+impl Algorithm for EfficientAdam {
+    fn name(&self) -> &'static str {
+        "efficient-adam"
+    }
+
+    fn momentum_policy(&self, _round: usize) -> MomentumPolicy {
+        MomentumPolicy::DeviceLocal
+    }
+
+    fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
+        let ef = &mut self.ef_up[device];
+        let compensated = ef.compensate(&delta.dw);
+        let packet = uniform_compress(&compensated, self.levels);
+        let deq = uniform_decompress(&packet);
+        ef.update(&compensated, &deq);
+        let bits = packet.wire_bits();
+        debug_assert_eq!(bits, cost::uniform(self.dim, self.levels as usize));
+        Upload {
+            dw: Recon::Dense(deq),
+            dm: None,
+            dv: None,
+            weight: delta.weight,
+            bits,
+        }
+    }
+
+    fn downlink_bits(&self, _agg: &Aggregate) -> u64 {
+        cost::uniform(self.dim, self.levels as usize)
+    }
+
+    fn postprocess(&mut self, agg: &mut Aggregate) {
+        // Two-way quantization: the broadcast is itself quantized, with a
+        // server-side error-feedback memory absorbing the residual.
+        let compensated = self.ef_down.compensate(&agg.dw);
+        let packet = uniform_compress(&compensated, self.levels);
+        let deq = uniform_decompress(&packet);
+        self.ef_down.update(&compensated, &deq);
+        agg.dw = deq;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(dim: usize) -> LocalDelta {
+        LocalDelta {
+            dw: (0..dim).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.01).collect(),
+            dm: vec![0.0; dim],
+            dv: vec![0.0; dim],
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn wire_cost_scales_with_levels() {
+        let mut a4 = EfficientAdam::new(64, 1, 4); // 2 bits/lane
+        let mut a16 = EfficientAdam::new(64, 1, 16); // 4 bits/lane
+        let b4 = a4.compress(0, 0, delta(64)).bits;
+        let b16 = a16.compress(0, 0, delta(64)).bits;
+        assert_eq!(b4, 64 * 2 + 32);
+        assert_eq!(b16, 64 * 4 + 32);
+    }
+
+    #[test]
+    fn moments_never_uploaded() {
+        let mut a = EfficientAdam::new(16, 1, 16);
+        let up = a.compress(0, 0, delta(16));
+        assert!(up.dm.is_none() && up.dv.is_none());
+        assert_eq!(a.momentum_policy(0), MomentumPolicy::DeviceLocal);
+    }
+
+    #[test]
+    fn two_way_ef_converges_on_repeat() {
+        // Sending the same aggregate repeatedly: cumulative broadcast
+        // should converge to the true value thanks to server EF.
+        let mut a = EfficientAdam::new(32, 1, 4);
+        let truth: Vec<f32> = (0..32).map(|i| (i as f32) * 0.01).collect();
+        let mut sent = vec![0.0f32; 32];
+        let rounds = 100;
+        for _ in 0..rounds {
+            let mut agg = Aggregate {
+                dw: truth.clone(),
+                dm: None,
+                dv: None,
+            };
+            a.postprocess(&mut agg);
+            for (s, v) in sent.iter_mut().zip(&agg.dw) {
+                *s += v;
+            }
+        }
+        for (s, t) in sent.iter().zip(&truth) {
+            assert!((s / rounds as f32 - t).abs() < 0.02, "{s} vs {t}");
+        }
+    }
+}

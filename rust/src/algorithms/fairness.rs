@@ -1,0 +1,98 @@
+//! Fairness-Top baseline [40]: a shared mask chosen from the *union* of the
+//! three update vectors.
+//!
+//! Han et al.'s "fairness" sparsifier selects coordinates by comparing all
+//! candidate vectors on a common scale.  (ΔW, ΔM, ΔV) live on wildly
+//! different magnitudes (Fig. 1: ΔW ≫ ΔM ≫ ΔV), so the union is taken
+//! after per-vector L∞ normalization; the mask keeps the top-k of
+//! `max(|ΔW|/‖ΔW‖∞, |ΔM|/‖ΔM‖∞, |ΔV|/‖ΔV‖∞)`.  Same wire cost as
+//! FedAdam-SSM; the paper prices its selection at `O(9dk)`.
+
+use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
+use crate::sparse::codec::cost;
+use crate::sparse::{top_k_indices, SparseVec};
+use crate::tensor::linf_norm;
+
+pub struct FairnessTop {
+    dim: usize,
+    k: usize,
+    /// Scratch for the union score (no per-round allocation).
+    score: Vec<f32>,
+}
+
+impl FairnessTop {
+    pub fn new(dim: usize, k: usize) -> Self {
+        assert!(k >= 1 && k <= dim);
+        FairnessTop {
+            dim,
+            k,
+            score: vec![0.0; dim],
+        }
+    }
+}
+
+impl Algorithm for FairnessTop {
+    fn name(&self) -> &'static str {
+        "fairness-top"
+    }
+
+    fn compress(&mut self, _round: usize, _device: usize, delta: LocalDelta) -> Upload {
+        let nw = linf_norm(&delta.dw).max(1e-30);
+        let nm = linf_norm(&delta.dm).max(1e-30);
+        let nv = linf_norm(&delta.dv).max(1e-30);
+        for i in 0..self.dim {
+            let a = delta.dw[i].abs() / nw;
+            let b = delta.dm[i].abs() / nm;
+            let c = delta.dv[i].abs() / nv;
+            self.score[i] = a.max(b).max(c);
+        }
+        let idx = top_k_indices(&self.score, self.k);
+        Upload {
+            dw: Recon::Sparse(SparseVec::gather(&delta.dw, &idx)),
+            dm: Some(Recon::Sparse(SparseVec::gather(&delta.dm, &idx))),
+            dv: Some(Recon::Sparse(SparseVec::gather(&delta.dv, &idx))),
+            weight: delta.weight,
+            bits: cost::fedadam_ssm(self.dim, self.k),
+        }
+    }
+
+    fn downlink_bits(&self, agg: &Aggregate) -> u64 {
+        let union_k = agg.dw.iter().filter(|&&x| x != 0.0).count();
+        cost::fedadam_ssm(self.dim, union_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_mask_mixes_sources() {
+        // dw dominates lane 0, dm lane 1, dv lane 2 (after normalization
+        // each wins its own lane with score 1.0).
+        let mut a = FairnessTop::new(6, 3);
+        let delta = LocalDelta {
+            dw: vec![100.0, 1.0, 0.0, 50.0, 0.0, 0.0],
+            dm: vec![0.0, 2.0, 0.0, 0.0, 1.0, 0.0],
+            dv: vec![0.0, 0.0, 0.002, 0.0, 0.0, 0.001],
+            weight: 1.0,
+        };
+        let up = a.compress(0, 0, delta);
+        match &up.dw {
+            Recon::Sparse(sv) => assert_eq!(sv.indices, vec![0, 1, 2]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn same_cost_as_ssm() {
+        let mut a = FairnessTop::new(1000, 50);
+        let delta = LocalDelta {
+            dw: vec![1.0; 1000],
+            dm: vec![1.0; 1000],
+            dv: vec![1.0; 1000],
+            weight: 1.0,
+        };
+        assert_eq!(a.compress(0, 0, delta).bits, cost::fedadam_ssm(1000, 50));
+    }
+}

@@ -1,0 +1,57 @@
+//! Standard FedAdam (paper Algorithm 1): dense uplink of all three vectors.
+//!
+//! The `α = 1` special case of FedAdam-SSM — full-fidelity aggregation of
+//! (ΔW, ΔM, ΔV) at cost `3dq` up / `3dq` down per device.
+
+use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
+use crate::sparse::codec::cost;
+
+pub struct FedAdam {
+    dim: usize,
+}
+
+impl FedAdam {
+    pub fn new(dim: usize) -> Self {
+        FedAdam { dim }
+    }
+}
+
+impl Algorithm for FedAdam {
+    fn name(&self) -> &'static str {
+        "fedadam"
+    }
+
+    fn compress(&mut self, _round: usize, _device: usize, delta: LocalDelta) -> Upload {
+        Upload {
+            dw: Recon::Dense(delta.dw),
+            dm: Some(Recon::Dense(delta.dm)),
+            dv: Some(Recon::Dense(delta.dv)),
+            weight: delta.weight,
+            bits: cost::fedadam_dense(self.dim),
+        }
+    }
+
+    fn downlink_bits(&self, _agg: &Aggregate) -> u64 {
+        cost::fedadam_dense(self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_payload_and_cost() {
+        let mut a = FedAdam::new(100);
+        let delta = LocalDelta {
+            dw: vec![1.0; 100],
+            dm: vec![2.0; 100],
+            dv: vec![3.0; 100],
+            weight: 5.0,
+        };
+        let up = a.compress(0, 0, delta);
+        assert_eq!(up.bits, 3 * 100 * 32);
+        assert_eq!(up.dw.nnz(), 100);
+        assert!(up.dm.is_some() && up.dv.is_some());
+    }
+}

@@ -1,0 +1,58 @@
+//! FedSGD baseline: plain local SGD, dense ΔW uplink, no moments.
+
+use super::{Aggregate, Algorithm, LocalDelta, LocalMode, Recon, Upload};
+use crate::sparse::codec::cost;
+
+pub struct FedSgd {
+    dim: usize,
+}
+
+impl FedSgd {
+    pub fn new(dim: usize) -> Self {
+        FedSgd { dim }
+    }
+}
+
+impl Algorithm for FedSgd {
+    fn name(&self) -> &'static str {
+        "fedsgd"
+    }
+
+    fn local_mode(&self, _round: usize) -> LocalMode {
+        LocalMode::Sgd
+    }
+
+    fn compress(&mut self, _round: usize, _device: usize, delta: LocalDelta) -> Upload {
+        Upload {
+            dw: Recon::Dense(delta.dw),
+            dm: None,
+            dv: None,
+            weight: delta.weight,
+            bits: cost::fedsgd_dense(self.dim),
+        }
+    }
+
+    fn downlink_bits(&self, _agg: &Aggregate) -> u64 {
+        cost::fedsgd_dense(self.dim)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_mode_and_cost() {
+        let mut a = FedSgd::new(64);
+        assert_eq!(a.local_mode(0), LocalMode::Sgd);
+        let delta = LocalDelta {
+            dw: vec![1.0; 64],
+            dm: vec![0.0; 64],
+            dv: vec![0.0; 64],
+            weight: 1.0,
+        };
+        let up = a.compress(0, 0, delta);
+        assert_eq!(up.bits, 64 * 32);
+        assert!(up.dm.is_none() && up.dv.is_none());
+    }
+}

@@ -1,0 +1,225 @@
+//! The algorithm zoo: FedAdam-SSM (the paper's contribution) and every
+//! baseline from §VII-A, behind one [`Algorithm`] trait.
+//!
+//! Division of labour with the coordinator: the coordinator owns local
+//! training (via the PJRT engine), delta computation, FedAvg aggregation
+//! and bookkeeping; an [`Algorithm`] owns *what goes on the wire* — how a
+//! device's `(ΔW, ΔM, ΔV)` is compressed, what it costs in bits, what the
+//! server reconstructs, and which global state is updated.
+//!
+//! | id                | uplink per device/round                 | moments    |
+//! |-------------------|------------------------------------------|------------|
+//! | `fedadam`         | `3dq` dense                              | aggregated |
+//! | `fedadam-top`     | `min{3(kq+d), 3k(q+log2 d)}`             | aggregated |
+//! | `fedadam-ssm`     | `min{3kq+d, k(3q+log2 d)}` (mask of ΔW)  | aggregated |
+//! | `fedadam-ssm-m`   | same cost (mask of ΔM)                   | aggregated |
+//! | `fedadam-ssm-v`   | same cost (mask of ΔV)                   | aggregated |
+//! | `fairness-top`    | same cost (mask of the normalized union) | aggregated |
+//! | `onebit-adam`     | warmup `3dq`, then `d + 32`              | local      |
+//! | `efficient-adam`  | `d ceil(log2 s) + 32`                    | local      |
+//! | `fedsgd`          | `dq` dense                               | none       |
+
+pub mod centralized;
+pub mod efficient;
+pub mod fairness;
+pub mod fedadam;
+pub mod fedsgd;
+pub mod onebit;
+pub mod ssm;
+pub mod ssm_ef;
+pub mod topk;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExperimentConfig;
+use crate::sparse::SparseVec;
+
+/// How devices train locally this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocalMode {
+    /// Full local Adam (eq. 3-5).
+    Adam,
+    /// Plain SGD (FedSGD baseline).
+    Sgd,
+}
+
+/// Who owns the moment estimates between rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MomentumPolicy {
+    /// Devices start every round from the aggregated global (M, V)
+    /// (Algorithm 2 — the up-to-date moments the paper argues for).
+    Aggregated,
+    /// Each device keeps its own (m, v) across rounds; the server never
+    /// sees them (the staleness the paper criticizes in [27]-[29]).
+    DeviceLocal,
+}
+
+/// One device's raw update for a round (weight = |D̃_n| for FedAvg).
+#[derive(Clone, Debug)]
+pub struct LocalDelta {
+    pub dw: Vec<f32>,
+    pub dm: Vec<f32>,
+    pub dv: Vec<f32>,
+    pub weight: f64,
+}
+
+/// A reconstructed per-vector payload as the server will see it.
+#[derive(Clone, Debug)]
+pub enum Recon {
+    Dense(Vec<f32>),
+    Sparse(SparseVec),
+}
+
+impl Recon {
+    /// Accumulate `coef * self` into a dense buffer (server reduce).
+    pub fn axpy_into(&self, out: &mut [f32], coef: f32) {
+        match self {
+            Recon::Dense(v) => crate::tensor::axpy(out, coef, v),
+            Recon::Sparse(sv) => sv.axpy_into(out, coef),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            Recon::Dense(v) => v.len(),
+            Recon::Sparse(sv) => sv.nnz(),
+        }
+    }
+}
+
+/// What one device uploads after compression.
+#[derive(Clone, Debug)]
+pub struct Upload {
+    pub dw: Recon,
+    pub dm: Option<Recon>,
+    pub dv: Option<Recon>,
+    /// FedAvg weight.
+    pub weight: f64,
+    /// Exact uplink cost of this message.
+    pub bits: u64,
+}
+
+/// Aggregated (already FedAvg'd) global updates for a round.
+#[derive(Clone, Debug)]
+pub struct Aggregate {
+    pub dw: Vec<f32>,
+    pub dm: Option<Vec<f32>>,
+    pub dv: Option<Vec<f32>>,
+}
+
+/// Strategy interface — one instance per experiment run.
+pub trait Algorithm: Send {
+    /// Stable id (matches `ExperimentConfig::algorithm`).
+    fn name(&self) -> &'static str;
+
+    /// Local optimizer for the current round.
+    fn local_mode(&self, round: usize) -> LocalMode {
+        let _ = round;
+        LocalMode::Adam
+    }
+
+    /// Moment ownership for the current round.
+    fn momentum_policy(&self, round: usize) -> MomentumPolicy {
+        let _ = round;
+        MomentumPolicy::Aggregated
+    }
+
+    /// Compress one device's delta into its uplink message.
+    ///
+    /// Takes the delta by value so dense algorithms can move the vectors
+    /// straight onto the wire without copying (§Perf L3).
+    fn compress(&mut self, round: usize, device: usize, delta: LocalDelta) -> Upload;
+
+    /// Downlink bits for broadcasting `agg` to ONE device.
+    fn downlink_bits(&self, agg: &Aggregate) -> u64;
+
+    /// Server-side transform of the aggregate before it is applied
+    /// (e.g. Efficient-Adam re-quantizes the broadcast). Default: identity.
+    fn postprocess(&mut self, agg: &mut Aggregate) {
+        let _ = agg;
+    }
+}
+
+/// Instantiate an algorithm by its config id.
+pub fn build(cfg: &ExperimentConfig, dim: usize) -> Result<Box<dyn Algorithm>> {
+    let k = cfg.k_for(dim);
+    Ok(match cfg.algorithm.as_str() {
+        "fedadam" => Box::new(fedadam::FedAdam::new(dim)),
+        "fedadam-top" => Box::new(topk::FedAdamTop::new(dim, k)),
+        "fedadam-ssm" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::W)),
+        "fedadam-ssm-m" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::M)),
+        "fedadam-ssm-v" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::V)),
+        "fairness-top" => Box::new(fairness::FairnessTop::new(dim, k)),
+        "fedadam-ssm-ef" => Box::new(ssm_ef::FedAdamSsmEf::new(dim, k, cfg.devices)),
+        "onebit-adam" => Box::new(onebit::OneBitAdam::new(dim, cfg.devices, cfg.warmup_rounds)),
+        "efficient-adam" => Box::new(efficient::EfficientAdam::new(
+            dim,
+            cfg.devices,
+            cfg.quant_levels as u32,
+        )),
+        "fedsgd" => Box::new(fedsgd::FedSgd::new(dim)),
+        other => bail!(
+            "unknown algorithm {other:?}; known: fedadam, fedadam-top, fedadam-ssm, \
+             fedadam-ssm-ef, fedadam-ssm-m, fedadam-ssm-v, fairness-top, onebit-adam, \
+             efficient-adam, fedsgd"
+        ),
+    })
+}
+
+/// The paper's §VII algorithms (experiment sweeps iterate this).
+pub const ALL_ALGORITHMS: [&str; 9] = [
+    "fedadam-ssm",
+    "fedadam-top",
+    "fairness-top",
+    "fedadam-ssm-m",
+    "fedadam-ssm-v",
+    "fedadam",
+    "onebit-adam",
+    "efficient-adam",
+    "fedsgd",
+];
+
+/// Everything buildable, including the EF extension.
+pub const ALL_WITH_EXTENSIONS: [&str; 10] = [
+    "fedadam-ssm",
+    "fedadam-ssm-ef",
+    "fedadam-top",
+    "fairness-top",
+    "fedadam-ssm-m",
+    "fedadam-ssm-v",
+    "fedadam",
+    "onebit-adam",
+    "efficient-adam",
+    "fedsgd",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_all_ids() {
+        let mut cfg = ExperimentConfig::default();
+        for id in ALL_WITH_EXTENSIONS {
+            cfg.algorithm = id.into();
+            let algo = build(&cfg, 1000).unwrap();
+            assert_eq!(algo.name(), id);
+        }
+        cfg.algorithm = "bogus".into();
+        assert!(build(&cfg, 1000).is_err());
+    }
+
+    #[test]
+    fn recon_axpy_dense_and_sparse() {
+        let mut out = vec![0.0f32; 4];
+        Recon::Dense(vec![1.0, 2.0, 3.0, 4.0]).axpy_into(&mut out, 0.5);
+        assert_eq!(out, vec![0.5, 1.0, 1.5, 2.0]);
+        let sv = SparseVec {
+            dim: 4,
+            indices: vec![0, 3],
+            values: vec![2.0, 2.0],
+        };
+        Recon::Sparse(sv).axpy_into(&mut out, 1.0);
+        assert_eq!(out, vec![2.5, 1.0, 1.5, 4.0]);
+    }
+}

@@ -1,0 +1,143 @@
+//! FedAdam-SSM — the paper's contribution (Algorithm 2) — plus the
+//! SSM_M / SSM_V ablation variants of §VII-A.
+//!
+//! One **shared sparse mask** sparsifies all three update vectors
+//! (eq. 10-12).  The optimal mask (§V-B, eq. 28) is the top-k mask of
+//! `|ΔW|`: Theorem 1 bounds the FedAdam-SSM ↔ centralized-Adam divergence
+//! by `Γ‖(1-mask)∘ΔW‖ + Λ‖(1-mask)∘ΔM‖ + Θ‖(1-mask)∘ΔV‖ + Φ`, and
+//! Proposition 1 shows `Γ > Θ > Λ` under the (mild) condition
+//! `β₂ < 1 − 1/(1+2Gρ√d)`; combined with `ΔW ≫ ΔM, ΔV` (Fig. 1) the ΔW
+//! term dominates, so masking by `|ΔW|` minimizes the bound.  SSM_M / SSM_V
+//! pick the mask from `|ΔM|` / `|ΔV|` instead — same wire cost, provably
+//! worse bound, and measurably worse accuracy (Fig. 2 / Table I).
+//!
+//! Uplink: one mask + three k-value lists = `min{3kq + d, k(3q + log₂ d)}`.
+
+use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
+use crate::sparse::codec::cost;
+use crate::sparse::{top_k_indices, SparseVec};
+
+/// Which delta supplies the shared mask.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskSource {
+    /// `1_{Top_k}(ΔW)` — the optimal SSM (eq. 28).
+    W,
+    /// `1_{Top_k}(ΔM)` — ablation (FedAdam-SSM_M).
+    M,
+    /// `1_{Top_k}(ΔV)` — ablation (FedAdam-SSM_V).
+    V,
+}
+
+pub struct FedAdamSsm {
+    dim: usize,
+    k: usize,
+    source: MaskSource,
+}
+
+impl FedAdamSsm {
+    pub fn new(dim: usize, k: usize, source: MaskSource) -> Self {
+        assert!(k >= 1 && k <= dim);
+        FedAdamSsm { dim, k, source }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+impl Algorithm for FedAdamSsm {
+    fn name(&self) -> &'static str {
+        match self.source {
+            MaskSource::W => "fedadam-ssm",
+            MaskSource::M => "fedadam-ssm-m",
+            MaskSource::V => "fedadam-ssm-v",
+        }
+    }
+
+    fn compress(&mut self, _round: usize, _device: usize, delta: LocalDelta) -> Upload {
+        let source = match self.source {
+            MaskSource::W => &delta.dw,
+            MaskSource::M => &delta.dm,
+            MaskSource::V => &delta.dv,
+        };
+        let idx = top_k_indices(source, self.k);
+        Upload {
+            dw: Recon::Sparse(SparseVec::gather(&delta.dw, &idx)),
+            dm: Some(Recon::Sparse(SparseVec::gather(&delta.dm, &idx))),
+            dv: Some(Recon::Sparse(SparseVec::gather(&delta.dv, &idx))),
+            weight: delta.weight,
+            bits: cost::fedadam_ssm(self.dim, self.k),
+        }
+    }
+
+    fn downlink_bits(&self, agg: &Aggregate) -> u64 {
+        // The aggregated update's support is the union of device masks;
+        // broadcast uses the same min{bitmap, index} coding with 3 values
+        // per kept coordinate (the union support is shared by all three).
+        let union_k = agg.dw.iter().filter(|&&x| x != 0.0).count();
+        cost::fedadam_ssm(self.dim, union_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(dim: usize) -> LocalDelta {
+        // dw biggest at high indices, dm biggest at low indices.
+        LocalDelta {
+            dw: (0..dim).map(|i| i as f32).collect(),
+            dm: (0..dim).map(|i| (dim - i) as f32).collect(),
+            dv: vec![1.0; dim],
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn mask_from_w_keeps_top_w_lanes() {
+        let mut a = FedAdamSsm::new(10, 3, MaskSource::W);
+        let up = a.compress(0, 0, delta(10));
+        match &up.dw {
+            Recon::Sparse(sv) => assert_eq!(sv.indices, vec![7, 8, 9]),
+            _ => panic!("expected sparse"),
+        }
+        // The SAME mask applies to dm (whose own top-3 would be [0,1,2]).
+        match &up.dm {
+            Some(Recon::Sparse(sv)) => {
+                assert_eq!(sv.indices, vec![7, 8, 9]);
+                assert_eq!(sv.values, vec![3.0, 2.0, 1.0]);
+            }
+            _ => panic!("expected sparse dm"),
+        }
+    }
+
+    #[test]
+    fn mask_from_m_differs() {
+        let mut a = FedAdamSsm::new(10, 3, MaskSource::M);
+        let up = a.compress(0, 0, delta(10));
+        match &up.dw {
+            Recon::Sparse(sv) => assert_eq!(sv.indices, vec![0, 1, 2]),
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn uplink_cost_is_ssm_formula() {
+        let mut a = FedAdamSsm::new(100_000, 5_000, MaskSource::W);
+        let d = LocalDelta {
+            dw: vec![1.0; 100_000],
+            dm: vec![1.0; 100_000],
+            dv: vec![1.0; 100_000],
+            weight: 1.0,
+        };
+        let up = a.compress(0, 0, d);
+        assert_eq!(up.bits, cost::fedadam_ssm(100_000, 5_000));
+        assert!(up.bits < cost::fedadam_top(100_000, 5_000));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_k_rejected() {
+        FedAdamSsm::new(10, 0, MaskSource::W);
+    }
+}

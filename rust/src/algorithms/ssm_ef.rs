@@ -1,0 +1,153 @@
+//! FedAdam-SSM-EF — extension: the SSM sparsifier with per-device
+//! error-feedback memory (sparsified-SGD-with-memory, the paper's ref [31],
+//! applied to the FedAdam-SSM triple).
+//!
+//! Coordinates dropped by the mask are not lost: their mass accumulates in
+//! a per-device residual and is added back to the *next* round's deltas
+//! before mask selection.  This is the natural "future work" composition of
+//! the paper's SSM with the memory mechanism its related-work section
+//! credits for sparse-SGD convergence; the ablation bench
+//! (`examples/ablation_ef.rs`) measures what it buys on top of eq. 28.
+//!
+//! Wire cost is identical to FedAdam-SSM: `min{3kq + d, k(3q + log₂ d)}`.
+
+use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
+use crate::sparse::codec::cost;
+use crate::sparse::{top_k_indices, SparseVec};
+
+/// Per-device residual memories for the three vectors.
+struct Memory {
+    w: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+pub struct FedAdamSsmEf {
+    dim: usize,
+    k: usize,
+    memory: Vec<Memory>,
+}
+
+impl FedAdamSsmEf {
+    pub fn new(dim: usize, k: usize, devices: usize) -> Self {
+        assert!(k >= 1 && k <= dim);
+        FedAdamSsmEf {
+            dim,
+            k,
+            memory: (0..devices)
+                .map(|_| Memory {
+                    w: vec![0.0; dim],
+                    m: vec![0.0; dim],
+                    v: vec![0.0; dim],
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Algorithm for FedAdamSsmEf {
+    fn name(&self) -> &'static str {
+        "fedadam-ssm-ef"
+    }
+
+    fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
+        let mem = &mut self.memory[device];
+        // Compensate: c = delta + residual.
+        let cw: Vec<f32> = delta.dw.iter().zip(&mem.w).map(|(a, b)| a + b).collect();
+        let cm: Vec<f32> = delta.dm.iter().zip(&mem.m).map(|(a, b)| a + b).collect();
+        let cv: Vec<f32> = delta.dv.iter().zip(&mem.v).map(|(a, b)| a + b).collect();
+        // SSM from the compensated ΔW (eq. 28 on c_w).
+        let idx = top_k_indices(&cw, self.k);
+        let sw = SparseVec::gather(&cw, &idx);
+        let sm = SparseVec::gather(&cm, &idx);
+        let sv = SparseVec::gather(&cv, &idx);
+        // Residual = compensated − transmitted.
+        mem.w.copy_from_slice(&cw);
+        mem.m.copy_from_slice(&cm);
+        mem.v.copy_from_slice(&cv);
+        for (&i, (&vw, (&vm, &vv))) in idx
+            .iter()
+            .zip(sw.values.iter().zip(sm.values.iter().zip(sv.values.iter())))
+        {
+            mem.w[i as usize] -= vw;
+            mem.m[i as usize] -= vm;
+            mem.v[i as usize] -= vv;
+        }
+        Upload {
+            dw: Recon::Sparse(sw),
+            dm: Some(Recon::Sparse(sm)),
+            dv: Some(Recon::Sparse(sv)),
+            weight: delta.weight,
+            bits: cost::fedadam_ssm(self.dim, self.k),
+        }
+    }
+
+    fn downlink_bits(&self, agg: &Aggregate) -> u64 {
+        let union_k = agg.dw.iter().filter(|&&x| x != 0.0).count();
+        cost::fedadam_ssm(self.dim, union_k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(dw: Vec<f32>) -> LocalDelta {
+        let d = dw.len();
+        LocalDelta {
+            dw,
+            dm: vec![0.1; d],
+            dv: vec![0.01; d],
+            weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn residual_accumulates_and_releases() {
+        let mut a = FedAdamSsmEf::new(4, 1, 1);
+        // Round 0: [4, 3, 0, 0] -> keep idx 0; residual w = [0, 3, 0, 0].
+        let up0 = a.compress(0, 0, delta(vec![4.0, 3.0, 0.0, 0.0]));
+        match &up0.dw {
+            Recon::Sparse(sv) => {
+                assert_eq!(sv.indices, vec![0]);
+                assert_eq!(sv.values, vec![4.0]);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(a.memory[0].w, vec![0.0, 3.0, 0.0, 0.0]);
+        // Round 1: delta [2, 2, 0, 0]; compensated = [2, 5, 0, 0] -> keep 1.
+        let up1 = a.compress(1, 0, delta(vec![2.0, 2.0, 0.0, 0.0]));
+        match &up1.dw {
+            Recon::Sparse(sv) => {
+                assert_eq!(sv.indices, vec![1]);
+                assert_eq!(sv.values, vec![5.0]);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(a.memory[0].w, vec![2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn memories_are_per_device() {
+        let mut a = FedAdamSsmEf::new(3, 1, 2);
+        a.compress(0, 0, delta(vec![1.0, 2.0, 3.0]));
+        assert_eq!(a.memory[0].w, vec![1.0, 2.0, 0.0]);
+        assert_eq!(a.memory[1].w, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn same_wire_cost_as_plain_ssm() {
+        let mut a = FedAdamSsmEf::new(1000, 50, 1);
+        let up = a.compress(0, 0, delta(vec![1.0; 1000]));
+        assert_eq!(up.bits, cost::fedadam_ssm(1000, 50));
+    }
+
+    #[test]
+    fn moment_residuals_tracked_too() {
+        let mut a = FedAdamSsmEf::new(2, 1, 1);
+        a.compress(0, 0, delta(vec![5.0, 1.0]));
+        // dm = [0.1, 0.1]; kept lane 0 -> residual m = [0, 0.1].
+        assert!((a.memory[0].m[0]).abs() < 1e-6);
+        assert!((a.memory[0].m[1] - 0.1).abs() < 1e-6);
+    }
+}

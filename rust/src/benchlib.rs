@@ -1,0 +1,172 @@
+//! Minimal benchmarking harness (the offline build has no criterion).
+//!
+//! `cargo bench` targets use [`Bench`] for wall-clock micro/mesobenchmarks:
+//! warmup, auto-calibrated iteration counts, and robust summary stats
+//! (mean / p50 / p95 / min).  Results print in a fixed-width table and can
+//! be appended to a CSV for the EXPERIMENTS.md §Perf log.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    /// `name, mean, p50, p95, min` row.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// A group of benchmark cases sharing a target time budget.
+pub struct Bench {
+    /// Per-case measurement budget.
+    pub budget: Duration,
+    /// Hard cap on iterations.
+    pub max_iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(500),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI: tiny budget.
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(60),
+            max_iters: 200,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, auto-calibrating the iteration count.
+    pub fn run<F: FnMut()>(&mut self, name: impl Into<String>, mut f: F) -> &BenchResult {
+        // Warmup + calibration: time a single call.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.budget.as_nanos() / once.as_nanos().max(1)) as usize)
+            .clamp(3, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let result = BenchResult {
+            name: name.into(),
+            iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            min_ns: samples[0],
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print the group as a table.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>10} {:>12} {:>12} {:>12} {:>12}",
+            "case", "iters", "mean", "p50", "p95", "min"
+        );
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+    }
+
+    /// CSV rows (`case,iters,mean_ns,p50_ns,p95_ns,min_ns`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("case,iters,mean_ns,p50_ns,p95_ns,min_ns\n");
+        for r in &self.results {
+            out.push_str(&format!(
+                "{},{},{:.1},{:.1},{:.1},{:.1}\n",
+                r.name, r.iters, r.mean_ns, r.p50_ns, r.p95_ns, r.min_ns
+            ));
+        }
+        out
+    }
+}
+
+/// `FEDADAM_BENCH_QUICK=1` switches every bench binary to quick mode.
+pub fn from_env() -> Bench {
+    if std::env::var("FEDADAM_BENCH_QUICK").is_ok() {
+        Bench::quick()
+    } else {
+        Bench::new()
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick();
+        let mut acc = 0u64;
+        b.run("sum", || {
+            acc = black_box((0..1000u64).sum());
+        });
+        let r = &b.results[0];
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns);
+        assert!(r.min_ns <= r.mean_ns * 1.5);
+        assert!(b.to_csv().lines().count() == 2);
+    }
+}

@@ -1,0 +1,143 @@
+//! Hand-rolled CLI parsing (offline build: no clap).
+//!
+//! Grammar: `fedadam-ssm <command> [--key value] [--key=value] [--flag]
+//! [--set cfg_key=value]...`.  `--set` is repeatable and maps straight onto
+//! [`crate::config::ExperimentConfig::set`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub sets: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    /// Parse from an iterator of args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Cli> {
+        let mut cli = Cli::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                cli.command = it.next().unwrap();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let value = match inline_val {
+                    Some(v) => Some(v),
+                    None => {
+                        // Next token is the value unless it looks like a flag.
+                        if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                            Some(it.next().unwrap())
+                        } else {
+                            None
+                        }
+                    }
+                };
+                if key == "set" {
+                    let v = value.ok_or_else(|| {
+                        anyhow::anyhow!("--set requires key=value")
+                    })?;
+                    let (k, val) = v
+                        .split_once('=')
+                        .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got {v:?}"))?;
+                    cli.sets.push((k.to_string(), val.to_string()));
+                } else {
+                    cli.options.insert(key, value.unwrap_or_else(|| "true".into()));
+                }
+            } else {
+                cli.positional.push(arg);
+            }
+        }
+        Ok(cli)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => match v.parse() {
+                Ok(x) => Ok(Some(x)),
+                Err(_) => bail!("invalid value {v:?} for --{key}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Cli {
+        Cli::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn command_options_and_sets() {
+        let c = parse(&[
+            "run",
+            "--config",
+            "x.toml",
+            "--out=results",
+            "--set",
+            "lr=0.01",
+            "--set",
+            "algorithm=fedadam-top",
+            "--verbose",
+        ]);
+        assert_eq!(c.command, "run");
+        assert_eq!(c.opt("config"), Some("x.toml"));
+        assert_eq!(c.opt("out"), Some("results"));
+        assert_eq!(
+            c.sets,
+            vec![
+                ("lr".into(), "0.01".into()),
+                ("algorithm".into(), "fedadam-top".into())
+            ]
+        );
+        assert!(c.flag("verbose"));
+        assert!(!c.flag("quiet"));
+    }
+
+    #[test]
+    fn no_command() {
+        let c = parse(&["--help"]);
+        assert_eq!(c.command, "");
+        assert!(c.flag("help"));
+    }
+
+    #[test]
+    fn bad_set_rejected() {
+        assert!(Cli::parse(vec!["run".to_string(), "--set".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn opt_parse_types() {
+        let c = parse(&["run", "--rounds", "12"]);
+        assert_eq!(c.opt_parse::<usize>("rounds").unwrap(), Some(12));
+        assert_eq!(c.opt_parse::<usize>("absent").unwrap(), None);
+        let bad = parse(&["run", "--rounds", "abc"]);
+        assert!(bad.opt_parse::<usize>("rounds").is_err());
+    }
+}

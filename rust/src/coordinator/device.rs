@@ -1,0 +1,137 @@
+//! Device-side local training: `L` local epochs through the AOT programs.
+
+use anyhow::Result;
+
+use crate::algorithms::LocalMode;
+use crate::data::Shard;
+use crate::runtime::EngineHandle;
+
+/// Knobs for one device's local run.
+#[derive(Clone, Copy, Debug)]
+pub struct LocalRunConfig {
+    pub local_epochs: usize,
+    /// 0 = no cap.
+    pub max_batches_per_epoch: usize,
+    pub lr: f32,
+    /// Prefer the fused `epoch` program when a full chunk is available.
+    pub use_epoch_program: bool,
+}
+
+/// Result of one local round.
+#[derive(Clone, Debug)]
+pub struct LocalResult {
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Mean minibatch loss over the round.
+    pub mean_loss: f64,
+}
+
+/// One federated device: a shard plus an engine handle.
+pub struct Device {
+    pub id: usize,
+    pub shard: Shard,
+    engine: EngineHandle,
+    // Reused batch buffers (no per-batch allocation).
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl Device {
+    pub fn new(id: usize, shard: Shard, engine: EngineHandle) -> Self {
+        Device {
+            id,
+            shard,
+            engine,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+        }
+    }
+
+    /// FedAvg weight `|D̃_n|`.
+    pub fn weight(&self) -> f64 {
+        self.shard.data.len() as f64
+    }
+
+    /// Batches one local epoch walks through.
+    pub fn batches_per_epoch(&self, cfg: &LocalRunConfig) -> usize {
+        let full = self.shard.batches_per_epoch(self.engine.meta().batch);
+        if cfg.max_batches_per_epoch == 0 {
+            full
+        } else {
+            full.min(cfg.max_batches_per_epoch)
+        }
+    }
+
+    /// Run `L` local epochs from `(w, m, v)`; Adam or SGD per `mode`.
+    pub fn train_round(
+        &mut self,
+        mode: LocalMode,
+        w: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        cfg: &LocalRunConfig,
+    ) -> Result<LocalResult> {
+        let meta = self.engine.meta().clone();
+        let batch = meta.batch;
+        let nb = self.batches_per_epoch(cfg);
+        let mut w = w;
+        let mut mm = m;
+        let mut vv = v;
+        let mut loss_sum = 0.0f64;
+        let mut loss_n = 0usize;
+
+        for _epoch in 0..cfg.local_epochs {
+            let mut b = 0;
+            // Fused epoch program over full chunks (Adam only).
+            while mode == LocalMode::Adam
+                && cfg.use_epoch_program
+                && b + meta.epoch_batches <= nb
+            {
+                let chunk = meta.epoch_batches;
+                let mut xs = Vec::with_capacity(chunk * batch * meta.row());
+                let mut ys = Vec::with_capacity(chunk * batch);
+                for i in 0..chunk {
+                    self.shard.fill_batch(b + i, batch, &mut self.xbuf, &mut self.ybuf);
+                    xs.extend_from_slice(&self.xbuf);
+                    ys.extend_from_slice(&self.ybuf);
+                }
+                let (w2, m2, v2, loss) = self.engine.epoch_step(w, mm, vv, xs, ys, cfg.lr)?;
+                w = w2;
+                mm = m2;
+                vv = v2;
+                loss_sum += loss as f64;
+                loss_n += 1;
+                b += chunk;
+            }
+            // Remainder (or the whole epoch when the fused path is off).
+            while b < nb {
+                self.shard.fill_batch(b, batch, &mut self.xbuf, &mut self.ybuf);
+                let x = self.xbuf.clone();
+                let y = self.ybuf.clone();
+                match mode {
+                    LocalMode::Adam => {
+                        let (w2, m2, v2, loss) = self.engine.train_step(w, mm, vv, x, y, cfg.lr)?;
+                        w = w2;
+                        mm = m2;
+                        vv = v2;
+                        loss_sum += loss as f64;
+                    }
+                    LocalMode::Sgd => {
+                        let (w2, loss) = self.engine.sgd_step(w, x, y, cfg.lr)?;
+                        w = w2;
+                        loss_sum += loss as f64;
+                    }
+                }
+                loss_n += 1;
+                b += 1;
+            }
+        }
+        Ok(LocalResult {
+            w,
+            m: mm,
+            v: vv,
+            mean_loss: loss_sum / loss_n.max(1) as f64,
+        })
+    }
+}

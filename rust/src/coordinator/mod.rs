@@ -1,0 +1,300 @@
+//! The round coordinator: Algorithm 2's outer loop.
+//!
+//! Owns the engine, data, devices, algorithm and ledger; each round it
+//! (1) hands devices the global state per the algorithm's momentum policy,
+//! (2) runs `L` local epochs per device through the AOT programs,
+//! (3) compresses and "uploads" each delta (bit-accurately priced),
+//! (4) FedAvg-aggregates, post-processes, applies, and
+//! (5) evaluates + logs.
+
+pub mod device;
+pub mod server;
+
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::algorithms::{self, Algorithm, LocalDelta, MomentumPolicy, Upload};
+use crate::config::{ExperimentConfig, SparsifyBackend};
+use crate::data::{partition, synthetic, Dataset, Partition, Shard};
+use crate::metrics::comm::CommLedger;
+use crate::metrics::{ExperimentLog, RoundRecord};
+use crate::runtime::{Engine, EngineHandle, Manifest};
+use crate::tensor;
+
+pub use device::{Device, LocalRunConfig};
+pub use server::{aggregate, GlobalState};
+
+/// A fully-wired experiment ready to run.
+pub struct Coordinator {
+    pub cfg: ExperimentConfig,
+    engine: Engine,
+    devices: Vec<Device>,
+    test_set: Dataset,
+    algorithm: Box<dyn Algorithm>,
+    global: GlobalState,
+    /// Per-device `(m, v)` for `MomentumPolicy::DeviceLocal` algorithms.
+    device_moments: Vec<(Vec<f32>, Vec<f32>)>,
+    ledger: CommLedger,
+    log: ExperimentLog,
+    round: usize,
+    /// Round-robin participation RNG (partial participation).
+    sampler: crate::rng::Rng,
+}
+
+impl Coordinator {
+    /// Build everything: engine, data, shards, algorithm, initial model.
+    pub fn new(cfg: ExperimentConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        cfg.validate()?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        let engine = Engine::load(&manifest, &cfg.model)
+            .with_context(|| format!("loading model {:?}", cfg.model))?;
+        let meta = engine.meta().clone();
+
+        // Synthetic stand-in corpus shaped for this model.
+        let spec = synthetic::SyntheticSpec::for_input_shape(
+            &meta.input_shape,
+            cfg.train_samples,
+            cfg.test_samples,
+        );
+        let task = synthetic::generate(&spec, cfg.seed);
+        let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
+        let shards = partition(&task.train, cfg.devices, how, cfg.seed);
+
+        let handle = engine.handle();
+        let devices: Vec<Device> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(i, data)| Device::new(i, Shard { data }, handle.clone()))
+            .collect();
+
+        let algorithm = algorithms::build(&cfg, meta.dim)?;
+        let w0 = handle.init(cfg.seed as i32)?;
+        let global = GlobalState::new(w0);
+        let device_moments = (0..cfg.devices)
+            .map(|_| (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]))
+            .collect();
+
+        let cfg_seed = cfg.seed;
+        let log = ExperimentLog {
+            name: cfg.name.clone(),
+            algorithm: cfg.algorithm.clone(),
+            model: cfg.model.clone(),
+            iid: cfg.iid,
+            rounds: Vec::new(),
+        };
+        Ok(Coordinator {
+            cfg,
+            engine,
+            devices,
+            test_set: task.test,
+            algorithm,
+            global,
+            device_moments,
+            ledger: CommLedger::default(),
+            log,
+            round: 0,
+            sampler: crate::rng::Rng::new(cfg_seed ^ 0x5a3c_91f7),
+        })
+    }
+
+    /// Devices participating this round (uniform without replacement when
+    /// `participation < 1`; at least one device always runs).
+    fn sample_participants(&mut self) -> Vec<usize> {
+        let n = self.devices.len();
+        let m = ((n as f64 * self.cfg.participation).round() as usize).clamp(1, n);
+        if m == n {
+            return (0..n).collect();
+        }
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.sampler.shuffle(&mut idx);
+        idx.truncate(m);
+        idx.sort_unstable();
+        idx
+    }
+
+    /// Immutable view of the global state.
+    pub fn global(&self) -> &GlobalState {
+        &self.global
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.engine.handle()
+    }
+
+    /// Run one communication round; returns its record.
+    pub fn step_round(&mut self) -> Result<RoundRecord> {
+        let t = self.round;
+        let start = Instant::now();
+        let run_cfg = LocalRunConfig {
+            local_epochs: self.cfg.local_epochs,
+            max_batches_per_epoch: self.cfg.max_batches_per_epoch,
+            lr: self.cfg.lr as f32,
+            use_epoch_program: self.cfg.use_epoch_program,
+        };
+        let mode = self.algorithm.local_mode(t);
+        let policy = self.algorithm.momentum_policy(t);
+        let dim = self.global.dim();
+
+        let participants = self.sample_participants();
+        let mut uploads: Vec<Upload> = Vec::with_capacity(participants.len());
+        let mut loss_sum = 0.0f64;
+        for di in participants.iter().copied() {
+            // 1. Download global state (moments per policy).
+            let (m0, v0) = match policy {
+                MomentumPolicy::Aggregated => (self.global.m.clone(), self.global.v.clone()),
+                MomentumPolicy::DeviceLocal => self.device_moments[di].clone(),
+            };
+            // 2. Local training.
+            let result = self.devices[di].train_round(
+                mode,
+                self.global.w.clone(),
+                m0.clone(),
+                v0.clone(),
+                &run_cfg,
+            )?;
+            loss_sum += result.mean_loss;
+            // 3. Deltas (Algorithm 2 line 9: vs the downloaded state).
+            let delta = LocalDelta {
+                dw: tensor::sub(&result.w, &self.global.w),
+                dm: tensor::sub(&result.m, &m0),
+                dv: tensor::sub(&result.v, &v0),
+                weight: self.devices[di].weight(),
+            };
+            if policy == MomentumPolicy::DeviceLocal {
+                self.device_moments[di] = (result.m, result.v);
+            }
+            // 4. Compress + upload.
+            let upload = self.compress_upload(t, di, delta)?;
+            self.ledger.up(upload.bits);
+            uploads.push(upload);
+        }
+
+        // 5. Server aggregate + broadcast.
+        let mut agg = aggregate(&uploads, dim);
+        self.algorithm.postprocess(&mut agg);
+        self.ledger
+            .down(self.algorithm.downlink_bits(&agg), participants.len());
+        let update_norm = tensor::l2_norm(&agg.dw);
+        self.global.apply(&agg);
+
+        // 6. Evaluate.
+        let (test_loss, test_acc) = if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
+            self.evaluate()?
+        } else {
+            (f64::NAN, f64::NAN)
+        };
+
+        let record = RoundRecord {
+            round: t,
+            train_loss: loss_sum / participants.len() as f64,
+            test_loss,
+            test_accuracy: test_acc,
+            uplink_bits: self.ledger.uplink_bits,
+            downlink_bits: self.ledger.downlink_bits,
+            wall_secs: start.elapsed().as_secs_f64(),
+            update_norm,
+        };
+        self.log.rounds.push(record.clone());
+        self.round += 1;
+        Ok(record)
+    }
+
+    /// Compress via the configured backend (native quickselect, or the
+    /// AOT Pallas sparsifier for the plain SSM algorithm).
+    fn compress_upload(&mut self, t: usize, di: usize, delta: LocalDelta) -> Result<Upload> {
+        if self.cfg.sparsify_backend == SparsifyBackend::Xla
+            && self.cfg.algorithm == "fedadam-ssm"
+        {
+            // Cross-layer path: run eq. 10-12 + 28 inside XLA, then encode.
+            let dim = delta.dw.len();
+            let k = self.cfg.k_for(dim);
+            let (sw, sm, sv) = self
+                .engine
+                .handle()
+                .sparsify(delta.dw, delta.dm, delta.dv, k as i32)?;
+            use crate::algorithms::Recon;
+            use crate::sparse::{codec::cost, SparseVec};
+            return Ok(Upload {
+                dw: Recon::Sparse(SparseVec::from_dense(&sw)),
+                dm: Some(Recon::Sparse(SparseVec::from_dense(&sm))),
+                dv: Some(Recon::Sparse(SparseVec::from_dense(&sv))),
+                weight: delta.weight,
+                bits: cost::fedadam_ssm(dim, k),
+            });
+        }
+        Ok(self.algorithm.compress(t, di, delta))
+    }
+
+    /// Evaluate the global model on the held-out test set.
+    pub fn evaluate(&self) -> Result<(f64, f64)> {
+        evaluate_model(&self.engine.handle(), &self.global.w, &self.test_set)
+    }
+
+    /// Run all configured rounds, returning the full log.
+    pub fn run(&mut self) -> Result<ExperimentLog> {
+        while self.round < self.cfg.rounds {
+            let r = self.step_round()?;
+            log::info!(
+                "[{}] round {:>3}: loss {:.4} acc {} uplink {:.2} Mbit ({:.1}s)",
+                self.cfg.algorithm,
+                r.round,
+                r.train_loss,
+                if r.test_accuracy.is_nan() {
+                    "-".to_string()
+                } else {
+                    format!("{:.3}", r.test_accuracy)
+                },
+                r.uplink_bits as f64 / 1e6,
+                r.wall_secs,
+            );
+        }
+        Ok(self.log.clone())
+    }
+
+    /// The log accumulated so far.
+    pub fn log(&self) -> &ExperimentLog {
+        &self.log
+    }
+}
+
+/// Evaluate `w` over `data` in fixed-size weighted eval batches.
+pub fn evaluate_model(
+    engine: &EngineHandle,
+    w: &[f32],
+    data: &Dataset,
+) -> Result<(f64, f64)> {
+    let meta = engine.meta().clone();
+    let e = meta.eval_batch;
+    let row = meta.row();
+    let mut loss_sum = 0.0;
+    let mut correct = 0.0;
+    let mut weight = 0.0;
+    let mut start = 0;
+    while start < data.len() {
+        let n = (data.len() - start).min(e);
+        let mut x = Vec::with_capacity(e * row);
+        let mut y = Vec::with_capacity(e);
+        let mut wt = Vec::with_capacity(e);
+        for i in 0..e {
+            if i < n {
+                x.extend_from_slice(data.image(start + i));
+                y.push(data.labels[start + i]);
+                wt.push(1.0);
+            } else {
+                x.extend(std::iter::repeat(0.0).take(row));
+                y.push(0);
+                wt.push(0.0);
+            }
+        }
+        let (ls, c, wsum) = engine.eval_batch(w, x, y, wt)?;
+        loss_sum += ls;
+        correct += c;
+        weight += wsum;
+        start += n;
+    }
+    if weight == 0.0 {
+        return Ok((f64::NAN, f64::NAN));
+    }
+    Ok((loss_sum / weight, correct / weight))
+}

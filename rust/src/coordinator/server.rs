@@ -1,0 +1,152 @@
+//! Server-side aggregation (FedAvg over possibly-sparse uploads) and
+//! global state management (Algorithm 2, server lines).
+
+use crate::algorithms::{Aggregate, Upload};
+use crate::tensor;
+
+/// The server's global model + moment estimates.
+#[derive(Clone, Debug)]
+pub struct GlobalState {
+    pub w: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl GlobalState {
+    pub fn new(w0: Vec<f32>) -> Self {
+        let d = w0.len();
+        GlobalState {
+            w: w0,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    /// Apply the aggregated round update (`W += ΔŴ` etc.; moments only
+    /// when the algorithm aggregated them).
+    pub fn apply(&mut self, agg: &Aggregate) {
+        tensor::add_assign(&mut self.w, &agg.dw);
+        if let Some(dm) = &agg.dm {
+            tensor::add_assign(&mut self.m, dm);
+        }
+        if let Some(dv) = &agg.dv {
+            tensor::add_assign(&mut self.v, dv);
+        }
+    }
+}
+
+/// Weighted FedAvg over uploads (sparse uploads accumulate sparsely —
+/// the reduce is `O(Σ nnz)` not `O(N·d)`).
+pub fn aggregate(uploads: &[Upload], dim: usize) -> Aggregate {
+    let total: f64 = uploads.iter().map(|u| u.weight).sum();
+    let mut dw = vec![0.0f32; dim];
+    let any_m = uploads.iter().any(|u| u.dm.is_some());
+    let any_v = uploads.iter().any(|u| u.dv.is_some());
+    let mut dm = if any_m { Some(vec![0.0f32; dim]) } else { None };
+    let mut dv = if any_v { Some(vec![0.0f32; dim]) } else { None };
+
+    for u in uploads {
+        let coef = if total > 0.0 { (u.weight / total) as f32 } else { 0.0 };
+        u.dw.axpy_into(&mut dw, coef);
+        if let (Some(acc), Some(r)) = (dm.as_deref_mut(), u.dm.as_ref()) {
+            r.axpy_into(acc, coef);
+        }
+        if let (Some(acc), Some(r)) = (dv.as_deref_mut(), u.dv.as_ref()) {
+            r.axpy_into(acc, coef);
+        }
+    }
+    Aggregate { dw, dm, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::Recon;
+    use crate::sparse::SparseVec;
+
+    #[test]
+    fn weighted_fedavg_dense() {
+        let uploads = vec![
+            Upload {
+                dw: Recon::Dense(vec![1.0, 1.0]),
+                dm: Some(Recon::Dense(vec![2.0, 0.0])),
+                dv: None,
+                weight: 3.0,
+                bits: 0,
+            },
+            Upload {
+                dw: Recon::Dense(vec![0.0, 2.0]),
+                dm: Some(Recon::Dense(vec![0.0, 2.0])),
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            },
+        ];
+        let agg = aggregate(&uploads, 2);
+        assert!((agg.dw[0] - 0.75).abs() < 1e-6);
+        assert!((agg.dw[1] - 1.25).abs() < 1e-6);
+        let dm = agg.dm.unwrap();
+        assert!((dm[0] - 1.5).abs() < 1e-6);
+        assert!((dm[1] - 0.5).abs() < 1e-6);
+        assert!(agg.dv.is_none());
+    }
+
+    #[test]
+    fn sparse_uploads_aggregate() {
+        let sv = |i: Vec<u32>, v: Vec<f32>| {
+            Recon::Sparse(SparseVec {
+                dim: 4,
+                indices: i,
+                values: v,
+            })
+        };
+        let uploads = vec![
+            Upload {
+                dw: sv(vec![0], vec![4.0]),
+                dm: None,
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![0, 3], vec![2.0, 2.0]),
+                dm: None,
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            },
+        ];
+        let agg = aggregate(&uploads, 4);
+        assert_eq!(agg.dw, vec![3.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn apply_updates_state() {
+        let mut gs = GlobalState::new(vec![1.0, 1.0]);
+        gs.apply(&Aggregate {
+            dw: vec![0.5, -0.5],
+            dm: Some(vec![1.0, 0.0]),
+            dv: None,
+        });
+        assert_eq!(gs.w, vec![1.5, 0.5]);
+        assert_eq!(gs.m, vec![1.0, 0.0]);
+        assert_eq!(gs.v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn zero_total_weight_is_safe() {
+        let uploads = vec![Upload {
+            dw: Recon::Dense(vec![1.0]),
+            dm: None,
+            dv: None,
+            weight: 0.0,
+            bits: 0,
+        }];
+        let agg = aggregate(&uploads, 1);
+        assert_eq!(agg.dw, vec![0.0]);
+    }
+}

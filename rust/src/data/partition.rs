@@ -1,0 +1,177 @@
+//! Federated data partitioning (paper §VII-A *Data distribution*).
+//!
+//! IID: a uniform random split.  Non-IID: per-class Dirichlet(θ) allocation
+//! across devices following Yurochkin et al. / Wang et al. — the papers the
+//! authors cite — with θ = 0.1 as the paper's default (lower θ = more skew).
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// How to split the training corpus across devices.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    Iid,
+    /// Dirichlet with concentration θ.
+    Dirichlet(f64),
+}
+
+impl Partition {
+    pub fn parse(iid: bool, theta: f64) -> Self {
+        if iid {
+            Partition::Iid
+        } else {
+            Partition::Dirichlet(theta)
+        }
+    }
+}
+
+/// Split `data` into `devices` shards; every sample is assigned exactly once
+/// and every device receives at least one sample.
+pub fn partition(data: &Dataset, devices: usize, how: Partition, seed: u64) -> Vec<Dataset> {
+    assert!(devices > 0);
+    let mut rng = Rng::new(seed ^ 0x9a11_0c0d);
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); devices];
+
+    match how {
+        Partition::Iid => {
+            let mut idx: Vec<usize> = (0..data.len()).collect();
+            rng.shuffle(&mut idx);
+            for (i, sample) in idx.into_iter().enumerate() {
+                assignment[i % devices].push(sample);
+            }
+        }
+        Partition::Dirichlet(theta) => {
+            // Per class: draw device proportions ~ Dir(theta), then deal the
+            // class's samples out by those proportions.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.num_classes];
+            for (i, &l) in data.labels.iter().enumerate() {
+                by_class[l as usize].push(i);
+            }
+            for samples in by_class.iter_mut() {
+                rng.shuffle(samples);
+                let props = rng.dirichlet(theta, devices);
+                // Largest-remainder apportionment of samples to devices.
+                let n = samples.len();
+                let mut counts: Vec<usize> = props.iter().map(|p| (p * n as f64) as usize).collect();
+                let mut assigned: usize = counts.iter().sum();
+                // Distribute the remainder to the devices with largest share.
+                let mut order: Vec<usize> = (0..devices).collect();
+                order.sort_by(|&a, &b| props[b].partial_cmp(&props[a]).unwrap());
+                let mut oi = 0;
+                while assigned < n {
+                    counts[order[oi % devices]] += 1;
+                    assigned += 1;
+                    oi += 1;
+                }
+                let mut cursor = 0;
+                for (dev, &c) in counts.iter().enumerate() {
+                    assignment[dev].extend_from_slice(&samples[cursor..cursor + c]);
+                    cursor += c;
+                }
+            }
+        }
+    }
+
+    // Guarantee non-empty shards: steal one sample from the largest shard.
+    for dev in 0..devices {
+        if assignment[dev].is_empty() {
+            let donor = (0..devices)
+                .max_by_key(|&d| assignment[d].len())
+                .unwrap();
+            if let Some(s) = assignment[donor].pop() {
+                assignment[dev].push(s);
+            }
+        }
+    }
+
+    assignment.iter().map(|idx| data.subset(idx)).collect()
+}
+
+/// Earth-mover-ish skew metric: mean total-variation distance between each
+/// shard's class distribution and the global one (0 = IID, →1 = disjoint).
+pub fn label_skew(shards: &[Dataset]) -> f64 {
+    if shards.is_empty() {
+        return 0.0;
+    }
+    let classes = shards[0].num_classes;
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    let mut global = vec![0.0f64; classes];
+    for s in shards {
+        for (c, &n) in s.class_histogram().iter().enumerate() {
+            global[c] += n as f64;
+        }
+    }
+    for g in &mut global {
+        *g /= total as f64;
+    }
+    let mut tv = 0.0;
+    for s in shards {
+        let h = s.class_histogram();
+        let n = s.len().max(1) as f64;
+        let mut dist = 0.0;
+        for c in 0..classes {
+            dist += (h[c] as f64 / n - global[c]).abs();
+        }
+        tv += dist / 2.0;
+    }
+    tv / shards.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn task() -> Dataset {
+        generate(&SyntheticSpec::fashion_mnist_like(2000, 10), 1).train
+    }
+
+    #[test]
+    fn partition_is_exact_cover() {
+        let data = task();
+        for how in [Partition::Iid, Partition::Dirichlet(0.1)] {
+            let shards = partition(&data, 7, how, 42);
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, data.len(), "{how:?}");
+            assert!(shards.iter().all(|s| !s.is_empty()), "{how:?}");
+        }
+    }
+
+    #[test]
+    fn iid_shards_balanced() {
+        let data = task();
+        let shards = partition(&data, 10, Partition::Iid, 1);
+        for s in &shards {
+            assert!((s.len() as i64 - 200).abs() <= 1);
+        }
+        assert!(label_skew(&shards) < 0.1);
+    }
+
+    #[test]
+    fn dirichlet_low_theta_is_skewed() {
+        let data = task();
+        let iid = label_skew(&partition(&data, 10, Partition::Iid, 2));
+        let noniid = label_skew(&partition(&data, 10, Partition::Dirichlet(0.1), 2));
+        assert!(
+            noniid > iid + 0.2,
+            "Dirichlet(0.1) should be much more skewed: iid={iid:.3} noniid={noniid:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let data = task();
+        let a = partition(&data, 5, Partition::Dirichlet(0.5), 9);
+        let b = partition(&data, 5, Partition::Dirichlet(0.5), 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.labels, y.labels);
+        }
+    }
+
+    #[test]
+    fn more_devices_than_samples() {
+        let data = generate(&SyntheticSpec::fashion_mnist_like(3, 1), 5).train;
+        let shards = partition(&data, 3, Partition::Dirichlet(0.1), 1);
+        assert!(shards.iter().all(|s| !s.is_empty()));
+    }
+}

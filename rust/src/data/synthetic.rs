@@ -1,0 +1,249 @@
+//! Class-structured synthetic image generation.
+//!
+//! Stand-ins for the paper's corpora (DESIGN.md §Substitutions): each class
+//! is a smooth random prototype in the target tensor shape; a sample is
+//! `prototype + per-sample Gaussian noise`, with a small label-noise rate so
+//! the task is not linearly trivial.  What the FL algorithms consume is
+//! gradients and update deltas, so preserving shape/size/class structure
+//! (plus Dirichlet skew, see [`super::partition`]) preserves the
+//! comparisons the paper makes.
+
+use super::Dataset;
+use crate::rng::Rng;
+
+/// Shape + difficulty knobs for a synthetic task.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+    pub train: usize,
+    pub test: usize,
+    /// Per-sample noise std relative to prototype contrast (1.0 = hard).
+    pub noise: f64,
+    /// Fraction of labels flipped uniformly.
+    pub label_noise: f64,
+}
+
+impl SyntheticSpec {
+    /// Fashion-MNIST stand-in: 28x28x1, 60k/10k.
+    pub fn fashion_mnist_like(train: usize, test: usize) -> Self {
+        SyntheticSpec {
+            height: 28,
+            width: 28,
+            channels: 1,
+            num_classes: 10,
+            train,
+            test,
+            noise: 0.8,
+            label_noise: 0.02,
+        }
+    }
+
+    /// CIFAR-10 stand-in: 32x32x3.
+    pub fn cifar10_like(train: usize, test: usize) -> Self {
+        SyntheticSpec {
+            height: 32,
+            width: 32,
+            channels: 3,
+            num_classes: 10,
+            train,
+            test,
+            noise: 1.0,
+            label_noise: 0.02,
+        }
+    }
+
+    /// SVHN stand-in: 32x32x3 (house-number crops are noisier).
+    pub fn svhn_like(train: usize, test: usize) -> Self {
+        SyntheticSpec {
+            height: 32,
+            width: 32,
+            channels: 3,
+            num_classes: 10,
+            train,
+            test,
+            noise: 1.1,
+            label_noise: 0.03,
+        }
+    }
+
+    /// Pick by the input shape recorded in the AOT manifest.
+    pub fn for_input_shape(shape: &[usize], train: usize, test: usize) -> Self {
+        match shape {
+            [28, 28, 1] => Self::fashion_mnist_like(train, test),
+            [32, 32, 3] => Self::cifar10_like(train, test),
+            [h, w, c] => SyntheticSpec {
+                height: *h,
+                width: *w,
+                channels: *c,
+                num_classes: 10,
+                train,
+                test,
+                noise: 0.8,
+                label_noise: 0.02,
+            },
+            _ => panic!("unsupported input shape {shape:?}"),
+        }
+    }
+
+    pub fn row(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+}
+
+/// A generated task: train + test splits drawn from the same prototypes.
+#[derive(Clone, Debug)]
+pub struct SyntheticTask {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Generate a task deterministically from `seed`.
+pub fn generate(spec: &SyntheticSpec, seed: u64) -> SyntheticTask {
+    let mut rng = Rng::new(seed ^ 0x5e5e_5e5e_0001);
+    let row = spec.row();
+
+    // Smooth prototypes: low-frequency mixture of 2-D cosines per channel,
+    // so conv layers have real spatial structure to exploit.
+    let mut prototypes = vec![0.0f32; spec.num_classes * row];
+    for c in 0..spec.num_classes {
+        let proto = &mut prototypes[c * row..(c + 1) * row];
+        for ch in 0..spec.channels {
+            // 3 random cosine components per channel.
+            let comps: Vec<(f64, f64, f64, f64)> = (0..3)
+                .map(|_| {
+                    (
+                        rng.uniform_in(0.5, 3.0),  // fx cycles
+                        rng.uniform_in(0.5, 3.0),  // fy cycles
+                        rng.uniform_in(0.0, std::f64::consts::TAU), // phase
+                        rng.uniform_in(0.4, 1.0),  // amplitude
+                    )
+                })
+                .collect();
+            for y in 0..spec.height {
+                for x in 0..spec.width {
+                    let mut v = 0.0;
+                    for &(fx, fy, ph, amp) in &comps {
+                        let t = std::f64::consts::TAU
+                            * (fx * x as f64 / spec.width as f64
+                                + fy * y as f64 / spec.height as f64)
+                            + ph;
+                        v += amp * t.cos();
+                    }
+                    proto[(y * spec.width + x) * spec.channels + ch] = v as f32;
+                }
+            }
+        }
+    }
+
+    let mut make_split = |n: usize, tag: u64| {
+        let mut r = rng.fork(tag);
+        let mut images = Vec::with_capacity(n * row);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class = r.below(spec.num_classes);
+            let proto = &prototypes[class * row..(class + 1) * row];
+            for &p in proto {
+                images.push(p + (r.normal() * spec.noise) as f32);
+            }
+            let label = if r.uniform() < spec.label_noise {
+                r.below(spec.num_classes) as i32
+            } else {
+                class as i32
+            };
+            labels.push(label);
+        }
+        Dataset {
+            images,
+            labels,
+            row,
+            num_classes: spec.num_classes,
+        }
+    };
+
+    SyntheticTask {
+        train: make_split(spec.train, 1),
+        test: make_split(spec.test, 2),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SyntheticSpec::fashion_mnist_like(128, 64);
+        let a = generate(&spec, 7);
+        let b = generate(&spec, 7);
+        assert_eq!(a.train.len(), 128);
+        assert_eq!(a.test.len(), 64);
+        assert_eq!(a.train.row, 28 * 28);
+        assert_eq!(a.train.images, b.train.images);
+        assert_eq!(a.train.labels, b.train.labels);
+        let c = generate(&spec, 8);
+        assert_ne!(a.train.images, c.train.images);
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // Nearest-prototype classification on clean prototypes must beat
+        // chance by a wide margin, otherwise the task is unlearnable.
+        let spec = SyntheticSpec {
+            noise: 0.5,
+            label_noise: 0.0,
+            ..SyntheticSpec::fashion_mnist_like(400, 1)
+        };
+        let t = generate(&spec, 3);
+        // Estimate prototypes from the train set itself (class means).
+        let row = t.train.row;
+        let mut means = vec![0.0f64; 10 * row];
+        let mut counts = [0usize; 10];
+        for i in 0..t.train.len() {
+            let l = t.train.labels[i] as usize;
+            counts[l] += 1;
+            for (j, &v) in t.train.image(i).iter().enumerate() {
+                means[l * row + j] += v as f64;
+            }
+        }
+        for l in 0..10 {
+            for j in 0..row {
+                means[l * row + j] /= counts[l].max(1) as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..t.train.len() {
+            let img = t.train.image(i);
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = img
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &v)| (v as f64 - means[a * row + j]).powi(2))
+                        .sum();
+                    let db: f64 = img
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &v)| (v as f64 - means[b * row + j]).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == t.train.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / t.train.len() as f64;
+        assert!(acc > 0.8, "nearest-prototype accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let spec = SyntheticSpec::cifar10_like(500, 100);
+        let t = generate(&spec, 1);
+        let hist = t.train.class_histogram();
+        assert!(hist.iter().all(|&c| c > 10), "{hist:?}");
+    }
+}

@@ -1,0 +1,51 @@
+//! # FedAdam-SSM
+//!
+//! Production reproduction of *"Towards Communication-efficient Federated
+//! Learning via Sparse and Aligned Adaptive Optimization"* (TSP 2025):
+//! a federated-Adam framework where devices sparsify the updates of local
+//! model parameters **and** both moment estimates with one **Shared Sparse
+//! Mask** (the top-k mask of `|ΔW|`), cutting uplink cost from `O(3dq)` to
+//! `O(3kq + d)`.
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//! - **Layer 1** (build time): Pallas kernels — fused Adam, SSM sparsify,
+//!   quantizers (`python/compile/kernels/`).
+//! - **Layer 2** (build time): JAX models + local training programs,
+//!   AOT-lowered to HLO text (`python/compile/`).
+//! - **Layer 3** (this crate): the federated runtime — device/server
+//!   coordination, sparse + quantized transport with bit-accurate
+//!   accounting, aggregation, experiment harness. Python is never on the
+//!   runtime path: the binary executes the AOT artifacts via PJRT.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fedadam_ssm::config::ExperimentConfig;
+//! use fedadam_ssm::coordinator::Coordinator;
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.model = "cnn_small".into();
+//! cfg.algorithm = "fedadam-ssm".into();
+//! cfg.rounds = 20;
+//! let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+//! let log = coord.run().unwrap();
+//! println!("final accuracy {:.3}", log.rounds.last().unwrap().test_accuracy);
+//! ```
+
+pub mod algorithms;
+pub mod benchlib;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+
+

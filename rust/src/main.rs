@@ -1,0 +1,174 @@
+//! `fedadam-ssm` — the leader binary.
+//!
+//! Commands:
+//! - `run`      one experiment (`--config exp.toml`, `--set key=value`…)
+//! - `compare`  several algorithms on one workload (Fig.-2-style sweep)
+//! - `models`   list AOT models in the manifest
+//! - `info`     print resolved config and exit
+//!
+//! Example:
+//! ```text
+//! fedadam-ssm run --artifacts artifacts --set model=cnn_small \
+//!     --set algorithm=fedadam-ssm --set rounds=30 --out results/
+//! ```
+
+use std::io::Write as _;
+
+use anyhow::{bail, Result};
+
+use fedadam_ssm::cli::Cli;
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::runtime::Manifest;
+
+/// Minimal stderr logger (offline build: no tracing-subscriber).
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+fn init_logging(verbose: bool) {
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if verbose {
+        log::LevelFilter::Debug
+    } else {
+        log::LevelFilter::Info
+    });
+}
+
+const USAGE: &str = "\
+fedadam-ssm — communication-efficient federated Adam (FedAdam-SSM)
+
+USAGE:
+    fedadam-ssm <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run       run one experiment
+    compare   run several algorithms on the same workload
+    models    list models available in the artifacts manifest
+    info      print the resolved configuration
+
+OPTIONS:
+    --artifacts <dir>     AOT artifacts directory [default: artifacts]
+    --config <file>       TOML experiment config
+    --set key=value       override one config key (repeatable)
+    --out <dir>           write per-round CSV logs here
+    --algorithms a,b,c    (compare) comma-separated algorithm ids
+    --verbose             debug logging
+";
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if cli.flag("help") || cli.command.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    init_logging(cli.flag("verbose"));
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(cli: &Cli) -> Result<ExperimentConfig> {
+    let mut cfg = match cli.opt("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &cli.sets {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    let artifacts = cli.opt_or("artifacts", "artifacts");
+    match cli.command.as_str() {
+        "run" => {
+            let cfg = load_config(cli)?;
+            let name = cfg.name.clone();
+            let mut coord = Coordinator::new(cfg, artifacts)?;
+            let log_out = coord.run()?;
+            println!("{}", log_out.summary());
+            if let Some(out) = cli.opt("out") {
+                std::fs::create_dir_all(out)?;
+                let path = format!("{out}/{}_{}.csv", name, log_out.algorithm);
+                log_out.write_csv(&path)?;
+                println!("wrote {path}");
+            }
+            Ok(())
+        }
+        "compare" => {
+            let base = load_config(cli)?;
+            let algos: Vec<String> = cli
+                .opt_or("algorithms", "fedadam-ssm,fedadam-top,fedadam")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let mut summaries = Vec::new();
+            for algo in algos {
+                let mut cfg = base.clone();
+                cfg.algorithm = algo.clone();
+                let mut coord = Coordinator::new(cfg, artifacts)?;
+                let log_out = coord.run()?;
+                println!("{}", log_out.summary());
+                if let Some(out) = cli.opt("out") {
+                    std::fs::create_dir_all(out)?;
+                    let path = format!("{out}/{}_{}.csv", base.name, algo);
+                    log_out.write_csv(&path)?;
+                }
+                summaries.push(log_out);
+            }
+            println!("\n{:<18} {:>10} {:>14}", "algorithm", "best acc", "uplink Mbit");
+            for s in &summaries {
+                let up = s.rounds.last().map(|r| r.uplink_bits as f64 / 1e6).unwrap_or(0.0);
+                println!("{:<18} {:>10.3} {:>14.2}", s.algorithm, s.best_accuracy(), up);
+            }
+            Ok(())
+        }
+        "models" => {
+            let manifest = Manifest::load(artifacts)?;
+            println!("{:<14} {:>10} {:>14} {:>8} {:>12}", "model", "params", "input", "batch", "programs");
+            for (name, m) in &manifest.models {
+                println!(
+                    "{:<14} {:>10} {:>14} {:>8} {:>12}",
+                    name,
+                    m.dim,
+                    format!("{:?}", m.input_shape),
+                    m.batch,
+                    m.artifacts.len()
+                );
+            }
+            Ok(())
+        }
+        "info" => {
+            let cfg = load_config(cli)?;
+            println!("{cfg:#?}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}

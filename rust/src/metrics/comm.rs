@@ -1,0 +1,45 @@
+//! Communication ledger: exact bit accounting per direction per round.
+
+/// Running totals for one experiment.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommLedger {
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+}
+
+impl CommLedger {
+    /// Record one device's upload.
+    pub fn up(&mut self, bits: u64) {
+        self.uplink_bits += bits;
+    }
+
+    /// Record a broadcast to `devices` receivers.
+    pub fn down(&mut self, bits_per_device: u64, devices: usize) {
+        self.downlink_bits += bits_per_device * devices as u64;
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.uplink_bits + self.downlink_bits
+    }
+
+    pub fn uplink_mbit(&self) -> f64 {
+        self.uplink_bits as f64 / 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_accumulates() {
+        let mut l = CommLedger::default();
+        l.up(100);
+        l.up(50);
+        l.down(10, 4);
+        assert_eq!(l.uplink_bits, 150);
+        assert_eq!(l.downlink_bits, 40);
+        assert_eq!(l.total_bits(), 190);
+        assert!((l.uplink_mbit() - 150e-6).abs() < 1e-15);
+    }
+}

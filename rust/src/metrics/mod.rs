@@ -1,0 +1,210 @@
+//! Experiment metrics: per-round records, CSV/JSON emission, and the
+//! communication ledger the Table-I harness reads.
+
+pub mod comm;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// One communication round's measurements.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Mean local training loss across devices this round.
+    pub train_loss: f64,
+    /// Test loss on the global model (NaN when not evaluated this round).
+    pub test_loss: f64,
+    /// Test accuracy on the global model (NaN when not evaluated).
+    pub test_accuracy: f64,
+    /// Cumulative uplink bits across all devices since round 0.
+    pub uplink_bits: u64,
+    /// Cumulative downlink bits.
+    pub downlink_bits: u64,
+    /// Wall-clock seconds spent in this round.
+    pub wall_secs: f64,
+    /// L2 norm of the aggregated ΔW (convergence diagnostics).
+    pub update_norm: f64,
+}
+
+/// A full experiment's log plus identifying metadata.
+#[derive(Clone, Debug, Default)]
+pub struct ExperimentLog {
+    pub name: String,
+    pub algorithm: String,
+    pub model: String,
+    pub iid: bool,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl ExperimentLog {
+    /// Cumulative uplink in Mbit at the end of `round` (Table I's unit).
+    pub fn uplink_mbit(&self, round: usize) -> f64 {
+        self.rounds
+            .get(round)
+            .map(|r| r.uplink_bits as f64 / 1e6)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .filter(|a| a.is_finite())
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Minimum cumulative uplink Mbit at which `target` accuracy was hit
+    /// (Table I "Comm."); `None` = the paper's `∞`.
+    pub fn comm_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_accuracy.is_finite() && r.test_accuracy >= target)
+            .map(|r| r.uplink_bits as f64 / 1e6)
+    }
+
+    /// CSV with a header row.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,update_norm\n",
+        );
+        for r in &self.rounds {
+            let _ = writeln!(
+                out,
+                "{},{:.6},{:.6},{:.6},{},{},{:.4},{:.6e}",
+                r.round,
+                r.train_loss,
+                r.test_loss,
+                r.test_accuracy,
+                r.uplink_bits,
+                r.downlink_bits,
+                r.wall_secs,
+                r.update_norm
+            );
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_csv())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Structured JSON (metadata + rounds) for downstream tooling.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Value;
+        use std::collections::BTreeMap;
+        let mut top = BTreeMap::new();
+        top.insert("name".to_string(), Value::Str(self.name.clone()));
+        top.insert("algorithm".to_string(), Value::Str(self.algorithm.clone()));
+        top.insert("model".to_string(), Value::Str(self.model.clone()));
+        top.insert("iid".to_string(), Value::Bool(self.iid));
+        let rounds: Vec<Value> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut m = BTreeMap::new();
+                m.insert("round".into(), Value::Num(r.round as f64));
+                m.insert("train_loss".into(), Value::Num(r.train_loss));
+                m.insert("test_loss".into(), finite(r.test_loss));
+                m.insert("test_accuracy".into(), finite(r.test_accuracy));
+                m.insert("uplink_bits".into(), Value::Num(r.uplink_bits as f64));
+                m.insert("downlink_bits".into(), Value::Num(r.downlink_bits as f64));
+                m.insert("wall_secs".into(), Value::Num(r.wall_secs));
+                m.insert("update_norm".into(), Value::Num(r.update_norm));
+                Value::Obj(m)
+            })
+            .collect();
+        top.insert("rounds".to_string(), Value::Arr(rounds));
+        return Value::Obj(top).render();
+
+        fn finite(x: f64) -> Value {
+            if x.is_finite() {
+                Value::Num(x)
+            } else {
+                Value::Null
+            }
+        }
+    }
+
+    pub fn write_json(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json())
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        let last = self.rounds.last();
+        format!(
+            "{} [{}] {} rounds: best acc {:.3}, final loss {:.4}, uplink {:.2} Mbit",
+            self.name,
+            self.algorithm,
+            self.rounds.len(),
+            self.best_accuracy(),
+            last.map(|r| r.train_loss).unwrap_or(f64::NAN),
+            last.map(|r| r.uplink_bits as f64 / 1e6).unwrap_or(0.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> ExperimentLog {
+        ExperimentLog {
+            name: "t".into(),
+            algorithm: "fedadam-ssm".into(),
+            model: "cnn_small".into(),
+            iid: true,
+            rounds: (0..5)
+                .map(|i| RoundRecord {
+                    round: i,
+                    train_loss: 2.0 - i as f64 * 0.2,
+                    test_loss: 2.0 - i as f64 * 0.2,
+                    test_accuracy: 0.2 + i as f64 * 0.1,
+                    uplink_bits: (i as u64 + 1) * 1_000_000,
+                    downlink_bits: (i as u64 + 1) * 500_000,
+                    wall_secs: 0.5,
+                    update_norm: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn comm_to_accuracy_finds_first_crossing() {
+        let l = log();
+        assert_eq!(l.comm_to_accuracy(0.45), Some(4.0)); // round 3: acc 0.5, 4 Mbit
+        assert_eq!(l.comm_to_accuracy(0.9), None);
+        assert!((l.best_accuracy() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = log().to_csv();
+        assert_eq!(csv.lines().count(), 6);
+        assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn json_roundtrip_parses() {
+        let j = log().to_json();
+        let v = crate::util::json::parse(&j).unwrap();
+        assert_eq!(v.get("algorithm").unwrap().as_str(), Some("fedadam-ssm"));
+        assert_eq!(v.get("rounds").unwrap().as_arr().unwrap().len(), 5);
+        // NaN must serialize as null, not break the document.
+        let mut l = log();
+        l.rounds[0].test_accuracy = f64::NAN;
+        assert!(crate::util::json::parse(&l.to_json()).is_ok());
+    }
+
+    #[test]
+    fn uplink_mbit() {
+        let l = log();
+        assert!((l.uplink_mbit(0) - 1.0).abs() < 1e-12);
+        assert!(l.uplink_mbit(99).is_nan());
+    }
+}

@@ -1,0 +1,58 @@
+//! Quantizers for the baseline algorithms (mirrors of the Layer-1 kernels).
+//!
+//! - [`onebit`] — error-compensated sign quantization (1-bit Adam [29]);
+//! - [`uniform`] — s-level uniform quantization (Efficient-Adam [28]).
+//!
+//! Both come with real bit-packing so the baselines pay (and we account)
+//! their true wire cost, plus an [`ErrorFeedback`] memory shared by both.
+
+pub mod onebit;
+pub mod uniform;
+
+pub use onebit::{onebit_compress, onebit_decompress, OneBitPacket};
+pub use uniform::{uniform_compress, uniform_decompress, UniformPacket};
+
+/// Per-device error-feedback memory `e_t` (residual accumulator).
+#[derive(Clone, Debug, Default)]
+pub struct ErrorFeedback {
+    pub residual: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        ErrorFeedback {
+            residual: vec![0.0; dim],
+        }
+    }
+
+    /// `x + e` — the compensated input to the compressor.
+    pub fn compensate(&self, x: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(x.len(), self.residual.len());
+        x.iter().zip(&self.residual).map(|(a, b)| a + b).collect()
+    }
+
+    /// Store `compensated - quantized` for the next round.
+    pub fn update(&mut self, compensated: &[f32], quantized: &[f32]) {
+        for ((r, &c), &q) in self.residual.iter_mut().zip(compensated).zip(quantized) {
+            *r = c - q;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_feedback_accumulates_residual() {
+        let mut ef = ErrorFeedback::new(3);
+        let x = vec![1.0, -2.0, 0.5];
+        let c = ef.compensate(&x);
+        assert_eq!(c, x);
+        let q = vec![1.5, -1.5, 1.5]; // pretend quantizer
+        ef.update(&c, &q);
+        assert_eq!(ef.residual, vec![-0.5, -0.5, -1.0]);
+        let c2 = ef.compensate(&x);
+        assert_eq!(c2, vec![0.5, -2.5, -0.5]);
+    }
+}

@@ -1,0 +1,106 @@
+//! s-level uniform quantization — the Efficient-Adam compressor [28].
+//!
+//! Deterministic rounding over `[-max|x|, max|x|]` with `s` representable
+//! levels; wire format is `ceil(log2 s)` bits per lane + one f32 scale.
+//! Matches `compile/kernels/quantize.py::uniform_quantize`.
+
+use crate::sparse::codec::{index_bits, BitPacker, BitUnpacker};
+
+/// Packed s-level payload.
+#[derive(Clone, Debug)]
+pub struct UniformPacket {
+    pub dim: usize,
+    pub scale: f32,
+    pub levels: u32,
+    pub codes: Vec<u8>,
+}
+
+impl UniformPacket {
+    /// Wire size: `d * ceil(log2 s)` bits + 32-bit scale.
+    pub fn wire_bits(&self) -> u64 {
+        self.dim as u64 * index_bits(self.levels as usize + 1) + 32
+    }
+}
+
+/// Quantize to `s_levels` representable values (`s_levels >= 2`).
+pub fn uniform_compress(x: &[f32], s_levels: u32) -> UniformPacket {
+    assert!(s_levels >= 2, "need at least 2 levels");
+    let levels = s_levels - 1; // number of bins
+    let scale = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let bits = index_bits(s_levels as usize);
+    let mut packer = BitPacker::with_capacity(x.len() * bits as usize);
+    let safe = scale.max(1e-30);
+    for &v in x {
+        let t = (v / safe).clamp(-1.0, 1.0);
+        let q = ((t + 1.0) * 0.5 * levels as f32).round() as u64;
+        packer.push(q, bits);
+    }
+    UniformPacket {
+        dim: x.len(),
+        scale,
+        levels,
+        codes: packer.finish(),
+    }
+}
+
+/// Dequantize.
+pub fn uniform_decompress(p: &UniformPacket) -> Vec<f32> {
+    if p.scale == 0.0 {
+        return vec![0.0; p.dim];
+    }
+    let bits = index_bits(p.levels as usize + 1);
+    let mut u = BitUnpacker::new(&p.codes);
+    (0..p.dim)
+        .map(|_| {
+            let q = u.pull(bits) as f32;
+            (q / p.levels as f32 * 2.0 - 1.0) * p.scale
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_bin_width() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        for &s in &[2u32, 4, 16, 256] {
+            let p = uniform_compress(&x, s);
+            let y = uniform_decompress(&p);
+            let bin = 2.0 * p.scale / (s - 1) as f32;
+            for (xi, yi) in x.iter().zip(&y) {
+                assert!(
+                    (xi - yi).abs() <= bin / 2.0 + 1e-5,
+                    "s={s} x={xi} y={yi} bin={bin}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_vector() {
+        let p = uniform_compress(&[0.0; 16], 16);
+        assert_eq!(p.scale, 0.0);
+        assert_eq!(uniform_decompress(&p), vec![0.0; 16]);
+    }
+
+    #[test]
+    fn wire_bits_counts_levels() {
+        let x = vec![1.0f32; 64];
+        let p = uniform_compress(&x, 16); // 4 bits per lane
+        assert_eq!(p.wire_bits(), 64 * 4 + 32);
+        let p2 = uniform_compress(&x, 2); // 1 bit per lane
+        assert_eq!(p2.wire_bits(), 64 + 32);
+    }
+
+    #[test]
+    fn extremes_map_to_extremes() {
+        let x = vec![-3.0f32, 3.0, 0.0];
+        let p = uniform_compress(&x, 3); // levels at -3, 0, +3
+        let y = uniform_decompress(&p);
+        assert_eq!(y, vec![-3.0, 3.0, 0.0]);
+    }
+}

@@ -1,0 +1,183 @@
+//! `artifacts/manifest.json` — the contract between `compile/aot.py` and
+//! the rust runtime: model dimensions, program shapes, artifact files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Adam constants baked into the artifacts (paper defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// One exported model's metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    /// Flat parameter count `d`.
+    pub dim: usize,
+    /// `[h, w, c]`.
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// Train/sgd/grads batch size `B`.
+    pub batch: usize,
+    /// Eval program batch size `E`.
+    pub eval_batch: usize,
+    /// Batches per `epoch` program invocation.
+    pub epoch_batches: usize,
+    /// program name -> artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+impl ModelMeta {
+    /// Image element count `h*w*c`.
+    pub fn row(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Path of one program's HLO text.
+    pub fn artifact_path(&self, dir: &Path, prog: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(prog)
+            .ok_or_else(|| anyhow!("model {} has no program {prog:?}", self.name))?;
+        Ok(dir.join(f))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub adam: AdamConfig,
+    pub models: BTreeMap<String, ModelMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let adam_v = root.expect("adam").map_err(|e| anyhow!("{e}"))?;
+        let adam = AdamConfig {
+            beta1: field_f64(adam_v, "beta1")?,
+            beta2: field_f64(adam_v, "beta2")?,
+            eps: field_f64(adam_v, "eps")?,
+        };
+
+        let mut models = BTreeMap::new();
+        let models_v = root
+            .expect("models")
+            .map_err(|e| anyhow!("{e}"))?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models is not an object"))?;
+        for (name, mv) in models_v {
+            let artifacts = mv
+                .expect("artifacts")
+                .map_err(|e| anyhow!("{name}: {e}"))?
+                .as_obj()
+                .ok_or_else(|| anyhow!("{name}: artifacts not an object"))?
+                .iter()
+                .map(|(prog, av)| {
+                    let file = av
+                        .get("file")
+                        .and_then(Value::as_str)
+                        .ok_or_else(|| anyhow!("{name}/{prog}: missing file"))?;
+                    Ok((prog.clone(), file.to_string()))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?;
+            let input_shape = mv
+                .expect("input_shape")
+                .map_err(|e| anyhow!("{name}: {e}"))?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{name}: input_shape not an array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("{name}: bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    dim: field_usize(mv, name, "dim")?,
+                    input_shape,
+                    num_classes: field_usize(mv, name, "num_classes")?,
+                    batch: field_usize(mv, name, "batch")?,
+                    eval_batch: field_usize(mv, name, "eval_batch")?,
+                    epoch_batches: field_usize(mv, name, "epoch_batches")?,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir, adam, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?}); re-run `make artifacts MODELS=...`",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn field_f64(v: &Value, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(Value::as_f64)
+        .ok_or_else(|| anyhow!("missing/invalid {key}"))
+}
+
+fn field_usize(v: &Value, model: &str, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Value::as_usize)
+        .ok_or_else(|| anyhow!("{model}: missing/invalid {key}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("fedadam-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "format": "hlo-text/v1",
+              "adam": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-06},
+              "models": {
+                "m": {
+                  "dim": 10, "input_shape": [2,2,1], "num_classes": 10,
+                  "batch": 4, "eval_batch": 8, "epoch_batches": 2,
+                  "params": [],
+                  "artifacts": {"train": {"file": "train_m.hlo.txt", "sha256": "x", "bytes": 1}}
+                }
+              }
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert!((m.adam.beta2 - 0.999).abs() < 1e-12);
+        let meta = m.model("m").unwrap();
+        assert_eq!(meta.dim, 10);
+        assert_eq!(meta.row(), 4);
+        assert!(meta
+            .artifact_path(&m.dir, "train")
+            .unwrap()
+            .ends_with("train_m.hlo.txt"));
+        assert!(meta.artifact_path(&m.dir, "nope").is_err());
+        assert!(m.model("absent").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

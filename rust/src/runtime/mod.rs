@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire runtime bridge.  [`manifest`] describes what was exported;
+//! [`engine`] owns a PJRT CPU client plus the compiled executables on a
+//! dedicated thread (the `xla` crate's handles wrap raw pointers and are
+//! not `Send`), exposing a cloneable, thread-safe [`engine::EngineHandle`]
+//! that device workers call concurrently.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Arg, Engine, EngineHandle, Prog};
+pub use manifest::{AdamConfig, Manifest, ModelMeta};

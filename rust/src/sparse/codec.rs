@@ -1,0 +1,323 @@
+//! Wire encodings and the paper's bit-cost model (§IV, §VII-A).
+//!
+//! Positions of non-zeros can be sent either as a `d`-bit **bitmask** or as
+//! `k` indices of `ceil(log2 d)` bits each; the experiments use
+//! `min{...}` of the two (paper §VII-A *Implementation*).  Values are `q`
+//! = 32-bit floats.  This module provides both the **cost model** (used by
+//! every algorithm's accounting) and real encoders/decoders so the wire
+//! format is exercised, not just priced.
+
+use super::SparseVec;
+
+/// Floating-point precision `q` in bits (paper uses f32).
+pub const Q: u64 = 32;
+
+/// `ceil(log2 d)` — bits to address one coordinate.
+pub fn index_bits(dim: usize) -> u64 {
+    if dim <= 1 {
+        1
+    } else {
+        (usize::BITS - (dim - 1).leading_zeros()) as u64
+    }
+}
+
+/// Which position encoding `min{}` picked.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaskEncoding {
+    /// `d` bits, one per coordinate.
+    Bitmap,
+    /// `k * ceil(log2 d)` bits.
+    IndexList,
+}
+
+/// Cost in bits of transmitting the positions of `k` non-zeros out of `d`.
+pub fn mask_bits(dim: usize, k: usize) -> (u64, MaskEncoding) {
+    let bitmap = dim as u64;
+    let index = k as u64 * index_bits(dim);
+    if bitmap <= index {
+        (bitmap, MaskEncoding::Bitmap)
+    } else {
+        (index, MaskEncoding::IndexList)
+    }
+}
+
+/// Uplink bits for ONE device/round under each scheme of §IV + §VII-A.
+pub mod cost {
+    use super::{index_bits, Q};
+
+    /// Standard FedAdam (Algorithm 1): three dense vectors — `3dq`.
+    pub fn fedadam_dense(d: usize) -> u64 {
+        3 * d as u64 * Q
+    }
+
+    /// FedAdam-Top: three sparse vectors, three masks —
+    /// `min{3(kq+d), 3k(q+log2 d)}`.
+    pub fn fedadam_top(d: usize, k: usize) -> u64 {
+        let bitmap = 3 * (k as u64 * Q + d as u64);
+        let index = 3 * k as u64 * (Q + index_bits(d));
+        bitmap.min(index)
+    }
+
+    /// SSM family (FedAdam-SSM / SSM_M / SSM_V / Fairness-Top): three sparse
+    /// value lists, ONE mask — `min{3kq+d, k(3q+log2 d)}`.
+    pub fn fedadam_ssm(d: usize, k: usize) -> u64 {
+        let bitmap = 3 * k as u64 * Q + d as u64;
+        let index = k as u64 * (3 * Q + index_bits(d));
+        bitmap.min(index)
+    }
+
+    /// FedSGD: one dense vector — `dq`.
+    pub fn fedsgd_dense(d: usize) -> u64 {
+        d as u64 * Q
+    }
+
+    /// 1-bit Adam compression phase: 1 bit per lane + one f32 scale.
+    pub fn onebit(d: usize) -> u64 {
+        d as u64 + Q
+    }
+
+    /// Efficient-Adam with `s`-level uniform quantization:
+    /// `ceil(log2 s)` bits per lane + one f32 scale.
+    pub fn uniform(d: usize, s_levels: usize) -> u64 {
+        d as u64 * index_bits(s_levels) + Q
+    }
+}
+
+/// A bit-exact encoded sparse vector (positions + f32 payloads).
+#[derive(Clone, Debug)]
+pub struct EncodedSparse {
+    pub dim: usize,
+    pub encoding: MaskEncoding,
+    /// Packed position bits (bitmap or index list).
+    pub positions: Vec<u8>,
+    /// Raw little-endian f32 payloads, `k` of them.
+    pub payload: Vec<u8>,
+    pub k: usize,
+}
+
+impl EncodedSparse {
+    /// Total size on the wire in bits.
+    pub fn wire_bits(&self) -> u64 {
+        let (pos_bits, _) = mask_bits_for(self.encoding, self.dim, self.k);
+        pos_bits + self.payload.len() as u64 * 8
+    }
+}
+
+fn mask_bits_for(enc: MaskEncoding, dim: usize, k: usize) -> (u64, MaskEncoding) {
+    match enc {
+        MaskEncoding::Bitmap => (dim as u64, enc),
+        MaskEncoding::IndexList => (k as u64 * index_bits(dim), enc),
+    }
+}
+
+/// Encode with the cheaper position encoding.
+pub fn encode(sv: &SparseVec) -> EncodedSparse {
+    let (_, enc) = mask_bits(sv.dim, sv.nnz());
+    let positions = match enc {
+        MaskEncoding::Bitmap => {
+            let mut bytes = vec![0u8; sv.dim.div_ceil(8)];
+            for &i in &sv.indices {
+                bytes[i as usize / 8] |= 1 << (i % 8);
+            }
+            bytes
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(sv.dim);
+            let mut packer = BitPacker::with_capacity(sv.nnz() * bits as usize);
+            for &i in &sv.indices {
+                packer.push(i as u64, bits);
+            }
+            packer.finish()
+        }
+    };
+    let mut payload = Vec::with_capacity(sv.nnz() * 4);
+    for &v in &sv.values {
+        payload.extend_from_slice(&v.to_le_bytes());
+    }
+    EncodedSparse {
+        dim: sv.dim,
+        encoding: enc,
+        positions,
+        payload,
+        k: sv.nnz(),
+    }
+}
+
+/// Decode back to a [`SparseVec`].
+pub fn decode(es: &EncodedSparse) -> SparseVec {
+    let indices: Vec<u32> = match es.encoding {
+        MaskEncoding::Bitmap => {
+            let mut out = Vec::with_capacity(es.k);
+            for i in 0..es.dim {
+                if es.positions[i / 8] & (1 << (i % 8)) != 0 {
+                    out.push(i as u32);
+                }
+            }
+            out
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(es.dim);
+            let mut unpacker = BitUnpacker::new(&es.positions);
+            (0..es.k).map(|_| unpacker.pull(bits) as u32).collect()
+        }
+    };
+    let values = es
+        .payload
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    SparseVec {
+        dim: es.dim,
+        indices,
+        values,
+    }
+}
+
+/// LSB-first bit packer used by the index-list encoding and quantizers.
+pub struct BitPacker {
+    bytes: Vec<u8>,
+    bitpos: usize,
+}
+
+impl BitPacker {
+    pub fn with_capacity(bits: usize) -> Self {
+        BitPacker {
+            bytes: Vec::with_capacity(bits.div_ceil(8)),
+            bitpos: 0,
+        }
+    }
+
+    /// Append the low `n` bits of `v` (byte-at-a-time, not bit-at-a-time —
+    /// the quantizer hot path packs d×log₂s bits per upload; §Perf L3).
+    pub fn push(&mut self, v: u64, n: u64) {
+        debug_assert!(n <= 64);
+        let mut v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+        let mut remaining = n;
+        while remaining > 0 {
+            let off = self.bitpos % 8;
+            if off == 0 {
+                self.bytes.push(0);
+            }
+            let take = (8 - off).min(remaining as usize) as u64;
+            let last = self.bytes.last_mut().unwrap();
+            *last |= ((v & ((1u64 << take) - 1)) as u8) << off;
+            v >>= take;
+            self.bitpos += take as usize;
+            remaining -= take;
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// Matching LSB-first unpacker.
+pub struct BitUnpacker<'a> {
+    bytes: &'a [u8],
+    bitpos: usize,
+}
+
+impl<'a> BitUnpacker<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitUnpacker { bytes, bitpos: 0 }
+    }
+
+    /// Read the next `n` bits (byte-at-a-time, mirroring `push`).
+    pub fn pull(&mut self, n: u64) -> u64 {
+        debug_assert!(n <= 64);
+        let mut out = 0u64;
+        let mut got = 0u64;
+        while got < n {
+            let off = self.bitpos % 8;
+            let take = (8 - off).min((n - got) as usize) as u64;
+            let byte = self.bytes[self.bitpos / 8] as u64;
+            let bits = (byte >> off) & ((1u64 << take) - 1);
+            out |= bits << got;
+            got += take;
+            self.bitpos += take as usize;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::top_k_indices;
+
+    #[test]
+    fn index_bits_values() {
+        assert_eq!(index_bits(1), 1);
+        assert_eq!(index_bits(2), 1);
+        assert_eq!(index_bits(3), 2);
+        assert_eq!(index_bits(1024), 10);
+        assert_eq!(index_bits(1025), 11);
+    }
+
+    #[test]
+    fn mask_encoding_crossover() {
+        // Small k: index list wins. Large k: bitmap wins.
+        let d = 1 << 20;
+        let (_, enc_small) = mask_bits(d, 10);
+        assert_eq!(enc_small, MaskEncoding::IndexList);
+        let (_, enc_large) = mask_bits(d, d / 2);
+        assert_eq!(enc_large, MaskEncoding::Bitmap);
+    }
+
+    #[test]
+    fn ssm_cheaper_than_top_cheaper_than_dense() {
+        // The paper's headline: O(3dq) -> O(3kq+3d) -> O(3kq+d).
+        for &(d, alpha) in &[(100_000usize, 0.05f64), (1_000_000, 0.01)] {
+            let k = (d as f64 * alpha) as usize;
+            let dense = cost::fedadam_dense(d);
+            let top = cost::fedadam_top(d, k);
+            let ssm = cost::fedadam_ssm(d, k);
+            assert!(ssm < top, "ssm {ssm} !< top {top}");
+            assert!(top < dense, "top {top} !< dense {dense}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_both_encodings() {
+        let mut rng = Rng::new(11);
+        for &d in &[64usize, 1000, 4096] {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            for &k in &[1usize, d / 100 + 1, d / 2, d] {
+                let idx = top_k_indices(&x, k);
+                let sv = SparseVec::gather(&x, &idx);
+                let es = encode(&sv);
+                let back = decode(&es);
+                assert_eq!(back, sv, "d={d} k={k} enc={:?}", es.encoding);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bits_matches_cost_model() {
+        let d = 10_000;
+        let k = 500;
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let idx = top_k_indices(&x, k);
+        let sv = SparseVec::gather(&x, &idx);
+        let es = encode(&sv);
+        let (pos_bits, _) = mask_bits(d, k);
+        assert_eq!(es.wire_bits(), pos_bits + k as u64 * Q);
+    }
+
+    #[test]
+    fn bitpacker_roundtrip() {
+        let mut p = BitPacker::with_capacity(0);
+        let vals = [(5u64, 3u64), (1023, 10), (0, 1), (77, 7)];
+        for &(v, n) in &vals {
+            p.push(v, n);
+        }
+        let bytes = p.finish();
+        let mut u = BitUnpacker::new(&bytes);
+        for &(v, n) in &vals {
+            assert_eq!(u.pull(n), v);
+        }
+    }
+}

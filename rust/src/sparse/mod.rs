@@ -1,0 +1,115 @@
+//! Sparse transport: top-k selection, sparse vectors and wire encodings.
+//!
+//! The paper's uplink is either a dense vector (`FedAdam`), three sparse
+//! vectors with three masks (`FedAdam-Top`), or three sparse vectors under
+//! one shared mask (`FedAdam-SSM` and the other SSM variants).  This module
+//! provides the shared substrate:
+//!
+//! - [`topk`] — exact-k selection via quickselect with by-index tie break;
+//! - [`SparseVec`] — indices + values with dense round-trips;
+//! - [`codec`] — the paper's bit-cost model (`§IV`, `§VII-A`), including
+//!   the `min{bitmask, index-list}` encoding rule.
+
+pub mod codec;
+pub mod topk;
+
+pub use topk::{top_k_indices, top_k_threshold};
+
+/// A sparse view of an `f32[dim]` vector: sorted unique indices + values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    /// Gather `values = dense[indices]`; `indices` must be sorted unique.
+    pub fn gather(dense: &[f32], indices: &[u32]) -> Self {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]));
+        SparseVec {
+            dim: dense.len(),
+            values: indices.iter().map(|&i| dense[i as usize]).collect(),
+            indices: indices.to_vec(),
+        }
+    }
+
+    /// Build from a dense vector by keeping its non-zeros.
+    pub fn from_dense(dense: &[f32]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        SparseVec {
+            dim: dense.len(),
+            indices,
+            values,
+        }
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Scatter back to a dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.scatter_into(&mut out);
+        out
+    }
+
+    /// `out[indices] = values` without clearing other lanes.
+    pub fn scatter_into(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] = v;
+        }
+    }
+
+    /// `out[indices] += w * values` — the server's sparse accumulate.
+    pub fn axpy_into(&self, out: &mut [f32], w: f32) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] += w * v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let sv = SparseVec::from_dense(&dense);
+        assert_eq!(sv.nnz(), 2);
+        assert_eq!(sv.indices, vec![1, 3]);
+        assert_eq!(sv.to_dense(), dense);
+    }
+
+    #[test]
+    fn gather_matches_dense() {
+        let dense = vec![5.0, 6.0, 7.0, 8.0];
+        let sv = SparseVec::gather(&dense, &[0, 2]);
+        assert_eq!(sv.values, vec![5.0, 7.0]);
+        assert_eq!(sv.to_dense(), vec![5.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_accumulates_sparse() {
+        let sv = SparseVec {
+            dim: 4,
+            indices: vec![1, 3],
+            values: vec![2.0, 4.0],
+        };
+        let mut out = vec![1.0; 4];
+        sv.axpy_into(&mut out, 0.5);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 3.0]);
+    }
+}

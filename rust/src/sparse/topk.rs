@@ -1,0 +1,167 @@
+//! Exact top-k selection by magnitude (paper Definition 1).
+//!
+//! The SSM is `1_{Top_k}(ΔW)` (eq. 28), so top-k selection sits on the
+//! device hot path once per round per device.  A full sort is `O(d log d)`;
+//! this module uses **quickselect** over the magnitudes (`O(d)` expected)
+//! followed by a small sort of the selected indices.  Ties at the threshold
+//! are broken by lower-index-first so the mask always has *exactly* `k`
+//! ones — `Definition 1`'s permutation tie-break — which keeps the wire
+//! cost model exact (the python kernel keeps ties instead; the cross-layer
+//! tests use tie-free inputs).
+
+/// Indices of the `k` largest `|x|`, returned sorted ascending.
+///
+/// `k` is clamped to `[0, d]`.  Exactly `min(k, d)` indices are returned.
+pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
+    let d = x.len();
+    let k = k.min(d);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == d {
+        return (0..d as u32).collect();
+    }
+    // Quickselect on (magnitude, index) keys; order: larger magnitude first,
+    // then smaller index first.
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    let mut lo = 0usize;
+    let mut hi = d;
+    let mut state = 0x9E37_79B9_7F4A_7C15u64 ^ (d as u64);
+    while hi - lo > 1 {
+        // Pseudo-random pivot avoids adversarial quadratic behaviour.
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        let pivot_at = lo + (state as usize) % (hi - lo);
+        idx.swap(lo, pivot_at);
+        let pivot = idx[lo];
+        let pm = mag(x, pivot);
+        let mut i = lo + 1;
+        let mut j = hi - 1;
+        loop {
+            while i <= j && before(x, idx[i], pm, pivot) {
+                i += 1;
+            }
+            while i <= j && !before(x, idx[j], pm, pivot) {
+                j -= 1;
+            }
+            if i >= j {
+                break;
+            }
+            idx.swap(i, j);
+        }
+        idx.swap(lo, i - 1);
+        let rank = i - 1; // pivot's final position
+        match rank.cmp(&k) {
+            std::cmp::Ordering::Equal => break,
+            std::cmp::Ordering::Less => lo = rank + 1,
+            std::cmp::Ordering::Greater => hi = rank,
+        }
+        if lo >= k {
+            break;
+        }
+    }
+    let mut out: Vec<u32> = idx[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[inline]
+fn mag(x: &[f32], i: u32) -> f32 {
+    x[i as usize].abs()
+}
+
+/// Strict ordering: does element `a` come before the pivot?
+#[inline]
+fn before(x: &[f32], a: u32, pivot_mag: f32, pivot_idx: u32) -> bool {
+    let am = mag(x, a);
+    am > pivot_mag || (am == pivot_mag && a < pivot_idx)
+}
+
+/// The k-th largest magnitude (the Pallas kernel's `tau`); 0 when `k == 0`.
+pub fn top_k_threshold(x: &[f32], k: usize) -> f32 {
+    if k == 0 || x.is_empty() {
+        return f32::INFINITY;
+    }
+    let idx = top_k_indices(x, k);
+    idx.iter().map(|&i| x[i as usize].abs()).fold(f32::INFINITY, f32::min)
+}
+
+/// Dense 0/1 mask of the top-k (exactly k ones).
+pub fn top_k_mask(x: &[f32], k: usize) -> Vec<bool> {
+    let mut mask = vec![false; x.len()];
+    for i in top_k_indices(x, k) {
+        mask[i as usize] = true;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn brute_force(x: &[f32], k: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            x[b as usize]
+                .abs()
+                .partial_cmp(&x[a as usize].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut out: Vec<u32> = idx[..k.min(x.len())].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_randomized() {
+        let mut rng = Rng::new(99);
+        for trial in 0..50 {
+            let d = 1 + rng.below(300);
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let k = rng.below(d + 1);
+            assert_eq!(top_k_indices(&x, k), brute_force(&x, k), "trial {trial} d={d} k={k}");
+        }
+    }
+
+    #[test]
+    fn handles_ties_by_index() {
+        let x = vec![1.0, -1.0, 1.0, 1.0];
+        assert_eq!(top_k_indices(&x, 2), vec![0, 1]);
+        assert_eq!(top_k_indices(&x, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert!(top_k_indices(&[], 3).is_empty());
+        assert!(top_k_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(top_k_indices(&[1.0, 2.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn threshold_is_kth_magnitude() {
+        let x = vec![0.1, -5.0, 3.0, -2.0, 4.0];
+        assert_eq!(top_k_threshold(&x, 1), 5.0);
+        assert_eq!(top_k_threshold(&x, 3), 3.0);
+        assert_eq!(top_k_threshold(&x, 5), 0.1);
+    }
+
+    #[test]
+    fn mask_has_exactly_k_ones() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..1000).map(|_| rng.normal() as f32).collect();
+        for &k in &[0usize, 1, 50, 999, 1000] {
+            let ones = top_k_mask(&x, k).iter().filter(|&&b| b).count();
+            assert_eq!(ones, k);
+        }
+    }
+
+    #[test]
+    fn all_equal_input() {
+        let x = vec![2.0f32; 64];
+        let idx = top_k_indices(&x, 10);
+        assert_eq!(idx, (0..10).collect::<Vec<u32>>());
+    }
+}

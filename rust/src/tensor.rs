@@ -1,0 +1,122 @@
+//! Flat `f32` vector math used on the coordinator hot path.
+//!
+//! Everything operates on plain slices — the runtime ABI to the AOT
+//! artifacts is `Vec<f32>` — and the mutating variants are written to be
+//! allocation-free so the server's aggregation loop stays zero-alloc
+//! (DESIGN.md §Perf L3).
+
+/// `out += a * x` (axpy).
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &xi) in out.iter_mut().zip(x) {
+        *o += a * xi;
+    }
+}
+
+/// `out = x - y` into a fresh vector.
+pub fn sub(x: &[f32], y: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// `out += x` element-wise.
+#[inline]
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    axpy(out, 1.0, x);
+}
+
+/// `out *= a`.
+#[inline]
+pub fn scale(out: &mut [f32], a: f32) {
+    for o in out.iter_mut() {
+        *o *= a;
+    }
+}
+
+/// Euclidean norm.
+pub fn l2_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+}
+
+/// Squared Euclidean norm.
+pub fn l2_norm_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+}
+
+/// Max |x_i|.
+pub fn linf_norm(x: &[f32]) -> f32 {
+    x.iter().fold(0.0f32, |acc, &v| acc.max(v.abs()))
+}
+
+/// `||x - y||_2`.
+pub fn l2_dist(x: &[f32], y: &[f32]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Weighted average of rows into `out`: `out = Σ w_i x_i / Σ w_i`.
+///
+/// Single pass per row, accumulating in-place (the server reduce).
+pub fn weighted_mean_into(out: &mut [f32], rows: &[(&[f32], f64)]) {
+    out.fill(0.0);
+    let total: f64 = rows.iter().map(|(_, w)| *w).sum();
+    if total == 0.0 {
+        return;
+    }
+    for (row, w) in rows {
+        let coef = (*w / total) as f32;
+        axpy(out, coef, row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut out = vec![1.0, 2.0];
+        axpy(&mut out, 2.0, &[10.0, 20.0]);
+        assert_eq!(out, vec![21.0, 42.0]);
+    }
+
+    #[test]
+    fn norms() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(linf_norm(&[-7.0, 3.0]), 7.0);
+        assert!((l2_dist(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
+        assert!((l2_norm_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_mean_weights() {
+        let a = vec![1.0f32, 0.0];
+        let b = vec![0.0f32, 1.0];
+        let mut out = vec![0.0f32; 2];
+        weighted_mean_into(&mut out, &[(&a, 3.0), (&b, 1.0)]);
+        assert!((out[0] - 0.75).abs() < 1e-6);
+        assert!((out[1] - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn weighted_mean_zero_total() {
+        let a = vec![1.0f32; 4];
+        let mut out = vec![9.0f32; 4];
+        weighted_mean_into(&mut out, &[(&a, 0.0)]);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn sub_and_scale() {
+        let d = sub(&[5.0, 7.0], &[2.0, 3.0]);
+        assert_eq!(d, vec![3.0, 4.0]);
+        let mut s = d.clone();
+        scale(&mut s, 0.5);
+        assert_eq!(s, vec![1.5, 2.0]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Numerical evaluation of the paper's theory (Theorems 1-3, Prop. 1).
+//!
+//! These are the closed-form constants of Theorem 1's divergence bound
+//! between FedAdam-SSM and centralized Adam, used by
+//! `examples/theory_bounds.rs` to check the bound against measured
+//! divergence, and by unit tests to verify Proposition 1's ordering
+//! `Γ > Θ > Λ` (the justification for masking by `|ΔW|`).
+
+/// Problem/algorithm constants appearing in the bounds.
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// Lipschitz constant ρ of the gradient (Assumption 1).
+    pub rho: f64,
+    /// Per-coordinate gradient bound G (Assumption 2).
+    pub g: f64,
+    /// Local gradient variance σ_l (Assumption 3).
+    pub sigma_l: f64,
+    /// Global variance σ_g (Assumption 3).
+    pub sigma_g: f64,
+    /// Model dimension d.
+    pub d: f64,
+    /// Mini-batch size |D̃_n|.
+    pub batch: f64,
+    /// Learning rate η.
+    pub eta: f64,
+    /// Adam constants.
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+impl Default for BoundParams {
+    fn default() -> Self {
+        BoundParams {
+            rho: 1.0,
+            g: 1.0,
+            sigma_l: 0.1,
+            sigma_g: 0.1,
+            d: 1000.0,
+            batch: 32.0,
+            eta: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-6,
+        }
+    }
+}
+
+/// The Theorem-1 coefficients at local epoch `l`.
+#[derive(Clone, Copy, Debug)]
+pub struct DivergenceCoeffs {
+    pub gamma: f64,
+    pub lambda: f64,
+    pub theta: f64,
+    pub phi_term: f64,
+}
+
+/// φ = β₁/√β₂ (eq. 21).
+pub fn phi(p: &BoundParams) -> f64 {
+    p.beta1 / p.beta2.sqrt()
+}
+
+/// ψ (eq. 22).
+pub fn psi(p: &BoundParams) -> f64 {
+    1.0 + p.beta1 / p.beta2.sqrt()
+        + p.eta * p.rho * (1.0 - p.beta1) / p.eps.sqrt()
+            * (1.0 + (1.0 - p.beta2) * p.d * p.g * p.g / p.eps)
+}
+
+/// χ (eq. 23).
+pub fn chi(p: &BoundParams) -> f64 {
+    let g2 = p.g * p.g;
+    p.d * p.g * p.eta
+        * (2.0 * p.beta1 * (1.0 - p.beta2.sqrt()) / (p.eps * (p.eps * p.beta2).sqrt())
+            * (g2 + p.eps)
+            + (1.0 - p.beta1) * p.beta2 / (p.eps * p.eps.sqrt()) * g2)
+        + (1.0 - p.beta1) * p.eta * (p.sigma_l / p.batch.sqrt() + p.sigma_g) / p.eps.sqrt()
+            * (1.0 + (1.0 - p.beta2) * p.d * g2 / p.eps)
+}
+
+/// The recursion roots `r± = (ψ ± √(ψ²+4φ)) / 2`.
+pub fn roots(p: &BoundParams) -> (f64, f64, f64) {
+    let ps = psi(p);
+    let ph = phi(p);
+    let disc = (ps * ps + 4.0 * ph).sqrt();
+    ((ps + disc) / 2.0, (ps - disc) / 2.0, disc)
+}
+
+/// Evaluate Γ, Λ, Θ, Φ (eq. 17-20) at local epoch `l`.
+pub fn coeffs(p: &BoundParams, l: u32) -> DivergenceCoeffs {
+    let ph = phi(p);
+    let ps = psi(p);
+    let (rp, rm, disc) = roots(p);
+    let rp_l = rp.powi(l as i32);
+    let rm_l = rm.powi(l as i32);
+    let g2 = p.g * p.g;
+    let ee = p.eps * p.eps.sqrt(); // ε√ε
+    let k_adam = p.d * g2 * p.eta * p.rho / ee * p.beta1 * (1.0 - p.beta2);
+
+    let gamma = (rm_l * (ph + (disc - ps) / 2.0 - k_adam) + rp_l * ((disc + ps) / 2.0 - ph + k_adam))
+        / disc;
+
+    let lambda = p.eta * p.beta1 / (p.eps.sqrt() * disc) * (rp_l - rm_l);
+
+    let theta =
+        p.d.sqrt() * p.g * p.eta * p.beta2 / (2.0 * ee * disc) * (rp_l - rm_l);
+
+    let noise = p.sigma_l / p.batch.sqrt() + p.sigma_g;
+    let a = noise / disc
+        * (p.eta / p.eps.sqrt() * (1.0 - p.beta1) + p.d * g2 * p.eta / ee * (1.0 - p.beta2))
+        * (rp_l - rm_l);
+    let b = chi(p) / (1.0 - ps - ph)
+        * (((1.0 - rp) * rm_l - (1.0 - rm) * rp_l) / disc + 1.0);
+    DivergenceCoeffs {
+        gamma,
+        lambda,
+        theta,
+        phi_term: a + b,
+    }
+}
+
+/// Proposition 1's condition on β₂: `β₂ < 1 − 1/(1 + 2Gρ√d)`.
+pub fn prop1_condition(p: &BoundParams) -> bool {
+    p.beta2 < 1.0 - 1.0 / (1.0 + 2.0 * p.g * p.rho * p.d.sqrt())
+}
+
+/// The Theorem-1 upper bound on `‖w_n^{l,t} − w̌^{l,t}‖` given the current
+/// sparsification errors of the three global vectors.
+pub fn divergence_bound(
+    p: &BoundParams,
+    l: u32,
+    err_w: f64,
+    err_m: f64,
+    err_v: f64,
+) -> f64 {
+    let c = coeffs(p, l);
+    c.gamma * err_w + c.lambda * err_m + c.theta * err_v + c.phi_term
+}
+
+/// RHS of Theorem 2 (non-convex convergence bound) divided into its parts;
+/// returns (optimality-gap term, sparsification term, constant term).
+pub fn convergence_bound_nonconvex(
+    p: &BoundParams,
+    alpha: f64,
+    l: u32,
+    t_rounds: u32,
+    f0_minus_ft: f64,
+    data_term: f64,
+) -> (f64, f64, f64) {
+    let lf = l as f64;
+    let g2 = p.g * p.g;
+    let t1 = 2.0 / (p.eta * t_rounds as f64) * f0_minus_ft;
+    let t2 = 2.0 * ((p.eta * p.rho + 2.0) * (1.0 - alpha) + p.eta * p.rho - 1.0)
+        * p.eta * g2 * p.d * lf * lf
+        / p.eps;
+    let beta2_sum = p.beta2 * (1.0 - p.beta2.powi(l as i32)) / (1.0 - p.beta2);
+    let beta1_sum = 4.0 * p.beta1 * (1.0 - p.beta1.powi(l as i32))
+        / (p.eps * (1.0 - p.beta1) * (1.0 - p.beta1));
+    let t3 = 6.0 * g2 * p.d
+        * ((lf - beta2_sum) * g2 * g2 * p.d * lf / (4.0 * p.eps.powi(3))
+            + lf * lf / p.eps
+            + beta1_sum
+            + 1.0
+            + p.rho * p.rho * lf * lf / (3.0 * p.eps))
+        + 6.0 * data_term;
+    (t1, t2, t3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> BoundParams {
+        // d large enough that 1 − 1/(1+2Gρ√d) > β₂ = 0.999 (Remark 3).
+        BoundParams {
+            rho: 2.0,
+            g: 1.0,
+            d: 1_000_000.0,
+            eta: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prop1_condition_holds_for_paper_defaults() {
+        // d large => 1 - 1/(1+2Gρ√d) ≈ 1 > 0.999 (Remark 3).
+        assert!(prop1_condition(&params()));
+        // Tiny d with big beta2 violates it.
+        let bad = BoundParams {
+            d: 1.0,
+            g: 0.1,
+            rho: 0.1,
+            beta2: 0.999,
+            ..Default::default()
+        };
+        assert!(!prop1_condition(&bad));
+    }
+
+    #[test]
+    fn prop1_ordering_gamma_theta_lambda() {
+        // Under the condition, Γ > Θ > Λ across local epochs and params.
+        for &(d, eta, eps, l, beta2) in &[
+            (1_000_000.0, 1e-3, 1e-2, 1u32, 0.999),
+            (1_000_000.0, 1e-3, 1e-4, 3, 0.999),
+            (1_000_000.0, 1e-4, 1e-4, 5, 0.999),
+            (54_314.0, 1e-3, 1e-6, 2, 0.99), // cnn_small's d needs smaller β₂
+        ] {
+            let p = BoundParams {
+                d,
+                eta,
+                eps,
+                beta2,
+                ..params()
+            };
+            assert!(prop1_condition(&p), "condition d={d}");
+            let c = coeffs(&p, l);
+            assert!(
+                c.gamma > c.theta && c.theta > c.lambda,
+                "d={d} eta={eta} eps={eps} l={l}: Γ={} Θ={} Λ={}",
+                c.gamma,
+                c.theta,
+                c.lambda
+            );
+        }
+    }
+
+    #[test]
+    fn coeffs_positive_and_grow_with_l() {
+        let p = params();
+        let c1 = coeffs(&p, 1);
+        let c5 = coeffs(&p, 5);
+        assert!(c1.gamma > 0.0 && c1.lambda > 0.0 && c1.theta > 0.0);
+        assert!(c5.gamma > c1.gamma);
+        assert!(c5.lambda > c1.lambda);
+        assert!(c5.theta > c1.theta);
+    }
+
+    #[test]
+    fn divergence_bound_monotone_in_errors() {
+        let p = params();
+        let b0 = divergence_bound(&p, 2, 0.0, 0.0, 0.0);
+        let b1 = divergence_bound(&p, 2, 1.0, 0.0, 0.0);
+        let b2 = divergence_bound(&p, 2, 1.0, 1.0, 1.0);
+        assert!(b0 < b1 && b1 < b2);
+    }
+
+    #[test]
+    fn zero_error_bound_reduces_to_phi() {
+        // Eq. 24: with zero sparsification error only Φ remains.
+        let p = params();
+        let c = coeffs(&p, 3);
+        let b = divergence_bound(&p, 3, 0.0, 0.0, 0.0);
+        assert!((b - c.phi_term).abs() < 1e-12);
+    }
+
+    #[test]
+    fn convergence_bound_decreases_with_alpha() {
+        // Remark 4: higher sparsification ratio α => smaller bound.
+        let p = params();
+        let (a1, s1, c1) = convergence_bound_nonconvex(&p, 0.05, 3, 100, 1.0, 0.01);
+        let (a2, s2, c2) = convergence_bound_nonconvex(&p, 0.5, 3, 100, 1.0, 0.01);
+        assert_eq!(a1, a2);
+        assert_eq!(c1, c2);
+        assert!(s2 < s1, "sparser (lower alpha) must cost more: {s1} vs {s2}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Small self-contained substrates (the offline build has no serde):
+//! a JSON parser for the AOT manifest and a TOML-subset parser for
+//! experiment configs.
+
+pub mod json;
+pub mod toml;

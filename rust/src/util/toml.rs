@@ -1,0 +1,220 @@
+//! TOML-subset parser for experiment config files.
+//!
+//! Supported grammar (everything the configs in `configs/` use):
+//! `[section]` headers, `key = value` with string / integer / float / bool /
+//! homogeneous array values, `#` comments.  Dotted keys and nested tables
+//! beyond one section level are not supported — configs stay flat on
+//! purpose.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar or array config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`; top-level keys live under `""`.
+pub type Doc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document.
+pub fn parse(input: &str) -> Result<Doc, TomlError> {
+    let mut doc: Doc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| TomlError {
+                line: ln + 1,
+                msg: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| TomlError {
+            line: ln + 1,
+            msg: format!("expected key = value, got {line:?}"),
+        })?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(line[eq + 1..].trim(), ln + 1)?;
+        doc.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |msg: String| TomlError { line, msg };
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                out.push(parse_value(part.trim(), line)?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(err(format!("cannot parse value {s:?}")))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let doc = parse(
+            r#"
+# experiment
+name = "fig2"   # inline comment
+rounds = 100
+lr = 0.001
+iid = false
+
+[data]
+alpha = 0.1
+devices = 20
+classes = [0, 1, 2]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"].as_str(), Some("fig2"));
+        assert_eq!(doc[""]["rounds"].as_i64(), Some(100));
+        assert_eq!(doc[""]["lr"].as_f64(), Some(0.001));
+        assert_eq!(doc[""]["iid"].as_bool(), Some(false));
+        assert_eq!(doc["data"]["devices"].as_i64(), Some(20));
+        assert_eq!(
+            doc["data"]["classes"],
+            TomlValue::Arr(vec![TomlValue::Int(0), TomlValue::Int(1), TomlValue::Int(2)])
+        );
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc[""]["x"].as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue").is_err());
+        assert!(parse("x = @").is_err());
+    }
+
+    #[test]
+    fn string_with_hash() {
+        let doc = parse("s = \"a # b\"").unwrap();
+        assert_eq!(doc[""]["s"].as_str(), Some("a # b"));
+    }
+}

@@ -1,0 +1,289 @@
+//! Integration: the full FL loop on `mlp_tiny` for every algorithm —
+//! convergence, exact comm accounting, determinism, backend cross-check.
+//!
+//! Requires `make artifacts`.
+
+use fedadam_ssm::algorithms::ALL_ALGORITHMS;
+use fedadam_ssm::config::{ExperimentConfig, SparsifyBackend};
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::runtime::Manifest;
+use fedadam_ssm::sparse::codec::cost;
+
+fn have_artifacts() -> bool {
+    match Manifest::load("artifacts") {
+        Ok(m) => m.models.contains_key("mlp_tiny"),
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            false
+        }
+    }
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.model = "mlp_tiny".into();
+    cfg.rounds = 6;
+    cfg.devices = 3;
+    cfg.local_epochs = 2;
+    cfg.max_batches_per_epoch = 2;
+    cfg.train_samples = 384;
+    cfg.test_samples = 128;
+    cfg.lr = 0.01;
+    cfg.seed = 5;
+    cfg
+}
+
+#[test]
+fn every_algorithm_learns() {
+    if !have_artifacts() {
+        return;
+    }
+    for algo in ALL_ALGORITHMS {
+        let mut cfg = base_cfg();
+        cfg.algorithm = algo.into();
+        if algo == "fedsgd" {
+            // Plain SGD needs a larger step than Adam at this tiny budget.
+            cfg.lr = 0.1;
+        }
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        let log = coord.run().unwrap();
+        let first = log.rounds.first().unwrap().train_loss;
+        let last = log.rounds.last().unwrap().train_loss;
+        assert!(
+            last < first,
+            "{algo}: loss should fall, got {first:.4} -> {last:.4}"
+        );
+        assert!(
+            log.best_accuracy() > 0.3,
+            "{algo}: accuracy stuck at {:.3}",
+            log.best_accuracy()
+        );
+        // Every round's uplink grows monotonically.
+        for w in log.rounds.windows(2) {
+            assert!(w[1].uplink_bits > w[0].uplink_bits, "{algo}");
+        }
+    }
+}
+
+#[test]
+fn comm_accounting_matches_formulas() {
+    if !have_artifacts() {
+        return;
+    }
+    let d = 2410usize; // mlp_tiny
+    let n = 3u64;
+    let cases: Vec<(&str, u64)> = vec![
+        ("fedadam", cost::fedadam_dense(d)),
+        ("fedadam-top", cost::fedadam_top(d, 121)), // k = round(0.05 * 2410)
+        ("fedadam-ssm", cost::fedadam_ssm(d, 121)),
+        ("fedadam-ssm-m", cost::fedadam_ssm(d, 121)),
+        ("fairness-top", cost::fedadam_ssm(d, 121)),
+        ("fedsgd", cost::fedsgd_dense(d)),
+        ("efficient-adam", cost::uniform(d, 16)),
+    ];
+    for (algo, per_device) in cases {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.algorithm = algo.into();
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        let log = coord.run().unwrap();
+        let expected = per_device * n * 2; // 2 rounds, 3 devices
+        assert_eq!(
+            log.rounds.last().unwrap().uplink_bits,
+            expected,
+            "{algo}: uplink mismatch"
+        );
+    }
+}
+
+#[test]
+fn onebit_phases_price_differently() {
+    if !have_artifacts() {
+        return;
+    }
+    let d = 2410usize;
+    let mut cfg = base_cfg();
+    cfg.algorithm = "onebit-adam".into();
+    cfg.rounds = 4;
+    cfg.warmup_rounds = 2;
+    let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+    let log = coord.run().unwrap();
+    let per_round: Vec<u64> = std::iter::once(log.rounds[0].uplink_bits)
+        .chain(
+            log.rounds
+                .windows(2)
+                .map(|w| w[1].uplink_bits - w[0].uplink_bits),
+        )
+        .collect();
+    assert_eq!(per_round[0], 3 * cost::fedadam_dense(d)); // warmup: dense
+    assert_eq!(per_round[1], per_round[0]);
+    assert_eq!(per_round[2], 3 * cost::onebit(d)); // compression: 1 bit
+    assert_eq!(per_round[3], per_round[2]);
+    assert!(per_round[2] < per_round[0] / 50);
+}
+
+#[test]
+fn runs_are_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        let mut cfg = base_cfg();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.rounds = 3;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        let log = coord.run().unwrap();
+        (
+            log.rounds
+                .iter()
+                .map(|r| (r.train_loss, r.test_accuracy))
+                .collect::<Vec<_>>(),
+            coord.global().w.clone(),
+        )
+    };
+    let (a_log, a_w) = run();
+    let (b_log, b_w) = run();
+    assert_eq!(a_log, b_log);
+    assert_eq!(a_w, b_w);
+}
+
+#[test]
+fn xla_and_native_sparsify_agree() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |backend: SparsifyBackend| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.rounds = 3;
+        cfg.sparsify_backend = backend;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        coord.run().unwrap();
+        coord.global().w.clone()
+    };
+    let native = run(SparsifyBackend::Native);
+    let xla = run(SparsifyBackend::Xla);
+    // Same selection rule; tiny numeric jitter allowed (f32 threshold path,
+    // possible tie handling at measure-zero inputs).
+    let max_diff = native
+        .iter()
+        .zip(&xla)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "backends diverged: {max_diff}");
+}
+
+#[test]
+fn conv_models_run_one_round() {
+    // The paper's other two workloads (VGG/CIFAR-shape, ResNet/SVHN-shape)
+    // through the full loop — one round each to keep CI fast.
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(_) => return,
+    };
+    for model in ["vgg_mini", "resnet_mini"] {
+        if !manifest.models.contains_key(model) {
+            eprintln!("skipping {model}: not exported");
+            continue;
+        }
+        let mut cfg = base_cfg();
+        cfg.model = model.into();
+        cfg.rounds = 1;
+        cfg.devices = 2;
+        cfg.local_epochs = 1;
+        cfg.max_batches_per_epoch = 1;
+        cfg.train_samples = 128;
+        cfg.test_samples = 64;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        let r = coord.step_round().unwrap();
+        assert!(r.train_loss.is_finite(), "{model}");
+        assert!(r.test_accuracy.is_finite(), "{model}");
+        assert!(r.uplink_bits > 0, "{model}");
+    }
+}
+
+#[test]
+fn partial_participation_scales_uplink() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |part: f64| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = "fedadam".into();
+        cfg.participation = part;
+        cfg.rounds = 3;
+        cfg.devices = 4;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        coord.run().unwrap().rounds.last().unwrap().uplink_bits
+    };
+    let full = run(1.0);
+    let half = run(0.5);
+    assert_eq!(half * 2, full, "half participation must upload half the bits");
+}
+
+#[test]
+fn ssm_ef_extension_learns_at_extreme_sparsity() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |algo: &str| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = algo.into();
+        cfg.sparsity = 0.005; // keep 0.5% of coordinates
+        cfg.rounds = 8;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        coord.run().unwrap()
+    };
+    let ef = run("fedadam-ssm-ef");
+    let first = ef.rounds.first().unwrap().train_loss;
+    let last = ef.rounds.last().unwrap().train_loss;
+    assert!(last < first, "EF variant should still learn: {first} -> {last}");
+}
+
+#[test]
+fn noniid_is_harder_than_iid() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |iid: bool| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.iid = iid;
+        cfg.rounds = 8;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        coord.run().unwrap().best_accuracy()
+    };
+    let iid_acc = run(true);
+    let noniid_acc = run(false);
+    // Theorem 2's data-heterogeneity term: non-IID must not beat IID by a
+    // margin; typically it is clearly worse.
+    assert!(
+        noniid_acc <= iid_acc + 0.05,
+        "non-IID ({noniid_acc:.3}) unexpectedly beat IID ({iid_acc:.3})"
+    );
+}
+
+#[test]
+fn ssm_beats_dense_on_comm_to_accuracy() {
+    if !have_artifacts() {
+        return;
+    }
+    // The paper's headline (Table I): to reach the same accuracy,
+    // FedAdam-SSM needs far less uplink than dense FedAdam.
+    let run = |algo: &str| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = algo.into();
+        cfg.rounds = 8;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        coord.run().unwrap()
+    };
+    let ssm = run("fedadam-ssm");
+    let dense = run("fedadam");
+    let target = ssm.best_accuracy().min(dense.best_accuracy()) * 0.9;
+    let c_ssm = ssm.comm_to_accuracy(target).expect("ssm hits target");
+    let c_dense = dense.comm_to_accuracy(target).expect("dense hits target");
+    assert!(
+        c_ssm * 2.0 < c_dense,
+        "SSM should need <1/2 the uplink: ssm {c_ssm:.3} Mbit vs dense {c_dense:.3} Mbit"
+    );
+}

@@ -1,0 +1,141 @@
+//! Integration: the PJRT engine executes every AOT program of `mlp_tiny`.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use fedadam_ssm::runtime::{Engine, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match Manifest::load(&dir) {
+        Ok(m) if m.models.contains_key("mlp_tiny") => Some(m),
+        _ => {
+            eprintln!("skipping: run `make artifacts` first");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_programs_roundtrip() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::load(&m, "mlp_tiny").unwrap();
+    let h = engine.handle();
+    let meta = h.meta().clone();
+    let d = meta.dim;
+    let row: usize = meta.row();
+
+    // init: deterministic by seed, different across seeds.
+    let w0 = h.init(0).unwrap();
+    assert_eq!(w0.len(), d);
+    assert_eq!(w0, h.init(0).unwrap());
+    assert_ne!(w0, h.init(1).unwrap());
+    let norm: f64 = w0.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    assert!(norm > 0.1, "init should be non-degenerate, norm={norm}");
+
+    // Deterministic synthetic batch.
+    let b = meta.batch;
+    let x: Vec<f32> = (0..b * row).map(|i| ((i % 17) as f32) / 17.0 - 0.5).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % meta.num_classes) as i32).collect();
+
+    // train: loss finite and decreasing over a few steps on a fixed batch.
+    let zeros = vec![0.0f32; d];
+    let (mut w, mut mm, mut vv, first_loss) = h
+        .train_step(w0.clone(), zeros.clone(), zeros.clone(), x.clone(), y.clone(), 0.01)
+        .unwrap();
+    assert!(first_loss.is_finite());
+    let mut last = first_loss;
+    for _ in 0..10 {
+        let (w2, m2, v2, loss) = h
+            .train_step(w, mm, vv, x.clone(), y.clone(), 0.01)
+            .unwrap();
+        w = w2;
+        mm = m2;
+        vv = v2;
+        last = loss;
+    }
+    assert!(
+        last < first_loss,
+        "loss should fall on a fixed batch: {first_loss} -> {last}"
+    );
+
+    // epoch: one dispatch over nb batches matches nb sequential train calls.
+    let nb = meta.epoch_batches;
+    let xs: Vec<f32> = (0..nb).flat_map(|_| x.clone()).collect();
+    let ys: Vec<i32> = (0..nb).flat_map(|_| y.clone()).collect();
+    let (we, me, ve, _) = h
+        .epoch_step(w0.clone(), zeros.clone(), zeros.clone(), xs, ys, 0.01)
+        .unwrap();
+    let (mut ws, mut ms, mut vs) = (w0.clone(), zeros.clone(), zeros.clone());
+    for _ in 0..nb {
+        let (a, bb, c, _) = h
+            .train_step(ws, ms, vs, x.clone(), y.clone(), 0.01)
+            .unwrap();
+        ws = a;
+        ms = bb;
+        vs = c;
+    }
+    let max_diff = we
+        .iter()
+        .zip(&ws)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "epoch != train^nb, max diff {max_diff}");
+    assert_eq!(me.len(), ms.len());
+    assert_eq!(ve.len(), vs.len());
+
+    // eval: weights zero out padding.
+    let e = meta.eval_batch;
+    let ex: Vec<f32> = (0..e * row).map(|i| ((i % 13) as f32) / 13.0).collect();
+    let ey: Vec<i32> = (0..e).map(|i| (i % meta.num_classes) as i32).collect();
+    let mut wt = vec![1.0f32; e];
+    for slot in wt.iter_mut().skip(e / 2) {
+        *slot = 0.0;
+    }
+    let (loss_sum, correct, weight) = h.eval_batch(&w, ex, ey, wt).unwrap();
+    assert!((weight - (e / 2) as f64).abs() < 1e-6);
+    assert!(loss_sum.is_finite());
+    assert!(correct <= weight + 1e-6);
+
+    // sgd + grads agree: w - eta*g == sgd(w).
+    let (g, gloss) = h.grads(&w0, x.clone(), y.clone()).unwrap();
+    let (wsgd, sloss) = h
+        .sgd_step(w0.clone(), x.clone(), y.clone(), 0.5)
+        .unwrap();
+    assert!((gloss - sloss).abs() < 1e-5);
+    let max_diff = wsgd
+        .iter()
+        .zip(w0.iter().zip(&g))
+        .map(|(ws, (w0i, gi))| (ws - (w0i - 0.5 * gi)).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-5, "sgd != w - eta*g, diff {max_diff}");
+
+    // sparsify: agrees with the rust top-k on tie-free input.
+    let dw: Vec<f32> = (0..d).map(|i| ((i as f32) + 1.0) * if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+    let dm: Vec<f32> = (0..d).map(|i| i as f32 * 0.5).collect();
+    let dv: Vec<f32> = (0..d).map(|i| i as f32 * 0.25).collect();
+    let k = d / 10;
+    let (sw, sm, sv) = h
+        .sparsify(dw.clone(), dm.clone(), dv.clone(), k as i32)
+        .unwrap();
+    let mask = fedadam_ssm::sparse::topk::top_k_mask(&dw, k);
+    for i in 0..d {
+        if mask[i] {
+            assert_eq!(sw[i], dw[i]);
+            assert_eq!(sm[i], dm[i]);
+            assert_eq!(sv[i], dv[i]);
+        } else {
+            assert_eq!(sw[i], 0.0, "lane {i}");
+            assert_eq!(sm[i], 0.0);
+            assert_eq!(sv[i], 0.0);
+        }
+    }
+
+    // Engine handle is Send: exercise from a second thread.
+    let h2 = h.clone();
+    std::thread::spawn(move || {
+        let w = h2.init(3).unwrap();
+        assert_eq!(w.len(), d);
+    })
+    .join()
+    .unwrap();
+}

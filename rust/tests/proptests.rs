@@ -1,0 +1,197 @@
+//! Property-based tests over the coordinator substrates (hand-rolled
+//! generator loops — the offline build has no proptest crate; seeds are
+//! fixed so failures reproduce exactly).
+
+use fedadam_ssm::quant::{onebit_compress, onebit_decompress, uniform_compress, uniform_decompress, ErrorFeedback};
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::sparse::codec::{self, cost};
+use fedadam_ssm::sparse::{top_k_indices, top_k_threshold, SparseVec};
+use fedadam_ssm::tensor;
+
+/// Random vector with occasional exact duplicates and zeros (tie stress).
+fn gen_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    for _ in 0..d / 10 {
+        let i = rng.below(d);
+        let j = rng.below(d);
+        v[i] = v[j]; // duplicate magnitude
+    }
+    for _ in 0..d / 20 {
+        let i = rng.below(d);
+        v[i] = 0.0;
+    }
+    v
+}
+
+#[test]
+fn prop_topk_is_k_contraction() {
+    // Definition 2: E||x - Top_k(x)||^2 <= (1 - k/d) ||x||^2 — for top-k it
+    // holds deterministically, per input.
+    let mut rng = Rng::new(101);
+    for trial in 0..200 {
+        let d = 2 + rng.below(400);
+        let k = 1 + rng.below(d);
+        let x = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&x, k);
+        let kept = SparseVec::gather(&x, &idx).to_dense();
+        let resid = tensor::sub(&x, &kept);
+        let lhs = tensor::l2_norm_sq(&resid);
+        let rhs = (1.0 - k as f64 / d as f64) * tensor::l2_norm_sq(&x);
+        assert!(
+            lhs <= rhs + 1e-6,
+            "trial {trial}: d={d} k={k}: ||x-Top_k(x)||^2 = {lhs} > {rhs}"
+        );
+    }
+}
+
+#[test]
+fn prop_topk_keeps_largest() {
+    // Every kept magnitude >= every dropped magnitude.
+    let mut rng = Rng::new(102);
+    for _ in 0..100 {
+        let d = 2 + rng.below(300);
+        let k = 1 + rng.below(d);
+        let x = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&x, k);
+        assert_eq!(idx.len(), k);
+        let mut kept = vec![false; d];
+        for &i in &idx {
+            kept[i as usize] = true;
+        }
+        let min_kept = idx
+            .iter()
+            .map(|&i| x[i as usize].abs())
+            .fold(f32::INFINITY, f32::min);
+        for i in 0..d {
+            if !kept[i] {
+                assert!(
+                    x[i].abs() <= min_kept,
+                    "dropped |x[{i}]|={} > min kept {min_kept}",
+                    x[i].abs()
+                );
+            }
+        }
+        // Threshold consistency.
+        assert_eq!(top_k_threshold(&x, k), min_kept);
+    }
+}
+
+#[test]
+fn prop_codec_roundtrip_any_k() {
+    let mut rng = Rng::new(103);
+    for _ in 0..100 {
+        let d = 1 + rng.below(3000);
+        let k = rng.below(d + 1);
+        let x = gen_vec(&mut rng, d.max(1));
+        let idx = top_k_indices(&x, k);
+        let sv = SparseVec::gather(&x, &idx);
+        let back = codec::decode(&codec::encode(&sv));
+        assert_eq!(back, sv, "d={d} k={k}");
+    }
+}
+
+#[test]
+fn prop_cost_model_ordering() {
+    // SSM <= Top <= Dense for every (d, k), with equality only at edges.
+    let mut rng = Rng::new(104);
+    for _ in 0..300 {
+        let d = 2 + rng.below(2_000_000);
+        let k = 1 + rng.below(d);
+        let ssm = cost::fedadam_ssm(d, k);
+        let top = cost::fedadam_top(d, k);
+        let dense = cost::fedadam_dense(d);
+        assert!(ssm <= top, "d={d} k={k}: ssm {ssm} > top {top}");
+        assert!(top <= dense + 3 * d as u64, "d={d} k={k}");
+        if (k as f64) < d as f64 * 0.3 {
+            assert!(top < dense, "d={d} k={k}: top not cheaper than dense");
+        }
+    }
+}
+
+#[test]
+fn prop_onebit_roundtrip_preserves_signs_and_scale() {
+    let mut rng = Rng::new(105);
+    for _ in 0..50 {
+        let d = 1 + rng.below(5000);
+        let x = gen_vec(&mut rng, d);
+        let mut ef = ErrorFeedback::new(d);
+        let p = onebit_compress(&x, &mut ef);
+        let y = onebit_decompress(&p);
+        assert_eq!(y.len(), d);
+        // |y_i| == scale everywhere; EF residual = x - y exactly (first round).
+        for i in 0..d {
+            assert_eq!(y[i].abs(), p.scale);
+            assert!((ef.residual[i] - (x[i] - y[i])).abs() < 1e-6);
+        }
+        // Mean magnitude preserved by construction.
+        let mean_abs = x.iter().map(|v| v.abs() as f64).sum::<f64>() / d as f64;
+        assert!((p.scale as f64 - mean_abs).abs() < 1e-4 * mean_abs.max(1.0));
+    }
+}
+
+#[test]
+fn prop_uniform_quant_error_within_half_bin() {
+    let mut rng = Rng::new(106);
+    for _ in 0..50 {
+        let d = 1 + rng.below(4000);
+        let x = gen_vec(&mut rng, d);
+        let s = 2 + rng.below(255) as u32;
+        let p = uniform_compress(&x, s);
+        let y = uniform_decompress(&p);
+        let bin = if p.scale > 0.0 {
+            2.0 * p.scale / (s - 1) as f32
+        } else {
+            0.0
+        };
+        for (xi, yi) in x.iter().zip(&y) {
+            assert!(
+                (xi - yi).abs() <= bin / 2.0 + 1e-5,
+                "s={s} err {} bin {bin}",
+                (xi - yi).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_axpy_equals_dense_axpy() {
+    let mut rng = Rng::new(107);
+    for _ in 0..100 {
+        let d = 1 + rng.below(1000);
+        let k = rng.below(d + 1);
+        let x = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&x, k);
+        let sv = SparseVec::gather(&x, &idx);
+        let dense = sv.to_dense();
+        let w = rng.uniform_in(-2.0, 2.0) as f32;
+        let mut a = vec![1.0f32; d];
+        let mut b = vec![1.0f32; d];
+        sv.axpy_into(&mut a, w);
+        tensor::axpy(&mut b, w, &dense);
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn prop_weighted_mean_is_convex_combination() {
+    let mut rng = Rng::new(108);
+    for _ in 0..50 {
+        let d = 1 + rng.below(200);
+        let n = 1 + rng.below(8);
+        let rows: Vec<Vec<f32>> = (0..n).map(|_| gen_vec(&mut rng, d)).collect();
+        let weights: Vec<f64> = (0..n).map(|_| rng.uniform() + 0.01).collect();
+        let pairs: Vec<(&[f32], f64)> = rows
+            .iter()
+            .map(|r| r.as_slice())
+            .zip(weights.iter().cloned())
+            .collect();
+        let mut out = vec![0.0f32; d];
+        tensor::weighted_mean_into(&mut out, &pairs);
+        // Bounds: each lane within [min, max] of the inputs.
+        for j in 0..d {
+            let lo = rows.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
+            let hi = rows.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
+            assert!(out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4);
+        }
+    }
+}
