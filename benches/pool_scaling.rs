@@ -1,0 +1,67 @@
+//! Engine-pool scaling bench: wall-clock of one full FL round at
+//! 1 / 2 / 4 / 8 pool workers, same config otherwise.
+//!
+//! The round's compute is dominated by per-device local training, which the
+//! coordinator dispatches concurrently across the pool — round latency
+//! should fall monotonically from 1 to (about) core-count workers, while
+//! every logged number stays bit-identical (see `coordinator_e2e`).
+//!
+//! Requires `make artifacts`. Run: `cargo bench --bench pool_scaling`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+
+fn main() {
+    let mut bench = from_env();
+    // One round is ~100ms-scale; cap iterations regardless of budget.
+    bench.max_iters = 20;
+
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+
+    for workers in [1usize, 2, 4, 8] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "cnn_small".into();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.rounds = usize::MAX; // stepped manually
+        cfg.devices = 8;
+        cfg.local_epochs = 1;
+        cfg.max_batches_per_epoch = 2;
+        cfg.train_samples = 1024;
+        cfg.test_samples = 64;
+        cfg.eval_every = usize::MAX - 1; // exclude eval from the round cost
+        cfg.num_workers = workers;
+        let mut coord = match Coordinator::new(cfg, "artifacts") {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("skipping pool-scaling bench: {e}");
+                return;
+            }
+        };
+        bench.run(
+            format!("round: fedadam-ssm, 8 dev, {workers} workers ({cores} cores)"),
+            || {
+                black_box(coord.step_round().unwrap());
+            },
+        );
+    }
+
+    bench.report("engine-pool scaling (one FL round)");
+    println!("\n{}", bench.to_csv());
+
+    // Monotonicity check on the acceptance range (1 -> 4 workers), advisory
+    // when the host has too few cores to show scaling.
+    let mean = |i: usize| bench.results[i].mean_ns;
+    if cores >= 4 {
+        if mean(0) > mean(1) && mean(1) > mean(2) {
+            println!("scaling OK: {:.1}ms -> {:.1}ms -> {:.1}ms (1/2/4 workers)",
+                mean(0) / 1e6, mean(1) / 1e6, mean(2) / 1e6);
+        } else {
+            println!("WARNING: round latency not monotonically decreasing 1 -> 4 workers");
+        }
+    } else {
+        println!("note: only {cores} cores; scaling curve not meaningful");
+    }
+}

@@ -20,6 +20,7 @@ fn main() -> Result<()> {
     cfg.train_samples = 1024;
     cfg.test_samples = 256;
     cfg.sparsity = 0.05; // α: upload 5% of coordinates per round
+    cfg.num_workers = 0; // engine-pool: one PJRT worker per core (bit-identical to 1)
 
     println!("FedAdam-SSM quickstart: {} on {}", cfg.algorithm, cfg.model);
     let mut coord = Coordinator::new(cfg, "artifacts")?;

@@ -36,7 +36,12 @@ def topk_threshold(x, k):
 
     Args:
       x: ``f32[d]``.
-      k: scalar int32 in ``[1, d]``; may be traced.
+      k: scalar int32 in ``[1, d]``; may be traced.  ``k`` is clipped into
+        ``[1, d]`` — this kernel cannot represent an empty selection.  The
+        rust runtime (``sparse::topk::top_k_threshold``) extends the same
+        ``|x| >= tau`` keep rule to ``k == 0`` / empty input by returning
+        ``+inf`` (nothing passes); callers that need ``k == 0`` must handle
+        it host-side, never here.
 
     Returns:
       Scalar f32 threshold such that ``|x| >= tau`` keeps the top-k

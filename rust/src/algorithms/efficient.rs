@@ -116,6 +116,9 @@ mod tests {
                 dw: truth.clone(),
                 dm: None,
                 dv: None,
+                dw_support: 32,
+                dm_support: 0,
+                dv_support: 0,
             };
             a.postprocess(&mut agg);
             for (s, v) in sent.iter_mut().zip(&agg.dw) {

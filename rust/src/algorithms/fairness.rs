@@ -57,8 +57,9 @@ impl Algorithm for FairnessTop {
     }
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {
-        let union_k = agg.dw.iter().filter(|&&x| x != 0.0).count();
-        cost::fedadam_ssm(self.dim, union_k)
+        // Union support carried through `Aggregate` (see ssm.rs: a recount
+        // of non-zeros undercounts on exact-zero cancellation).
+        cost::fedadam_ssm(self.dim, agg.dw_support)
     }
 }
 

@@ -100,11 +100,23 @@ pub struct Upload {
 }
 
 /// Aggregated (already FedAvg'd) global updates for a round.
+///
+/// Carries the **union support sizes** of the uploads alongside the summed
+/// vectors: downlink pricing must use these, not a recount of non-zeros of
+/// the sums — device contributions can cancel to exact `0.0` (and a masked
+/// lane can legitimately carry a true zero), which would silently shrink
+/// the priced support below what the broadcast wire actually encodes.
 #[derive(Clone, Debug)]
 pub struct Aggregate {
     pub dw: Vec<f32>,
     pub dm: Option<Vec<f32>>,
     pub dv: Option<Vec<f32>>,
+    /// `|∪ support(ΔW_n)|` over the uploads (a dense upload ⇒ all `d`).
+    pub dw_support: usize,
+    /// `|∪ support(ΔM_n)|` over uploads that carried ΔM (0 when none did).
+    pub dm_support: usize,
+    /// `|∪ support(ΔV_n)|` over uploads that carried ΔV (0 when none did).
+    pub dv_support: usize,
 }
 
 /// Strategy interface — one instance per experiment run.

@@ -154,6 +154,9 @@ mod tests {
             dw: vec![0.4, -0.2, 0.1, -0.5],
             dm: None,
             dv: None,
+            dw_support: 4,
+            dm_support: 0,
+            dv_support: 0,
         };
         a.postprocess(&mut agg);
         let mag = agg.dw[0].abs();

@@ -74,8 +74,11 @@ impl Algorithm for FedAdamSsm {
         // The aggregated update's support is the union of device masks;
         // broadcast uses the same min{bitmap, index} coding with 3 values
         // per kept coordinate (the union support is shared by all three).
-        let union_k = agg.dw.iter().filter(|&&x| x != 0.0).count();
-        cost::fedadam_ssm(self.dim, union_k)
+        // The union size is carried through `Aggregate` — recounting
+        // non-zeros of the summed vector undercounts whenever device
+        // contributions cancel to exact 0.0 or a masked lane holds a
+        // true-zero value.
+        cost::fedadam_ssm(self.dim, agg.dw_support)
     }
 }
 
@@ -139,5 +142,42 @@ mod tests {
     #[should_panic]
     fn zero_k_rejected() {
         FedAdamSsm::new(10, 0, MaskSource::W);
+    }
+
+    #[test]
+    fn downlink_prices_union_support_despite_cancellation() {
+        use crate::coordinator::server::aggregate;
+
+        // Device 0 masks lanes {0, 1}, device 1 masks lanes {1, 2}; their
+        // lane-1 contributions cancel exactly under equal weights.  The
+        // broadcast still carries the 3-lane union, so downlink must price
+        // k = 3 — the naive non-zero recount would see only 2.
+        let sv = |i: Vec<u32>, v: Vec<f32>| {
+            Recon::Sparse(SparseVec {
+                dim: 8,
+                indices: i,
+                values: v,
+            })
+        };
+        let uploads = vec![
+            Upload {
+                dw: sv(vec![0, 1], vec![1.0, 1.0]),
+                dm: Some(sv(vec![0, 1], vec![0.1, 0.1])),
+                dv: Some(sv(vec![0, 1], vec![0.2, 0.2])),
+                weight: 1.0,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![1, 2], vec![-1.0, 1.0]),
+                dm: Some(sv(vec![1, 2], vec![0.1, 0.1])),
+                dv: Some(sv(vec![1, 2], vec![0.2, 0.2])),
+                weight: 1.0,
+                bits: 0,
+            },
+        ];
+        let agg = aggregate(&uploads, 8);
+        assert_eq!(agg.dw[1], 0.0, "lane 1 must cancel exactly");
+        let a = FedAdamSsm::new(8, 2, MaskSource::W);
+        assert_eq!(a.downlink_bits(&agg), cost::fedadam_ssm(8, 3));
     }
 }

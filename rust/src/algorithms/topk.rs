@@ -39,18 +39,12 @@ impl Algorithm for FedAdamTop {
     }
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {
-        let count = |v: &Option<Vec<f32>>| -> usize {
-            v.as_ref()
-                .map(|x| x.iter().filter(|&&e| e != 0.0).count())
-                .unwrap_or(0)
-        };
-        let kw = agg.dw.iter().filter(|&&x| x != 0.0).count();
-        let km = count(&agg.dm);
-        let kv = count(&agg.dv);
-        // Three independent sparse broadcasts.
+        // Three independent sparse broadcasts, each priced from the union
+        // support carried through `Aggregate` (recounting non-zeros of the
+        // sums undercounts on exact-zero cancellation).
         use crate::sparse::codec::{mask_bits, Q};
         let one = |k: usize| mask_bits(self.dim, k).0 + k as u64 * Q;
-        one(kw) + one(km) + one(kv)
+        one(agg.dw_support) + one(agg.dm_support) + one(agg.dv_support)
     }
 }
 

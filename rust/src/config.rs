@@ -80,6 +80,11 @@ pub struct ExperimentConfig {
     /// Fraction of devices participating per round (1.0 = all, the paper's
     /// setting; < 1.0 = uniform sampling without replacement).
     pub participation: f64,
+    /// Engine-pool worker threads (each owns its own PJRT client and
+    /// compiled executables).  `0` = auto-detect core count; `1` (default)
+    /// reproduces the original single-engine actor.  Results are bitwise
+    /// identical at any worker count — only wall-clock changes.
+    pub num_workers: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -105,6 +110,7 @@ impl Default for ExperimentConfig {
             use_epoch_program: false,
             sparsify_backend: SparsifyBackend::Native,
             participation: 1.0,
+            num_workers: 1,
         }
     }
 }
@@ -173,6 +179,7 @@ impl ExperimentConfig {
             "use_epoch_program" => self.use_epoch_program = p(key, value)?,
             "sparsify_backend" => self.sparsify_backend = SparsifyBackend::parse(value)?,
             "participation" => self.participation = p(key, value)?,
+            "num_workers" => self.num_workers = p(key, value)?,
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -235,10 +242,13 @@ mod tests {
         cfg.set("lr", "0.01").unwrap();
         cfg.set("iid", "false").unwrap();
         cfg.set("sparsify_backend", "xla").unwrap();
+        cfg.set("num_workers", "4").unwrap();
         assert_eq!(cfg.algorithm, "fedadam-top");
         assert_eq!(cfg.lr, 0.01);
         assert!(!cfg.iid);
         assert_eq!(cfg.sparsify_backend, SparsifyBackend::Xla);
+        assert_eq!(cfg.num_workers, 4);
+        assert!(cfg.set("num_workers", "many").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("lr", "abc").is_err());
     }

@@ -1,11 +1,21 @@
 //! The round coordinator: Algorithm 2's outer loop.
 //!
-//! Owns the engine, data, devices, algorithm and ledger; each round it
+//! Owns the engine pool, data, devices, algorithm and ledger; each round it
 //! (1) hands devices the global state per the algorithm's momentum policy,
-//! (2) runs `L` local epochs per device through the AOT programs,
+//! (2) runs `L` local epochs per device through the AOT programs —
+//!     **concurrently**, on scoped threads, load-balanced across the
+//!     engine pool's workers,
 //! (3) compresses and "uploads" each delta (bit-accurately priced),
 //! (4) FedAvg-aggregates, post-processes, applies, and
 //! (5) evaluates + logs.
+//!
+//! Determinism: local training for every participant starts from the same
+//! downloaded global state, so per-device results do not depend on
+//! scheduling.  Training results are collected and processed in ascending
+//! device order, and compression (which may hold per-device algorithm
+//! state such as error-feedback memories) plus ledger accounting stay
+//! sequential in that same order — every f32 sum, the comm ledger and the
+//! experiment log are byte-identical at any `num_workers`.
 
 pub mod device;
 pub mod server;
@@ -19,7 +29,7 @@ use crate::config::{ExperimentConfig, SparsifyBackend};
 use crate::data::{partition, synthetic, Dataset, Partition, Shard};
 use crate::metrics::comm::CommLedger;
 use crate::metrics::{ExperimentLog, RoundRecord};
-use crate::runtime::{Engine, EngineHandle, Manifest};
+use crate::runtime::{EngineHandle, EnginePool, Manifest};
 use crate::tensor;
 
 pub use device::{Device, LocalRunConfig};
@@ -28,7 +38,7 @@ pub use server::{aggregate, GlobalState};
 /// A fully-wired experiment ready to run.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
-    engine: Engine,
+    pool: EnginePool,
     devices: Vec<Device>,
     test_set: Dataset,
     algorithm: Box<dyn Algorithm>,
@@ -42,14 +52,25 @@ pub struct Coordinator {
     sampler: crate::rng::Rng,
 }
 
+/// What one participant's scoped-thread training run produces.
+struct TrainOutput {
+    mean_loss: f64,
+    delta: LocalDelta,
+    /// `(m, v)` to write back when the policy is `DeviceLocal`.
+    moments: Option<(Vec<f32>, Vec<f32>)>,
+}
+
 impl Coordinator {
-    /// Build everything: engine, data, shards, algorithm, initial model.
+    /// Build everything: engine pool, data, shards, algorithm, initial model.
     pub fn new(cfg: ExperimentConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         cfg.validate()?;
         let manifest = Manifest::load(artifacts_dir)?;
-        let engine = Engine::load(&manifest, &cfg.model)
+        // Concurrency is bounded by participant count, so never spin up
+        // (and compile executables for) more workers than devices.
+        let workers = crate::runtime::pool::resolve_workers(cfg.num_workers).min(cfg.devices);
+        let pool = EnginePool::load(&manifest, &cfg.model, workers)
             .with_context(|| format!("loading model {:?}", cfg.model))?;
-        let meta = engine.meta().clone();
+        let meta = pool.meta().clone();
 
         // Synthetic stand-in corpus shaped for this model.
         let spec = synthetic::SyntheticSpec::for_input_shape(
@@ -61,7 +82,7 @@ impl Coordinator {
         let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
         let shards = partition(&task.train, cfg.devices, how, cfg.seed);
 
-        let handle = engine.handle();
+        let handle = pool.handle();
         let devices: Vec<Device> = shards
             .into_iter()
             .enumerate()
@@ -85,7 +106,7 @@ impl Coordinator {
         };
         Ok(Coordinator {
             cfg,
-            engine,
+            pool,
             devices,
             test_set: task.test,
             algorithm,
@@ -119,7 +140,12 @@ impl Coordinator {
     }
 
     pub fn handle(&self) -> EngineHandle {
-        self.engine.handle()
+        self.pool.handle()
+    }
+
+    /// Worker threads in the engine pool.
+    pub fn num_workers(&self) -> usize {
+        self.pool.num_workers()
     }
 
     /// Run one communication round; returns its record.
@@ -134,40 +160,93 @@ impl Coordinator {
         };
         let mode = self.algorithm.local_mode(t);
         let policy = self.algorithm.momentum_policy(t);
+        let keep_moments = policy == MomentumPolicy::DeviceLocal;
         let dim = self.global.dim();
 
         let participants = self.sample_participants();
+
+        // 1-4. Train → delta → compress → upload, in bounded chunks of
+        //    participants so peak memory stays O(chunk · d) rather than
+        //    O(N · d) (dense deltas are 3·d f32 each; at 100+ devices and
+        //    ResNet-scale d an unbounded barrier would hold gigabytes).
+        //
+        //    Within a chunk, local training runs on one scoped thread per
+        //    participant; threads block inside the engine pool's queue, so
+        //    concurrency is governed by `num_workers`, and each result is a
+        //    pure function of its inputs — scheduling cannot change any bit
+        //    of the output.  Chunks, result collection, compression (which
+        //    may mutate per-device algorithm state such as EF memories) and
+        //    ledger accounting all proceed in ascending device order, so
+        //    the wire log is byte-identical at any worker count.
+        let chunk_size = (self.pool.num_workers() * 2).max(8);
         let mut uploads: Vec<Upload> = Vec::with_capacity(participants.len());
         let mut loss_sum = 0.0f64;
-        for di in participants.iter().copied() {
-            // 1. Download global state (moments per policy).
-            let (m0, v0) = match policy {
-                MomentumPolicy::Aggregated => (self.global.m.clone(), self.global.v.clone()),
-                MomentumPolicy::DeviceLocal => self.device_moments[di].clone(),
-            };
-            // 2. Local training.
-            let result = self.devices[di].train_round(
-                mode,
-                self.global.w.clone(),
-                m0.clone(),
-                v0.clone(),
-                &run_cfg,
-            )?;
-            loss_sum += result.mean_loss;
-            // 3. Deltas (Algorithm 2 line 9: vs the downloaded state).
-            let delta = LocalDelta {
-                dw: tensor::sub(&result.w, &self.global.w),
-                dm: tensor::sub(&result.m, &m0),
-                dv: tensor::sub(&result.v, &v0),
-                weight: self.devices[di].weight(),
-            };
-            if policy == MomentumPolicy::DeviceLocal {
-                self.device_moments[di] = (result.m, result.v);
+        for chunk in participants.chunks(chunk_size) {
+            // Download: snapshot starting moments before any training runs
+            // (matches the sequential schedule — a device only ever
+            // observed its own pre-round state anyway).
+            let downloads: Vec<(Vec<f32>, Vec<f32>)> = chunk
+                .iter()
+                .map(|&di| match policy {
+                    MomentumPolicy::Aggregated => (self.global.m.clone(), self.global.v.clone()),
+                    MomentumPolicy::DeviceLocal => self.device_moments[di].clone(),
+                })
+                .collect();
+            let global_w = &self.global.w;
+            // Re-derived per chunk (not hoisted for the whole round): the
+            // compress stage below needs `&mut self`, which cannot coexist
+            // with `&mut Device` borrows held for later chunks.  The rescan
+            // is O(devices · log participants) per chunk — noise next to
+            // training.  Relies on `sample_participants` returning sorted
+            // indices (it does; binary_search would misassign otherwise).
+            let chunk_devices: Vec<(usize, &mut Device)> = self
+                .devices
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| chunk.binary_search(i).is_ok())
+                .collect();
+            let outputs: Vec<Result<TrainOutput>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = chunk_devices
+                    .into_iter()
+                    .zip(downloads)
+                    .map(|((_di, dev), (m0, v0))| {
+                        scope.spawn(move || -> Result<TrainOutput> {
+                            let result = dev.train_round(
+                                mode,
+                                global_w.clone(),
+                                m0.clone(),
+                                v0.clone(),
+                                &run_cfg,
+                            )?;
+                            let delta = LocalDelta {
+                                dw: tensor::sub(&result.w, global_w),
+                                dm: tensor::sub(&result.m, &m0),
+                                dv: tensor::sub(&result.v, &v0),
+                                weight: dev.weight(),
+                            };
+                            Ok(TrainOutput {
+                                mean_loss: result.mean_loss,
+                                delta,
+                                moments: keep_moments.then(|| (result.m, result.v)),
+                            })
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+                    .collect()
+            });
+            for (&di, output) in chunk.iter().zip(outputs) {
+                let output = output.with_context(|| format!("device {di} local round"))?;
+                loss_sum += output.mean_loss;
+                if let Some(moments) = output.moments {
+                    self.device_moments[di] = moments;
+                }
+                let upload = self.compress_upload(t, di, output.delta)?;
+                self.ledger.up(upload.bits);
+                uploads.push(upload);
             }
-            // 4. Compress + upload.
-            let upload = self.compress_upload(t, di, delta)?;
-            self.ledger.up(upload.bits);
-            uploads.push(upload);
         }
 
         // 5. Server aggregate + broadcast.
@@ -207,18 +286,28 @@ impl Coordinator {
             && self.cfg.algorithm == "fedadam-ssm"
         {
             // Cross-layer path: run eq. 10-12 + 28 inside XLA, then encode.
+            use crate::algorithms::Recon;
+            use crate::sparse::{codec::cost, top_k_indices, SparseVec};
             let dim = delta.dw.len();
             let k = self.cfg.k_for(dim);
+            // The shared mask's support comes from the threshold indices,
+            // NOT from the kernel output's non-zeros: a kept lane whose
+            // value is exactly 0.0 is still transmitted (and priced), and
+            // `SparseVec::from_dense` would silently drop it, making
+            // `nnz < k` while `bits` charges for k.  Gathering the masked
+            // kernel outputs at the top-k indices keeps the encoded wire
+            // format bit-for-bit consistent with `cost::fedadam_ssm(d, k)`.
+            // (The kernel keeps ties at the threshold, so its support is a
+            // superset of these exactly-k indices; values at them agree.)
+            let idx = top_k_indices(&delta.dw, k);
             let (sw, sm, sv) = self
-                .engine
+                .pool
                 .handle()
                 .sparsify(delta.dw, delta.dm, delta.dv, k as i32)?;
-            use crate::algorithms::Recon;
-            use crate::sparse::{codec::cost, SparseVec};
             return Ok(Upload {
-                dw: Recon::Sparse(SparseVec::from_dense(&sw)),
-                dm: Some(Recon::Sparse(SparseVec::from_dense(&sm))),
-                dv: Some(Recon::Sparse(SparseVec::from_dense(&sv))),
+                dw: Recon::Sparse(SparseVec::gather(&sw, &idx)),
+                dm: Some(Recon::Sparse(SparseVec::gather(&sm, &idx))),
+                dv: Some(Recon::Sparse(SparseVec::gather(&sv, &idx))),
                 weight: delta.weight,
                 bits: cost::fedadam_ssm(dim, k),
             });
@@ -228,7 +317,7 @@ impl Coordinator {
 
     /// Evaluate the global model on the held-out test set.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        evaluate_model(&self.engine.handle(), &self.global.w, &self.test_set)
+        evaluate_model(&self.pool.handle(), &self.global.w, &self.test_set)
     }
 
     /// Run all configured rounds, returning the full log.

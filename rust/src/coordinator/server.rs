@@ -1,7 +1,7 @@
 //! Server-side aggregation (FedAvg over possibly-sparse uploads) and
 //! global state management (Algorithm 2, server lines).
 
-use crate::algorithms::{Aggregate, Upload};
+use crate::algorithms::{Aggregate, Recon, Upload};
 use crate::tensor;
 
 /// The server's global model + moment estimates.
@@ -39,8 +39,35 @@ impl GlobalState {
     }
 }
 
+/// Size of the union of the given payloads' supports.
+///
+/// A dense payload covers every lane.  A sparse payload's support is its
+/// **stored index set** — including lanes whose stored value is exactly
+/// `0.0`, because those lanes were transmitted (and priced) on the wire.
+fn union_support<'a>(dim: usize, recons: impl Iterator<Item = &'a Recon>) -> usize {
+    let mut seen = vec![false; dim];
+    let mut count = 0usize;
+    for r in recons {
+        match r {
+            Recon::Dense(_) => return dim,
+            Recon::Sparse(sv) => {
+                for &i in &sv.indices {
+                    if !seen[i as usize] {
+                        seen[i as usize] = true;
+                        count += 1;
+                    }
+                }
+            }
+        }
+    }
+    count
+}
+
 /// Weighted FedAvg over uploads (sparse uploads accumulate sparsely —
 /// the reduce is `O(Σ nnz)` not `O(N·d)`).
+///
+/// The returned [`Aggregate`] also carries the union support size of each
+/// vector so downlink pricing survives exact-zero cancellations.
 pub fn aggregate(uploads: &[Upload], dim: usize) -> Aggregate {
     let total: f64 = uploads.iter().map(|u| u.weight).sum();
     let mut dw = vec![0.0f32; dim];
@@ -59,7 +86,17 @@ pub fn aggregate(uploads: &[Upload], dim: usize) -> Aggregate {
             r.axpy_into(acc, coef);
         }
     }
-    Aggregate { dw, dm, dv }
+    let dw_support = union_support(dim, uploads.iter().map(|u| &u.dw));
+    let dm_support = union_support(dim, uploads.iter().filter_map(|u| u.dm.as_ref()));
+    let dv_support = union_support(dim, uploads.iter().filter_map(|u| u.dv.as_ref()));
+    Aggregate {
+        dw,
+        dm,
+        dv,
+        dw_support,
+        dm_support,
+        dv_support,
+    }
 }
 
 #[cfg(test)]
@@ -89,10 +126,14 @@ mod tests {
         let agg = aggregate(&uploads, 2);
         assert!((agg.dw[0] - 0.75).abs() < 1e-6);
         assert!((agg.dw[1] - 1.25).abs() < 1e-6);
-        let dm = agg.dm.unwrap();
+        let dm = agg.dm.as_ref().unwrap();
         assert!((dm[0] - 1.5).abs() < 1e-6);
         assert!((dm[1] - 0.5).abs() < 1e-6);
         assert!(agg.dv.is_none());
+        // Dense uploads cover every lane; no ΔV was uploaded at all.
+        assert_eq!(agg.dw_support, 2);
+        assert_eq!(agg.dm_support, 2);
+        assert_eq!(agg.dv_support, 0);
     }
 
     #[test]
@@ -122,6 +163,43 @@ mod tests {
         ];
         let agg = aggregate(&uploads, 4);
         assert_eq!(agg.dw, vec![3.0, 0.0, 0.0, 1.0]);
+        assert_eq!(agg.dw_support, 2); // union {0, 3}
+    }
+
+    #[test]
+    fn support_survives_exact_cancellation() {
+        // Two devices upload lane 1 with values that cancel exactly, and
+        // device 0 stores a true-zero payload at lane 2.  The summed vector
+        // is non-zero only at lane 0, but THREE lanes went over the wire —
+        // the broadcast support must price all of them.
+        let sv = |i: Vec<u32>, v: Vec<f32>| {
+            Recon::Sparse(SparseVec {
+                dim: 4,
+                indices: i,
+                values: v,
+            })
+        };
+        let uploads = vec![
+            Upload {
+                dw: sv(vec![0, 1, 2], vec![1.0, 1.0, 0.0]),
+                dm: None,
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![1], vec![-1.0]),
+                dm: None,
+                dv: None,
+                weight: 1.0,
+                bits: 0,
+            },
+        ];
+        let agg = aggregate(&uploads, 4);
+        assert_eq!(agg.dw, vec![0.5, 0.0, 0.0, 0.0]);
+        let recount = agg.dw.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(recount, 1, "cancellation collapses the naive recount");
+        assert_eq!(agg.dw_support, 3, "wire support must survive it");
     }
 
     #[test]
@@ -131,6 +209,9 @@ mod tests {
             dw: vec![0.5, -0.5],
             dm: Some(vec![1.0, 0.0]),
             dv: None,
+            dw_support: 2,
+            dm_support: 2,
+            dv_support: 0,
         });
         assert_eq!(gs.w, vec![1.5, 0.5]);
         assert_eq!(gs.m, vec![1.0, 0.0]);
@@ -148,5 +229,6 @@ mod tests {
         }];
         let agg = aggregate(&uploads, 1);
         assert_eq!(agg.dw, vec![0.0]);
+        assert_eq!(agg.dw_support, 1);
     }
 }

@@ -66,7 +66,9 @@ COMMANDS:
 OPTIONS:
     --artifacts <dir>     AOT artifacts directory [default: artifacts]
     --config <file>       TOML experiment config
-    --set key=value       override one config key (repeatable)
+    --set key=value       override one config key (repeatable), e.g.
+                          --set num_workers=4 (engine-pool threads; 0 = auto,
+                          results are bit-identical at any worker count)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -1,21 +1,21 @@
-//! The execution engine: a dedicated thread owning the PJRT CPU client and
-//! every compiled executable for one model, driven through channels.
+//! The XLA execution backend: program identifiers, argument encoding, and
+//! the per-thread [`XlaExecutor`] that owns a PJRT CPU client plus every
+//! compiled executable for one model.
 //!
-//! Why an actor: the `xla` crate's `PjRtClient` / `PjRtLoadedExecutable`
-//! wrap raw C pointers (`!Send`), while the coordinator runs device workers
-//! on multiple threads.  A single engine thread serializes compute — honest
-//! on one CPU — and [`EngineHandle`] is `Clone + Send` so any worker can
-//! call into it.  Requests carry a response channel; calls are synchronous
-//! from the caller's perspective.
+//! The `xla` crate's `PjRtClient` / `PjRtLoadedExecutable` wrap raw C
+//! pointers (`!Send`), so an executor is built *on* the thread that will
+//! drive it — the [`super::pool::EnginePool`] runs one executor per worker
+//! thread behind a shared work queue.  [`Engine`] is the single-worker
+//! convenience wrapper (the original actor API): `Engine::load` ≡ an
+//! [`EnginePool`] with `num_workers = 1`.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
 use super::manifest::{Manifest, ModelMeta};
+use super::pool::{EnginePool, Executor, PoolHandle};
 
 /// Programs a model bundle may expose (mirrors `compile/aot.py`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -74,84 +74,24 @@ impl Arg {
     }
 }
 
-type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+/// Handle to the (single-worker) engine; kept as an alias so existing
+/// callers and signatures keep compiling against the pool-backed runtime.
+pub type EngineHandle = PoolHandle;
 
-enum Request {
-    Exec(Prog, Vec<Arg>, Reply),
-    Shutdown,
+/// A PJRT client plus one compiled executable per program, owned by (and
+/// confined to) a single worker thread.
+pub struct XlaExecutor {
+    // Kept alive for the executables' sake.
+    _client: xla::PjRtClient,
+    exes: BTreeMap<Prog, xla::PjRtLoadedExecutable>,
 }
 
-/// Handle to the engine thread; cheap to clone, safe to share.
-#[derive(Clone)]
-pub struct EngineHandle {
-    tx: mpsc::Sender<Request>,
-    meta: ModelMeta,
-}
-
-/// Owns the engine thread; dropping shuts it down.
-pub struct Engine {
-    handle: EngineHandle,
-    join: Option<JoinHandle<()>>,
-}
-
-impl Engine {
-    /// Load + compile every artifact of `model` from `manifest`.
-    ///
-    /// Compilation happens on the engine thread before this returns (the
-    /// first message is the load result), so errors surface here.
-    pub fn load(manifest: &Manifest, model: &str) -> Result<Engine> {
-        let meta = manifest.model(model)?.clone();
-        let dir = manifest.dir.clone();
-        let paths: Vec<(Prog, PathBuf)> = Prog::ALL
-            .iter()
-            .filter_map(|&p| meta.artifact_path(&dir, p.name()).ok().map(|f| (p, f)))
-            .collect();
-        if paths.is_empty() {
-            return Err(anyhow!("model {model:?} has no artifacts"));
-        }
-
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name(format!("pjrt-engine-{model}"))
-            .spawn(move || engine_main(paths, rx, ready_tx))
-            .context("spawning engine thread")?;
-        ready_rx
-            .recv()
-            .context("engine thread died during startup")??;
-        Ok(Engine {
-            handle: EngineHandle { tx, meta },
-            join: Some(join),
-        })
-    }
-
-    pub fn handle(&self) -> EngineHandle {
-        self.handle.clone()
-    }
-
-    pub fn meta(&self) -> &ModelMeta {
-        &self.handle.meta
-    }
-}
-
-impl Drop for Engine {
-    fn drop(&mut self) {
-        let _ = self.handle.tx.send(Request::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-fn engine_main(
-    paths: Vec<(Prog, PathBuf)>,
-    rx: mpsc::Receiver<Request>,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<Prog, xla::PjRtLoadedExecutable>)> {
+impl XlaExecutor {
+    /// Create the CPU client and compile every artifact in `paths`.
+    pub fn load(paths: &[(Prog, PathBuf)]) -> Result<XlaExecutor> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
         let mut exes = BTreeMap::new();
-        for (prog, path) in &paths {
+        for (prog, path) in paths {
             let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
                 .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
@@ -160,32 +100,20 @@ fn engine_main(
                 .map_err(|e| anyhow!("compile {}: {e}", path.display()))?;
             exes.insert(*prog, exe);
         }
-        Ok((client, exes))
-    })();
-
-    let (_client, exes) = match setup {
-        Ok(x) => {
-            let _ = ready.send(Ok(()));
-            x
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Shutdown => break,
-            Request::Exec(prog, args, reply) => {
-                let result = run_one(&exes, prog, args);
-                let _ = reply.send(result);
-            }
-        }
+        Ok(XlaExecutor {
+            _client: client,
+            exes,
+        })
     }
 }
 
-fn run_one(
+impl Executor for XlaExecutor {
+    fn execute(&mut self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        run_one(&self.exes, prog, args)
+    }
+}
+
+pub(crate) fn run_one(
     exes: &BTreeMap<Prog, xla::PjRtLoadedExecutable>,
     prog: Prog,
     args: Vec<Arg>,
@@ -225,168 +153,25 @@ fn run_one(
         .collect()
 }
 
-impl EngineHandle {
+/// Single-worker engine: the original actor API, backed by the pool.
+pub struct Engine {
+    pool: EnginePool,
+}
+
+impl Engine {
+    /// Load + compile every artifact of `model` from `manifest` on one
+    /// dedicated worker thread.  Errors surface here.
+    pub fn load(manifest: &Manifest, model: &str) -> Result<Engine> {
+        Ok(Engine {
+            pool: EnginePool::load(manifest, model, 1)?,
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.pool.handle()
+    }
+
     pub fn meta(&self) -> &ModelMeta {
-        &self.meta
-    }
-
-    /// Execute `prog` with `args`; blocks until the engine replies.
-    pub fn call(&self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Exec(prog, args, tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
-    }
-
-    // ---- typed wrappers -------------------------------------------------
-
-    /// `init(seed) -> w0`.
-    pub fn init(&self, seed: i32) -> Result<Vec<f32>> {
-        let mut out = self.call(Prog::Init, vec![Arg::ScalarI32(seed)])?;
-        Ok(out.remove(0))
-    }
-
-    /// One minibatch Adam step.
-    #[allow(clippy::too_many_arguments)]
-    pub fn train_step(
-        &self,
-        w: Vec<f32>,
-        m: Vec<f32>,
-        v: Vec<f32>,
-        x: Vec<f32>,
-        y: Vec<i32>,
-        eta: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
-        let b = self.meta.batch as i64;
-        let mut dims = vec![b];
-        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let mut out = self.call(
-            Prog::Train,
-            vec![
-                Arg::vec(w),
-                Arg::vec(m),
-                Arg::vec(v),
-                Arg::F32(x, dims),
-                Arg::I32(y, vec![b]),
-                Arg::ScalarF32(eta),
-            ],
-        )?;
-        let loss = out[3][0];
-        let v_out = out.remove(2);
-        let m_out = out.remove(1);
-        let w_out = out.remove(0);
-        Ok((w_out, m_out, v_out, loss))
-    }
-
-    /// One full epoch (`epoch_batches` scanned batches) in one dispatch.
-    #[allow(clippy::too_many_arguments)]
-    pub fn epoch_step(
-        &self,
-        w: Vec<f32>,
-        m: Vec<f32>,
-        v: Vec<f32>,
-        x: Vec<f32>,
-        y: Vec<i32>,
-        eta: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
-        let nb = self.meta.epoch_batches as i64;
-        let b = self.meta.batch as i64;
-        let mut dims = vec![nb, b];
-        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let mut out = self.call(
-            Prog::Epoch,
-            vec![
-                Arg::vec(w),
-                Arg::vec(m),
-                Arg::vec(v),
-                Arg::F32(x, dims),
-                Arg::I32(y, vec![nb, b]),
-                Arg::ScalarF32(eta),
-            ],
-        )?;
-        let loss = out[3][0];
-        let v_out = out.remove(2);
-        let m_out = out.remove(1);
-        let w_out = out.remove(0);
-        Ok((w_out, m_out, v_out, loss))
-    }
-
-    /// Weighted eval batch: returns `(loss_sum, correct, weight_sum)`.
-    pub fn eval_batch(
-        &self,
-        w: &[f32],
-        x: Vec<f32>,
-        y: Vec<i32>,
-        wt: Vec<f32>,
-    ) -> Result<(f64, f64, f64)> {
-        let e = self.meta.eval_batch as i64;
-        let mut dims = vec![e];
-        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let out = self.call(
-            Prog::Eval,
-            vec![
-                Arg::vec(w.to_vec()),
-                Arg::F32(x, dims),
-                Arg::I32(y, vec![e]),
-                Arg::F32(wt, vec![e]),
-            ],
-        )?;
-        Ok((out[0][0] as f64, out[1][0] as f64, out[2][0] as f64))
-    }
-
-    /// FedSGD step.
-    pub fn sgd_step(
-        &self,
-        w: Vec<f32>,
-        x: Vec<f32>,
-        y: Vec<i32>,
-        eta: f32,
-    ) -> Result<(Vec<f32>, f32)> {
-        let b = self.meta.batch as i64;
-        let mut dims = vec![b];
-        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let mut out = self.call(
-            Prog::Sgd,
-            vec![
-                Arg::vec(w),
-                Arg::F32(x, dims),
-                Arg::I32(y, vec![b]),
-                Arg::ScalarF32(eta),
-            ],
-        )?;
-        let loss = out[1][0];
-        Ok((out.remove(0), loss))
-    }
-
-    /// Minibatch gradient.
-    pub fn grads(&self, w: &[f32], x: Vec<f32>, y: Vec<i32>) -> Result<(Vec<f32>, f32)> {
-        let b = self.meta.batch as i64;
-        let mut dims = vec![b];
-        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let mut out = self.call(
-            Prog::Grads,
-            vec![Arg::vec(w.to_vec()), Arg::F32(x, dims), Arg::I32(y, vec![b])],
-        )?;
-        let loss = out[1][0];
-        Ok((out.remove(0), loss))
-    }
-
-    /// The Layer-1 SSM sparsifier (XLA-side alternative to `sparse::topk`).
-    pub fn sparsify(
-        &self,
-        dw: Vec<f32>,
-        dm: Vec<f32>,
-        dv: Vec<f32>,
-        k: i32,
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let mut out = self.call(
-            Prog::Sparsify,
-            vec![Arg::vec(dw), Arg::vec(dm), Arg::vec(dv), Arg::ScalarI32(k)],
-        )?;
-        let dv_out = out.remove(2);
-        let dm_out = out.remove(1);
-        let dw_out = out.remove(0);
-        Ok((dw_out, dm_out, dv_out))
+        self.pool.meta()
     }
 }

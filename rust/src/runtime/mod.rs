@@ -2,13 +2,20 @@
 //!
 //! Python runs only at build time (`make artifacts`); this module is the
 //! entire runtime bridge.  [`manifest`] describes what was exported;
-//! [`engine`] owns a PJRT CPU client plus the compiled executables on a
-//! dedicated thread (the `xla` crate's handles wrap raw pointers and are
-//! not `Send`), exposing a cloneable, thread-safe [`engine::EngineHandle`]
-//! that device workers call concurrently.
+//! [`engine`] holds the XLA backend (program ids, argument encoding, the
+//! per-thread [`engine::XlaExecutor`]); [`pool`] is the execution engine
+//! proper — an [`pool::EnginePool`] of `num_workers` worker threads, each
+//! owning its own PJRT CPU client and compiled executables (the `xla`
+//! crate's handles wrap raw pointers and are not `Send`), fronted by a
+//! work queue.  The cloneable, thread-safe [`pool::PoolHandle`] (aliased
+//! as [`engine::EngineHandle`]) load-balances calls across workers; at
+//! `num_workers = 1` it degenerates to the original single-engine actor,
+//! and results are bitwise identical at any worker count.
 
 pub mod engine;
 pub mod manifest;
+pub mod pool;
 
 pub use engine::{Arg, Engine, EngineHandle, Prog};
 pub use manifest::{AdamConfig, Manifest, ModelMeta};
+pub use pool::{EnginePool, Executor, PoolHandle};

@@ -1,0 +1,562 @@
+//! The engine pool: `num_workers` executor threads behind one work queue.
+//!
+//! Why a pool of actors: the `xla` crate's `PjRtClient` /
+//! `PjRtLoadedExecutable` wrap raw C pointers (`!Send`), so compute state
+//! can never migrate between threads.  Instead each worker thread builds
+//! its **own** client + compiled executables (via an [`Executor`] factory
+//! run on the worker thread) and the threads compete over a shared MPMC
+//! work queue.  [`PoolHandle`] is `Clone + Send`; any caller thread can
+//! submit a [`Prog`] call and block on its private reply channel, so the
+//! coordinator's per-device training dispatches naturally load-balance
+//! across workers.
+//!
+//! Determinism: every request is a pure function of its arguments (each
+//! worker holds an identical set of compiled executables), so results are
+//! bitwise independent of which worker serves a request or in what order
+//! requests are queued.  `num_workers = 1` degenerates to the original
+//! single-engine actor.
+//!
+//! Failure model — a call NEVER hangs:
+//! - a panic inside an executor is caught on the worker, returned to the
+//!   caller as `Err`, and the worker keeps serving;
+//! - if every worker dies, the queue receiver drops, pending requests are
+//!   dropped with it (closing each reply channel), and both in-flight and
+//!   future calls observe `Err` rather than blocking forever.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::engine::{Arg, Prog, XlaExecutor};
+use super::manifest::{Manifest, ModelMeta};
+
+/// One worker's compute backend, built on — and confined to — its thread.
+///
+/// The factory handed to [`EnginePool::with_factory`] runs once per worker
+/// thread, so implementations may own `!Send` state (PJRT handles).
+pub trait Executor {
+    fn execute(&mut self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>>;
+}
+
+type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
+
+enum Request {
+    Exec(Prog, Vec<Arg>, Reply),
+    Shutdown,
+}
+
+/// Handle to the pool; cheap to clone, safe to share across threads.
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: mpsc::Sender<Request>,
+    meta: ModelMeta,
+}
+
+/// Owns the worker threads; dropping shuts the pool down.
+pub struct EnginePool {
+    handle: PoolHandle,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// `0` means auto-detect (one worker per available core).
+pub(crate) fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+impl EnginePool {
+    /// Load + compile every artifact of `model` on `num_workers` worker
+    /// threads (each compiles its own copy — xla handles are `!Send`).
+    ///
+    /// Compilation happens on the worker threads before this returns, so
+    /// errors surface here.  `num_workers = 0` auto-detects core count.
+    pub fn load(manifest: &Manifest, model: &str, num_workers: usize) -> Result<EnginePool> {
+        let meta = manifest.model(model)?.clone();
+        let dir = manifest.dir.clone();
+        let paths: Vec<(Prog, PathBuf)> = Prog::ALL
+            .iter()
+            .filter_map(|&p| meta.artifact_path(&dir, p.name()).ok().map(|f| (p, f)))
+            .collect();
+        if paths.is_empty() {
+            return Err(anyhow!("model {model:?} has no artifacts"));
+        }
+        Self::with_factory(meta, num_workers, move |_worker| XlaExecutor::load(&paths))
+    }
+
+    /// Build a pool from an arbitrary executor factory.
+    ///
+    /// The factory runs on each worker thread (receiving the worker index),
+    /// so executors may own thread-confined state.  If any factory fails,
+    /// the pool is torn down and the first error is returned.
+    pub fn with_factory<E, F>(meta: ModelMeta, num_workers: usize, factory: F) -> Result<EnginePool>
+    where
+        E: Executor + 'static,
+        F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+    {
+        let num_workers = resolve_workers(num_workers);
+        let factory = Arc::new(factory);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let mut workers = Vec::with_capacity(num_workers);
+        for index in 0..num_workers {
+            let factory = Arc::clone(&factory);
+            let rx = Arc::clone(&rx);
+            let ready = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("engine-worker-{index}"))
+                .spawn(move || worker_main(index, factory, rx, ready))
+                .context("spawning engine worker thread")?;
+            workers.push(join);
+        }
+        drop(ready_tx);
+
+        let mut startup: Result<()> = Ok(());
+        for _ in 0..num_workers {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup = Err(e);
+                    break;
+                }
+                Err(_) => {
+                    startup = Err(anyhow!("engine worker died during startup"));
+                    break;
+                }
+            }
+        }
+
+        let pool = EnginePool {
+            handle: PoolHandle { tx, meta },
+            workers,
+        };
+        match startup {
+            Ok(()) => Ok(pool),
+            // Dropping tears down the healthy workers before reporting.
+            Err(e) => {
+                drop(pool);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn handle(&self) -> PoolHandle {
+        self.handle.clone()
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.handle.meta
+    }
+
+    /// Worker threads serving this pool.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // One shutdown token per worker; each worker consumes exactly one.
+        for _ in 0..self.workers.len() {
+            let _ = self.handle.tx.send(Request::Shutdown);
+        }
+        for join in self.workers.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+fn worker_main<E, F>(
+    index: usize,
+    factory: Arc<F>,
+    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    ready: mpsc::Sender<Result<()>>,
+) where
+    E: Executor + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    let mut exec = match factory(index) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    loop {
+        // Holding the lock only while blocked in recv(): dispatch is
+        // serialized (cheap), execution is parallel (the guard drops
+        // before execute runs).
+        let req = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            // A sibling panicked while holding the queue; bail out.
+            Err(_) => return,
+        };
+        match req {
+            Err(_) | Ok(Request::Shutdown) => return,
+            Ok(Request::Exec(prog, args, reply)) => {
+                match catch_unwind(AssertUnwindSafe(|| exec.execute(prog, args))) {
+                    Ok(result) => {
+                        let _ = reply.send(result);
+                    }
+                    Err(payload) => {
+                        let _ = reply.send(Err(anyhow!(
+                            "engine worker {index} panicked in {:?}: {}",
+                            prog.name(),
+                            panic_message(payload.as_ref())
+                        )));
+                        // The executor may hold partially-mutated state
+                        // after an unwound execute; reusing it could return
+                        // silently wrong results.  Retire it and rebuild
+                        // from the factory; if that fails, let this worker
+                        // die — siblings keep serving, and with no workers
+                        // left callers observe `Err`, never a hang.
+                        match factory(index) {
+                            Ok(fresh) => exec = fresh,
+                            Err(e) => {
+                                log::error!(
+                                    "engine worker {index} exiting: executor rebuild \
+                                     after panic failed: {e:#}"
+                                );
+                                return;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+impl PoolHandle {
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Execute `prog` with `args` on some worker; blocks until the reply.
+    pub fn call(&self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Exec(prog, args, tx))
+            .map_err(|_| anyhow!("engine pool is down"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("engine pool dropped the reply (all workers gone)"))?
+    }
+
+    // ---- typed wrappers -------------------------------------------------
+
+    /// `init(seed) -> w0`.
+    pub fn init(&self, seed: i32) -> Result<Vec<f32>> {
+        let mut out = self.call(Prog::Init, vec![Arg::ScalarI32(seed)])?;
+        Ok(out.remove(0))
+    }
+
+    /// One minibatch Adam step.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        w: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let b = self.meta.batch as i64;
+        let mut dims = vec![b];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let mut out = self.call(
+            Prog::Train,
+            vec![
+                Arg::vec(w),
+                Arg::vec(m),
+                Arg::vec(v),
+                Arg::F32(x, dims),
+                Arg::I32(y, vec![b]),
+                Arg::ScalarF32(eta),
+            ],
+        )?;
+        let loss = out[3][0];
+        let v_out = out.remove(2);
+        let m_out = out.remove(1);
+        let w_out = out.remove(0);
+        Ok((w_out, m_out, v_out, loss))
+    }
+
+    /// One full epoch (`epoch_batches` scanned batches) in one dispatch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn epoch_step(
+        &self,
+        w: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let nb = self.meta.epoch_batches as i64;
+        let b = self.meta.batch as i64;
+        let mut dims = vec![nb, b];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let mut out = self.call(
+            Prog::Epoch,
+            vec![
+                Arg::vec(w),
+                Arg::vec(m),
+                Arg::vec(v),
+                Arg::F32(x, dims),
+                Arg::I32(y, vec![nb, b]),
+                Arg::ScalarF32(eta),
+            ],
+        )?;
+        let loss = out[3][0];
+        let v_out = out.remove(2);
+        let m_out = out.remove(1);
+        let w_out = out.remove(0);
+        Ok((w_out, m_out, v_out, loss))
+    }
+
+    /// Weighted eval batch: returns `(loss_sum, correct, weight_sum)`.
+    pub fn eval_batch(
+        &self,
+        w: &[f32],
+        x: Vec<f32>,
+        y: Vec<i32>,
+        wt: Vec<f32>,
+    ) -> Result<(f64, f64, f64)> {
+        let e = self.meta.eval_batch as i64;
+        let mut dims = vec![e];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let out = self.call(
+            Prog::Eval,
+            vec![
+                Arg::vec(w.to_vec()),
+                Arg::F32(x, dims),
+                Arg::I32(y, vec![e]),
+                Arg::F32(wt, vec![e]),
+            ],
+        )?;
+        Ok((out[0][0] as f64, out[1][0] as f64, out[2][0] as f64))
+    }
+
+    /// FedSGD step.
+    pub fn sgd_step(
+        &self,
+        w: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        eta: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let b = self.meta.batch as i64;
+        let mut dims = vec![b];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let mut out = self.call(
+            Prog::Sgd,
+            vec![
+                Arg::vec(w),
+                Arg::F32(x, dims),
+                Arg::I32(y, vec![b]),
+                Arg::ScalarF32(eta),
+            ],
+        )?;
+        let loss = out[1][0];
+        Ok((out.remove(0), loss))
+    }
+
+    /// Minibatch gradient.
+    pub fn grads(&self, w: &[f32], x: Vec<f32>, y: Vec<i32>) -> Result<(Vec<f32>, f32)> {
+        let b = self.meta.batch as i64;
+        let mut dims = vec![b];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let mut out = self.call(
+            Prog::Grads,
+            vec![Arg::vec(w.to_vec()), Arg::F32(x, dims), Arg::I32(y, vec![b])],
+        )?;
+        let loss = out[1][0];
+        Ok((out.remove(0), loss))
+    }
+
+    /// The Layer-1 SSM sparsifier (XLA-side alternative to `sparse::topk`).
+    pub fn sparsify(
+        &self,
+        dw: Vec<f32>,
+        dm: Vec<f32>,
+        dv: Vec<f32>,
+        k: i32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let mut out = self.call(
+            Prog::Sparsify,
+            vec![Arg::vec(dw), Arg::vec(dm), Arg::vec(dv), Arg::ScalarI32(k)],
+        )?;
+        let dv_out = out.remove(2);
+        let dm_out = out.remove(1);
+        let dw_out = out.remove(0);
+        Ok((dw_out, dm_out, dv_out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    fn test_meta() -> ModelMeta {
+        ModelMeta {
+            name: "mock".into(),
+            dim: 4,
+            input_shape: vec![2, 2, 1],
+            num_classes: 2,
+            batch: 1,
+            eval_batch: 1,
+            epoch_batches: 1,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    fn scalar(args: &[Arg]) -> f32 {
+        match args[0] {
+            Arg::ScalarF32(x) => x,
+            _ => panic!("expected scalar arg"),
+        }
+    }
+
+    /// Doubles its scalar input; panics on negative input.
+    struct MockExec;
+
+    impl Executor for MockExec {
+        fn execute(&mut self, _prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+            let x = scalar(&args);
+            if x < 0.0 {
+                panic!("negative input {x}");
+            }
+            Ok(vec![vec![x * 2.0]])
+        }
+    }
+
+    #[test]
+    fn calls_round_trip_across_workers() {
+        let pool = EnginePool::with_factory(test_meta(), 4, |_| Ok(MockExec)).unwrap();
+        assert_eq!(pool.num_workers(), 4);
+        let handle = pool.handle();
+        let joins: Vec<_> = (0..16)
+            .map(|i| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    let out = h
+                        .call(Prog::Init, vec![Arg::ScalarF32(i as f32)])
+                        .unwrap();
+                    assert_eq!(out, vec![vec![i as f32 * 2.0]]);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_err_not_hang() {
+        let pool = EnginePool::with_factory(test_meta(), 2, |_| Ok(MockExec)).unwrap();
+        let h = pool.handle();
+        let err = h
+            .call(Prog::Init, vec![Arg::ScalarF32(-1.0)])
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("panicked"), "unexpected error: {msg}");
+        assert!(msg.contains("negative input"), "payload lost: {msg}");
+        // The worker survives the panic and keeps serving.
+        let ok = h.call(Prog::Init, vec![Arg::ScalarF32(3.0)]).unwrap();
+        assert_eq!(ok, vec![vec![6.0]]);
+    }
+
+    #[test]
+    fn factory_failure_fails_load() {
+        let result = EnginePool::with_factory(test_meta(), 3, |worker| {
+            if worker == 1 {
+                Err(anyhow!("no backend on worker {worker}"))
+            } else {
+                Ok(MockExec)
+            }
+        });
+        let msg = format!("{:#}", result.err().unwrap());
+        assert!(msg.contains("no backend"), "unexpected error: {msg}");
+    }
+
+    /// Blocks until a sibling call is in flight, proving parallel execution.
+    struct OverlapExec {
+        in_flight: Arc<AtomicUsize>,
+    }
+
+    impl Executor for OverlapExec {
+        fn execute(&mut self, _prog: Prog, _args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+            self.in_flight.fetch_add(1, Ordering::SeqCst);
+            let deadline = Instant::now() + Duration::from_secs(5);
+            let overlapped = loop {
+                if self.in_flight.load(Ordering::SeqCst) >= 2 {
+                    break true;
+                }
+                if Instant::now() > deadline {
+                    break false;
+                }
+                std::thread::yield_now();
+            };
+            // Leave the counter high so the sibling also observes >= 2.
+            if overlapped {
+                Ok(vec![vec![1.0]])
+            } else {
+                Err(anyhow!("no overlap: pool executed serially"))
+            }
+        }
+    }
+
+    #[test]
+    fn workers_execute_concurrently() {
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let flag = Arc::clone(&in_flight);
+        let pool = EnginePool::with_factory(test_meta(), 2, move |_| {
+            Ok(OverlapExec {
+                in_flight: Arc::clone(&flag),
+            })
+        })
+        .unwrap();
+        let h = pool.handle();
+        let joins: Vec<_> = (0..2)
+            .map(|_| {
+                let h = h.clone();
+                std::thread::spawn(move || h.call(Prog::Init, vec![Arg::ScalarF32(0.0)]))
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap().unwrap();
+        }
+    }
+
+    #[test]
+    fn zero_workers_auto_detects() {
+        let pool = EnginePool::with_factory(test_meta(), 0, |_| Ok(MockExec)).unwrap();
+        assert!(pool.num_workers() >= 1);
+    }
+}

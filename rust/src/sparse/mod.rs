@@ -35,6 +35,13 @@ impl SparseVec {
     }
 
     /// Build from a dense vector by keeping its non-zeros.
+    ///
+    /// NOT suitable for reconstructing a priced top-k support from a
+    /// masked dense vector: a kept lane whose value is exactly `0.0` is
+    /// indistinguishable from a masked-out lane here and gets dropped,
+    /// leaving `nnz < k` while the cost model charged for `k`.  Use
+    /// [`SparseVec::gather`] with the mask's index list instead (see
+    /// `Coordinator::compress_upload`'s XLA path).
     pub fn from_dense(dense: &[f32]) -> Self {
         let mut indices = Vec::new();
         let mut values = Vec::new();
@@ -99,6 +106,31 @@ mod tests {
         let sv = SparseVec::gather(&dense, &[0, 2]);
         assert_eq!(sv.values, vec![5.0, 7.0]);
         assert_eq!(sv.to_dense(), vec![5.0, 0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn gather_preserves_zero_valued_masked_lanes() {
+        // Regression for the XLA sparsify upload path: with
+        // x = [5, 0, 0, 0] and k = 2 the top-k mask is {0, 1} (zero-valued
+        // lane 1 wins the tie on index), and the masked dense output looks
+        // identical to the input.  Reconstructing the upload support from
+        // the mask indices must keep BOTH priced lanes; `from_dense` on
+        // the masked vector silently drops the zero-valued one.
+        use crate::sparse::top_k_indices;
+        let dw = vec![5.0f32, 0.0, 0.0, 0.0];
+        let masked = dw.clone(); // what the kernel returns for k = 2
+        let idx = top_k_indices(&dw, 2);
+        assert_eq!(idx, vec![0, 1]);
+        let upload = SparseVec::gather(&masked, &idx);
+        assert_eq!(upload.nnz(), 2, "support must match the priced k");
+        assert_eq!(upload.values, vec![5.0, 0.0]);
+        assert_eq!(
+            SparseVec::from_dense(&masked).nnz(),
+            1,
+            "from_dense undercounts — the bug this guards against"
+        );
+        // Round-trip stays faithful.
+        assert_eq!(upload.to_dense(), masked);
     }
 
     #[test]

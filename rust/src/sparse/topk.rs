@@ -78,7 +78,17 @@ fn before(x: &[f32], a: u32, pivot_mag: f32, pivot_idx: u32) -> bool {
     am > pivot_mag || (am == pivot_mag && a < pivot_idx)
 }
 
-/// The k-th largest magnitude (the Pallas kernel's `tau`); 0 when `k == 0`.
+/// The k-th largest magnitude (the Pallas kernel's `tau`).
+///
+/// Contract: the keep rule is `|x| >= tau`, so an empty selection must
+/// keep *nothing* — `k == 0` and empty input both return `f32::INFINITY`
+/// (no finite magnitude passes).  This is also the `fold(min)` identity,
+/// so the two cases need no special-casing downstream.  `k > len` clamps
+/// to `len` (the threshold is the smallest magnitude present).
+///
+/// The Pallas kernel (`compile/kernels/topk.py`) cannot represent `k == 0`
+/// at all — it clips `k` into `[1, d]` — so the ∞ convention here is the
+/// rust-side extension of the same `|x| >= tau` rule, not a divergence.
 pub fn top_k_threshold(x: &[f32], k: usize) -> f32 {
     if k == 0 || x.is_empty() {
         return f32::INFINITY;
@@ -146,6 +156,19 @@ mod tests {
         assert_eq!(top_k_threshold(&x, 1), 5.0);
         assert_eq!(top_k_threshold(&x, 3), 3.0);
         assert_eq!(top_k_threshold(&x, 5), 0.1);
+    }
+
+    #[test]
+    fn threshold_empty_selection_keeps_nothing() {
+        // Contract: keep rule is |x| >= tau, so k == 0 and empty input both
+        // yield +inf — no finite element passes.
+        let x = vec![0.1, -5.0, 3.0];
+        assert_eq!(top_k_threshold(&x, 0), f32::INFINITY);
+        assert_eq!(top_k_threshold(&[], 3), f32::INFINITY);
+        assert_eq!(top_k_threshold(&[], 0), f32::INFINITY);
+        assert_eq!(x.iter().filter(|v| v.abs() >= f32::INFINITY).count(), 0);
+        // k > len clamps: threshold is the smallest magnitude present.
+        assert_eq!(top_k_threshold(&x, 99), 0.1);
     }
 
     #[test]

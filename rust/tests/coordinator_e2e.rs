@@ -148,6 +148,48 @@ fn runs_are_deterministic() {
 }
 
 #[test]
+fn pool_workers_are_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    // The engine pool must change wall-clock only: every logged number —
+    // losses, accuracies, uplink/downlink bits, update norms — and the
+    // final global model must match bit-for-bit between a 1-worker and a
+    // 4-worker run.  Covers an aggregated-moments algorithm, a stateful
+    // per-device EF algorithm, and a device-local-moments phase switcher.
+    for algo in ["fedadam-ssm", "fedadam-ssm-ef", "onebit-adam"] {
+        let run = |workers: usize| {
+            let mut cfg = base_cfg();
+            cfg.algorithm = algo.into();
+            cfg.rounds = 4;
+            cfg.devices = 4;
+            cfg.warmup_rounds = 2;
+            cfg.participation = 0.75; // exercise the sampler path too
+            cfg.num_workers = workers;
+            let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+            let log = coord.run().unwrap();
+            (log, coord.global().w.clone())
+        };
+        let (log1, w1) = run(1);
+        let (log4, w4) = run(4);
+        assert_eq!(w1, w4, "{algo}: global weights must be bit-identical");
+        assert_eq!(log1.rounds.len(), log4.rounds.len());
+        for (a, b) in log1.rounds.iter().zip(&log4.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{algo}");
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{algo}");
+            assert_eq!(
+                a.test_accuracy.to_bits(),
+                b.test_accuracy.to_bits(),
+                "{algo}"
+            );
+            assert_eq!(a.uplink_bits, b.uplink_bits, "{algo}");
+            assert_eq!(a.downlink_bits, b.downlink_bits, "{algo}");
+            assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{algo}");
+        }
+    }
+}
+
+#[test]
 fn xla_and_native_sparsify_agree() {
     if !have_artifacts() {
         return;

@@ -1,0 +1,133 @@
+//! Offline stub of the `xla` crate's PJRT API surface.
+//!
+//! This container image carries no XLA/PJRT shared libraries, so the real
+//! `xla` crate cannot link here.  This stub keeps the whole repository
+//! compiling and unit-testable: every PJRT *entry point*
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) returns a
+//! descriptive runtime error, and all downstream handle types are
+//! uninhabited (built around an empty enum) so the dead paths cost nothing
+//! and can never be reached by construction.
+//!
+//! Builds with the real toolchain swap the path dependency in the root
+//! `Cargo.toml` for the actual `xla` crate; the engine/pool code is written
+//! against the common API subset (`cpu`, `compile`, `execute`,
+//! `to_literal_sync`, `Literal` constructors/accessors).
+
+use std::fmt;
+
+/// Error type mirroring the real crate's (Display-able) errors.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime unavailable — this build links the vendored \
+         `xla` stub; build with the real `xla` crate (rust_pallas toolchain \
+         image) to execute AOT artifacts"
+    )))
+}
+
+/// Uninhabited: stub handles can never exist at runtime.
+enum Never {}
+
+/// Element types a [`Literal`] can carry (subset: what the runtime uses).
+pub trait NativeType: Copy + 'static {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+
+pub struct PjRtClient(Never);
+
+impl PjRtClient {
+    /// The CPU client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match self.0 {}
+    }
+}
+
+pub struct PjRtLoadedExecutable(Never);
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        match self.0 {}
+    }
+}
+
+pub struct PjRtBuffer(Never);
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        match self.0 {}
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text. Always errors in the stub (reached only if a caller
+    /// probes artifacts before opening a client; the engine opens the
+    /// client first, so in practice [`PjRtClient::cpu`] errors earlier).
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct Literal(Never);
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        unreachable!("xla stub: literals cannot exist without a PJRT runtime")
+    }
+
+    pub fn scalar<T: NativeType>(_value: T) -> Literal {
+        unreachable!("xla stub: literals cannot exist without a PJRT runtime")
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        match self.0 {}
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self.0 {}
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self.0 {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_points_error_cleanly() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(format!("{e}").contains("PJRT runtime unavailable"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
