@@ -1,0 +1,114 @@
+//! Aggregation + eval scaling bench: sharded-vs-sequential server reduce
+//! and pool-parallel-vs-sequential eval, across shard/worker counts.
+//!
+//! Both paths carry a bit-identity guarantee (aggregation is
+//! shard-order-fixed, eval is batch-order-fixed); this bench measures the
+//! wall-clock side of that contract and re-asserts the bits outside the
+//! timed region.  Runs fully offline: the eval half drives the pure-Rust
+//! reference executor, no PJRT artifacts needed.
+//!
+//! Run: `cargo bench --bench agg_scaling`.
+
+use fedadam_ssm::algorithms::{Recon, Upload};
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::coordinator::{aggregate_sharded, evaluate_model};
+use fedadam_ssm::data::synthetic;
+use fedadam_ssm::rng::Rng;
+use fedadam_ssm::runtime::{reference_meta, reference_pool};
+use fedadam_ssm::sparse::{top_k_indices, SparseVec};
+
+/// 100-device cohort: mostly sparse uploads (the SSM regime) plus a few
+/// dense stragglers, at ResNet-ish lane counts.
+fn make_uploads(d: usize, k: usize, devices: usize) -> Vec<Upload> {
+    let mut rng = Rng::new(42);
+    let mut uploads = Vec::with_capacity(devices);
+    for dev in 0..devices {
+        let dw: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let recon = if dev % 25 == 24 {
+            Recon::Dense(dw)
+        } else {
+            let idx = top_k_indices(&dw, k);
+            Recon::Sparse(SparseVec::gather(&dw, &idx))
+        };
+        uploads.push(Upload {
+            dw: recon,
+            dm: None,
+            dv: None,
+            weight: 1.0 + (dev % 7) as f64,
+            bits: 0,
+        });
+    }
+    uploads
+}
+
+fn main() {
+    let mut bench = from_env();
+    bench.max_iters = 30;
+
+    let cores = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+
+    // ---- Part 1: sharded server aggregate --------------------------------
+    let d = 200_000;
+    let k = 10_000;
+    let uploads = make_uploads(d, k, 100);
+    let baseline = aggregate_sharded(&uploads, d, 1);
+    for shards in [1usize, 2, 4, 8, 16] {
+        bench.run(
+            format!("aggregate: 100 dev, d={d}, {shards} shards ({cores} cores)"),
+            || {
+                black_box(aggregate_sharded(&uploads, d, shards));
+            },
+        );
+        // Bit-identity re-check outside the timed region.
+        let agg = aggregate_sharded(&uploads, d, shards);
+        assert!(
+            agg.dw
+                .iter()
+                .zip(&baseline.dw)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{shards} shards diverged from the sequential reduce"
+        );
+        assert_eq!(agg.dw_support, baseline.dw_support);
+    }
+
+    // ---- Part 2: pool-parallel eval --------------------------------------
+    let meta = reference_meta(&[8, 8, 1], 10, 8, 32, 1);
+    let spec = synthetic::SyntheticSpec::for_input_shape(&meta.input_shape, 64, 4000);
+    let task = synthetic::generate(&spec, 3);
+    let data = task.test; // 4000 samples → 125 eval batches of 32
+    let mut eval_baseline: Option<(f64, f64)> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let pool = match reference_pool(meta.clone(), workers) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("skipping eval bench: {e}");
+                break;
+            }
+        };
+        let h = pool.handle();
+        let w = h.init(1).expect("init");
+        bench.run(
+            format!("eval: 4000 samples, {workers} workers ({cores} cores)"),
+            || {
+                black_box(evaluate_model(&h, &w, &data, workers).unwrap());
+            },
+        );
+        let result = evaluate_model(&h, &w, &data, workers).unwrap();
+        match eval_baseline {
+            None => eval_baseline = Some(result),
+            Some((l, a)) => {
+                assert_eq!(
+                    (l.to_bits(), a.to_bits()),
+                    (result.0.to_bits(), result.1.to_bits()),
+                    "{workers}-worker eval diverged from sequential"
+                );
+            }
+        }
+    }
+
+    bench.report("sharded aggregation + pool-parallel eval");
+    println!("\n{}", bench.to_csv());
+    println!("bit-identity verified at every shard/worker count");
+}

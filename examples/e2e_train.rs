@@ -35,9 +35,11 @@ fn main() -> Result<()> {
     cfg.dirichlet_theta = 0.1;
     cfg.sparsity = 0.05;
     cfg.eval_every = 2;
-    // Engine-pool workers (`--workers 0` = one per core). Any value gives
+    // Engine-pool workers (`--workers 0` = one per core) and server-reduce
+    // lane shards (`--shards 0` = one per worker). Any combination gives
     // bit-identical results; only wall-clock changes.
     cfg.num_workers = cli.opt_parse("workers")?.unwrap_or(0);
+    cfg.agg_shards = cli.opt_parse("shards")?.unwrap_or(0);
 
     eprintln!(
         "e2e: {} devices x {} local epochs x {} rounds on {} (non-IID Dirichlet {})",

@@ -21,6 +21,7 @@ fn main() -> Result<()> {
     cfg.test_samples = 256;
     cfg.sparsity = 0.05; // α: upload 5% of coordinates per round
     cfg.num_workers = 0; // engine-pool: one PJRT worker per core (bit-identical to 1)
+    cfg.agg_shards = 0; // server reduce: one lane shard per worker (bit-identical to 1)
 
     println!("FedAdam-SSM quickstart: {} on {}", cfg.algorithm, cfg.model);
     let mut coord = Coordinator::new(cfg, "artifacts")?;

@@ -85,6 +85,11 @@ pub struct ExperimentConfig {
     /// reproduces the original single-engine actor.  Results are bitwise
     /// identical at any worker count — only wall-clock changes.
     pub num_workers: usize,
+    /// Lane shards for the server-side aggregation reduce.  `0` (default)
+    /// = one shard per pool worker.  The reduce partitions `[0, dim)` into
+    /// fixed contiguous ranges, so results are bitwise identical at any
+    /// shard count — only wall-clock changes.
+    pub agg_shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -111,6 +116,7 @@ impl Default for ExperimentConfig {
             sparsify_backend: SparsifyBackend::Native,
             participation: 1.0,
             num_workers: 1,
+            agg_shards: 0,
         }
     }
 }
@@ -180,6 +186,7 @@ impl ExperimentConfig {
             "sparsify_backend" => self.sparsify_backend = SparsifyBackend::parse(value)?,
             "participation" => self.participation = p(key, value)?,
             "num_workers" => self.num_workers = p(key, value)?,
+            "agg_shards" => self.agg_shards = p(key, value)?,
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -213,6 +220,30 @@ impl ExperimentConfig {
         }
         Ok(())
     }
+
+    /// Apply the CI determinism-matrix environment overrides:
+    /// `FEDADAM_NUM_WORKERS` and `FEDADAM_AGG_SHARDS` (when set)
+    /// override `num_workers` / `agg_shards`.  Test base configs call
+    /// this so one test binary can be swept across the worker/shard grid
+    /// without recompiling.
+    ///
+    /// Panics on a present-but-unparseable value: a typo'd matrix entry
+    /// must fail the lane loudly, not silently test the defaults.
+    pub fn apply_env_overrides(&mut self) {
+        fn env_usize(key: &str) -> Option<usize> {
+            let v = std::env::var(key).ok()?;
+            match v.parse() {
+                Ok(n) => Some(n),
+                Err(_) => panic!("{key}={v:?} is not a valid usize"),
+            }
+        }
+        if let Some(n) = env_usize("FEDADAM_NUM_WORKERS") {
+            self.num_workers = n;
+        }
+        if let Some(n) = env_usize("FEDADAM_AGG_SHARDS") {
+            self.agg_shards = n;
+        }
+    }
 }
 
 fn render(v: &TomlValue) -> String {
@@ -243,12 +274,15 @@ mod tests {
         cfg.set("iid", "false").unwrap();
         cfg.set("sparsify_backend", "xla").unwrap();
         cfg.set("num_workers", "4").unwrap();
+        cfg.set("agg_shards", "8").unwrap();
         assert_eq!(cfg.algorithm, "fedadam-top");
         assert_eq!(cfg.lr, 0.01);
         assert!(!cfg.iid);
         assert_eq!(cfg.sparsify_backend, SparsifyBackend::Xla);
         assert_eq!(cfg.num_workers, 4);
+        assert_eq!(cfg.agg_shards, 8);
         assert!(cfg.set("num_workers", "many").is_err());
+        assert!(cfg.set("agg_shards", "many").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("lr", "abc").is_err());
     }

@@ -33,7 +33,7 @@ use crate::runtime::{EngineHandle, EnginePool, Manifest};
 use crate::tensor;
 
 pub use device::{Device, LocalRunConfig};
-pub use server::{aggregate, GlobalState};
+pub use server::{aggregate, aggregate_sharded, GlobalState};
 
 /// A fully-wired experiment ready to run.
 pub struct Coordinator {
@@ -63,6 +63,8 @@ struct TrainOutput {
 impl Coordinator {
     /// Build everything: engine pool, data, shards, algorithm, initial model.
     pub fn new(cfg: ExperimentConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        // Validate before the (expensive) pool build; `with_pool` validates
+        // again because it is itself a public entry point.
         cfg.validate()?;
         let manifest = Manifest::load(artifacts_dir)?;
         // Concurrency is bounded by participant count, so never spin up
@@ -70,6 +72,18 @@ impl Coordinator {
         let workers = crate::runtime::pool::resolve_workers(cfg.num_workers).min(cfg.devices);
         let pool = EnginePool::load(&manifest, &cfg.model, workers)
             .with_context(|| format!("loading model {:?}", cfg.model))?;
+        Self::with_pool(cfg, pool)
+    }
+
+    /// Build an experiment on an already-constructed engine pool.
+    ///
+    /// This is the backend-injection seam: tests and benches hand in an
+    /// [`EnginePool`] built from any [`crate::runtime::Executor`] factory
+    /// (e.g. the pure-Rust [`crate::runtime::ReferenceExecutor`], which
+    /// needs no PJRT artifacts), and the full round loop — training,
+    /// compression, aggregation, eval, ledger — runs against it.
+    pub fn with_pool(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
+        cfg.validate()?;
         let meta = pool.meta().clone();
 
         // Synthetic stand-in corpus shaped for this model.
@@ -249,8 +263,14 @@ impl Coordinator {
             }
         }
 
-        // 5. Server aggregate + broadcast.
-        let mut agg = aggregate(&uploads, dim);
+        // 5. Server aggregate + broadcast — sharded across the lane space
+        //    (bit-identical to the 1-shard reduce at any shard count).
+        let shards = if self.cfg.agg_shards == 0 {
+            self.pool.num_workers()
+        } else {
+            self.cfg.agg_shards
+        };
+        let mut agg = aggregate_sharded(&uploads, dim, shards);
         self.algorithm.postprocess(&mut agg);
         self.ledger
             .down(self.algorithm.downlink_bits(&agg), participants.len());
@@ -315,9 +335,15 @@ impl Coordinator {
         Ok(self.algorithm.compress(t, di, delta))
     }
 
-    /// Evaluate the global model on the held-out test set.
+    /// Evaluate the global model on the held-out test set, fanning eval
+    /// batches out across the engine pool.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        evaluate_model(&self.pool.handle(), &self.global.w, &self.test_set)
+        evaluate_model(
+            &self.pool.handle(),
+            &self.global.w,
+            &self.test_set,
+            self.pool.num_workers(),
+        )
     }
 
     /// Run all configured rounds, returning the full log.
@@ -347,40 +373,90 @@ impl Coordinator {
     }
 }
 
-/// Evaluate `w` over `data` in fixed-size weighted eval batches.
+/// Build and run eval batch `b` (samples `[b·e, (b+1)·e) ∩ [0, len)`,
+/// zero-weight-padded to the program's fixed batch shape).
+fn eval_one_batch(
+    engine: &EngineHandle,
+    w: &[f32],
+    data: &Dataset,
+    b: usize,
+) -> Result<(f64, f64, f64)> {
+    let meta = engine.meta();
+    let e = meta.eval_batch;
+    let row = meta.row();
+    let start = b * e;
+    let n = (data.len() - start).min(e);
+    let mut x = Vec::with_capacity(e * row);
+    let mut y = Vec::with_capacity(e);
+    let mut wt = Vec::with_capacity(e);
+    for i in 0..e {
+        if i < n {
+            x.extend_from_slice(data.image(start + i));
+            y.push(data.labels[start + i]);
+            wt.push(1.0);
+        } else {
+            x.extend(std::iter::repeat(0.0).take(row));
+            y.push(0);
+            wt.push(0.0);
+        }
+    }
+    engine.eval_batch(w, x, y, wt)
+}
+
+/// Evaluate `w` over `data` in fixed-size weighted eval batches, fanning
+/// the batches out across the engine pool.
+///
+/// The test set is pre-sliced into `ceil(len / eval_batch)` batches;
+/// batches are dispatched concurrently in chunks of `workers` scoped
+/// threads (each blocks inside the pool's queue, so device-level
+/// concurrency is governed by the pool), and the per-batch
+/// `(loss_sum, correct, weight)` triples are reduced **in ascending batch
+/// order**.  Each batch is a pure function of its inputs and the f64
+/// reduction order is fixed, so the result is bit-identical to the
+/// sequential path (`workers = 1`) at any worker count.
 pub fn evaluate_model(
     engine: &EngineHandle,
     w: &[f32],
     data: &Dataset,
+    workers: usize,
 ) -> Result<(f64, f64)> {
-    let meta = engine.meta().clone();
-    let e = meta.eval_batch;
-    let row = meta.row();
+    let e = engine.meta().eval_batch;
+    let nb = data.len().div_ceil(e.max(1));
+    let workers = workers.max(1);
+
+    let mut parts: Vec<(f64, f64, f64)> = Vec::with_capacity(nb);
+    if workers == 1 {
+        for b in 0..nb {
+            parts.push(eval_one_batch(engine, w, data, b)?);
+        }
+    } else {
+        for chunk_start in (0..nb).step_by(workers) {
+            let chunk_end = (chunk_start + workers).min(nb);
+            let outs: Vec<Result<(f64, f64, f64)>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (chunk_start..chunk_end)
+                    .map(|b| {
+                        let h = engine.clone();
+                        scope.spawn(move || eval_one_batch(&h, w, data, b))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+                    .collect()
+            });
+            for out in outs {
+                parts.push(out?);
+            }
+        }
+    }
+
     let mut loss_sum = 0.0;
     let mut correct = 0.0;
     let mut weight = 0.0;
-    let mut start = 0;
-    while start < data.len() {
-        let n = (data.len() - start).min(e);
-        let mut x = Vec::with_capacity(e * row);
-        let mut y = Vec::with_capacity(e);
-        let mut wt = Vec::with_capacity(e);
-        for i in 0..e {
-            if i < n {
-                x.extend_from_slice(data.image(start + i));
-                y.push(data.labels[start + i]);
-                wt.push(1.0);
-            } else {
-                x.extend(std::iter::repeat(0.0).take(row));
-                y.push(0);
-                wt.push(0.0);
-            }
-        }
-        let (ls, c, wsum) = engine.eval_batch(w, x, y, wt)?;
+    for (ls, c, wsum) in parts {
         loss_sum += ls;
         correct += c;
         weight += wsum;
-        start += n;
     }
     if weight == 0.0 {
         return Ok((f64::NAN, f64::NAN));

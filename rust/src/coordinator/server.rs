@@ -39,21 +39,29 @@ impl GlobalState {
     }
 }
 
-/// Size of the union of the given payloads' supports.
+/// Size of the union of the given payloads' supports restricted to the
+/// lane range `[lo, hi)`.
 ///
-/// A dense payload covers every lane.  A sparse payload's support is its
-/// **stored index set** — including lanes whose stored value is exactly
-/// `0.0`, because those lanes were transmitted (and priced) on the wire.
-fn union_support<'a>(dim: usize, recons: impl Iterator<Item = &'a Recon>) -> usize {
-    let mut seen = vec![false; dim];
+/// A dense payload covers every lane in the range.  A sparse payload's
+/// support is its **stored index set** — including lanes whose stored
+/// value is exactly `0.0`, because those lanes were transmitted (and
+/// priced) on the wire.
+fn union_support_range<'a>(
+    lo: usize,
+    hi: usize,
+    recons: impl Iterator<Item = &'a Recon>,
+) -> usize {
+    let mut seen = vec![false; hi - lo];
     let mut count = 0usize;
     for r in recons {
         match r {
-            Recon::Dense(_) => return dim,
+            Recon::Dense(_) => return hi - lo,
             Recon::Sparse(sv) => {
-                for &i in &sv.indices {
-                    if !seen[i as usize] {
-                        seen[i as usize] = true;
+                let (a, b) = sv.index_range(lo as u32, hi as u32);
+                for &i in &sv.indices[a..b] {
+                    let j = i as usize - lo;
+                    if !seen[j] {
+                        seen[j] = true;
                         count += 1;
                     }
                 }
@@ -63,32 +71,164 @@ fn union_support<'a>(dim: usize, recons: impl Iterator<Item = &'a Recon>) -> usi
     count
 }
 
+/// `out[i - lo] += coef * r[i]` for every stored lane `i ∈ [lo, hi)`.
+fn axpy_range(r: &Recon, out: &mut [f32], coef: f32, lo: usize, hi: usize) {
+    match r {
+        Recon::Dense(v) => {
+            for (o, x) in out.iter_mut().zip(&v[lo..hi]) {
+                *o += coef * x;
+            }
+        }
+        Recon::Sparse(sv) => {
+            let (a, b) = sv.index_range(lo as u32, hi as u32);
+            for t in a..b {
+                out[sv.indices[t] as usize - lo] += coef * sv.values[t];
+            }
+        }
+    }
+}
+
+/// One lane shard's accumulated segment + support counts.
+struct ShardAgg {
+    dw: Vec<f32>,
+    dm: Option<Vec<f32>>,
+    dv: Option<Vec<f32>>,
+    dw_support: usize,
+    dm_support: usize,
+    dv_support: usize,
+}
+
+/// Reduce the uploads over the lane range `[lo, hi)` only.
+///
+/// Per lane, the accumulation order is exactly the upload order — the
+/// same association order as the 1-shard reduce — so stitching shard
+/// segments back in ascending lane order reproduces the sequential
+/// result bit for bit.
+fn reduce_shard(
+    uploads: &[Upload],
+    coefs: &[f32],
+    lo: usize,
+    hi: usize,
+    any_m: bool,
+    any_v: bool,
+) -> ShardAgg {
+    let n = hi - lo;
+    let mut dw = vec![0.0f32; n];
+    let mut dm = if any_m { Some(vec![0.0f32; n]) } else { None };
+    let mut dv = if any_v { Some(vec![0.0f32; n]) } else { None };
+    for (u, &coef) in uploads.iter().zip(coefs) {
+        axpy_range(&u.dw, &mut dw, coef, lo, hi);
+        if let (Some(acc), Some(r)) = (dm.as_deref_mut(), u.dm.as_ref()) {
+            axpy_range(r, acc, coef, lo, hi);
+        }
+        if let (Some(acc), Some(r)) = (dv.as_deref_mut(), u.dv.as_ref()) {
+            axpy_range(r, acc, coef, lo, hi);
+        }
+    }
+    ShardAgg {
+        dw_support: union_support_range(lo, hi, uploads.iter().map(|u| &u.dw)),
+        dm_support: union_support_range(lo, hi, uploads.iter().filter_map(|u| u.dm.as_ref())),
+        dv_support: union_support_range(lo, hi, uploads.iter().filter_map(|u| u.dv.as_ref())),
+        dw,
+        dm,
+        dv,
+    }
+}
+
 /// Weighted FedAvg over uploads (sparse uploads accumulate sparsely —
-/// the reduce is `O(Σ nnz)` not `O(N·d)`).
+/// the reduce is `O(Σ nnz)` not `O(N·d)`).  Single-shard convenience
+/// wrapper around [`aggregate_sharded`].
 ///
 /// The returned [`Aggregate`] also carries the union support size of each
 /// vector so downlink pricing survives exact-zero cancellations.
 pub fn aggregate(uploads: &[Upload], dim: usize) -> Aggregate {
+    aggregate_sharded(uploads, dim, 1)
+}
+
+/// Sharded weighted FedAvg: partition the lane space `[0, dim)` into
+/// `shards` fixed contiguous ranges, reduce each range on its own scoped
+/// thread, then stitch the segments back in ascending lane order.
+///
+/// Determinism contract: every f32 lane sum has a fixed association order
+/// (upload order, per lane), independent of `shards` and of scheduling —
+/// the result is **bit-identical** to the sequential reduce at any shard
+/// count.  `shards` is clamped to `[1, dim]`; `1` runs inline with no
+/// thread spawn.
+pub fn aggregate_sharded(uploads: &[Upload], dim: usize, shards: usize) -> Aggregate {
     let total: f64 = uploads.iter().map(|u| u.weight).sum();
-    let mut dw = vec![0.0f32; dim];
+    let coefs: Vec<f32> = uploads
+        .iter()
+        .map(|u| if total > 0.0 { (u.weight / total) as f32 } else { 0.0 })
+        .collect();
     let any_m = uploads.iter().any(|u| u.dm.is_some());
     let any_v = uploads.iter().any(|u| u.dv.is_some());
-    let mut dm = if any_m { Some(vec![0.0f32; dim]) } else { None };
-    let mut dv = if any_v { Some(vec![0.0f32; dim]) } else { None };
+    let shards = shards.clamp(1, dim.max(1));
 
-    for u in uploads {
-        let coef = if total > 0.0 { (u.weight / total) as f32 } else { 0.0 };
-        u.dw.axpy_into(&mut dw, coef);
-        if let (Some(acc), Some(r)) = (dm.as_deref_mut(), u.dm.as_ref()) {
-            r.axpy_into(acc, coef);
+    let parts: Vec<ShardAgg> = if shards == 1 {
+        vec![reduce_shard(uploads, &coefs, 0, dim, any_m, any_v)]
+    } else {
+        // Balanced contiguous ranges: shard s covers
+        // [s·dim/shards, (s+1)·dim/shards).
+        let bounds: Vec<(usize, usize)> = (0..shards)
+            .map(|s| (s * dim / shards, (s + 1) * dim / shards))
+            .collect();
+        // Strided shard→thread assignment; which thread reduces a shard
+        // cannot change its bits, only its schedule.
+        let nthreads = shards
+            .min(
+                std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1),
+            )
+            .max(1);
+        let mut slots: Vec<Option<ShardAgg>> = (0..shards).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let bounds = &bounds;
+            let coefs = &coefs;
+            let handles: Vec<_> = (0..nthreads)
+                .map(|t| {
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        let mut s = t;
+                        while s < shards {
+                            let (lo, hi) = bounds[s];
+                            out.push((s, reduce_shard(uploads, coefs, lo, hi, any_m, any_v)));
+                            s += nthreads;
+                        }
+                        out
+                    })
+                })
+                .collect();
+            for h in handles {
+                let results = h.join().unwrap_or_else(|p| std::panic::resume_unwind(p));
+                for (s, sa) in results {
+                    slots[s] = Some(sa);
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| s.expect("every shard reduced"))
+            .collect()
+    };
+
+    // Stitch in ascending lane order.
+    let mut dw = Vec::with_capacity(dim);
+    let mut dm = if any_m { Some(Vec::with_capacity(dim)) } else { None };
+    let mut dv = if any_v { Some(Vec::with_capacity(dim)) } else { None };
+    let (mut dw_support, mut dm_support, mut dv_support) = (0usize, 0usize, 0usize);
+    for part in parts {
+        dw.extend_from_slice(&part.dw);
+        if let (Some(acc), Some(seg)) = (dm.as_mut(), part.dm) {
+            acc.extend_from_slice(&seg);
         }
-        if let (Some(acc), Some(r)) = (dv.as_deref_mut(), u.dv.as_ref()) {
-            r.axpy_into(acc, coef);
+        if let (Some(acc), Some(seg)) = (dv.as_mut(), part.dv) {
+            acc.extend_from_slice(&seg);
         }
+        dw_support += part.dw_support;
+        dm_support += part.dm_support;
+        dv_support += part.dv_support;
     }
-    let dw_support = union_support(dim, uploads.iter().map(|u| &u.dw));
-    let dm_support = union_support(dim, uploads.iter().filter_map(|u| u.dm.as_ref()));
-    let dv_support = union_support(dim, uploads.iter().filter_map(|u| u.dv.as_ref()));
     Aggregate {
         dw,
         dm,
@@ -216,6 +356,67 @@ mod tests {
         assert_eq!(gs.w, vec![1.5, 0.5]);
         assert_eq!(gs.m, vec![1.0, 0.0]);
         assert_eq!(gs.v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn sharded_reduce_is_bit_identical_to_sequential() {
+        let sv = |i: Vec<u32>, v: Vec<f32>| {
+            Recon::Sparse(SparseVec {
+                dim: 9,
+                indices: i,
+                values: v,
+            })
+        };
+        // Mixed dense/sparse, exact-zero stored lanes, cancelling values,
+        // uneven weights — the stress mix the property tests randomize.
+        let uploads = vec![
+            Upload {
+                dw: sv(vec![0, 4, 5], vec![1.0, 0.0, 2.5]),
+                dm: Some(Recon::Dense(vec![0.1; 9])),
+                dv: None,
+                weight: 2.0,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![4, 8], vec![-3.0, 7.0]),
+                dm: Some(sv(vec![2], vec![0.0])),
+                dv: Some(sv(vec![6], vec![1.0])),
+                weight: 1.0,
+                bits: 0,
+            },
+            Upload {
+                dw: Recon::Dense((0..9).map(|i| i as f32 * 0.3).collect()),
+                dm: None,
+                dv: Some(Recon::Dense(vec![-0.5; 9])),
+                weight: 0.5,
+                bits: 0,
+            },
+        ];
+        let base = aggregate_sharded(&uploads, 9, 1);
+        for shards in [2usize, 3, 4, 7, 9, 100] {
+            let s = aggregate_sharded(&uploads, 9, shards);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&s.dw), bits(&base.dw), "{shards} shards: dw");
+            assert_eq!(
+                s.dm.as_deref().map(bits),
+                base.dm.as_deref().map(bits),
+                "{shards} shards: dm"
+            );
+            assert_eq!(
+                s.dv.as_deref().map(bits),
+                base.dv.as_deref().map(bits),
+                "{shards} shards: dv"
+            );
+            assert_eq!(s.dw_support, base.dw_support, "{shards} shards");
+            assert_eq!(s.dm_support, base.dm_support, "{shards} shards");
+            assert_eq!(s.dv_support, base.dv_support, "{shards} shards");
+        }
+        // Dense upload present ⇒ dw support covers every lane.
+        assert_eq!(base.dw_support, 9);
+        // dm came from one dense + one sparse upload ⇒ also full.
+        assert_eq!(base.dm_support, 9);
+        // dv union: lane 6 sparse ∪ dense = full.
+        assert_eq!(base.dv_support, 9);
     }
 
     #[test]

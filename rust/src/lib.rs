@@ -14,8 +14,12 @@
 //!   AOT-lowered to HLO text (`python/compile/`).
 //! - **Layer 3** (this crate): the federated runtime — device/server
 //!   coordination, sparse + quantized transport with bit-accurate
-//!   accounting, aggregation, experiment harness. Python is never on the
-//!   runtime path: the binary executes the AOT artifacts via PJRT.
+//!   accounting, sharded aggregation, pool-parallel eval, experiment
+//!   harness. Python is never on the runtime path: the binary executes
+//!   the AOT artifacts via PJRT (or, for offline tests/benches, the
+//!   pure-Rust [`runtime::ReferenceExecutor`]).  Determinism contract:
+//!   aggregation is shard-order-fixed and eval is batch-order-fixed, so
+//!   results are byte-identical at any `num_workers` / `agg_shards`.
 //!
 //! ## Quickstart
 //!

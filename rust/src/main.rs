@@ -67,8 +67,10 @@ OPTIONS:
     --artifacts <dir>     AOT artifacts directory [default: artifacts]
     --config <file>       TOML experiment config
     --set key=value       override one config key (repeatable), e.g.
-                          --set num_workers=4 (engine-pool threads; 0 = auto,
-                          results are bit-identical at any worker count)
+                          --set num_workers=4 (engine-pool threads; 0 = auto)
+                          --set agg_shards=4 (server-reduce lane shards;
+                          0 = one per pool worker).  Results are
+                          bit-identical at any worker/shard count.
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -66,18 +66,31 @@ impl ExperimentLog {
     }
 
     /// CSV with a header row.
+    ///
+    /// Rounds that were not evaluated carry `NaN` in
+    /// `test_loss`/`test_accuracy`; those cells are emitted **empty**
+    /// (strict CSV consumers reject a literal `NaN` token).  A genuinely
+    /// evaluated round that diverged to `±inf` still prints `inf` — an
+    /// empty cell means "not evaluated", never "diverged".
     pub fn to_csv(&self) -> String {
+        fn cell(x: f64) -> String {
+            if x.is_nan() {
+                String::new()
+            } else {
+                format!("{x:.6}")
+            }
+        }
         let mut out = String::from(
             "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,update_norm\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{:.6},{:.6},{},{},{:.4},{:.6e}",
+                "{},{:.6},{},{},{},{},{:.4},{:.6e}",
                 r.round,
                 r.train_loss,
-                r.test_loss,
-                r.test_accuracy,
+                cell(r.test_loss),
+                cell(r.test_accuracy),
                 r.uplink_bits,
                 r.downlink_bits,
                 r.wall_secs,
@@ -187,6 +200,44 @@ mod tests {
         let csv = log().to_csv();
         assert_eq!(csv.lines().count(), 6);
         assert!(csv.starts_with("round,"));
+    }
+
+    #[test]
+    fn csv_non_eval_rounds_round_trip_without_nan() {
+        // Non-eval rounds carry NaN internally; the CSV must emit empty
+        // cells (never the literal `NaN`) and every other field must
+        // parse back to the exact written value.
+        let mut l = log();
+        l.rounds[1].test_loss = f64::NAN;
+        l.rounds[1].test_accuracy = f64::NAN;
+        l.rounds[3].test_loss = f64::NAN;
+        l.rounds[3].test_accuracy = f64::NAN;
+        let csv = l.to_csv();
+        assert!(!csv.contains("NaN"), "literal NaN leaked into CSV:\n{csv}");
+
+        let lines: Vec<&str> = csv.lines().collect();
+        let header: Vec<&str> = lines[0].split(',').collect();
+        assert_eq!(header.len(), 8);
+        for (i, line) in lines[1..].iter().enumerate() {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert_eq!(cells.len(), 8, "row {i} lost a column: {line}");
+            // round + train_loss always parse.
+            assert_eq!(cells[0].parse::<usize>().unwrap(), i);
+            let train: f64 = cells[1].parse().unwrap();
+            assert!((train - l.rounds[i].train_loss).abs() < 1e-9);
+            if l.rounds[i].test_loss.is_finite() {
+                let tl: f64 = cells[2].parse().unwrap();
+                let ta: f64 = cells[3].parse().unwrap();
+                assert!((tl - l.rounds[i].test_loss).abs() < 1e-9);
+                assert!((ta - l.rounds[i].test_accuracy).abs() < 1e-9);
+            } else {
+                assert!(cells[2].is_empty(), "row {i}: want empty test_loss");
+                assert!(cells[3].is_empty(), "row {i}: want empty test_accuracy");
+            }
+            // Ledger columns survive exactly.
+            assert_eq!(cells[4].parse::<u64>().unwrap(), l.rounds[i].uplink_bits);
+            assert_eq!(cells[5].parse::<u64>().unwrap(), l.rounds[i].downlink_bits);
+        }
     }
 
     #[test]

@@ -15,7 +15,9 @@
 pub mod engine;
 pub mod manifest;
 pub mod pool;
+pub mod reference;
 
 pub use engine::{Arg, Engine, EngineHandle, Prog};
 pub use manifest::{AdamConfig, Manifest, ModelMeta};
 pub use pool::{EnginePool, Executor, PoolHandle};
+pub use reference::{reference_meta, reference_pool, ReferenceExecutor};

@@ -53,6 +53,8 @@ enum Request {
 pub struct PoolHandle {
     tx: mpsc::Sender<Request>,
     meta: ModelMeta,
+    /// Worker threads serving the pool (resolved, not the raw request).
+    workers: usize,
 }
 
 /// Owns the worker threads; dropping shuts the pool down.
@@ -136,7 +138,11 @@ impl EnginePool {
         }
 
         let pool = EnginePool {
-            handle: PoolHandle { tx, meta },
+            handle: PoolHandle {
+                tx,
+                meta,
+                workers: num_workers,
+            },
             workers,
         };
         match startup {
@@ -252,6 +258,12 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 impl PoolHandle {
     pub fn meta(&self) -> &ModelMeta {
         &self.meta
+    }
+
+    /// Worker threads serving the pool behind this handle — the natural
+    /// concurrency bound for callers fanning work out (e.g. parallel eval).
+    pub fn num_workers(&self) -> usize {
+        self.workers
     }
 
     /// Execute `prog` with `args` on some worker; blocks until the reply.

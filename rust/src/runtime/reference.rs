@@ -1,0 +1,457 @@
+//! A pure-Rust reference executor: the deterministic stand-in backend.
+//!
+//! The container build links the vendored `xla` stub, so the AOT artifacts
+//! cannot execute and every artifact-gated test skips.  This module closes
+//! that gap: [`ReferenceExecutor`] implements the full [`Prog`] contract
+//! (init / train / epoch / eval / sgd / grads / sparsify) for a linear
+//! softmax classifier in plain `f32` Rust, so the **entire** coordinator
+//! loop — local training, compression, aggregation, eval, ledger — runs
+//! and is testable offline.  The algorithm-zoo conformance suite and the
+//! aggregation/eval benches are built on it.
+//!
+//! Semantics mirror the AOT programs:
+//! - every call is a **pure function of its arguments** (no hidden state),
+//!   so results are bitwise independent of which pool worker serves it;
+//! - Adam uses the paper's constants (β₁ = 0.9, β₂ = 0.999, ε = 1e-6);
+//! - `eval` returns weighted `(loss_sum, correct, weight_sum)` — a lane
+//!   with weight `0.0` contributes exactly nothing, whatever its payload;
+//! - `sparsify` applies the shared top-k mask of `|ΔW|` with the kernel's
+//!   tie rule (keep every lane with `|ΔW| >= τ`, a superset of k on ties).
+//!
+//! Model: `logits = W·x + b` with `W: [classes, row]` row-major followed
+//! by `b: [classes]`, so `dim = classes·(row + 1)`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use super::engine::{Arg, Prog};
+use super::manifest::ModelMeta;
+use super::pool::{EnginePool, Executor};
+
+/// Paper Adam constants (match `artifacts/manifest.json`).
+const BETA1: f32 = 0.9;
+const BETA2: f32 = 0.999;
+const EPS: f32 = 1e-6;
+
+/// Build the [`ModelMeta`] for a reference linear model.
+///
+/// `dim = num_classes * (row + 1)` where `row = Π input_shape`.
+pub fn reference_meta(
+    input_shape: &[usize],
+    num_classes: usize,
+    batch: usize,
+    eval_batch: usize,
+    epoch_batches: usize,
+) -> ModelMeta {
+    let row: usize = input_shape.iter().product();
+    ModelMeta {
+        name: "reference-linear".into(),
+        dim: num_classes * (row + 1),
+        input_shape: input_shape.to_vec(),
+        num_classes,
+        batch,
+        eval_batch,
+        epoch_batches,
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// An [`EnginePool`] whose every worker runs a [`ReferenceExecutor`].
+pub fn reference_pool(meta: ModelMeta, num_workers: usize) -> Result<EnginePool> {
+    let factory_meta = meta.clone();
+    EnginePool::with_factory(meta, num_workers, move |_worker| {
+        ReferenceExecutor::new(factory_meta.clone())
+    })
+}
+
+/// The deterministic linear-softmax backend (one per pool worker).
+pub struct ReferenceExecutor {
+    row: usize,
+    classes: usize,
+    dim: usize,
+    /// Fixed scan length of the `epoch` program (`meta.epoch_batches`).
+    epoch_batches: usize,
+}
+
+impl ReferenceExecutor {
+    pub fn new(meta: ModelMeta) -> Result<ReferenceExecutor> {
+        let row = meta.row();
+        let classes = meta.num_classes;
+        if meta.dim != classes * (row + 1) {
+            return Err(anyhow!(
+                "reference model needs dim = classes*(row+1) = {}, got {}",
+                classes * (row + 1),
+                meta.dim
+            ));
+        }
+        Ok(ReferenceExecutor {
+            row,
+            classes,
+            dim: meta.dim,
+            epoch_batches: meta.epoch_batches.max(1),
+        })
+    }
+
+    /// Deterministic small-normal init from the seed.
+    fn init(&self, seed: i32) -> Vec<f32> {
+        let mut rng = crate::rng::Rng::new((seed as i64 as u64) ^ 0x9e37_79b9_7f4a_7c15);
+        (0..self.dim).map(|_| (rng.normal() * 0.05) as f32).collect()
+    }
+
+    /// `out = W·x + b` for one sample.
+    fn logits(&self, w: &[f32], x: &[f32], out: &mut [f32]) {
+        let (row, c) = (self.row, self.classes);
+        for (cls, o) in out.iter_mut().enumerate() {
+            let wrow = &w[cls * row..(cls + 1) * row];
+            let mut z = w[c * row + cls];
+            for j in 0..row {
+                z += wrow[j] * x[j];
+            }
+            *o = z;
+        }
+    }
+
+    /// Softmax cross-entropy + prediction for one sample.  `z` holds the
+    /// logits on entry and the softmax probabilities on exit.
+    fn softmax_loss(z: &mut [f32], label: usize) -> (f32, usize) {
+        let max = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in z.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in z.iter_mut() {
+            *v /= sum;
+        }
+        // Argmax with lowest-index tie break (deterministic).
+        let mut pred = 0usize;
+        for c in 1..z.len() {
+            if z[c] > z[pred] {
+                pred = c;
+            }
+        }
+        let p_y = z[label].max(f32::MIN_POSITIVE);
+        (-(p_y.ln()), pred)
+    }
+
+    /// Mean-batch softmax gradient into `g`; returns the mean loss.
+    fn grad_batch(&self, w: &[f32], x: &[f32], y: &[i32], g: &mut [f32]) -> f32 {
+        let (row, c) = (self.row, self.classes);
+        let b = y.len();
+        let inv_b = 1.0 / b as f32;
+        let mut z = vec![0.0f32; c];
+        let mut loss_sum = 0.0f32;
+        for i in 0..b {
+            let xi = &x[i * row..(i + 1) * row];
+            let label = (y[i].rem_euclid(c as i32)) as usize;
+            self.logits(w, xi, &mut z);
+            let (loss, _pred) = Self::softmax_loss(&mut z, label);
+            loss_sum += loss;
+            for cls in 0..c {
+                let mut gz = z[cls];
+                if cls == label {
+                    gz -= 1.0;
+                }
+                let gz = gz * inv_b;
+                g[c * row + cls] += gz;
+                let grow = &mut g[cls * row..(cls + 1) * row];
+                for j in 0..row {
+                    grow[j] += gz * xi[j];
+                }
+            }
+        }
+        loss_sum * inv_b
+    }
+
+    /// One Adam step in place (no bias correction — matches the stateless
+    /// AOT `train` program, which has no step counter input).
+    fn adam_step(w: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], eta: f32) {
+        for i in 0..w.len() {
+            m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+            v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+            w[i] -= eta * m[i] / (v[i].sqrt() + EPS);
+        }
+    }
+
+    /// Weighted eval: `(Σ wᵢ·lossᵢ, Σ wᵢ·[predᵢ = yᵢ], Σ wᵢ)`.
+    fn eval(&self, w: &[f32], x: &[f32], y: &[i32], wt: &[f32]) -> (f32, f32, f32) {
+        let (row, c) = (self.row, self.classes);
+        let mut z = vec![0.0f32; c];
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut weight = 0.0f32;
+        for i in 0..y.len() {
+            let xi = &x[i * row..(i + 1) * row];
+            let label = (y[i].rem_euclid(c as i32)) as usize;
+            self.logits(w, xi, &mut z);
+            let (loss, pred) = Self::softmax_loss(&mut z, label);
+            loss_sum += wt[i] * loss;
+            if pred == label {
+                correct += wt[i];
+            }
+            weight += wt[i];
+        }
+        (loss_sum, correct, weight)
+    }
+
+    /// Shared top-k mask of `|dw|` with the kernel's `|x| >= τ` keep rule.
+    fn sparsify(&self, dw: &[f32], dm: &[f32], dv: &[f32], k: i32) -> Vec<Vec<f32>> {
+        let k = (k.max(1) as usize).min(self.dim);
+        let tau = crate::sparse::top_k_threshold(dw, k);
+        let mask = |src: &[f32]| -> Vec<f32> {
+            src.iter()
+                .zip(dw)
+                .map(|(&v, &w)| if w.abs() >= tau { v } else { 0.0 })
+                .collect()
+        };
+        vec![mask(dw), mask(dm), mask(dv)]
+    }
+}
+
+/// Sequential argument decoder for [`Executor::execute`] calls.
+struct ArgStream(std::vec::IntoIter<Arg>);
+
+impl ArgStream {
+    fn new(args: Vec<Arg>) -> ArgStream {
+        ArgStream(args.into_iter())
+    }
+
+    fn next(&mut self) -> Result<Arg> {
+        self.0.next().ok_or_else(|| anyhow!("missing argument"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        match self.next()? {
+            Arg::F32(v, _) => Ok(v),
+            other => Err(anyhow!("expected f32 tensor, got {other:?}")),
+        }
+    }
+
+    fn i32s(&mut self) -> Result<Vec<i32>> {
+        match self.next()? {
+            Arg::I32(v, _) => Ok(v),
+            other => Err(anyhow!("expected i32 tensor, got {other:?}")),
+        }
+    }
+
+    fn sf32(&mut self) -> Result<f32> {
+        match self.next()? {
+            Arg::ScalarF32(x) => Ok(x),
+            other => Err(anyhow!("expected f32 scalar, got {other:?}")),
+        }
+    }
+
+    fn si32(&mut self) -> Result<i32> {
+        match self.next()? {
+            Arg::ScalarI32(x) => Ok(x),
+            other => Err(anyhow!("expected i32 scalar, got {other:?}")),
+        }
+    }
+}
+
+impl Executor for ReferenceExecutor {
+    fn execute(&mut self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        let mut a = ArgStream::new(args);
+        match prog {
+            Prog::Init => {
+                let seed = a.si32()?;
+                Ok(vec![self.init(seed)])
+            }
+            Prog::Train => {
+                let (mut w, mut m, mut v) = (a.f32s()?, a.f32s()?, a.f32s()?);
+                let (x, y, eta) = (a.f32s()?, a.i32s()?, a.sf32()?);
+                let mut g = vec![0.0f32; self.dim];
+                let loss = self.grad_batch(&w, &x, &y, &mut g);
+                Self::adam_step(&mut w, &mut m, &mut v, &g, eta);
+                Ok(vec![w, m, v, vec![loss]])
+            }
+            Prog::Epoch => {
+                let (mut w, mut m, mut v) = (a.f32s()?, a.f32s()?, a.f32s()?);
+                let (x, y, eta) = (a.f32s()?, a.i32s()?, a.sf32()?);
+                // The epoch program is compiled for a fixed scan shape
+                // [epoch_batches, batch, ...]; recover it from the meta.
+                let nb = self.epoch_batches;
+                if y.len() % nb != 0 {
+                    return Err(anyhow!("epoch: {} labels not divisible by {nb}", y.len()));
+                }
+                let b = y.len() / nb;
+                let per_sample = self.row;
+                if x.len() != nb * b * per_sample {
+                    return Err(anyhow!("epoch: ragged batch shapes"));
+                }
+                let mut loss_sum = 0.0f32;
+                for s in 0..nb {
+                    let xs = &x[s * b * per_sample..(s + 1) * b * per_sample];
+                    let ys = &y[s * b..(s + 1) * b];
+                    let mut g = vec![0.0f32; self.dim];
+                    let loss = self.grad_batch(&w, xs, ys, &mut g);
+                    Self::adam_step(&mut w, &mut m, &mut v, &g, eta);
+                    loss_sum += loss;
+                }
+                Ok(vec![w, m, v, vec![loss_sum / nb as f32]])
+            }
+            Prog::Eval => {
+                let w = a.f32s()?;
+                let (x, y, wt) = (a.f32s()?, a.i32s()?, a.f32s()?);
+                let (loss, correct, weight) = self.eval(&w, &x, &y, &wt);
+                Ok(vec![vec![loss], vec![correct], vec![weight]])
+            }
+            Prog::Sgd => {
+                let mut w = a.f32s()?;
+                let (x, y, eta) = (a.f32s()?, a.i32s()?, a.sf32()?);
+                let mut g = vec![0.0f32; self.dim];
+                let loss = self.grad_batch(&w, &x, &y, &mut g);
+                for i in 0..w.len() {
+                    w[i] -= eta * g[i];
+                }
+                Ok(vec![w, vec![loss]])
+            }
+            Prog::Grads => {
+                let w = a.f32s()?;
+                let (x, y) = (a.f32s()?, a.i32s()?);
+                let mut g = vec![0.0f32; self.dim];
+                let loss = self.grad_batch(&w, &x, &y, &mut g);
+                Ok(vec![g, vec![loss]])
+            }
+            Prog::Sparsify => {
+                let (dw, dm, dv) = (a.f32s()?, a.f32s()?, a.f32s()?);
+                let k = a.si32()?;
+                Ok(self.sparsify(&dw, &dm, &dv, k))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        reference_meta(&[2, 2, 1], 3, 2, 4, 2) // row 4, dim 15
+    }
+
+    fn exec() -> ReferenceExecutor {
+        ReferenceExecutor::new(meta()).unwrap()
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let mut e1 = exec();
+        let mut e2 = exec();
+        let a = e1.execute(Prog::Init, vec![Arg::ScalarI32(7)]).unwrap();
+        let b = e2.execute(Prog::Init, vec![Arg::ScalarI32(7)]).unwrap();
+        assert_eq!(a, b);
+        let c = e1.execute(Prog::Init, vec![Arg::ScalarI32(8)]).unwrap();
+        assert_ne!(a, c);
+        assert_eq!(a[0].len(), 15);
+    }
+
+    #[test]
+    fn train_reduces_loss_on_separable_batch() {
+        let mut e = exec();
+        let w0 = e.execute(Prog::Init, vec![Arg::ScalarI32(1)]).unwrap().remove(0);
+        // Two strongly-separated samples.
+        let x = vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let y = vec![0, 1];
+        let mut w = w0;
+        let mut m = vec![0.0; 15];
+        let mut v = vec![0.0; 15];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..50 {
+            let out = e
+                .execute(
+                    Prog::Train,
+                    vec![
+                        Arg::vec(w.clone()),
+                        Arg::vec(m.clone()),
+                        Arg::vec(v.clone()),
+                        Arg::F32(x.clone(), vec![2, 2, 2, 1]),
+                        Arg::I32(y.clone(), vec![2]),
+                        Arg::ScalarF32(0.05),
+                    ],
+                )
+                .unwrap();
+            let loss = out[3][0];
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            w = out[0].clone();
+            m = out[1].clone();
+            v = out[2].clone();
+        }
+        assert!(last < first, "loss should fall: {first} -> {last}");
+        assert!(last.is_finite());
+    }
+
+    #[test]
+    fn eval_zero_weight_lane_contributes_nothing() {
+        let mut e = exec();
+        let w = e.execute(Prog::Init, vec![Arg::ScalarI32(3)]).unwrap().remove(0);
+        let eval = |e: &mut ReferenceExecutor, x: Vec<f32>, y: Vec<i32>, wt: Vec<f32>| {
+            e.execute(
+                Prog::Eval,
+                vec![
+                    Arg::vec(w.clone()),
+                    Arg::F32(x, vec![4, 2, 2, 1]),
+                    Arg::I32(y, vec![4]),
+                    Arg::F32(wt, vec![4]),
+                ],
+            )
+            .unwrap()
+        };
+        let base_x = vec![0.5f32; 16];
+        let mut garbage_x = base_x.clone();
+        for v in garbage_x[8..].iter_mut() {
+            *v = 42.0; // arbitrary junk in the zero-weight lanes
+        }
+        let wt = vec![1.0, 1.0, 0.0, 0.0];
+        let a = eval(&mut e, base_x, vec![0, 1, 0, 0], wt.clone());
+        let b = eval(&mut e, garbage_x, vec![0, 1, 2, 1], wt);
+        assert_eq!(a, b, "zero-weight lanes must not affect any output");
+        assert_eq!(a[2], vec![2.0]);
+    }
+
+    #[test]
+    fn sparsify_keeps_shared_mask_with_ties() {
+        let mut e = exec();
+        let dw = vec![5.0, 0.0, -3.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let dm: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let dv = vec![1.0; 15];
+        let out = e
+            .execute(
+                Prog::Sparsify,
+                vec![
+                    Arg::vec(dw.clone()),
+                    Arg::vec(dm),
+                    Arg::vec(dv),
+                    Arg::ScalarI32(2),
+                ],
+            )
+            .unwrap();
+        // τ = 3.0 ⇒ lanes {0, 2} kept in all three vectors.
+        assert_eq!(out[0], {
+            let mut v = vec![0.0f32; 15];
+            v[0] = 5.0;
+            v[2] = -3.0;
+            v
+        });
+        assert_eq!(out[1][0], 0.0); // dm[0] gathered
+        assert_eq!(out[1][2], 2.0);
+        assert!(out[1][3] == 0.0 && out[2][3] == 0.0, "masked lanes zeroed");
+    }
+
+    #[test]
+    fn pool_of_reference_executors_round_trips() {
+        let pool = reference_pool(meta(), 3).unwrap();
+        assert_eq!(pool.num_workers(), 3);
+        let h = pool.handle();
+        let w = h.init(9).unwrap();
+        assert_eq!(w.len(), 15);
+        // Same request through different workers is bitwise stable.
+        let again = h.init(9).unwrap();
+        assert_eq!(w, again);
+    }
+}

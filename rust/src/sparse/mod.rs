@@ -63,6 +63,18 @@ impl SparseVec {
         self.indices.len()
     }
 
+    /// Positions `(a, b)` into `indices`/`values` such that
+    /// `indices[a..b]` are exactly the stored lanes in `[lo, hi)`.
+    ///
+    /// `O(log nnz)` via binary search (indices are sorted unique) — the
+    /// sharded server reduce uses this to restrict a payload to one
+    /// contiguous lane shard without scanning the whole support.
+    pub fn index_range(&self, lo: u32, hi: u32) -> (usize, usize) {
+        let a = self.indices.partition_point(|&i| i < lo);
+        let b = self.indices.partition_point(|&i| i < hi);
+        (a, b)
+    }
+
     /// Scatter back to a dense vector.
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.dim];
@@ -131,6 +143,20 @@ mod tests {
         );
         // Round-trip stays faithful.
         assert_eq!(upload.to_dense(), masked);
+    }
+
+    #[test]
+    fn index_range_brackets_sorted_indices() {
+        let sv = SparseVec {
+            dim: 10,
+            indices: vec![1, 3, 4, 8],
+            values: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        assert_eq!(sv.index_range(0, 10), (0, 4));
+        assert_eq!(sv.index_range(2, 5), (1, 3)); // lanes {3, 4}
+        assert_eq!(sv.index_range(5, 8), (3, 3)); // empty
+        assert_eq!(sv.index_range(8, 9), (3, 4));
+        assert_eq!(sv.index_range(3, 3), (1, 1)); // degenerate range
     }
 
     #[test]

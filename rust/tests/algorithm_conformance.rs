@@ -1,0 +1,407 @@
+//! Algorithm-zoo conformance suite.
+//!
+//! For every algorithm id in the cost table of `rust/src/algorithms/mod.rs`
+//! (`fedadam`, `fedadam-top`, `fedadam-ssm`, `fedadam-ssm-m`,
+//! `fedadam-ssm-v`, `fairness-top`, `onebit-adam`, `efficient-adam`,
+//! `fedsgd`), this suite runs a short multi-round coordinator loop on the
+//! pure-Rust reference backend (no PJRT artifacts needed — these tests
+//! run everywhere) and pins:
+//!
+//! - the per-round uplink **ledger bits** to the documented cost formula,
+//! - the reconstructed **support sizes** to the priced `k`,
+//! - the **momentum policy** (aggregated vs device-local `(m, v)`),
+//! - full-run **bit-identity** across `num_workers` × `agg_shards`,
+//! - parallel eval **bit-identity** + zero-weight padding neutrality.
+
+use fedadam_ssm::algorithms::{self, Algorithm as _, LocalDelta, MomentumPolicy, Recon};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::{evaluate_model, Coordinator};
+use fedadam_ssm::data::synthetic;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
+use fedadam_ssm::sparse::codec::cost;
+
+/// All nine ids of the §VII cost table, in table order.
+const ZOO: [&str; 9] = [
+    "fedadam",
+    "fedadam-top",
+    "fedadam-ssm",
+    "fedadam-ssm-m",
+    "fedadam-ssm-v",
+    "fairness-top",
+    "onebit-adam",
+    "efficient-adam",
+    "fedsgd",
+];
+
+const INPUT_SHAPE: [usize; 3] = [4, 4, 1]; // row 16
+const CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
+const WARMUP: usize = 2;
+
+fn meta() -> ModelMeta {
+    // dim = 10 * (16 + 1) = 170
+    reference_meta(&INPUT_SHAPE, CLASSES, 4, 8, 2)
+}
+
+fn base_cfg(algo: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "conformance".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = algo.into();
+    cfg.rounds = 4;
+    cfg.devices = 3;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.lr = 0.02;
+    cfg.train_samples = 96;
+    cfg.test_samples = 50; // NOT a multiple of eval_batch = 8: pads every eval
+    cfg.seed = 7;
+    cfg.eval_every = 1;
+    cfg.quant_levels = 16;
+    cfg.warmup_rounds = WARMUP;
+    cfg.num_workers = 2;
+    cfg.agg_shards = 0; // auto: one shard per pool worker
+    cfg.apply_env_overrides(); // CI determinism matrix hook
+    cfg
+}
+
+fn run(cfg: ExperimentConfig) -> (ExperimentLog, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let pool = reference_pool(meta(), cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("run");
+    let gs = coord.global();
+    (log, gs.w.clone(), gs.m.clone(), gs.v.clone())
+}
+
+/// Documented per-device uplink bits for `algo` at round `round`.
+fn expected_uplink(algo: &str, round: usize, d: usize, k: usize, s: usize) -> u64 {
+    match algo {
+        "fedadam" => cost::fedadam_dense(d),
+        "fedadam-top" => cost::fedadam_top(d, k),
+        "fedadam-ssm" | "fedadam-ssm-m" | "fedadam-ssm-v" | "fairness-top" => {
+            cost::fedadam_ssm(d, k)
+        }
+        "onebit-adam" => {
+            if round < WARMUP {
+                cost::fedadam_dense(d)
+            } else {
+                cost::onebit(d)
+            }
+        }
+        "efficient-adam" => cost::uniform(d, s),
+        "fedsgd" => cost::fedsgd_dense(d),
+        other => panic!("unknown algorithm {other}"),
+    }
+}
+
+/// Per-round deltas of a cumulative counter column.
+fn per_round(cumulative: impl Iterator<Item = u64>) -> Vec<u64> {
+    let totals: Vec<u64> = cumulative.collect();
+    std::iter::once(totals[0])
+        .chain(totals.windows(2).map(|w| w[1] - w[0]))
+        .collect()
+}
+
+#[test]
+fn ledger_bits_match_cost_table_for_every_algorithm() {
+    let m = meta();
+    let d = m.dim;
+    for algo in ZOO {
+        let cfg = base_cfg(algo);
+        let k = cfg.k_for(d);
+        let s = cfg.quant_levels;
+        let n = cfg.devices as u64;
+        let (log, _, _, _) = run(cfg);
+        assert_eq!(log.rounds.len(), 4, "{algo}");
+        let up = per_round(log.rounds.iter().map(|r| r.uplink_bits));
+        for (t, &bits) in up.iter().enumerate() {
+            let want = n * expected_uplink(algo, t, d, k, s);
+            assert_eq!(bits, want, "{algo}: round {t} uplink ledger");
+        }
+        // Downlink: monotone and, for the dense schemes, exactly the
+        // documented broadcast cost per receiver.
+        let down = per_round(log.rounds.iter().map(|r| r.downlink_bits));
+        for (t, &bits) in down.iter().enumerate() {
+            assert!(bits > 0, "{algo}: round {t} downlink empty");
+            match algo {
+                "fedadam" => assert_eq!(bits, n * cost::fedadam_dense(d), "{algo} round {t}"),
+                "fedsgd" => assert_eq!(bits, n * cost::fedsgd_dense(d), "{algo} round {t}"),
+                "efficient-adam" => {
+                    assert_eq!(bits, n * cost::uniform(d, s), "{algo} round {t}")
+                }
+                "onebit-adam" => {
+                    let want = if t < WARMUP {
+                        cost::fedadam_dense(d)
+                    } else {
+                        cost::onebit(d)
+                    };
+                    assert_eq!(bits, n * want, "{algo} round {t}");
+                }
+                _ => {} // sparse schemes price the (data-dependent) union support
+            }
+        }
+        // Every logged number stays finite where it must.
+        for r in &log.rounds {
+            assert!(r.train_loss.is_finite(), "{algo}");
+            assert!(r.test_loss.is_finite(), "{algo}");
+            assert!(r.test_accuracy.is_finite(), "{algo}");
+        }
+    }
+}
+
+#[test]
+fn compressed_support_matches_priced_k() {
+    let m = meta();
+    let d = m.dim;
+    let cfg0 = base_cfg("fedadam");
+    let k = cfg0.k_for(d);
+    let s = cfg0.quant_levels;
+    assert!(k >= 2 && k < d, "test wants a non-trivial k, got {k}");
+
+    // ΔW with FEWER than k non-zeros: the priced top-k support must still
+    // be k lanes — zero-valued kept lanes went over the wire too.
+    let mut dw = vec![0.0f32; d];
+    dw[5] = 3.0;
+    dw[d - 3] = -2.0;
+    let dm: Vec<f32> = (0..d).map(|i| ((i * 13 % 7) as f32 - 3.0) * 0.01).collect();
+    let dv: Vec<f32> = (0..d).map(|i| ((i * 5 % 11) as f32) * 0.001).collect();
+    let delta = LocalDelta {
+        dw,
+        dm,
+        dv,
+        weight: 32.0,
+    };
+
+    let nnz = |r: &Recon| -> usize {
+        match r {
+            Recon::Dense(v) => v.len(),
+            Recon::Sparse(sv) => sv.nnz(),
+        }
+    };
+    let indices = |r: &Recon| -> Option<Vec<u32>> {
+        match r {
+            Recon::Sparse(sv) => Some(sv.indices.clone()),
+            Recon::Dense(_) => None,
+        }
+    };
+
+    for algo in ZOO {
+        let mut cfg = base_cfg(algo);
+        cfg.algorithm = algo.into();
+        let mut a = algorithms::build(&cfg, d).unwrap();
+        assert_eq!(a.name(), algo);
+        for round in 0..4 {
+            let up = a.compress(round, 0, delta.clone());
+            assert_eq!(
+                up.bits,
+                expected_uplink(algo, round, d, k, s),
+                "{algo}: round {round} priced bits"
+            );
+            match algo {
+                "fedadam-ssm" | "fedadam-ssm-m" | "fedadam-ssm-v" | "fairness-top" => {
+                    // Shared mask: exactly k stored lanes in ALL THREE
+                    // vectors, on identical indices.
+                    assert_eq!(nnz(&up.dw), k, "{algo}: ΔŴ support != priced k");
+                    let iw = indices(&up.dw).expect("sparse ΔŴ");
+                    let im = indices(up.dm.as_ref().expect("ΔM̂ present")).unwrap();
+                    let iv = indices(up.dv.as_ref().expect("ΔV̂ present")).unwrap();
+                    assert_eq!(iw, im, "{algo}: mask not shared with ΔM̂");
+                    assert_eq!(iw, iv, "{algo}: mask not shared with ΔV̂");
+                }
+                "fedadam-top" => {
+                    // Three independent masks, each exactly k lanes.
+                    assert_eq!(nnz(&up.dw), k, "{algo}");
+                    assert_eq!(nnz(up.dm.as_ref().unwrap()), k, "{algo}");
+                    assert_eq!(nnz(up.dv.as_ref().unwrap()), k, "{algo}");
+                }
+                "fedadam" => {
+                    assert_eq!(nnz(&up.dw), d);
+                    assert_eq!(nnz(up.dm.as_ref().unwrap()), d);
+                    assert_eq!(nnz(up.dv.as_ref().unwrap()), d);
+                }
+                "fedsgd" | "efficient-adam" => {
+                    assert_eq!(nnz(&up.dw), d, "{algo}");
+                    assert!(up.dm.is_none() && up.dv.is_none(), "{algo}: moments on wire");
+                }
+                "onebit-adam" => {
+                    assert_eq!(nnz(&up.dw), d);
+                    if round < WARMUP {
+                        assert!(up.dm.is_some() && up.dv.is_some(), "warmup is dense FedAdam");
+                    } else {
+                        assert!(up.dm.is_none() && up.dv.is_none(), "moments frozen after warmup");
+                    }
+                }
+                other => panic!("unhandled {other}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn momentum_policy_matches_table() {
+    let d = meta().dim;
+    for algo in ZOO {
+        let cfg = base_cfg(algo);
+        let a = algorithms::build(&cfg, d).unwrap();
+        for round in 0..4 {
+            let want = match algo {
+                "efficient-adam" => MomentumPolicy::DeviceLocal,
+                "onebit-adam" if round >= WARMUP => MomentumPolicy::DeviceLocal,
+                _ => MomentumPolicy::Aggregated,
+            };
+            assert_eq!(
+                a.momentum_policy(round),
+                want,
+                "{algo}: policy at round {round}"
+            );
+        }
+    }
+}
+
+#[test]
+fn momentum_policy_is_honored_by_global_state() {
+    // Aggregated-moment algorithms must move the server's (M, V);
+    // device-local (and momentum-free) algorithms must leave them at the
+    // initial zeros — the server never sees their moments.
+    for algo in ZOO {
+        let (_, _, m, v) = run(base_cfg(algo));
+        let m_moved = m.iter().any(|&x| x != 0.0);
+        let v_moved = v.iter().any(|&x| x != 0.0);
+        match algo {
+            "efficient-adam" | "fedsgd" => {
+                assert!(!m_moved, "{algo}: server M mutated without aggregation");
+                assert!(!v_moved, "{algo}: server V mutated without aggregation");
+            }
+            _ => {
+                // onebit-adam aggregates during its 2 warmup rounds.
+                assert!(m_moved, "{algo}: aggregated M never updated");
+                assert!(v_moved, "{algo}: aggregated V never updated");
+            }
+        }
+    }
+}
+
+#[test]
+fn runs_are_bit_identical_across_workers_and_shards() {
+    // The determinism contract: aggregation is shard-order-fixed, eval is
+    // batch-order-fixed, training is device-order-fixed — every logged
+    // number and the final model must be byte-identical at any
+    // (num_workers, agg_shards).
+    for algo in ["fedadam-ssm", "onebit-adam", "efficient-adam"] {
+        let run_with = |workers: usize, shards: usize| {
+            let mut cfg = base_cfg(algo);
+            cfg.participation = 0.75; // exercise the sampler path too
+            cfg.num_workers = workers;
+            cfg.agg_shards = shards;
+            run(cfg)
+        };
+        let (log1, w1, m1, v1) = run_with(1, 1);
+        for (workers, shards) in [(2, 1), (1, 4), (3, 7), (2, 170)] {
+            let (log, w, m, v) = run_with(workers, shards);
+            assert_eq!(w1, w, "{algo} ({workers}w/{shards}s): global W diverged");
+            assert_eq!(m1, m, "{algo} ({workers}w/{shards}s): global M diverged");
+            assert_eq!(v1, v, "{algo} ({workers}w/{shards}s): global V diverged");
+            assert_eq!(log1.rounds.len(), log.rounds.len());
+            for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+                let tag = format!("{algo} ({workers}w/{shards}s) round {}", a.round);
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag}");
+                assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{tag}");
+                assert_eq!(
+                    a.test_accuracy.to_bits(),
+                    b.test_accuracy.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+                assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}");
+                assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn eval_padding_is_neutral_and_fanout_bit_identical() {
+    let m8 = meta(); // eval_batch = 8
+    let pool = reference_pool(m8.clone(), 3).unwrap();
+    let h = pool.handle();
+    let w = h.init(3).unwrap();
+
+    // 50 test samples: 6 full batches of 8 + one batch of 2 real samples
+    // and 6 zero-weight padded lanes.
+    let spec = synthetic::SyntheticSpec::for_input_shape(&INPUT_SHAPE, 8, 50);
+    let task = synthetic::generate(&spec, 11);
+    let data = task.test;
+    assert_eq!(data.len(), 50);
+
+    // (a) The parallel fan-out is bit-identical to the sequential path at
+    // any worker count.
+    let (l1, a1) = evaluate_model(&h, &w, &data, 1).unwrap();
+    for workers in [2usize, 3, 8] {
+        let (l, a) = evaluate_model(&h, &w, &data, workers).unwrap();
+        assert_eq!(l1.to_bits(), l.to_bits(), "{workers} workers: loss diverged");
+        assert_eq!(a1.to_bits(), a.to_bits(), "{workers} workers: acc diverged");
+    }
+
+    // (b) Zero-weight padded lanes contribute nothing, whatever their
+    // payload: the final ragged batch with zero padding vs garbage
+    // padding must produce bit-identical engine outputs.
+    let row = m8.row();
+    let e = m8.eval_batch;
+    let start = 48; // last batch: samples 48, 49
+    let mut x = Vec::with_capacity(e * row);
+    let mut y = Vec::with_capacity(e);
+    let mut wt = Vec::with_capacity(e);
+    for i in 0..e {
+        if i < 2 {
+            x.extend_from_slice(data.image(start + i));
+            y.push(data.labels[start + i]);
+            wt.push(1.0);
+        } else {
+            x.extend(std::iter::repeat(0.0).take(row));
+            y.push(0);
+            wt.push(0.0);
+        }
+    }
+    let clean = h.eval_batch(&w, x.clone(), y.clone(), wt.clone()).unwrap();
+    let mut x_garbage = x;
+    for v in x_garbage[2 * row..].iter_mut() {
+        *v = 1e6; // junk payload in every padded lane
+    }
+    let mut y_garbage = y;
+    for l in y_garbage[2..].iter_mut() {
+        *l = 9;
+    }
+    let dirty = h.eval_batch(&w, x_garbage, y_garbage, wt).unwrap();
+    assert_eq!(clean, dirty, "zero-weight lanes leaked into the reduction");
+
+    // (c) A batch size that divides the test set exactly (no padding)
+    // must agree: accuracy exactly (integer-valued sums), loss to f32
+    // regrouping tolerance.
+    let m2 = reference_meta(&INPUT_SHAPE, CLASSES, 4, 2, 2);
+    let pool2 = reference_pool(m2, 2).unwrap();
+    let h2 = pool2.handle();
+    let w2 = h2.init(3).unwrap();
+    assert_eq!(w, w2, "same seed, same reference init");
+    let (l_div, a_div) = evaluate_model(&h2, &w2, &data, 2).unwrap();
+    assert_eq!(a1, a_div, "padding changed the accuracy");
+    assert!(
+        (l1 - l_div).abs() < 1e-3,
+        "padded vs exact batching loss drifted: {l1} vs {l_div}"
+    );
+}
+
+#[test]
+fn reference_backend_full_loop_is_reproducible() {
+    // Two independently-built coordinators with the same config produce
+    // the same experiment — the reference backend holds the same purity
+    // contract the PJRT pool does.
+    let run_once = || run(base_cfg("fedadam-ssm"));
+    let (log_a, w_a, _, _) = run_once();
+    let (log_b, w_b, _, _) = run_once();
+    assert_eq!(w_a, w_b);
+    for (a, b) in log_a.rounds.iter().zip(&log_b.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+}

@@ -30,6 +30,9 @@ fn base_cfg() -> ExperimentConfig {
     cfg.test_samples = 128;
     cfg.lr = 0.01;
     cfg.seed = 5;
+    // CI determinism matrix: FEDADAM_NUM_WORKERS / FEDADAM_AGG_SHARDS
+    // sweep the whole suite across the worker/shard grid.
+    cfg.apply_env_overrides();
     cfg
 }
 
@@ -185,6 +188,40 @@ fn pool_workers_are_bit_identical() {
             assert_eq!(a.uplink_bits, b.uplink_bits, "{algo}");
             assert_eq!(a.downlink_bits, b.downlink_bits, "{algo}");
             assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{algo}");
+        }
+    }
+}
+
+#[test]
+fn sharded_aggregation_and_parallel_eval_are_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    // Tentpole contract on the real PJRT backend: (num_workers, agg_shards)
+    // may change wall-clock only.  Compare the fully-sequential run against
+    // parallel-everything runs.
+    let run = |workers: usize, shards: usize| {
+        let mut cfg = base_cfg();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.rounds = 3;
+        cfg.devices = 4;
+        cfg.num_workers = workers;
+        cfg.agg_shards = shards;
+        let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
+        let log = coord.run().unwrap();
+        (log, coord.global().w.clone())
+    };
+    let (log1, w1) = run(1, 1);
+    for (workers, shards) in [(1, 4), (4, 1), (4, 4)] {
+        let (log, w) = run(workers, shards);
+        assert_eq!(w1, w, "{workers}w/{shards}s: weights diverged");
+        for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+            assert_eq!(a.downlink_bits, b.downlink_bits);
+            assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits());
         }
     }
 }

@@ -2,6 +2,8 @@
 //! generator loops — the offline build has no proptest crate; seeds are
 //! fixed so failures reproduce exactly).
 
+use fedadam_ssm::algorithms::{Recon, Upload};
+use fedadam_ssm::coordinator::{aggregate, aggregate_sharded};
 use fedadam_ssm::quant::{onebit_compress, onebit_decompress, uniform_compress, uniform_decompress, ErrorFeedback};
 use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::codec::{self, cost};
@@ -169,6 +171,118 @@ fn prop_sparse_axpy_equals_dense_axpy() {
         sv.axpy_into(&mut a, w);
         tensor::axpy(&mut b, w, &dense);
         assert_eq!(a, b);
+    }
+}
+
+/// Random sparse payload over `d` lanes with exact-zero stored values
+/// mixed in (a kept lane whose value is exactly `0.0` is still support).
+fn gen_sparse(rng: &mut Rng, d: usize) -> Recon {
+    let k = rng.below(d + 1);
+    let scores = gen_vec(rng, d);
+    let indices = top_k_indices(&scores, k);
+    let values: Vec<f32> = indices
+        .iter()
+        .map(|_| {
+            if rng.below(5) == 0 {
+                0.0 // exact-zero kept lane
+            } else {
+                rng.normal() as f32
+            }
+        })
+        .collect();
+    Recon::Sparse(SparseVec {
+        dim: d,
+        indices,
+        values,
+    })
+}
+
+fn gen_recon(rng: &mut Rng, d: usize) -> Recon {
+    if rng.below(4) == 0 {
+        Recon::Dense(gen_vec(rng, d))
+    } else {
+        gen_sparse(rng, d)
+    }
+}
+
+/// Negate every stored value of a payload (builds cancelling pairs).
+fn negated(r: &Recon) -> Recon {
+    match r {
+        Recon::Dense(v) => Recon::Dense(v.iter().map(|x| -x).collect()),
+        Recon::Sparse(sv) => Recon::Sparse(SparseVec {
+            dim: sv.dim,
+            indices: sv.indices.clone(),
+            values: sv.values.iter().map(|x| -x).collect(),
+        }),
+    }
+}
+
+#[test]
+fn prop_sharded_aggregate_bit_identical_to_sequential() {
+    // The tentpole determinism contract: `aggregate_sharded(u, d, s)` must
+    // be bit-identical — values AND dw/dm/dv supports — to the 1-shard
+    // reduce for any shard count, on random mixes of dense/sparse uploads
+    // with exact-zero kept lanes and exactly-cancelling values.
+    let mut rng = Rng::new(109);
+    for trial in 0..80 {
+        let d = 1 + rng.below(160);
+        let n = 1 + rng.below(6);
+        let mut uploads: Vec<Upload> = Vec::new();
+        for _ in 0..n {
+            let dw = gen_recon(&mut rng, d);
+            let dm = (rng.below(2) == 0).then(|| gen_recon(&mut rng, d));
+            let dv = (rng.below(2) == 0).then(|| gen_recon(&mut rng, d));
+            let weight = rng.uniform() * 10.0;
+            uploads.push(Upload {
+                dw,
+                dm,
+                dv,
+                weight,
+                bits: 0,
+            });
+            // Occasionally append the exact negation at the same weight so
+            // lane sums cancel to 0.0 while the wire support does not.
+            if rng.below(3) == 0 {
+                let last = uploads.last().unwrap();
+                let twin = Upload {
+                    dw: negated(&last.dw),
+                    dm: last.dm.as_ref().map(negated),
+                    dv: last.dv.as_ref().map(negated),
+                    weight: last.weight,
+                    bits: 0,
+                };
+                uploads.push(twin);
+            }
+        }
+
+        let base = aggregate_sharded(&uploads, d, 1);
+        let wrapper = aggregate(&uploads, d);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&wrapper.dw), bits(&base.dw), "trial {trial}: wrapper");
+
+        for shards in [2usize, 3, 7, d] {
+            let s = aggregate_sharded(&uploads, d, shards);
+            assert_eq!(
+                bits(&s.dw),
+                bits(&base.dw),
+                "trial {trial}: d={d} shards={shards}: dw values"
+            );
+            assert_eq!(
+                s.dm.as_deref().map(bits),
+                base.dm.as_deref().map(bits),
+                "trial {trial}: d={d} shards={shards}: dm values"
+            );
+            assert_eq!(
+                s.dv.as_deref().map(bits),
+                base.dv.as_deref().map(bits),
+                "trial {trial}: d={d} shards={shards}: dv values"
+            );
+            assert_eq!(
+                (s.dw_support, s.dm_support, s.dv_support),
+                (base.dw_support, base.dm_support, base.dv_support),
+                "trial {trial}: d={d} shards={shards}: supports"
+            );
+        }
     }
 }
 
