@@ -1,18 +1,111 @@
-//! End-to-end FL round bench: one full communication round per algorithm
-//! (local training + compression + aggregation + apply), the number the
-//! §Perf pass optimizes.
+//! End-to-end FL round bench, two parts:
 //!
-//! Requires `make artifacts`. Run: `cargo bench --bench e2e_round`.
+//! **Part 1 (offline, always runs)** — barrier vs pipelined round loop on
+//! the pure-Rust reference backend: full multi-round runs with eval every
+//! round at `pipeline_depth` 0 (legacy barrier) vs 2 (streaming
+//! aggregation + train/eval overlap), across worker counts.  Outside the
+//! timed region the two modes' final weights and logged metrics are
+//! re-asserted byte-identical — the pipeline may only move wall-clock.
+//! At `workers >= 2` the pipelined loop should be at or below the barrier
+//! loop (eval batches fill pool capacity the next round's training leaves
+//! idle); the summary prints the ratio per worker count.
+//!
+//! **Part 2 (artifact-gated)** — one full communication round per
+//! algorithm (local training + compression + aggregation + apply) on the
+//! PJRT backend, the number the §Perf pass optimizes.  Requires
+//! `make artifacts`; skipped with a message otherwise.
+//!
+//! Run: `cargo bench --bench e2e_round`.
 
 use fedadam_ssm::benchlib::{black_box, from_env};
 use fedadam_ssm::config::ExperimentConfig;
 use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool};
+
+const PIPE_INPUT: [usize; 3] = [8, 8, 1]; // row 64
+const PIPE_CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
+
+/// An eval-heavy workload (eval every round, 2048 test samples = 64 eval
+/// batches) with fewer devices than the widest pool, so the barrier loop
+/// leaves worker capacity idle that the pipelined loop can fill.
+fn pipeline_cfg(depth: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "pipeline-bench".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = "fedadam-ssm".into();
+    cfg.rounds = 4;
+    cfg.devices = 2;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 4;
+    cfg.train_samples = 512;
+    cfg.test_samples = 2048;
+    cfg.eval_every = 1;
+    cfg.seed = 23;
+    cfg.num_workers = workers;
+    cfg.agg_shards = 0;
+    cfg.pipeline_depth = depth;
+    cfg
+}
+
+fn run_reference(depth: usize, workers: usize) -> (ExperimentLog, Vec<f32>) {
+    let cfg = pipeline_cfg(depth, workers);
+    let meta = reference_meta(&PIPE_INPUT, PIPE_CLASSES, 8, 32, 1);
+    let pool = reference_pool(meta, cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("run");
+    let w = coord.global().w.clone();
+    (log, w)
+}
 
 fn main() {
     let mut bench = from_env();
-    // One round is already ~100ms-scale; cap iterations regardless of budget.
-    bench.max_iters = 20;
+    // One full run is already ~100ms-scale; cap iterations regardless of
+    // budget.
+    bench.max_iters = 6;
 
+    // ---- Part 1: barrier vs pipelined round loop (reference backend) ----
+    let workers_grid = [1usize, 2, 4];
+    for &workers in &workers_grid {
+        for depth in [0usize, 2] {
+            bench.run(
+                format!("round-loop: {workers}w depth={depth} (4 rounds, eval/round)"),
+                || {
+                    black_box(run_reference(depth, workers));
+                },
+            );
+        }
+        // Bit-identity re-check outside the timed region: the pipeline may
+        // change wall-clock only.
+        let (log0, w0) = run_reference(0, workers);
+        let (log2, w2) = run_reference(2, workers);
+        assert_eq!(w0, w2, "{workers}w: pipelined weights diverged");
+        assert_eq!(log0.rounds.len(), log2.rounds.len());
+        for (a, b) in log0.rounds.iter().zip(&log2.rounds) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());
+            assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+            assert_eq!(a.downlink_bits, b.downlink_bits);
+        }
+    }
+    println!("\n-- pipelined / barrier wall-clock (reference backend) --");
+    for (i, &workers) in workers_grid.iter().enumerate() {
+        let barrier = &bench.results[2 * i];
+        let pipelined = &bench.results[2 * i + 1];
+        let ratio = pipelined.mean_ns / barrier.mean_ns.max(1.0);
+        println!(
+            "{workers} workers: {:.2}x {}",
+            ratio,
+            if workers >= 2 && ratio > 1.05 {
+                "(EXPECTED <= 1.0x at workers >= 2 — investigate)"
+            } else {
+                ""
+            }
+        );
+    }
+
+    // ---- Part 2: per-algorithm round cost (PJRT backend, artifact-gated) -
     for algo in [
         "fedadam-ssm",
         "fedadam-top",
@@ -36,8 +129,8 @@ fn main() {
         let mut coord = match Coordinator::new(cfg, "artifacts") {
             Ok(c) => c,
             Err(e) => {
-                eprintln!("skipping e2e bench: {e}");
-                return;
+                eprintln!("skipping PJRT e2e bench: {e}");
+                break;
             }
         };
         bench.run(format!("round: {algo} (cnn_small, 4 dev, 2 batches)"), || {

@@ -22,6 +22,9 @@ fn main() -> Result<()> {
     cfg.sparsity = 0.05; // α: upload 5% of coordinates per round
     cfg.num_workers = 0; // engine-pool: one PJRT worker per core (bit-identical to 1)
     cfg.agg_shards = 0; // server reduce: one lane shard per worker (bit-identical to 1)
+    cfg.pipeline_depth = 2; // pipelined rounds: stream uploads into the server
+                            // accumulator + overlap eval with next-round
+                            // training (bit-identical to the barrier loop)
 
     println!("FedAdam-SSM quickstart: {} on {}", cfg.algorithm, cfg.model);
     let mut coord = Coordinator::new(cfg, "artifacts")?;

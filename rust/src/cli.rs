@@ -2,7 +2,9 @@
 //!
 //! Grammar: `fedadam-ssm <command> [--key value] [--key=value] [--flag]
 //! [--set cfg_key=value]...`.  `--set` is repeatable and maps straight onto
-//! [`crate::config::ExperimentConfig::set`].
+//! [`crate::config::ExperimentConfig::set`] — every runtime knob,
+//! including the performance trio `num_workers` / `agg_shards` /
+//! `pipeline_depth`, rides through here with no dedicated flags.
 
 use std::collections::BTreeMap;
 

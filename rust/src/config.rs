@@ -90,6 +90,14 @@ pub struct ExperimentConfig {
     /// fixed contiguous ranges, so results are bitwise identical at any
     /// shard count — only wall-clock changes.
     pub agg_shards: usize,
+    /// Round-loop pipelining depth.  `0` (default) = legacy barrier
+    /// (train all → aggregate → eval inline); `1` = streaming aggregation
+    /// (uploads fold into the server accumulator as they land); `>= 2` =
+    /// plus train/eval overlap (round `t`'s eval fans out through the
+    /// engine pool concurrently with round `t+1`'s training dispatch; at
+    /// most `pipeline_depth - 1` evals stay in flight).  Results are
+    /// bitwise identical at any depth — only wall-clock changes.
+    pub pipeline_depth: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -117,6 +125,7 @@ impl Default for ExperimentConfig {
             participation: 1.0,
             num_workers: 1,
             agg_shards: 0,
+            pipeline_depth: 0,
         }
     }
 }
@@ -187,6 +196,7 @@ impl ExperimentConfig {
             "participation" => self.participation = p(key, value)?,
             "num_workers" => self.num_workers = p(key, value)?,
             "agg_shards" => self.agg_shards = p(key, value)?,
+            "pipeline_depth" => self.pipeline_depth = p(key, value)?,
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -222,10 +232,11 @@ impl ExperimentConfig {
     }
 
     /// Apply the CI determinism-matrix environment overrides:
-    /// `FEDADAM_NUM_WORKERS` and `FEDADAM_AGG_SHARDS` (when set)
-    /// override `num_workers` / `agg_shards`.  Test base configs call
-    /// this so one test binary can be swept across the worker/shard grid
-    /// without recompiling.
+    /// `FEDADAM_NUM_WORKERS`, `FEDADAM_AGG_SHARDS` and
+    /// `FEDADAM_PIPELINE_DEPTH` (when set) override `num_workers` /
+    /// `agg_shards` / `pipeline_depth`.  Test base configs call this so
+    /// one test binary can be swept across the
+    /// worker × shard × pipeline grid without recompiling.
     ///
     /// Panics on a present-but-unparseable value: a typo'd matrix entry
     /// must fail the lane loudly, not silently test the defaults.
@@ -242,6 +253,9 @@ impl ExperimentConfig {
         }
         if let Some(n) = env_usize("FEDADAM_AGG_SHARDS") {
             self.agg_shards = n;
+        }
+        if let Some(n) = env_usize("FEDADAM_PIPELINE_DEPTH") {
+            self.pipeline_depth = n;
         }
     }
 }
@@ -275,14 +289,17 @@ mod tests {
         cfg.set("sparsify_backend", "xla").unwrap();
         cfg.set("num_workers", "4").unwrap();
         cfg.set("agg_shards", "8").unwrap();
+        cfg.set("pipeline_depth", "2").unwrap();
         assert_eq!(cfg.algorithm, "fedadam-top");
         assert_eq!(cfg.lr, 0.01);
         assert!(!cfg.iid);
         assert_eq!(cfg.sparsify_backend, SparsifyBackend::Xla);
         assert_eq!(cfg.num_workers, 4);
         assert_eq!(cfg.agg_shards, 8);
+        assert_eq!(cfg.pipeline_depth, 2);
         assert!(cfg.set("num_workers", "many").is_err());
         assert!(cfg.set("agg_shards", "many").is_err());
+        assert!(cfg.set("pipeline_depth", "many").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("lr", "abc").is_err());
     }

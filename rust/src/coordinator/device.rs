@@ -1,4 +1,10 @@
 //! Device-side local training: `L` local epochs through the AOT programs.
+//!
+//! A device's `train_round` is a pure function of `(mode, w, m, v, cfg)` —
+//! it holds no cross-round state besides its immutable shard — which is
+//! what lets the pipelined coordinator run many devices concurrently and
+//! stream each finished upload straight into the server accumulator
+//! without changing a single bit of the result.
 
 use anyhow::Result;
 

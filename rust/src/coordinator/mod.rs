@@ -1,4 +1,4 @@
-//! The round coordinator: Algorithm 2's outer loop.
+//! The round coordinator: Algorithm 2's outer loop, pipelined.
 //!
 //! Owns the engine pool, data, devices, algorithm and ledger; each round it
 //! (1) hands devices the global state per the algorithm's momentum policy,
@@ -6,41 +6,71 @@
 //!     **concurrently**, on scoped threads, load-balanced across the
 //!     engine pool's workers,
 //! (3) compresses and "uploads" each delta (bit-accurately priced),
-//! (4) FedAvg-aggregates, post-processes, applies, and
-//! (5) evaluates + logs.
+//! (4) FedAvg-aggregates — **streaming**, each upload folded into the
+//!     [`ShardedAccumulator`] the moment it lands — post-processes,
+//!     applies, and
+//! (5) evaluates + logs, with the eval fan-out **overlapping the next
+//!     round's training dispatch** when `pipeline_depth >= 2`.
 //!
-//! Determinism: local training for every participant starts from the same
-//! downloaded global state, so per-device results do not depend on
-//! scheduling.  Training results are collected and processed in ascending
-//! device order, and compression (which may hold per-device algorithm
-//! state such as error-feedback memories) plus ledger accounting stay
-//! sequential in that same order — every f32 sum, the comm ledger and the
-//! experiment log are byte-identical at any `num_workers`.
+//! ## Pipeline stages (`pipeline_depth` knob)
+//!
+//! - `0` — legacy barrier: train all → aggregate once → eval inline.
+//! - `1` — streaming aggregation: a per-round folder thread accumulates
+//!   uploads while later training chunks still run; eval stays inline.
+//! - `>= 2` — plus train/eval overlap: round `t`'s eval fans out through
+//!   the pool (at `Eval` priority, so it never starves training)
+//!   concurrently with round `t+1`'s local-training dispatch; at most
+//!   `pipeline_depth - 1` evals stay in flight.  The model eval reads is
+//!   snapshotted right after round `t`'s apply — exactly the state round
+//!   `t+1` trains from.
+//!
+//! ## Determinism
+//!
+//! Local training for every participant starts from the same downloaded
+//! global state, so per-device results do not depend on scheduling.
+//! Training results are collected and processed in ascending device
+//! order, and compression (which may hold per-device algorithm state such
+//! as error-feedback memories) plus ledger accounting stay sequential in
+//! that same order.  The streaming accumulator folds per lane in device
+//! slot order (buffering early arrivals), eval reduces in ascending batch
+//! order over the pre-sliced [`EvalPlan`], and an overlapped eval is a
+//! pure function of its snapshotted `(w, test set)` — so every f32/f64
+//! sum keeps one fixed association order and the experiment log, comm
+//! ledger and final model are byte-identical at any
+//! `num_workers` / `agg_shards` / `pipeline_depth`.
 
 pub mod device;
 pub mod server;
 
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
-use crate::algorithms::{self, Algorithm, LocalDelta, MomentumPolicy, Upload};
+use crate::algorithms::{self, Aggregate, Algorithm, LocalDelta, MomentumPolicy, Upload};
 use crate::config::{ExperimentConfig, SparsifyBackend};
 use crate::data::{partition, synthetic, Dataset, Partition, Shard};
 use crate::metrics::comm::CommLedger;
 use crate::metrics::{ExperimentLog, RoundRecord};
-use crate::runtime::{EngineHandle, EnginePool, Manifest};
+use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
 use crate::tensor;
 
 pub use device::{Device, LocalRunConfig};
-pub use server::{aggregate, aggregate_sharded, GlobalState};
+pub use server::{aggregate, aggregate_sharded, GlobalState, ShardedAccumulator};
 
 /// A fully-wired experiment ready to run.
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
     pool: EnginePool,
     devices: Vec<Device>,
-    test_set: Dataset,
+    /// Test-set length, kept for the slice-boundary regression assert
+    /// (the samples themselves live only in the padded [`EvalPlan`] —
+    /// holding the raw `Dataset` too would double test-set memory).
+    test_len: usize,
+    /// Test set pre-sliced into padded eval batches — built once, reused
+    /// every eval round (and shared with overlapped eval threads).
+    eval_plan: Arc<EvalPlan>,
     algorithm: Box<dyn Algorithm>,
     global: GlobalState,
     /// Per-device `(m, v)` for `MomentumPolicy::DeviceLocal` algorithms.
@@ -50,6 +80,14 @@ pub struct Coordinator {
     round: usize,
     /// Round-robin participation RNG (partial participation).
     sampler: crate::rng::Rng,
+    /// Overlapped evals still in flight, oldest first.
+    pending_evals: VecDeque<PendingEval>,
+}
+
+/// One overlapped eval: joins to `(test_loss, test_accuracy)` for `round`.
+struct PendingEval {
+    round: usize,
+    join: std::thread::JoinHandle<Result<(f64, f64)>>,
 }
 
 /// What one participant's scoped-thread training run produces.
@@ -81,7 +119,8 @@ impl Coordinator {
     /// [`EnginePool`] built from any [`crate::runtime::Executor`] factory
     /// (e.g. the pure-Rust [`crate::runtime::ReferenceExecutor`], which
     /// needs no PJRT artifacts), and the full round loop — training,
-    /// compression, aggregation, eval, ledger — runs against it.
+    /// compression, streaming aggregation, overlapped eval, ledger — runs
+    /// against it.
     pub fn with_pool(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
         cfg.validate()?;
         let meta = pool.meta().clone();
@@ -110,6 +149,10 @@ impl Coordinator {
             .map(|_| (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]))
             .collect();
 
+        // Hoisted out of the round loop: the eval slicing depends only on
+        // `(test set, eval_batch)`, both fixed for the experiment's life.
+        let eval_plan = Arc::new(EvalPlan::new(&task.test, &meta));
+
         let cfg_seed = cfg.seed;
         let log = ExperimentLog {
             name: cfg.name.clone(),
@@ -122,7 +165,8 @@ impl Coordinator {
             cfg,
             pool,
             devices,
-            test_set: task.test,
+            test_len: task.test.len(),
+            eval_plan,
             algorithm,
             global,
             device_moments,
@@ -130,6 +174,7 @@ impl Coordinator {
             log,
             round: 0,
             sampler: crate::rng::Rng::new(cfg_seed ^ 0x5a3c_91f7),
+            pending_evals: VecDeque::new(),
         })
     }
 
@@ -163,9 +208,130 @@ impl Coordinator {
     }
 
     /// Run one communication round; returns its record.
+    ///
+    /// With `pipeline_depth >= 2` an eval-due round *launches* its eval
+    /// instead of running it inline: the returned record (and the log row)
+    /// carries `NaN` eval cells until the overlapped eval is reaped by a
+    /// later round, [`Self::drain_pending_evals`] or [`Self::run`].
     pub fn step_round(&mut self) -> Result<RoundRecord> {
         let t = self.round;
         let start = Instant::now();
+        let dim = self.global.dim();
+        let participants = self.sample_participants();
+        let shards = if self.cfg.agg_shards == 0 {
+            self.pool.num_workers()
+        } else {
+            self.cfg.agg_shards
+        };
+
+        // 1-4 (+5). Train → delta → compress → upload → aggregate.
+        let (loss_sum, mut agg) = if self.cfg.pipeline_depth == 0 {
+            // Legacy barrier: hold every upload, reduce once at the end.
+            let mut uploads: Vec<Upload> = Vec::with_capacity(participants.len());
+            let loss_sum = self.train_and_upload(t, &participants, |_slot, upload| {
+                uploads.push(upload);
+                Ok(())
+            })?;
+            (loss_sum, aggregate_sharded(&uploads, dim, shards))
+        } else {
+            // Streaming aggregation: a folder thread owns the
+            // ShardedAccumulator and folds each upload as it lands, while
+            // the main thread keeps dispatching later training chunks.
+            // FedAvg coefficients need the cohort's total weight up
+            // front — device weights are static shard sizes, known before
+            // any training finishes.
+            let weights: Vec<f64> = participants
+                .iter()
+                .map(|&di| self.devices[di].weight())
+                .collect();
+            let (tx, rx) = mpsc::channel::<(usize, Upload)>();
+            std::thread::scope(|scope| -> Result<(f64, Aggregate)> {
+                // The folder returns the accumulator rather than the
+                // finalized aggregate: if training errors mid-round, the
+                // early `?` below drops `tx`, the stream ends with slots
+                // missing, and finalizing here would (rightly) panic —
+                // the error path must stay an error.
+                let folder = scope.spawn(move || {
+                    let mut acc = ShardedAccumulator::new(dim, shards, &weights);
+                    for (slot, upload) in rx {
+                        acc.push(slot, upload);
+                    }
+                    acc
+                });
+                let loss_sum = self.train_and_upload(t, &participants, |slot, upload| {
+                    tx.send((slot, upload))
+                        .map_err(|_| anyhow!("upload folder thread hung up"))
+                })?;
+                drop(tx); // close the stream so the folder drains out
+                let acc = folder
+                    .join()
+                    .unwrap_or_else(|p| std::panic::resume_unwind(p));
+                Ok((loss_sum, acc.finalize()))
+            })?
+        };
+
+        // 5b. Post-process + broadcast accounting + apply.
+        self.algorithm.postprocess(&mut agg);
+        self.ledger
+            .down(self.algorithm.downlink_bits(&agg), participants.len());
+        let update_norm = tensor::l2_norm(&agg.dw);
+        self.global.apply(&agg);
+
+        // 6. Evaluate — inline at `pipeline_depth <= 1`, otherwise
+        //    overlapped with the next round's training dispatch.  The
+        //    overlapped eval snapshots the just-applied model, so it reads
+        //    exactly the state round `t+1` trains from.
+        let eval_due = t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds;
+        let in_flight_cap = self.cfg.pipeline_depth.saturating_sub(1);
+        let (test_loss, test_acc) = if !eval_due {
+            (f64::NAN, f64::NAN)
+        } else if in_flight_cap == 0 {
+            self.evaluate()?
+        } else {
+            while self.pending_evals.len() >= in_flight_cap {
+                self.reap_oldest_eval()?;
+            }
+            self.spawn_eval(t);
+            (f64::NAN, f64::NAN)
+        };
+
+        let record = RoundRecord {
+            round: t,
+            train_loss: loss_sum / participants.len() as f64,
+            test_loss,
+            test_accuracy: test_acc,
+            uplink_bits: self.ledger.uplink_bits,
+            downlink_bits: self.ledger.downlink_bits,
+            wall_secs: start.elapsed().as_secs_f64(),
+            update_norm,
+        };
+        self.log.rounds.push(record.clone());
+        self.round += 1;
+        Ok(record)
+    }
+
+    /// Steps 1-4 of a round for `participants`: local training on scoped
+    /// threads in bounded chunks of participants, so peak memory stays
+    /// O(chunk · d) rather than O(N · d) (dense deltas are 3·d f32 each;
+    /// at 100+ devices and ResNet-scale d an unbounded barrier would hold
+    /// gigabytes).  Each finished [`Upload`] is handed to `sink` with its
+    /// slot (position in `participants`) the moment it is ready — the
+    /// streaming seam the pipelined aggregator folds through.
+    ///
+    /// Within a chunk, local training runs on one scoped thread per
+    /// participant; threads block inside the engine pool's queue, so
+    /// concurrency is governed by `num_workers`, and each result is a
+    /// pure function of its inputs — scheduling cannot change any bit of
+    /// the output.  Chunks, result collection, compression (which may
+    /// mutate per-device algorithm state such as EF memories), ledger
+    /// accounting and the sink calls all proceed in ascending device
+    /// order, so the wire log is byte-identical at any worker count.
+    fn train_and_upload(
+        &mut self,
+        t: usize,
+        participants: &[usize],
+        mut sink: impl FnMut(usize, Upload) -> Result<()>,
+    ) -> Result<f64> {
         let run_cfg = LocalRunConfig {
             local_epochs: self.cfg.local_epochs,
             max_batches_per_epoch: self.cfg.max_batches_per_epoch,
@@ -175,26 +341,9 @@ impl Coordinator {
         let mode = self.algorithm.local_mode(t);
         let policy = self.algorithm.momentum_policy(t);
         let keep_moments = policy == MomentumPolicy::DeviceLocal;
-        let dim = self.global.dim();
-
-        let participants = self.sample_participants();
-
-        // 1-4. Train → delta → compress → upload, in bounded chunks of
-        //    participants so peak memory stays O(chunk · d) rather than
-        //    O(N · d) (dense deltas are 3·d f32 each; at 100+ devices and
-        //    ResNet-scale d an unbounded barrier would hold gigabytes).
-        //
-        //    Within a chunk, local training runs on one scoped thread per
-        //    participant; threads block inside the engine pool's queue, so
-        //    concurrency is governed by `num_workers`, and each result is a
-        //    pure function of its inputs — scheduling cannot change any bit
-        //    of the output.  Chunks, result collection, compression (which
-        //    may mutate per-device algorithm state such as EF memories) and
-        //    ledger accounting all proceed in ascending device order, so
-        //    the wire log is byte-identical at any worker count.
         let chunk_size = (self.pool.num_workers() * 2).max(8);
-        let mut uploads: Vec<Upload> = Vec::with_capacity(participants.len());
         let mut loss_sum = 0.0f64;
+        let mut slot = 0usize;
         for chunk in participants.chunks(chunk_size) {
             // Download: snapshot starting moments before any training runs
             // (matches the sequential schedule — a device only ever
@@ -259,44 +408,11 @@ impl Coordinator {
                 }
                 let upload = self.compress_upload(t, di, output.delta)?;
                 self.ledger.up(upload.bits);
-                uploads.push(upload);
+                sink(slot, upload)?;
+                slot += 1;
             }
         }
-
-        // 5. Server aggregate + broadcast — sharded across the lane space
-        //    (bit-identical to the 1-shard reduce at any shard count).
-        let shards = if self.cfg.agg_shards == 0 {
-            self.pool.num_workers()
-        } else {
-            self.cfg.agg_shards
-        };
-        let mut agg = aggregate_sharded(&uploads, dim, shards);
-        self.algorithm.postprocess(&mut agg);
-        self.ledger
-            .down(self.algorithm.downlink_bits(&agg), participants.len());
-        let update_norm = tensor::l2_norm(&agg.dw);
-        self.global.apply(&agg);
-
-        // 6. Evaluate.
-        let (test_loss, test_acc) = if t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds {
-            self.evaluate()?
-        } else {
-            (f64::NAN, f64::NAN)
-        };
-
-        let record = RoundRecord {
-            round: t,
-            train_loss: loss_sum / participants.len() as f64,
-            test_loss,
-            test_accuracy: test_acc,
-            uplink_bits: self.ledger.uplink_bits,
-            downlink_bits: self.ledger.downlink_bits,
-            wall_secs: start.elapsed().as_secs_f64(),
-            update_norm,
-        };
-        self.log.rounds.push(record.clone());
-        self.round += 1;
-        Ok(record)
+        Ok(loss_sum)
     }
 
     /// Compress via the configured backend (native quickselect, or the
@@ -335,18 +451,78 @@ impl Coordinator {
         Ok(self.algorithm.compress(t, di, delta))
     }
 
-    /// Evaluate the global model on the held-out test set, fanning eval
-    /// batches out across the engine pool.
+    /// Launch round `t`'s eval on a background thread: it snapshots the
+    /// current global model and fans batches through the pool at `Eval`
+    /// priority, overlapping the next round's training dispatch.
+    fn spawn_eval(&mut self, t: usize) {
+        self.assert_eval_plan_fresh();
+        let engine = self.pool.handle();
+        let w = self.global.w.clone();
+        let plan = Arc::clone(&self.eval_plan);
+        let workers = self.pool.num_workers();
+        let join = std::thread::spawn(move || evaluate_plan(&engine, &w, &plan, workers));
+        self.pending_evals.push_back(PendingEval { round: t, join });
+    }
+
+    /// Join the oldest overlapped eval and patch its log row in place.
+    fn reap_oldest_eval(&mut self) -> Result<()> {
+        let Some(pending) = self.pending_evals.pop_front() else {
+            return Ok(());
+        };
+        let (test_loss, test_acc) = pending
+            .join
+            .join()
+            .unwrap_or_else(|p| std::panic::resume_unwind(p))
+            .with_context(|| format!("round {} overlapped eval", pending.round))?;
+        // The row exists by now: records are pushed at the end of the very
+        // step_round that spawned the eval.  (Tolerate a missing row all
+        // the same — a drain after a mid-round error must not panic.)
+        if let Some(rec) = self
+            .log
+            .rounds
+            .iter_mut()
+            .find(|r| r.round == pending.round)
+        {
+            rec.test_loss = test_loss;
+            rec.test_accuracy = test_acc;
+        }
+        Ok(())
+    }
+
+    /// Join every overlapped eval still in flight and fold the results
+    /// into the log.  No-op at `pipeline_depth <= 1` or when idle.
+    pub fn drain_pending_evals(&mut self) -> Result<()> {
+        while !self.pending_evals.is_empty() {
+            self.reap_oldest_eval()?;
+        }
+        Ok(())
+    }
+
+    /// Regression guard for the hoisted eval slicing: the pre-sliced
+    /// plan's batch boundaries must be identical to a fresh re-slice on
+    /// every eval — i.e. identical across rounds.
+    fn assert_eval_plan_fresh(&self) {
+        debug_assert_eq!(
+            self.eval_plan.boundaries(),
+            EvalPlan::slice_boundaries(self.test_len, self.pool.meta().eval_batch).as_slice(),
+            "eval slice boundaries drifted between rounds"
+        );
+    }
+
+    /// Evaluate the global model on the held-out test set, fanning the
+    /// pre-sliced eval batches out across the engine pool.
     pub fn evaluate(&self) -> Result<(f64, f64)> {
-        evaluate_model(
+        self.assert_eval_plan_fresh();
+        evaluate_plan(
             &self.pool.handle(),
             &self.global.w,
-            &self.test_set,
+            &self.eval_plan,
             self.pool.num_workers(),
         )
     }
 
-    /// Run all configured rounds, returning the full log.
+    /// Run all configured rounds, returning the full log (every overlapped
+    /// eval drained, so eval-round rows are complete).
     pub fn run(&mut self) -> Result<ExperimentLog> {
         while self.round < self.cfg.rounds {
             let r = self.step_round()?;
@@ -364,6 +540,7 @@ impl Coordinator {
                 r.wall_secs,
             );
         }
+        self.drain_pending_evals()?;
         Ok(self.log.clone())
     }
 
@@ -373,61 +550,118 @@ impl Coordinator {
     }
 }
 
-/// Build and run eval batch `b` (samples `[b·e, (b+1)·e) ∩ [0, len)`,
-/// zero-weight-padded to the program's fixed batch shape).
-fn eval_one_batch(
-    engine: &EngineHandle,
-    w: &[f32],
-    data: &Dataset,
-    b: usize,
-) -> Result<(f64, f64, f64)> {
-    let meta = engine.meta();
-    let e = meta.eval_batch;
-    let row = meta.row();
-    let start = b * e;
-    let n = (data.len() - start).min(e);
-    let mut x = Vec::with_capacity(e * row);
-    let mut y = Vec::with_capacity(e);
-    let mut wt = Vec::with_capacity(e);
-    for i in 0..e {
-        if i < n {
-            x.extend_from_slice(data.image(start + i));
-            y.push(data.labels[start + i]);
-            wt.push(1.0);
-        } else {
-            x.extend(std::iter::repeat(0.0).take(row));
-            y.push(0);
-            wt.push(0.0);
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        // Overlapped evals hold a PoolHandle; `Drop::drop` runs before the
+        // pool field drops, so join them here for a clean shutdown (their
+        // results are discarded — the experiment is being abandoned).
+        for pending in self.pending_evals.drain(..) {
+            let _ = pending.join.join();
         }
     }
-    engine.eval_batch(w, x, y, wt)
 }
 
-/// Evaluate `w` over `data` in fixed-size weighted eval batches, fanning
-/// the batches out across the engine pool.
+/// One pre-sliced eval batch, zero-weight-padded to the program's fixed
+/// `eval_batch` shape.
+pub struct EvalBatch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub wt: Vec<f32>,
+}
+
+/// The test set pre-sliced into `ceil(len / eval_batch)` fixed batches.
 ///
-/// The test set is pre-sliced into `ceil(len / eval_batch)` batches;
-/// batches are dispatched concurrently in chunks of `workers` scoped
-/// threads (each blocks inside the pool's queue, so device-level
-/// concurrency is governed by the pool), and the per-batch
-/// `(loss_sum, correct, weight)` triples are reduced **in ascending batch
-/// order**.  Each batch is a pure function of its inputs and the f64
-/// reduction order is fixed, so the result is bit-identical to the
-/// sequential path (`workers = 1`) at any worker count.
-pub fn evaluate_model(
+/// Built once per experiment (hoisted out of the round loop — the slicing
+/// depends only on the test set and the program's eval batch shape, both
+/// immutable) and shared with overlapped eval threads via `Arc`.
+pub struct EvalPlan {
+    batches: Vec<EvalBatch>,
+    boundaries: Vec<(usize, usize)>,
+}
+
+impl EvalPlan {
+    /// Slice `data` into padded batches for `meta`'s eval program.
+    pub fn new(data: &Dataset, meta: &ModelMeta) -> EvalPlan {
+        let e = meta.eval_batch.max(1);
+        let row = meta.row();
+        let boundaries = Self::slice_boundaries(data.len(), meta.eval_batch);
+        let batches = boundaries
+            .iter()
+            .map(|&(start, end)| {
+                let mut x = Vec::with_capacity(e * row);
+                let mut y = Vec::with_capacity(e);
+                let mut wt = Vec::with_capacity(e);
+                for i in 0..e {
+                    if start + i < end {
+                        x.extend_from_slice(data.image(start + i));
+                        y.push(data.labels[start + i]);
+                        wt.push(1.0);
+                    } else {
+                        x.extend(std::iter::repeat(0.0).take(row));
+                        y.push(0);
+                        wt.push(0.0);
+                    }
+                }
+                EvalBatch { x, y, wt }
+            })
+            .collect();
+        EvalPlan {
+            batches,
+            boundaries,
+        }
+    }
+
+    /// The sample range `[b·e, min((b+1)·e, len))` of every batch.
+    pub fn slice_boundaries(len: usize, eval_batch: usize) -> Vec<(usize, usize)> {
+        let e = eval_batch.max(1);
+        let nb = len.div_ceil(e);
+        (0..nb).map(|b| (b * e, ((b + 1) * e).min(len))).collect()
+    }
+
+    pub fn boundaries(&self) -> &[(usize, usize)] {
+        &self.boundaries
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+}
+
+/// Run pre-sliced eval batch `b` of `plan`.
+fn eval_planned_batch(
     engine: &EngineHandle,
     w: &[f32],
-    data: &Dataset,
+    plan: &EvalPlan,
+    b: usize,
+) -> Result<(f64, f64, f64)> {
+    let batch = &plan.batches[b];
+    engine.eval_batch(w, batch.x.clone(), batch.y.clone(), batch.wt.clone())
+}
+
+/// Evaluate `w` over a pre-sliced [`EvalPlan`], fanning the batches out
+/// across the engine pool.
+///
+/// Batches are dispatched concurrently in chunks of `workers` scoped
+/// threads (each blocks inside the pool's queue at `Eval` priority, so
+/// device-level concurrency is governed by the pool and queued training
+/// work is served first), and the per-batch `(loss_sum, correct, weight)`
+/// triples are reduced **in ascending batch order**.  Each batch is a
+/// pure function of its inputs and the f64 reduction order is fixed, so
+/// the result is bit-identical to the sequential path (`workers = 1`) at
+/// any worker count.
+pub fn evaluate_plan(
+    engine: &EngineHandle,
+    w: &[f32],
+    plan: &EvalPlan,
     workers: usize,
 ) -> Result<(f64, f64)> {
-    let e = engine.meta().eval_batch;
-    let nb = data.len().div_ceil(e.max(1));
+    let nb = plan.batches.len();
     let workers = workers.max(1);
 
     let mut parts: Vec<(f64, f64, f64)> = Vec::with_capacity(nb);
     if workers == 1 {
         for b in 0..nb {
-            parts.push(eval_one_batch(engine, w, data, b)?);
+            parts.push(eval_planned_batch(engine, w, plan, b)?);
         }
     } else {
         for chunk_start in (0..nb).step_by(workers) {
@@ -436,7 +670,7 @@ pub fn evaluate_model(
                 let handles: Vec<_> = (chunk_start..chunk_end)
                     .map(|b| {
                         let h = engine.clone();
-                        scope.spawn(move || eval_one_batch(&h, w, data, b))
+                        scope.spawn(move || eval_planned_batch(&h, w, plan, b))
                     })
                     .collect();
                 handles
@@ -462,4 +696,17 @@ pub fn evaluate_model(
         return Ok((f64::NAN, f64::NAN));
     }
     Ok((loss_sum / weight, correct / weight))
+}
+
+/// Evaluate `w` over `data` in fixed-size weighted eval batches (slices
+/// built on the fly; the coordinator's round loop uses its hoisted
+/// [`EvalPlan`] instead).
+pub fn evaluate_model(
+    engine: &EngineHandle,
+    w: &[f32],
+    data: &Dataset,
+    workers: usize,
+) -> Result<(f64, f64)> {
+    let plan = EvalPlan::new(data, engine.meta());
+    evaluate_plan(engine, w, &plan, workers)
 }

@@ -1,5 +1,16 @@
 //! Server-side aggregation (FedAvg over possibly-sparse uploads) and
 //! global state management (Algorithm 2, server lines).
+//!
+//! Two reduction paths share one determinism contract:
+//! - [`aggregate_sharded`] — the batch path: all uploads present, lane
+//!   shards reduced on scoped threads;
+//! - [`ShardedAccumulator`] — the streaming path: uploads folded into
+//!   per-shard partial sums **one at a time as they land**, with the
+//!   per-lane association order fixed by device slot (out-of-order
+//!   arrivals are buffered until their turn), so the finalized
+//!   [`Aggregate`] is bit-identical to the batch path on the full cohort.
+
+use std::collections::BTreeMap;
 
 use crate::algorithms::{Aggregate, Recon, Upload};
 use crate::tensor;
@@ -239,6 +250,221 @@ pub fn aggregate_sharded(uploads: &[Upload], dim: usize, shards: usize) -> Aggre
     }
 }
 
+/// Incremental union-support bitmap: one seen-flag segment per lane shard.
+struct SupportTracker {
+    seen: Vec<Vec<bool>>,
+    count: usize,
+}
+
+impl SupportTracker {
+    fn new(bounds: &[(usize, usize)]) -> SupportTracker {
+        SupportTracker {
+            seen: bounds.iter().map(|&(lo, hi)| vec![false; hi - lo]).collect(),
+            count: 0,
+        }
+    }
+
+    /// Mark `r`'s stored lanes within shard `s` = `[lo, hi)`.  A dense
+    /// payload covers the whole range; a sparse payload's support is its
+    /// stored index set, including exact-`0.0` values (they were
+    /// transmitted and priced) — the same rule as [`union_support_range`].
+    fn mark(&mut self, s: usize, lo: usize, hi: usize, r: &Recon) {
+        let seen = &mut self.seen[s];
+        let mut added = 0usize;
+        match r {
+            Recon::Dense(_) => {
+                for flag in seen.iter_mut() {
+                    if !*flag {
+                        *flag = true;
+                        added += 1;
+                    }
+                }
+            }
+            Recon::Sparse(sv) => {
+                let (a, b) = sv.index_range(lo as u32, hi as u32);
+                for &i in &sv.indices[a..b] {
+                    let flag = &mut seen[i as usize - lo];
+                    if !*flag {
+                        *flag = true;
+                        added += 1;
+                    }
+                }
+            }
+        }
+        self.count += added;
+    }
+}
+
+/// Streaming sharded FedAvg: the same weighted reduce as
+/// [`aggregate_sharded`], but folded **one upload at a time** into
+/// per-shard partial sums, so the server can aggregate while later
+/// devices are still training.
+///
+/// Determinism contract: per lane, the fold order is the device **slot**
+/// order (`0..n`, the position in the round's participant list) — exactly
+/// the upload order of the batch reduce.  Uploads may be pushed in any
+/// order; an early arrival is buffered until every lower slot has been
+/// folded.  FedAvg coefficients come from the cohort weights given at
+/// construction (known before any training finishes), computed with the
+/// identical `f64`-sum-then-`f32`-cast as the batch path.  The finalized
+/// [`Aggregate`] — values and union supports — is therefore
+/// **bit-identical** to `aggregate_sharded(&uploads, dim, shards)` on the
+/// full cohort, at any shard count and any arrival order.
+pub struct ShardedAccumulator {
+    /// Fixed contiguous lane ranges, ascending (shard `s` covers
+    /// `[s·dim/shards, (s+1)·dim/shards)`).
+    bounds: Vec<(usize, usize)>,
+    /// Cohort FedAvg weights by slot; `coefs[i] = (weights[i] / Σw) as f32`.
+    weights: Vec<f64>,
+    coefs: Vec<f32>,
+    /// Slots `[0, next)` are folded.
+    next: usize,
+    /// Early arrivals waiting for their fold turn, keyed by slot.
+    pending: BTreeMap<usize, Upload>,
+    /// Per-shard running segment sums (`ΔM̂`/`ΔV̂` allocated lazily on the
+    /// first upload that carries them — earlier uploads without moments
+    /// contribute nothing, so late zero-init is bit-neutral).
+    dw: Vec<Vec<f32>>,
+    dm: Option<Vec<Vec<f32>>>,
+    dv: Option<Vec<Vec<f32>>>,
+    support_w: SupportTracker,
+    support_m: SupportTracker,
+    support_v: SupportTracker,
+}
+
+impl ShardedAccumulator {
+    /// Build an accumulator for a cohort of `weights.len()` uploads over
+    /// lane space `[0, dim)` split into `shards` contiguous ranges
+    /// (clamped to `[1, dim]`, like [`aggregate_sharded`]).
+    pub fn new(dim: usize, shards: usize, weights: &[f64]) -> ShardedAccumulator {
+        let shards = shards.clamp(1, dim.max(1));
+        let total: f64 = weights.iter().sum();
+        let coefs: Vec<f32> = weights
+            .iter()
+            .map(|&w| if total > 0.0 { (w / total) as f32 } else { 0.0 })
+            .collect();
+        let bounds: Vec<(usize, usize)> = (0..shards)
+            .map(|s| (s * dim / shards, (s + 1) * dim / shards))
+            .collect();
+        ShardedAccumulator {
+            dw: bounds.iter().map(|&(lo, hi)| vec![0.0f32; hi - lo]).collect(),
+            dm: None,
+            dv: None,
+            support_w: SupportTracker::new(&bounds),
+            support_m: SupportTracker::new(&bounds),
+            support_v: SupportTracker::new(&bounds),
+            bounds,
+            weights: weights.to_vec(),
+            coefs,
+            next: 0,
+            pending: BTreeMap::new(),
+        }
+    }
+
+    /// Cohort size this accumulator was built for.
+    pub fn expected(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Uploads folded so far (buffered early arrivals not included).
+    pub fn folded(&self) -> usize {
+        self.next
+    }
+
+    /// Hand over slot `slot`'s upload.  Folds it immediately when every
+    /// lower slot has already been folded, otherwise buffers it; then
+    /// drains any buffered successors that became ready.
+    ///
+    /// Panics on an out-of-range or duplicate slot — both are coordinator
+    /// bugs that would silently corrupt the reduce.
+    pub fn push(&mut self, slot: usize, upload: Upload) {
+        assert!(
+            slot < self.weights.len(),
+            "slot {slot} out of range for a {}-upload cohort",
+            self.weights.len()
+        );
+        assert!(
+            slot >= self.next && !self.pending.contains_key(&slot),
+            "slot {slot} pushed twice"
+        );
+        debug_assert_eq!(
+            upload.weight.to_bits(),
+            self.weights[slot].to_bits(),
+            "slot {slot}: upload weight drifted from the cohort weight"
+        );
+        self.pending.insert(slot, upload);
+        while let Some(u) = self.pending.remove(&self.next) {
+            let coef = self.coefs[self.next];
+            self.fold(&u, coef);
+            self.next += 1;
+        }
+    }
+
+    /// `segments[s] += coef * u[bounds[s]]` for every shard, plus support
+    /// marking — the same per-lane association order as [`reduce_shard`].
+    fn fold(&mut self, u: &Upload, coef: f32) {
+        if u.dm.is_some() && self.dm.is_none() {
+            self.dm = Some(
+                self.bounds
+                    .iter()
+                    .map(|&(lo, hi)| vec![0.0f32; hi - lo])
+                    .collect(),
+            );
+        }
+        if u.dv.is_some() && self.dv.is_none() {
+            self.dv = Some(
+                self.bounds
+                    .iter()
+                    .map(|&(lo, hi)| vec![0.0f32; hi - lo])
+                    .collect(),
+            );
+        }
+        for s in 0..self.bounds.len() {
+            let (lo, hi) = self.bounds[s];
+            axpy_range(&u.dw, &mut self.dw[s], coef, lo, hi);
+            self.support_w.mark(s, lo, hi, &u.dw);
+            if let (Some(segs), Some(r)) = (self.dm.as_mut(), u.dm.as_ref()) {
+                axpy_range(r, &mut segs[s], coef, lo, hi);
+                self.support_m.mark(s, lo, hi, r);
+            }
+            if let (Some(segs), Some(r)) = (self.dv.as_mut(), u.dv.as_ref()) {
+                axpy_range(r, &mut segs[s], coef, lo, hi);
+                self.support_v.mark(s, lo, hi, r);
+            }
+        }
+    }
+
+    /// Stitch the shard segments back in ascending lane order.
+    ///
+    /// Panics unless every slot of the cohort has been folded — finalizing
+    /// a partial round would silently drop device updates.
+    pub fn finalize(self) -> Aggregate {
+        assert_eq!(
+            self.next,
+            self.weights.len(),
+            "finalize with {}/{} uploads folded",
+            self.next,
+            self.weights.len()
+        );
+        let dim = self.bounds.last().map(|&(_, hi)| hi).unwrap_or(0);
+        fn stitch(dim: usize, segments: Vec<Vec<f32>>) -> Vec<f32> {
+            let mut out = Vec::with_capacity(dim);
+            for seg in segments {
+                out.extend_from_slice(&seg);
+            }
+            out
+        }
+        Aggregate {
+            dw: stitch(dim, self.dw),
+            dm: self.dm.map(|segs| stitch(dim, segs)),
+            dv: self.dv.map(|segs| stitch(dim, segs)),
+            dw_support: self.support_w.count,
+            dm_support: self.support_m.count,
+            dv_support: self.support_v.count,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -431,5 +657,136 @@ mod tests {
         let agg = aggregate(&uploads, 1);
         assert_eq!(agg.dw, vec![0.0]);
         assert_eq!(agg.dw_support, 1);
+    }
+
+    /// The streaming-path stress cohort: mixed dense/sparse, exact-zero
+    /// stored lanes, cancelling values, a moments-free first upload (lazy
+    /// ΔM̂/ΔV̂ allocation), uneven weights.
+    fn stream_uploads() -> Vec<Upload> {
+        let sv = |i: Vec<u32>, v: Vec<f32>| {
+            Recon::Sparse(SparseVec {
+                dim: 9,
+                indices: i,
+                values: v,
+            })
+        };
+        vec![
+            Upload {
+                dw: sv(vec![0, 4, 5], vec![1.0, 0.0, 2.5]),
+                dm: None,
+                dv: None,
+                weight: 2.0,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![4, 8], vec![-3.0, 7.0]),
+                dm: Some(sv(vec![2], vec![0.0])),
+                dv: Some(sv(vec![6], vec![1.0])),
+                weight: 1.0,
+                bits: 0,
+            },
+            Upload {
+                dw: Recon::Dense((0..9).map(|i| i as f32 * 0.3).collect()),
+                dm: None,
+                dv: Some(Recon::Dense(vec![-0.5; 9])),
+                weight: 0.5,
+                bits: 0,
+            },
+            Upload {
+                dw: sv(vec![0, 4], vec![-1.0, 3.0]), // cancels slot 1's lane 4
+                dm: Some(Recon::Dense(vec![0.25; 9])),
+                dv: None,
+                weight: 1.5,
+                bits: 0,
+            },
+        ]
+    }
+
+    fn assert_same_bits(a: &Aggregate, b: &Aggregate, tag: &str) {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.dw), bits(&b.dw), "{tag}: dw");
+        assert_eq!(
+            a.dm.as_deref().map(bits),
+            b.dm.as_deref().map(bits),
+            "{tag}: dm"
+        );
+        assert_eq!(
+            a.dv.as_deref().map(bits),
+            b.dv.as_deref().map(bits),
+            "{tag}: dv"
+        );
+        assert_eq!(a.dw_support, b.dw_support, "{tag}: dw support");
+        assert_eq!(a.dm_support, b.dm_support, "{tag}: dm support");
+        assert_eq!(a.dv_support, b.dv_support, "{tag}: dv support");
+    }
+
+    #[test]
+    fn accumulator_in_order_matches_batch_aggregate() {
+        let uploads = stream_uploads();
+        let weights: Vec<f64> = uploads.iter().map(|u| u.weight).collect();
+        for shards in [1usize, 2, 3, 7, 9, 100] {
+            let base = aggregate_sharded(&uploads, 9, shards);
+            let mut acc = ShardedAccumulator::new(9, shards, &weights);
+            assert_eq!(acc.expected(), uploads.len());
+            for (slot, u) in uploads.iter().enumerate() {
+                acc.push(slot, u.clone());
+                assert_eq!(acc.folded(), slot + 1, "in-order push folds eagerly");
+            }
+            assert_same_bits(&acc.finalize(), &base, &format!("{shards} shards"));
+        }
+    }
+
+    #[test]
+    fn accumulator_buffers_out_of_order_arrivals() {
+        let uploads = stream_uploads();
+        let weights: Vec<f64> = uploads.iter().map(|u| u.weight).collect();
+        let base = aggregate_sharded(&uploads, 9, 1);
+        // Worst-case arrival order: last device lands first.
+        let mut acc = ShardedAccumulator::new(9, 3, &weights);
+        for slot in (0..uploads.len()).rev() {
+            let before = acc.folded();
+            acc.push(slot, uploads[slot].clone());
+            if slot > 0 {
+                assert_eq!(acc.folded(), before, "early slot {slot} must buffer");
+            }
+        }
+        assert_eq!(acc.folded(), uploads.len(), "slot 0 drains the buffer");
+        assert_same_bits(&acc.finalize(), &base, "reverse arrival");
+    }
+
+    #[test]
+    #[should_panic(expected = "pushed twice")]
+    fn accumulator_rejects_duplicate_slot() {
+        let uploads = stream_uploads();
+        let weights: Vec<f64> = uploads.iter().map(|u| u.weight).collect();
+        let mut acc = ShardedAccumulator::new(9, 2, &weights);
+        acc.push(1, uploads[1].clone());
+        acc.push(1, uploads[1].clone());
+    }
+
+    #[test]
+    #[should_panic(expected = "uploads folded")]
+    fn accumulator_rejects_partial_finalize() {
+        let uploads = stream_uploads();
+        let weights: Vec<f64> = uploads.iter().map(|u| u.weight).collect();
+        let mut acc = ShardedAccumulator::new(9, 2, &weights);
+        acc.push(0, uploads[0].clone());
+        let _ = acc.finalize();
+    }
+
+    #[test]
+    fn accumulator_zero_total_weight_is_safe() {
+        let upload = Upload {
+            dw: Recon::Dense(vec![1.0, 2.0]),
+            dm: None,
+            dv: None,
+            weight: 0.0,
+            bits: 0,
+        };
+        let mut acc = ShardedAccumulator::new(2, 1, &[0.0]);
+        acc.push(0, upload);
+        let agg = acc.finalize();
+        assert_eq!(agg.dw, vec![0.0, 0.0]);
+        assert_eq!(agg.dw_support, 2);
     }
 }

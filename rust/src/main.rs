@@ -69,8 +69,11 @@ OPTIONS:
     --set key=value       override one config key (repeatable), e.g.
                           --set num_workers=4 (engine-pool threads; 0 = auto)
                           --set agg_shards=4 (server-reduce lane shards;
-                          0 = one per pool worker).  Results are
-                          bit-identical at any worker/shard count.
+                          0 = one per pool worker)
+                          --set pipeline_depth=2 (round-loop pipelining:
+                          0 = barrier, 1 = streaming aggregation, >= 2 =
+                          plus train/eval overlap).  Results are
+                          bit-identical at any worker/shard/depth.
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -19,5 +19,5 @@ pub mod reference;
 
 pub use engine::{Arg, Engine, EngineHandle, Prog};
 pub use manifest::{AdamConfig, Manifest, ModelMeta};
-pub use pool::{EnginePool, Executor, PoolHandle};
+pub use pool::{EnginePool, Executor, PoolHandle, WorkClass};
 pub use reference::{reference_meta, reference_pool, ReferenceExecutor};

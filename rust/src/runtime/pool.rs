@@ -4,28 +4,34 @@
 //! `PjRtLoadedExecutable` wrap raw C pointers (`!Send`), so compute state
 //! can never migrate between threads.  Instead each worker thread builds
 //! its **own** client + compiled executables (via an [`Executor`] factory
-//! run on the worker thread) and the threads compete over a shared MPMC
-//! work queue.  [`PoolHandle`] is `Clone + Send`; any caller thread can
-//! submit a [`Prog`] call and block on its private reply channel, so the
-//! coordinator's per-device training dispatches naturally load-balance
-//! across workers.
+//! run on the worker thread) and the threads compete over a shared
+//! two-class work queue.  [`PoolHandle`] is `Clone + Send`; any caller
+//! thread can submit a [`Prog`] call and block on its private reply
+//! channel, so the coordinator's per-device training dispatches naturally
+//! load-balance across workers.
 //!
-//! Determinism: every request is a pure function of its arguments (each
-//! worker holds an identical set of compiled executables), so results are
-//! bitwise independent of which worker serves a request or in what order
-//! requests are queued.  `num_workers = 1` degenerates to the original
-//! single-engine actor.
+//! Work classes: every request carries a [`WorkClass`].  Workers always
+//! drain `Train` requests before `Eval` requests, so the pipelined round
+//! loop can fan an entire eval pass out through the pool *concurrently*
+//! with the next round's local-training dispatch without the eval batches
+//! starving training.  Within a class, requests are served FIFO.  Priority
+//! affects scheduling only — every request is a pure function of its
+//! arguments (each worker holds an identical set of compiled executables),
+//! so results are bitwise independent of which worker serves a request or
+//! in what order requests are queued.  `num_workers = 1` degenerates to
+//! the original single-engine actor.
 //!
 //! Failure model — a call NEVER hangs:
 //! - a panic inside an executor is caught on the worker, returned to the
 //!   caller as `Err`, and the worker keeps serving;
-//! - if every worker dies, the queue receiver drops, pending requests are
-//!   dropped with it (closing each reply channel), and both in-flight and
-//!   future calls observe `Err` rather than blocking forever.
+//! - if every worker dies, the last one to exit closes the queue and drops
+//!   the pending requests (closing each reply channel), so both in-flight
+//!   and future calls observe `Err` rather than blocking forever.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Context, Result};
@@ -41,17 +47,128 @@ pub trait Executor {
     fn execute(&mut self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>>;
 }
 
+/// Scheduling class of a pool request.
+///
+/// Two classes are enough for the pipelined round loop: local-training
+/// dispatches are latency-critical (the round barrier waits on them),
+/// while an overlapped eval pass is throughput work that may only use
+/// capacity training leaves idle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkClass {
+    /// Latency-critical requests (local training, init, sparsify).
+    /// Always served before queued `Eval` work.
+    Train,
+    /// Overlappable background work (the eval fan-out).  Served FIFO
+    /// whenever no `Train` request is queued.
+    Eval,
+}
+
 type Reply = mpsc::Sender<Result<Vec<Vec<f32>>>>;
 
-enum Request {
-    Exec(Prog, Vec<Arg>, Reply),
-    Shutdown,
+struct Job {
+    prog: Prog,
+    args: Vec<Arg>,
+    reply: Reply,
+}
+
+/// The shared two-class queue.  Workers pop `train` first, then `eval`;
+/// shutdown tokens (one per worker) outrank both.
+struct QueueState {
+    train: VecDeque<Job>,
+    eval: VecDeque<Job>,
+    shutdown_tokens: usize,
+    /// Cleared by the last exiting worker: no request can ever be served
+    /// again, so submissions must fail fast instead of queueing forever.
+    open: bool,
+    workers_alive: usize,
+}
+
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+impl Queue {
+    fn new(workers: usize) -> Queue {
+        Queue {
+            state: Mutex::new(QueueState {
+                train: VecDeque::new(),
+                eval: VecDeque::new(),
+                shutdown_tokens: 0,
+                open: true,
+                workers_alive: workers,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Lock the queue; a poisoned lock is recovered rather than
+    /// propagated (queue state is a pair of deques — always consistent
+    /// between operations, and no user code ever runs under the lock).
+    fn lock(&self) -> MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn submit(&self, class: WorkClass, job: Job) -> Result<()> {
+        {
+            let mut q = self.lock();
+            if !q.open {
+                return Err(anyhow!("engine pool is down"));
+            }
+            match class {
+                WorkClass::Train => q.train.push_back(job),
+                WorkClass::Eval => q.eval.push_back(job),
+            }
+        }
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Block until a job (or a shutdown token, returned as `None`) is
+    /// available.  Train outranks eval; shutdown outranks both.
+    fn next_job(&self) -> Option<Job> {
+        let mut q = self.lock();
+        loop {
+            if q.shutdown_tokens > 0 {
+                q.shutdown_tokens -= 1;
+                return None;
+            }
+            if let Some(job) = q.train.pop_front() {
+                return Some(job);
+            }
+            if let Some(job) = q.eval.pop_front() {
+                return Some(job);
+            }
+            q = self.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Called by every worker on exit (shutdown or death).  The last one
+    /// out closes the queue and drops pending jobs — each drop closes its
+    /// reply channel, so blocked callers observe `Err`, never a hang.
+    fn worker_exited(&self) {
+        let mut q = self.lock();
+        q.workers_alive = q.workers_alive.saturating_sub(1);
+        if q.workers_alive == 0 {
+            q.open = false;
+            q.train.clear();
+            q.eval.clear();
+        }
+    }
+
+    fn request_shutdown(&self, tokens: usize) {
+        {
+            let mut q = self.lock();
+            q.shutdown_tokens += tokens;
+        }
+        self.cv.notify_all();
+    }
 }
 
 /// Handle to the pool; cheap to clone, safe to share across threads.
 #[derive(Clone)]
 pub struct PoolHandle {
-    tx: mpsc::Sender<Request>,
+    queue: Arc<Queue>,
     meta: ModelMeta,
     /// Worker threads serving the pool (resolved, not the raw request).
     workers: usize,
@@ -105,20 +222,37 @@ impl EnginePool {
     {
         let num_workers = resolve_workers(num_workers);
         let factory = Arc::new(factory);
-        let (tx, rx) = mpsc::channel::<Request>();
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(Queue::new(num_workers));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
-        let mut workers = Vec::with_capacity(num_workers);
+        // Build the pool shell before spawning so EVERY failure path below
+        // can `drop(pool)` — which shutdown-tokens and joins exactly the
+        // workers spawned so far.  (An early `?` instead would leave them
+        // parked in `cv.wait` forever: unlike an mpsc queue, a shared
+        // Condvar queue has no receiver-drop to wake them.)
+        let mut pool = EnginePool {
+            handle: PoolHandle {
+                queue: Arc::clone(&queue),
+                meta,
+                workers: num_workers,
+            },
+            workers: Vec::with_capacity(num_workers),
+        };
         for index in 0..num_workers {
             let factory = Arc::clone(&factory);
-            let rx = Arc::clone(&rx);
+            let queue = Arc::clone(&queue);
             let ready = ready_tx.clone();
-            let join = std::thread::Builder::new()
+            let spawned = std::thread::Builder::new()
                 .name(format!("engine-worker-{index}"))
-                .spawn(move || worker_main(index, factory, rx, ready))
-                .context("spawning engine worker thread")?;
-            workers.push(join);
+                .spawn(move || worker_main(index, factory, queue, ready))
+                .context("spawning engine worker thread");
+            match spawned {
+                Ok(join) => pool.workers.push(join),
+                Err(e) => {
+                    drop(pool);
+                    return Err(e);
+                }
+            }
         }
         drop(ready_tx);
 
@@ -137,14 +271,6 @@ impl EnginePool {
             }
         }
 
-        let pool = EnginePool {
-            handle: PoolHandle {
-                tx,
-                meta,
-                workers: num_workers,
-            },
-            workers,
-        };
         match startup {
             Ok(()) => Ok(pool),
             // Dropping tears down the healthy workers before reporting.
@@ -172,9 +298,7 @@ impl EnginePool {
 impl Drop for EnginePool {
     fn drop(&mut self) {
         // One shutdown token per worker; each worker consumes exactly one.
-        for _ in 0..self.workers.len() {
-            let _ = self.handle.tx.send(Request::Shutdown);
-        }
+        self.handle.queue.request_shutdown(self.workers.len());
         for join in self.workers.drain(..) {
             let _ = join.join();
         }
@@ -184,11 +308,22 @@ impl Drop for EnginePool {
 fn worker_main<E, F>(
     index: usize,
     factory: Arc<F>,
-    rx: Arc<Mutex<mpsc::Receiver<Request>>>,
+    queue: Arc<Queue>,
     ready: mpsc::Sender<Result<()>>,
 ) where
     E: Executor + 'static,
     F: Fn(usize) -> Result<E> + Send + Sync + 'static,
+{
+    serve(index, &factory, &queue, ready);
+    // Every exit path (shutdown token, startup failure, rebuild failure)
+    // funnels through here so the last worker out can close the queue.
+    queue.worker_exited();
+}
+
+fn serve<E, F>(index: usize, factory: &F, queue: &Queue, ready: mpsc::Sender<Result<()>>)
+where
+    E: Executor + 'static,
+    F: Fn(usize) -> Result<E> + Send + Sync,
 {
     let mut exec = match factory(index) {
         Ok(e) => {
@@ -200,44 +335,31 @@ fn worker_main<E, F>(
             return;
         }
     };
-    loop {
-        // Holding the lock only while blocked in recv(): dispatch is
-        // serialized (cheap), execution is parallel (the guard drops
-        // before execute runs).
-        let req = match rx.lock() {
-            Ok(guard) => guard.recv(),
-            // A sibling panicked while holding the queue; bail out.
-            Err(_) => return,
-        };
-        match req {
-            Err(_) | Ok(Request::Shutdown) => return,
-            Ok(Request::Exec(prog, args, reply)) => {
-                match catch_unwind(AssertUnwindSafe(|| exec.execute(prog, args))) {
-                    Ok(result) => {
-                        let _ = reply.send(result);
-                    }
-                    Err(payload) => {
-                        let _ = reply.send(Err(anyhow!(
-                            "engine worker {index} panicked in {:?}: {}",
-                            prog.name(),
-                            panic_message(payload.as_ref())
-                        )));
-                        // The executor may hold partially-mutated state
-                        // after an unwound execute; reusing it could return
-                        // silently wrong results.  Retire it and rebuild
-                        // from the factory; if that fails, let this worker
-                        // die — siblings keep serving, and with no workers
-                        // left callers observe `Err`, never a hang.
-                        match factory(index) {
-                            Ok(fresh) => exec = fresh,
-                            Err(e) => {
-                                log::error!(
-                                    "engine worker {index} exiting: executor rebuild \
-                                     after panic failed: {e:#}"
-                                );
-                                return;
-                            }
-                        }
+    while let Some(Job { prog, args, reply }) = queue.next_job() {
+        match catch_unwind(AssertUnwindSafe(|| exec.execute(prog, args))) {
+            Ok(result) => {
+                let _ = reply.send(result);
+            }
+            Err(payload) => {
+                let _ = reply.send(Err(anyhow!(
+                    "engine worker {index} panicked in {:?}: {}",
+                    prog.name(),
+                    panic_message(payload.as_ref())
+                )));
+                // The executor may hold partially-mutated state after an
+                // unwound execute; reusing it could return silently wrong
+                // results.  Retire it and rebuild from the factory; if
+                // that fails, let this worker die — siblings keep serving,
+                // and with no workers left callers observe `Err`, never a
+                // hang.
+                match factory(index) {
+                    Ok(fresh) => exec = fresh,
+                    Err(e) => {
+                        log::error!(
+                            "engine worker {index} exiting: executor rebuild \
+                             after panic failed: {e:#}"
+                        );
+                        return;
                     }
                 }
             }
@@ -266,12 +388,29 @@ impl PoolHandle {
         self.workers
     }
 
-    /// Execute `prog` with `args` on some worker; blocks until the reply.
+    /// Execute `prog` with `args` on some worker at `Train` priority;
+    /// blocks until the reply.
     pub fn call(&self, prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+        self.call_class(WorkClass::Train, prog, args)
+    }
+
+    /// Execute `prog` with `args` at an explicit [`WorkClass`]; blocks
+    /// until the reply.  Priority changes scheduling only, never bits.
+    pub fn call_class(
+        &self,
+        class: WorkClass,
+        prog: Prog,
+        args: Vec<Arg>,
+    ) -> Result<Vec<Vec<f32>>> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Exec(prog, args, tx))
-            .map_err(|_| anyhow!("engine pool is down"))?;
+        self.queue.submit(
+            class,
+            Job {
+                prog,
+                args,
+                reply: tx,
+            },
+        )?;
         rx.recv()
             .map_err(|_| anyhow!("engine pool dropped the reply (all workers gone)"))?
     }
@@ -350,6 +489,9 @@ impl PoolHandle {
     }
 
     /// Weighted eval batch: returns `(loss_sum, correct, weight_sum)`.
+    ///
+    /// Dispatched at `Eval` priority so a pipelined eval fan-out only uses
+    /// pool capacity that training leaves idle.
     pub fn eval_batch(
         &self,
         w: &[f32],
@@ -360,7 +502,8 @@ impl PoolHandle {
         let e = self.meta.eval_batch as i64;
         let mut dims = vec![e];
         dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
-        let out = self.call(
+        let out = self.call_class(
+            WorkClass::Eval,
             Prog::Eval,
             vec![
                 Arg::vec(w.to_vec()),
@@ -570,5 +713,89 @@ mod tests {
     fn zero_workers_auto_detects() {
         let pool = EnginePool::with_factory(test_meta(), 0, |_| Ok(MockExec)).unwrap();
         assert!(pool.num_workers() >= 1);
+    }
+
+    /// Records execution order; a job whose scalar is `0.0` blocks until
+    /// `gate` releases it (used to pin the single worker while the test
+    /// enqueues competing work).
+    struct OrderExec {
+        order: Arc<Mutex<Vec<i32>>>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Executor for OrderExec {
+        fn execute(&mut self, _prog: Prog, args: Vec<Arg>) -> Result<Vec<Vec<f32>>> {
+            let tag = scalar(&args) as i32;
+            if tag == 0 {
+                let (lock, cv) = &*self.gate;
+                let mut released = lock.lock().unwrap();
+                while !*released {
+                    released = cv.wait(released).unwrap();
+                }
+            }
+            self.order.lock().unwrap().push(tag);
+            Ok(vec![vec![tag as f32]])
+        }
+    }
+
+    #[test]
+    fn train_class_outranks_queued_eval() {
+        let order: Arc<Mutex<Vec<i32>>> = Arc::new(Mutex::new(Vec::new()));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let (order_f, gate_f) = (Arc::clone(&order), Arc::clone(&gate));
+        let pool = EnginePool::with_factory(test_meta(), 1, move |_| {
+            Ok(OrderExec {
+                order: Arc::clone(&order_f),
+                gate: Arc::clone(&gate_f),
+            })
+        })
+        .unwrap();
+        let h = pool.handle();
+
+        // Pin the single worker on the gate job, then queue an eval-class
+        // job BEFORE a train-class job.  Once the gate opens, the worker
+        // must serve the train job first despite its later arrival.
+        let gate_job = {
+            let h = h.clone();
+            std::thread::spawn(move || h.call(Prog::Init, vec![Arg::ScalarF32(0.0)]))
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        let eval_job = {
+            let h = h.clone();
+            std::thread::spawn(move || {
+                h.call_class(WorkClass::Eval, Prog::Eval, vec![Arg::ScalarF32(2.0)])
+            })
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        let train_job = {
+            let h = h.clone();
+            std::thread::spawn(move || h.call(Prog::Train, vec![Arg::ScalarF32(1.0)]))
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        gate_job.join().unwrap().unwrap();
+        eval_job.join().unwrap().unwrap();
+        train_job.join().unwrap().unwrap();
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec![0, 1, 2],
+            "train-class job must be served before the earlier eval-class job"
+        );
+    }
+
+    #[test]
+    fn pool_drop_then_call_errors_not_hangs() {
+        let pool = EnginePool::with_factory(test_meta(), 2, |_| Ok(MockExec)).unwrap();
+        let h = pool.handle();
+        drop(pool);
+        let err = h.call(Prog::Init, vec![Arg::ScalarF32(1.0)]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("down"),
+            "want fail-fast submit error, got: {err:#}"
+        );
     }
 }

@@ -5,9 +5,11 @@
 //! that gap: [`ReferenceExecutor`] implements the full [`Prog`] contract
 //! (init / train / epoch / eval / sgd / grads / sparsify) for a linear
 //! softmax classifier in plain `f32` Rust, so the **entire** coordinator
-//! loop — local training, compression, aggregation, eval, ledger — runs
-//! and is testable offline.  The algorithm-zoo conformance suite and the
-//! aggregation/eval benches are built on it.
+//! loop — local training, compression, streaming aggregation, overlapped
+//! eval, ledger — runs and is testable offline.  The algorithm-zoo
+//! conformance suite (including its `pipeline_depth` bit-identity sweep),
+//! the aggregation/eval benches and the barrier-vs-pipelined
+//! `e2e_round` bench are built on it.
 //!
 //! Semantics mirror the AOT programs:
 //! - every call is a **pure function of its arguments** (no hidden state),

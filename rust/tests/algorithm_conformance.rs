@@ -15,7 +15,7 @@
 
 use fedadam_ssm::algorithms::{self, Algorithm as _, LocalDelta, MomentumPolicy, Recon};
 use fedadam_ssm::config::ExperimentConfig;
-use fedadam_ssm::coordinator::{evaluate_model, Coordinator};
+use fedadam_ssm::coordinator::{evaluate_model, evaluate_plan, Coordinator, EvalPlan};
 use fedadam_ssm::data::synthetic;
 use fedadam_ssm::metrics::ExperimentLog;
 use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
@@ -316,6 +316,101 @@ fn runs_are_bit_identical_across_workers_and_shards() {
                 assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{tag}");
             }
         }
+    }
+}
+
+#[test]
+fn eval_plan_slicing_is_stable_across_rebuilds() {
+    // The round loop hoists test-set pre-slicing into one EvalPlan; this
+    // regression-pins that a rebuild at any later round would produce the
+    // exact same slice boundaries (and the same evaluation bits as the
+    // slice-on-the-fly path).
+    let m = meta();
+    let spec = synthetic::SyntheticSpec::for_input_shape(&INPUT_SHAPE, 8, 50);
+    let task = synthetic::generate(&spec, 11);
+    let plan = EvalPlan::new(&task.test, &m);
+    let rebuilt = EvalPlan::new(&task.test, &m);
+    assert_eq!(plan.boundaries(), rebuilt.boundaries());
+    assert_eq!(plan.num_batches(), 50usize.div_ceil(8));
+    assert_eq!(plan.boundaries(), EvalPlan::slice_boundaries(50, 8).as_slice());
+    // Last batch is ragged: 2 real samples + 6 zero-weight pad lanes.
+    assert_eq!(*plan.boundaries().last().unwrap(), (48, 50));
+
+    let pool = reference_pool(m, 2).unwrap();
+    let h = pool.handle();
+    let w = h.init(3).unwrap();
+    let (l1, a1) = evaluate_model(&h, &w, &task.test, 2).unwrap();
+    let (l2, a2) = evaluate_plan(&h, &w, &plan, 2).unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits(), "planned eval loss diverged");
+    assert_eq!(a1.to_bits(), a2.to_bits(), "planned eval accuracy diverged");
+}
+
+#[test]
+fn pipelined_loop_is_bit_identical_to_barrier() {
+    // PR 3 tentpole contract: `pipeline_depth` may change wall-clock only.
+    // Depth 0 is the legacy barrier (batch aggregate + inline eval);
+    // depth 1 adds streaming aggregation; depth >= 2 adds train/eval
+    // overlap with up to depth-1 evals in flight.  Every logged number,
+    // the ledger and the final (W, M, V) must be byte-identical across
+    // the depth × workers × shards grid.  eval_every = 2 leaves non-eval
+    // rounds in the log, so overlapped evals patch earlier rows while the
+    // loop is still running.
+    for algo in ["fedadam-ssm", "onebit-adam", "efficient-adam"] {
+        let run_with = |depth: usize, workers: usize, shards: usize| {
+            let mut cfg = base_cfg(algo);
+            cfg.rounds = 5;
+            cfg.eval_every = 2;
+            cfg.participation = 0.75; // exercise the sampler path too
+            cfg.pipeline_depth = depth;
+            cfg.num_workers = workers;
+            cfg.agg_shards = shards;
+            run(cfg)
+        };
+        let (log0, w0, m0, v0) = run_with(0, 1, 1);
+        for (depth, workers, shards) in [(1, 2, 1), (2, 1, 4), (2, 4, 4), (3, 2, 3)] {
+            let (log, w, m, v) = run_with(depth, workers, shards);
+            assert_eq!(w0, w, "{algo} depth {depth}: global W diverged");
+            assert_eq!(m0, m, "{algo} depth {depth}: global M diverged");
+            assert_eq!(v0, v, "{algo} depth {depth}: global V diverged");
+            assert_eq!(log0.rounds.len(), log.rounds.len());
+            for (a, b) in log0.rounds.iter().zip(&log.rounds) {
+                let tag = format!("{algo} d{depth} ({workers}w/{shards}s) round {}", a.round);
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag}");
+                assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{tag}");
+                assert_eq!(
+                    a.test_accuracy.to_bits(),
+                    b.test_accuracy.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+                assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}");
+                assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapped_eval_rows_are_patched_before_run_returns() {
+    // With pipeline_depth >= 2 an eval-due round's record is returned
+    // with NaN eval cells and patched when the overlapped eval lands.
+    // `run()` must drain every pending eval, so the returned log carries a
+    // finite test metric for every eval-due round — including the last.
+    let mut cfg = base_cfg("fedadam-ssm");
+    cfg.rounds = 5;
+    cfg.eval_every = 2; // eval-due rounds: 0, 2, 4 (last round always due)
+    cfg.pipeline_depth = 2;
+    let (log, _, _, _) = run(cfg);
+    assert_eq!(log.rounds.len(), 5);
+    for r in &log.rounds {
+        let due = r.round % 2 == 0 || r.round == 4;
+        assert_eq!(
+            r.test_accuracy.is_finite(),
+            due,
+            "round {}: eval cell presence must match the eval schedule",
+            r.round
+        );
+        assert_eq!(r.test_loss.is_finite(), due, "round {}", r.round);
     }
 }
 

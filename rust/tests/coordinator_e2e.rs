@@ -197,24 +197,27 @@ fn sharded_aggregation_and_parallel_eval_are_bit_identical() {
     if !have_artifacts() {
         return;
     }
-    // Tentpole contract on the real PJRT backend: (num_workers, agg_shards)
-    // may change wall-clock only.  Compare the fully-sequential run against
-    // parallel-everything runs.
-    let run = |workers: usize, shards: usize| {
+    // Tentpole contract on the real PJRT backend: (num_workers,
+    // agg_shards, pipeline_depth) may change wall-clock only.  Compare the
+    // fully-sequential barrier run against parallel / streaming /
+    // overlapped runs.
+    let run = |workers: usize, shards: usize, depth: usize| {
         let mut cfg = base_cfg();
         cfg.algorithm = "fedadam-ssm".into();
         cfg.rounds = 3;
         cfg.devices = 4;
         cfg.num_workers = workers;
         cfg.agg_shards = shards;
+        cfg.pipeline_depth = depth;
         let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
         let log = coord.run().unwrap();
         (log, coord.global().w.clone())
     };
-    let (log1, w1) = run(1, 1);
-    for (workers, shards) in [(1, 4), (4, 1), (4, 4)] {
-        let (log, w) = run(workers, shards);
-        assert_eq!(w1, w, "{workers}w/{shards}s: weights diverged");
+    let (log1, w1) = run(1, 1, 0);
+    let grid = [(1, 4, 0), (4, 1, 0), (4, 4, 0), (1, 1, 1), (1, 1, 2), (4, 4, 2)];
+    for (workers, shards, depth) in grid {
+        let (log, w) = run(workers, shards, depth);
+        assert_eq!(w1, w, "{workers}w/{shards}s/depth{depth}: weights diverged");
         for (a, b) in log1.rounds.iter().zip(&log.rounds) {
             assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
             assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits());

@@ -3,7 +3,7 @@
 //! fixed so failures reproduce exactly).
 
 use fedadam_ssm::algorithms::{Recon, Upload};
-use fedadam_ssm::coordinator::{aggregate, aggregate_sharded};
+use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, ShardedAccumulator};
 use fedadam_ssm::quant::{onebit_compress, onebit_decompress, uniform_compress, uniform_decompress, ErrorFeedback};
 use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::codec::{self, cost};
@@ -281,6 +281,82 @@ fn prop_sharded_aggregate_bit_identical_to_sequential() {
                 (s.dw_support, s.dm_support, s.dv_support),
                 (base.dw_support, base.dm_support, base.dv_support),
                 "trial {trial}: d={d} shards={shards}: supports"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_streaming_accumulator_matches_batch_aggregate() {
+    // PR 3 tentpole contract: folding a **random permutation** of a
+    // cohort's uploads one-at-a-time through `ShardedAccumulator` (which
+    // buffers early arrivals and folds in slot order) must produce bits —
+    // values AND union supports — identical to `aggregate_sharded` on the
+    // full batch, at any shard count.  The generator mixes dense/sparse
+    // payloads, exact-zero kept lanes and exactly-cancelling twins.
+    let mut rng = Rng::new(113);
+    for trial in 0..60 {
+        let d = 1 + rng.below(160);
+        let n = 1 + rng.below(6);
+        let mut uploads: Vec<Upload> = Vec::new();
+        for _ in 0..n {
+            let dw = gen_recon(&mut rng, d);
+            let dm = (rng.below(2) == 0).then(|| gen_recon(&mut rng, d));
+            let dv = (rng.below(2) == 0).then(|| gen_recon(&mut rng, d));
+            let weight = rng.uniform() * 10.0;
+            uploads.push(Upload {
+                dw,
+                dm,
+                dv,
+                weight,
+                bits: 0,
+            });
+            // Occasionally append the exact negation at the same weight so
+            // lane sums cancel to 0.0 while the wire support does not.
+            if rng.below(3) == 0 {
+                let last = uploads.last().unwrap();
+                let twin = Upload {
+                    dw: negated(&last.dw),
+                    dm: last.dm.as_ref().map(negated),
+                    dv: last.dv.as_ref().map(negated),
+                    weight: last.weight,
+                    bits: 0,
+                };
+                uploads.push(twin);
+            }
+        }
+        let weights: Vec<f64> = uploads.iter().map(|u| u.weight).collect();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+        for shards in [1usize, 2, 3, 7, d] {
+            let base = aggregate_sharded(&uploads, d, shards);
+            let mut acc = ShardedAccumulator::new(d, shards, &weights);
+            let mut order: Vec<usize> = (0..uploads.len()).collect();
+            rng.shuffle(&mut order);
+            for &slot in &order {
+                acc.push(slot, uploads[slot].clone());
+            }
+            assert_eq!(acc.folded(), uploads.len(), "trial {trial}: fold count");
+            let agg = acc.finalize();
+            assert_eq!(
+                bits(&agg.dw),
+                bits(&base.dw),
+                "trial {trial}: d={d} shards={shards}: streamed dw"
+            );
+            assert_eq!(
+                agg.dm.as_deref().map(bits),
+                base.dm.as_deref().map(bits),
+                "trial {trial}: d={d} shards={shards}: streamed dm"
+            );
+            assert_eq!(
+                agg.dv.as_deref().map(bits),
+                base.dv.as_deref().map(bits),
+                "trial {trial}: d={d} shards={shards}: streamed dv"
+            );
+            assert_eq!(
+                (agg.dw_support, agg.dm_support, agg.dv_support),
+                (base.dw_support, base.dm_support, base.dv_support),
+                "trial {trial}: d={d} shards={shards}: streamed supports"
             );
         }
     }

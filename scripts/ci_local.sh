@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Run the full CI matrix locally in one command — the same gates
+# .github/workflows/ci.yml runs on every push:
+#
+#   1. tier-1: release build + full test suite
+#   2. determinism grid: workers x shards x pipeline_depth, via the
+#      FEDADAM_* env overrides the test base configs read
+#      (the determinism-bearing suites only, to keep the sweep fast;
+#      CI re-runs the full suite per grid point)
+#   3. clippy -D warnings + rustfmt --check (skipped with a note when the
+#      components aren't installed)
+#   4. rustdoc + doc-tests
+#   5. benches stay buildable (cargo bench --no-run)
+#
+# Usage: scripts/ci_local.sh [--quick]
+#   --quick  skip the determinism grid (tier-1 + lint + docs + benches only)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUICK=0
+[[ "${1:-}" == "--quick" ]] && QUICK=1
+
+step() { printf '\n\033[1m== %s ==\033[0m\n' "$*"; }
+
+step "tier-1: cargo build --release"
+cargo build --release
+
+step "tier-1: cargo test -q"
+cargo test -q
+
+if [[ "$QUICK" == 0 ]]; then
+  for workers in 1 4; do
+    for shards in 1 4; do
+      for pipeline in 0 2; do
+        step "determinism: workers=$workers shards=$shards pipeline_depth=$pipeline"
+        FEDADAM_NUM_WORKERS=$workers \
+        FEDADAM_AGG_SHARDS=$shards \
+        FEDADAM_PIPELINE_DEPTH=$pipeline \
+          cargo test -q --test algorithm_conformance --test coordinator_e2e --test proptests
+      done
+    done
+  done
+fi
+
+step "lint: clippy + rustfmt"
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy not installed; skipping (CI runs it)"
+fi
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "rustfmt not installed; skipping (CI runs it)"
+fi
+
+step "docs: cargo doc --no-deps + doc-tests"
+cargo doc --no-deps
+cargo test --doc -q
+
+step "benches: cargo bench --no-run"
+cargo bench --no-run
+
+step "ci_local: all gates green"
