@@ -15,27 +15,29 @@ fn main() {
     // --- cost table (exact, no timing) ----------------------------------
     println!("=== §IV uplink bits per device/round (q = 32) ===");
     println!(
-        "{:>10} {:>7} {:>14} {:>14} {:>14} {:>12} {:>14}",
-        "d", "alpha", "FedAdam", "FedAdam-Top", "FedAdam-SSM", "1-bit", "Efficient(16)"
+        "{:>10} {:>7} {:>14} {:>14} {:>14} {:>14} {:>12} {:>14}",
+        "d", "alpha", "FedAdam", "FedAdam-Top", "FedAdam-SSM", "SSM-Q(16)", "1-bit", "Efficient(16)"
     );
     for &d in &[54_314usize, 176_778, 1_663_370, 9_750_922] {
         for &alpha in &[0.01f64, 0.05, 0.2] {
             let k = (d as f64 * alpha) as usize;
             println!(
-                "{:>10} {:>7} {:>14} {:>14} {:>14} {:>12} {:>14}",
+                "{:>10} {:>7} {:>14} {:>14} {:>14} {:>14} {:>12} {:>14}",
                 d,
                 alpha,
                 cost::fedadam_dense(d),
                 cost::fedadam_top(d, k),
                 cost::fedadam_ssm(d, k),
+                cost::fedadam_ssm_q(d, k, 16),
                 cost::onebit(d),
                 cost::uniform(d, 16),
             );
+            assert!(cost::fedadam_ssm_q(d, k, 16) < cost::fedadam_ssm(d, k));
             assert!(cost::fedadam_ssm(d, k) < cost::fedadam_top(d, k));
             assert!(cost::fedadam_top(d, k) < cost::fedadam_dense(d));
         }
     }
-    println!("(SSM < Top < dense verified at every point)");
+    println!("(SSM-Q < SSM < Top < dense verified at every point)");
 
     // --- codec timing ----------------------------------------------------
     let mut bench = from_env();

@@ -1,0 +1,151 @@
+//! Accuracy/bit frontier: quantized shared-sparse-mask uplink vs the
+//! sparse and dense baselines (the ROADMAP "Quantized SSM composition"
+//! item; the paper's Fig. 2 axis).
+//!
+//! Sweeps `s ∈ {2, 4, 16}` × sparsity `α` for `fedadam-ssm-q` on the
+//! pure-Rust [`ReferenceExecutor`] (runs offline, no PJRT artifacts),
+//! alongside the f32-valued `fedadam-ssm` and dense `fedadam` anchors,
+//! and emits the per-round accuracy-vs-cumulative-uplink-bits curve as
+//! CSV (`results/frontier.csv` + stdout) — the frontier the two isolated
+//! families could never trace.
+//!
+//! Before any timing, every swept point is re-run at a different worker
+//! count and asserted **byte-identical** (log + final weights): the
+//! quantized wire format must hold the same determinism contract as the
+//! rest of the zoo.  Then the round loop is timed for the quantized vs
+//! f32 SSM so the bit-packing overhead is visible.
+//!
+//! Run: `cargo bench --bench frontier`.
+
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool};
+
+const INPUT: [usize; 3] = [4, 4, 1]; // row 16; dim = 10 * (16 + 1) = 170
+const CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
+
+fn frontier_cfg(algo: &str, alpha: f64, s: usize, workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "frontier".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = algo.into();
+    cfg.rounds = 6;
+    cfg.devices = 3;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.lr = 0.02;
+    cfg.sparsity = alpha;
+    cfg.train_samples = 96;
+    cfg.test_samples = 64;
+    cfg.seed = 7;
+    cfg.eval_every = 1;
+    cfg.quant_levels = s;
+    cfg.num_workers = workers;
+    cfg
+}
+
+fn run_once(algo: &str, alpha: f64, s: usize, workers: usize) -> (ExperimentLog, Vec<f32>) {
+    let cfg = frontier_cfg(algo, alpha, s, workers);
+    let meta = reference_meta(&INPUT, CLASSES, 4, 8, 2);
+    let pool = reference_pool(meta, cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("run");
+    let w = coord.global().w.clone();
+    (log, w)
+}
+
+/// `(algorithm, alpha, s)` — `s = 0` marks the un-quantized f32 schemes.
+fn sweep_points() -> Vec<(&'static str, f64, usize)> {
+    let mut points = vec![("fedadam", 1.0, 0)]; // dense anchor (α unused)
+    for &alpha in &[0.02f64, 0.05, 0.2] {
+        points.push(("fedadam-ssm", alpha, 0)); // sparse f32 anchor
+        for &s in &[2usize, 4, 16] {
+            points.push(("fedadam-ssm-q", alpha, s));
+        }
+    }
+    points
+}
+
+fn main() {
+    // ---- Determinism gate: bit-identity across worker counts, BEFORE ----
+    // ---- any timing (a quantizer that decodes differently under a     ----
+    // ---- different schedule would poison every number below).  The    ----
+    // ---- 1-worker run of each point is kept and reused for the sweep. ----
+    let points = sweep_points();
+    let mut logs: Vec<ExperimentLog> = Vec::with_capacity(points.len());
+    for &(algo, alpha, s) in &points {
+        let s_cfg = if s == 0 { 16 } else { s };
+        let (log1, w1) = run_once(algo, alpha, s_cfg, 1);
+        for workers in [2usize, 3] {
+            let (log, w) = run_once(algo, alpha, s_cfg, workers);
+            assert_eq!(w1, w, "{algo} α={alpha} s={s_cfg} {workers}w: weights diverged");
+            assert_eq!(log1.rounds.len(), log.rounds.len());
+            for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+                let tag = format!("{algo} α={alpha} s={s_cfg} {workers}w round {}", a.round);
+                assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+                assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}");
+                assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits(), "{tag}");
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag}");
+            }
+        }
+        logs.push(log1);
+    }
+    println!("determinism gate: all sweep points byte-identical at 1/2/3 workers\n");
+
+    // ---- Frontier sweep (from the gate's cached runs): accuracy vs bits --
+    let last_bits =
+        |log: &ExperimentLog| log.rounds.last().map(|r| r.uplink_bits).unwrap_or(0);
+    // f32-SSM anchor total per alpha, for the compression-ratio column.
+    let ssm_total = |alpha: f64| -> Option<u64> {
+        points
+            .iter()
+            .zip(&logs)
+            .find(|(p, _)| p.0 == "fedadam-ssm" && p.1 == alpha)
+            .map(|(_, log)| last_bits(log))
+    };
+    let mut csv = String::from("algorithm,s,alpha,round,cum_uplink_bits,test_accuracy\n");
+    println!(
+        "{:<16} {:>4} {:>6} {:>10} {:>16} {:>10}",
+        "algorithm", "s", "alpha", "best acc", "uplink (kbit)", "bits/SSM"
+    );
+    for (&(algo, alpha, s), log) in points.iter().zip(&logs) {
+        for r in &log.rounds {
+            csv.push_str(&format!(
+                "{algo},{s},{alpha},{},{},{:.6}\n",
+                r.round, r.uplink_bits, r.test_accuracy
+            ));
+        }
+        let total = last_bits(log);
+        let ratio = ssm_total(alpha)
+            .map(|t| format!("{:.3}", total as f64 / t as f64))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<16} {:>4} {:>6} {:>10.3} {:>16.1} {:>10}",
+            algo,
+            if s == 0 { "f32".into() } else { s.to_string() },
+            alpha,
+            log.best_accuracy(),
+            total as f64 / 1e3,
+            ratio,
+        );
+    }
+    if std::fs::create_dir_all("results").is_ok()
+        && std::fs::write("results/frontier.csv", &csv).is_ok()
+    {
+        println!("\nwrote results/frontier.csv");
+    }
+    println!("\n{csv}");
+
+    // ---- Timing: quantized vs f32 SSM round loop ------------------------
+    let mut bench = from_env();
+    bench.max_iters = 6; // one full run is already ~100ms-scale
+    for &(algo, s) in &[("fedadam-ssm", 16usize), ("fedadam-ssm-q", 16), ("fedadam-ssm-q", 2)] {
+        bench.run(format!("run: {algo} s={s} α=0.05 (6 rounds, 1w)"), || {
+            black_box(run_once(algo, 0.05, s, 1));
+        });
+    }
+    bench.report("accuracy/bit frontier");
+    println!("\n{}", bench.to_csv());
+}

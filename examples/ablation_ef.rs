@@ -1,9 +1,11 @@
 //! Ablation: error-feedback memory on top of the SSM (DESIGN.md ablation
 //! list) and partial device participation.
 //!
-//! Compares `fedadam-ssm` vs `fedadam-ssm-ef` at aggressive sparsity
-//! (where dropped-mass accumulation matters most), and full vs partial
-//! participation — two design axes the paper leaves open.
+//! Compares `fedadam-ssm` vs `fedadam-ssm-ef` — and the quantized pair
+//! `fedadam-ssm-q` vs `fedadam-ssm-qef`, where the EF memory additionally
+//! absorbs the s-level rounding error — at aggressive sparsity (where
+//! dropped-mass accumulation matters most), and full vs partial
+//! participation — design axes the paper leaves open.
 //!
 //! ```text
 //! cargo run --release --example ablation_ef -- [--quick]
@@ -34,11 +36,13 @@ fn main() -> Result<()> {
         "{:<18} {:>7} {:>14} {:>10} {:>12}",
         "algorithm", "alpha", "participation", "best acc", "final loss"
     );
-    // EF ablation across sparsity levels.
+    // EF ablation across sparsity levels, for both the f32 and the
+    // s-level-quantized (s = 4) SSM wire formats.
     for &alpha in if quick { &[0.01f64][..] } else { &[0.005f64, 0.01, 0.05][..] } {
-        for algo in ["fedadam-ssm", "fedadam-ssm-ef"] {
+        for algo in ["fedadam-ssm", "fedadam-ssm-ef", "fedadam-ssm-q", "fedadam-ssm-qef"] {
             let mut cfg = base.clone();
             cfg.algorithm = algo.into();
+            cfg.quant_levels = 4;
             cfg.sparsity = alpha;
             cfg.name = format!("ablation_{algo}_a{alpha}");
             let mut coord = Coordinator::new(cfg, artifacts)?;

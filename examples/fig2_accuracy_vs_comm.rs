@@ -41,9 +41,17 @@ fn main() -> Result<()> {
     base.test_samples = if quick { 128 } else { 512 };
     base.sparsity = 0.05;
 
+    // The paper's nine ids plus the quantized-SSM composition pair — the
+    // Fig. 2 axis is accuracy vs uplink bits, exactly the frontier
+    // fedadam-ssm-q/-qef trace between the sparse and quantized families
+    // (swept in depth by `cargo bench --bench frontier`).
     let algos: Vec<String> = match cli.opt("algorithms") {
         Some(s) => s.split(',').map(|x| x.trim().to_string()).collect(),
-        None => ALL_ALGORITHMS.iter().map(|s| s.to_string()).collect(),
+        None => ALL_ALGORITHMS
+            .iter()
+            .map(|s| s.to_string())
+            .chain(["fedadam-ssm-q".to_string(), "fedadam-ssm-qef".to_string()])
+            .collect(),
     };
 
     std::fs::create_dir_all("results/fig2")?;

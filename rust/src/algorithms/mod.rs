@@ -15,9 +15,15 @@
 //! | `fedadam-ssm-m`   | same cost (mask of ΔM)                   | aggregated |
 //! | `fedadam-ssm-v`   | same cost (mask of ΔV)                   | aggregated |
 //! | `fairness-top`    | same cost (mask of the normalized union) | aggregated |
+//! | `fedadam-ssm-q`   | `min{3k b+d, k(3b+log2 d)} + 3q`, `b = ceil(log2 s)` | aggregated |
+//! | `fedadam-ssm-qef` | same cost (+ per-device pre-mask EF)     | aggregated |
 //! | `onebit-adam`     | warmup `3dq`, then `d + 32`              | local      |
 //! | `efficient-adam`  | `d ceil(log2 s) + 32`                    | local      |
 //! | `fedsgd`          | `dq` dense                               | none       |
+//!
+//! (`fedadam-ssm-ef`, the un-quantized EF extension, prices like
+//! `fedadam-ssm`; the accuracy/bit frontier the quantized pair opens is
+//! swept by `benches/frontier.rs`.)
 
 pub mod centralized;
 pub mod efficient;
@@ -27,6 +33,7 @@ pub mod fedsgd;
 pub mod onebit;
 pub mod ssm;
 pub mod ssm_ef;
+pub mod ssm_q;
 pub mod topk;
 
 use anyhow::{bail, Result};
@@ -163,6 +170,13 @@ pub fn build(cfg: &ExperimentConfig, dim: usize) -> Result<Box<dyn Algorithm>> {
         "fedadam-ssm-v" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::V)),
         "fairness-top" => Box::new(fairness::FairnessTop::new(dim, k)),
         "fedadam-ssm-ef" => Box::new(ssm_ef::FedAdamSsmEf::new(dim, k, cfg.devices)),
+        "fedadam-ssm-q" => Box::new(ssm_q::FedAdamSsmQ::new(dim, k, cfg.quant_levels as u32)),
+        "fedadam-ssm-qef" => Box::new(ssm_q::FedAdamSsmQEf::new(
+            dim,
+            k,
+            cfg.devices,
+            cfg.quant_levels as u32,
+        )),
         "onebit-adam" => Box::new(onebit::OneBitAdam::new(dim, cfg.devices, cfg.warmup_rounds)),
         "efficient-adam" => Box::new(efficient::EfficientAdam::new(
             dim,
@@ -172,10 +186,16 @@ pub fn build(cfg: &ExperimentConfig, dim: usize) -> Result<Box<dyn Algorithm>> {
         "fedsgd" => Box::new(fedsgd::FedSgd::new(dim)),
         other => bail!(
             "unknown algorithm {other:?}; known: fedadam, fedadam-top, fedadam-ssm, \
-             fedadam-ssm-ef, fedadam-ssm-m, fedadam-ssm-v, fairness-top, onebit-adam, \
-             efficient-adam, fedsgd"
+             fedadam-ssm-ef, fedadam-ssm-m, fedadam-ssm-v, fairness-top, fedadam-ssm-q, \
+             fedadam-ssm-qef, onebit-adam, efficient-adam, fedsgd"
         ),
     })
+}
+
+/// Ids whose wire format depends on the `quant_levels` knob `s` — config
+/// validation rejects `s < 2` for these by name before a run starts.
+pub fn uses_quant_levels(id: &str) -> bool {
+    matches!(id, "efficient-adam" | "fedadam-ssm-q" | "fedadam-ssm-qef")
 }
 
 /// The paper's §VII algorithms (experiment sweeps iterate this).
@@ -191,10 +211,28 @@ pub const ALL_ALGORITHMS: [&str; 9] = [
     "fedsgd",
 ];
 
-/// Everything buildable, including the EF extension.
-pub const ALL_WITH_EXTENSIONS: [&str; 10] = [
+/// The eleven-id conformance zoo: the paper's nine plus the quantized-SSM
+/// composition pair (`benches/frontier.rs` sweeps the frontier they open).
+pub const CONFORMANCE_ZOO: [&str; 11] = [
+    "fedadam",
+    "fedadam-top",
+    "fedadam-ssm",
+    "fedadam-ssm-m",
+    "fedadam-ssm-v",
+    "fairness-top",
+    "fedadam-ssm-q",
+    "fedadam-ssm-qef",
+    "onebit-adam",
+    "efficient-adam",
+    "fedsgd",
+];
+
+/// Everything buildable, including the EF and quantized-SSM extensions.
+pub const ALL_WITH_EXTENSIONS: [&str; 12] = [
     "fedadam-ssm",
     "fedadam-ssm-ef",
+    "fedadam-ssm-q",
+    "fedadam-ssm-qef",
     "fedadam-top",
     "fairness-top",
     "fedadam-ssm-m",
@@ -219,6 +257,26 @@ mod tests {
         }
         cfg.algorithm = "bogus".into();
         assert!(build(&cfg, 1000).is_err());
+    }
+
+    #[test]
+    fn conformance_zoo_is_buildable_and_quant_ids_flagged() {
+        let cfg = ExperimentConfig::default();
+        for id in CONFORMANCE_ZOO {
+            assert!(
+                ALL_WITH_EXTENSIONS.contains(&id),
+                "{id} in zoo but not buildable set"
+            );
+            let mut c = cfg.clone();
+            c.algorithm = id.into();
+            assert_eq!(build(&c, 500).unwrap().name(), id);
+        }
+        for id in ["efficient-adam", "fedadam-ssm-q", "fedadam-ssm-qef"] {
+            assert!(uses_quant_levels(id), "{id}");
+        }
+        for id in ["fedadam-ssm", "fedadam", "onebit-adam", "fedsgd"] {
+            assert!(!uses_quant_levels(id), "{id}");
+        }
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! [--set cfg_key=value]...`.  `--set` is repeatable and maps straight onto
 //! [`crate::config::ExperimentConfig::set`] — every runtime knob,
 //! including the performance trio `num_workers` / `agg_shards` /
-//! `pipeline_depth`, rides through here with no dedicated flags.
+//! `pipeline_depth` and the quantized-SSM pair `algorithm=fedadam-ssm-q` /
+//! `quant_levels=s`, rides through here with no dedicated flags.
 
 use std::collections::BTreeMap;
 
@@ -120,6 +121,28 @@ mod tests {
         );
         assert!(c.flag("verbose"));
         assert!(!c.flag("quiet"));
+    }
+
+    #[test]
+    fn quantized_ssm_knobs_ride_through_set() {
+        // The quantized-SSM pair has no dedicated flags: algorithm id and
+        // s both travel via --set and must land on a valid config.
+        let c = parse(&[
+            "run",
+            "--set",
+            "algorithm=fedadam-ssm-q",
+            "--set",
+            "quant_levels=4",
+        ]);
+        let mut cfg = crate::config::ExperimentConfig::default();
+        for (k, v) in &c.sets {
+            cfg.set(k, v).unwrap();
+        }
+        assert_eq!(cfg.algorithm, "fedadam-ssm-q");
+        assert_eq!(cfg.quant_levels, 4);
+        cfg.validate().unwrap();
+        cfg.quant_levels = 1;
+        assert!(cfg.validate().unwrap_err().to_string().contains("fedadam-ssm-q"));
     }
 
     #[test]

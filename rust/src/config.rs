@@ -219,6 +219,17 @@ impl ExperimentConfig {
         if self.lr <= 0.0 {
             bail!("lr must be > 0");
         }
+        // Quantized algorithms get the check with the id in the message
+        // (an `s < 2` quantizer has no representable grid at all); the
+        // generic bound below still guards configs that merely carry the
+        // knob for a later `--set algorithm=` switch.
+        if crate::algorithms::uses_quant_levels(&self.algorithm) && self.quant_levels < 2 {
+            bail!(
+                "quant_levels must be >= 2 for algorithm {:?} (s-level quantizer), got {}",
+                self.algorithm,
+                self.quant_levels
+            );
+        }
         if self.quant_levels < 2 {
             bail!("quant_levels must be >= 2");
         }
@@ -237,6 +248,12 @@ impl ExperimentConfig {
     /// `agg_shards` / `pipeline_depth`.  Test base configs call this so
     /// one test binary can be swept across the
     /// worker × shard × pipeline grid without recompiling.
+    ///
+    /// (The per-algorithm CI lane's `FEDADAM_ALGORITHM` is deliberately
+    /// NOT handled here: algorithm ids carry per-test expectations — cost
+    /// formulas, momentum policies — so the conformance suite reads that
+    /// variable itself when choosing which ids to sweep, and every test
+    /// keeps pinning `algorithm` explicitly after this call.)
     ///
     /// Panics on a present-but-unparseable value: a typo'd matrix entry
     /// must fail the lane loudly, not silently test the defaults.
@@ -326,6 +343,28 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.quant_levels = 1;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn quantized_algorithms_reject_bad_levels_by_name() {
+        // Every quantized id must fail s < 2 with an error naming the id,
+        // not the generic bound — the fix the regression in efficient-adam
+        // -only checking used to hide.
+        for id in ["efficient-adam", "fedadam-ssm-q", "fedadam-ssm-qef"] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.algorithm = id.into();
+            cfg.quant_levels = 1;
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(id), "error {err:?} must name {id}");
+            cfg.quant_levels = 2;
+            cfg.validate().unwrap();
+        }
+        // Non-quantized ids still hit the generic bound (no id named).
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.quant_levels = 0;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(!err.contains("fedadam-ssm"), "generic bound names no id: {err:?}");
     }
 
     #[test]

@@ -74,6 +74,11 @@ OPTIONS:
                           0 = barrier, 1 = streaming aggregation, >= 2 =
                           plus train/eval overlap).  Results are
                           bit-identical at any worker/shard/depth.
+                          --set algorithm=fedadam-ssm-q --set quant_levels=4
+                          (quantized shared-sparse-mask uplink: s-level
+                          codes on the k kept lanes; -qef adds per-device
+                          error feedback.  quant_levels must be >= 2 for
+                          fedadam-ssm-q / fedadam-ssm-qef / efficient-adam)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

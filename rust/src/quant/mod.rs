@@ -1,15 +1,24 @@
 //! Quantizers for the baseline algorithms (mirrors of the Layer-1 kernels).
 //!
 //! - [`onebit`] — error-compensated sign quantization (1-bit Adam [29]);
-//! - [`uniform`] — s-level uniform quantization (Efficient-Adam [28]).
+//! - [`uniform`] — s-level uniform quantization (Efficient-Adam [28]);
+//! - [`sparse_uniform`] — s-level quantization of the SSM's kept lanes
+//!   (the FedAdam-SSM-Q composition: one shared mask, three packed
+//!   `k·ceil(log₂ s)`-bit value lists, three f32 scales).
 //!
-//! Both come with real bit-packing so the baselines pay (and we account)
-//! their true wire cost, plus an [`ErrorFeedback`] memory shared by both.
+//! All come with real bit-packing so the algorithms pay (and we account)
+//! their true wire cost, plus an [`ErrorFeedback`] memory shared by the
+//! error-compensated variants.
 
 pub mod onebit;
+pub mod sparse_uniform;
 pub mod uniform;
 
 pub use onebit::{onebit_compress, onebit_decompress, OneBitPacket};
+pub use sparse_uniform::{
+    sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
+    SparseUniformPacket, SsmQUplink,
+};
 pub use uniform::{uniform_compress, uniform_decompress, UniformPacket};
 
 /// Per-device error-feedback memory `e_t` (residual accumulator).

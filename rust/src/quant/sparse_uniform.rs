@@ -1,0 +1,225 @@
+//! Sparse s-level uniform quantization — the SSM × quantizer composition.
+//!
+//! The last unexplored cell of the paper's accuracy-vs-bits frontier:
+//! FedAdam-SSM's shared sparse mask picks `k` lanes, and instead of
+//! shipping three f32 value lists (`3kq` bits) each list is s-level
+//! uniform-quantized against its own max-magnitude scale — the same
+//! deterministic rounding as [`super::uniform`], restricted to the kept
+//! lanes.  Wire format per vector: `k·ceil(log₂ s)` packed bits + one f32
+//! scale; the mask travels once, `min{bitmap, index-list}`-coded exactly
+//! like the f32 SSM (`sparse::codec`).
+//!
+//! Reconstruction is an **exact dequantized [`SparseVec`]**: every masked
+//! lane keeps its index even when its (de)quantized value is `0.0` — the
+//! support on the wire is the priced support (see
+//! `SparseVec::from_dense`'s warning about exact-zero kept lanes).
+
+use crate::sparse::codec::{cost, decode_positions, encode_positions, index_bits, MaskEncoding, Q};
+use crate::sparse::SparseVec;
+
+/// One vector's kept-lane values, s-level quantized and bit-packed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseUniformPacket {
+    /// Kept-lane count (the mask's `k`; the mask itself lives outside).
+    pub k: usize,
+    /// Shared max-magnitude scale: `max |values|` over the kept lanes.
+    pub scale: f32,
+    /// Bin count `s - 1` (mirrors [`super::UniformPacket`]).
+    pub levels: u32,
+    /// LSB-first packed codes, `k · ceil(log₂ s)` bits.
+    pub codes: Vec<u8>,
+}
+
+impl SparseUniformPacket {
+    /// Representable levels `s`.
+    pub fn s_levels(&self) -> u32 {
+        self.levels + 1
+    }
+
+    /// Packed value-payload length in bits: `k · ceil(log₂ s)` (the scale
+    /// is priced separately).
+    pub fn payload_bits(&self) -> u64 {
+        self.k as u64 * index_bits(self.s_levels() as usize)
+    }
+}
+
+/// Quantize the kept-lane `values` to `s_levels` representable values
+/// (`s_levels >= 2`), packing `ceil(log₂ s)` bits per lane.
+///
+/// Delegates to the dense [`super::uniform_compress`] — the sparse
+/// quantizer IS the dense one restricted to the kept lanes, so the grid
+/// math (scale fold, safe divisor, rounding) lives in exactly one place.
+pub fn sparse_uniform_compress(values: &[f32], s_levels: u32) -> SparseUniformPacket {
+    let p = super::uniform_compress(values, s_levels);
+    SparseUniformPacket {
+        k: p.dim,
+        scale: p.scale,
+        levels: p.levels,
+        codes: p.codes,
+    }
+}
+
+/// Dequantize back to `k` values on the s-level grid (exactly `0.0`
+/// everywhere when the scale is zero).
+pub fn sparse_uniform_decompress(p: &SparseUniformPacket) -> Vec<f32> {
+    super::uniform::dequantize_codes(&p.codes, p.k, p.scale, p.levels)
+}
+
+/// Exact dequantized reconstruction at the mask's `indices`: the support
+/// is the index list verbatim — a lane dequantizing to `0.0` stays.
+pub fn reconstruct(dim: usize, indices: &[u32], p: &SparseUniformPacket) -> SparseVec {
+    debug_assert_eq!(indices.len(), p.k);
+    SparseVec {
+        dim,
+        indices: indices.to_vec(),
+        values: sparse_uniform_decompress(p),
+    }
+}
+
+/// One device's full quantized-SSM uplink message: one coded mask + three
+/// packed value lists + three f32 scales.
+#[derive(Clone, Debug)]
+pub struct SsmQUplink {
+    pub dim: usize,
+    pub k: usize,
+    /// Which position coding `min{bitmap, index-list}` picked.
+    pub encoding: MaskEncoding,
+    /// Packed mask bits (shared by all three vectors).
+    pub positions: Vec<u8>,
+    pub w: SparseUniformPacket,
+    pub m: SparseUniformPacket,
+    pub v: SparseUniformPacket,
+}
+
+impl SsmQUplink {
+    /// Total size on the wire in bits — equals
+    /// [`cost::fedadam_ssm_q`]`(dim, k, s)` by construction (the value
+    /// payload and scales are common to both mask codings, so minimizing
+    /// the mask bits minimizes the total).
+    pub fn wire_bits(&self) -> u64 {
+        let pos_bits = match self.encoding {
+            MaskEncoding::Bitmap => self.dim as u64,
+            MaskEncoding::IndexList => self.k as u64 * index_bits(self.dim),
+        };
+        pos_bits + self.w.payload_bits() + self.m.payload_bits() + self.v.payload_bits() + 3 * Q
+    }
+}
+
+/// Encode the shared mask + the three kept-lane value lists.
+pub fn ssm_q_encode(
+    dim: usize,
+    indices: &[u32],
+    w_vals: &[f32],
+    m_vals: &[f32],
+    v_vals: &[f32],
+    s_levels: u32,
+) -> SsmQUplink {
+    debug_assert!(indices.len() == w_vals.len());
+    debug_assert!(indices.len() == m_vals.len() && indices.len() == v_vals.len());
+    let (encoding, positions) = encode_positions(dim, indices);
+    let msg = SsmQUplink {
+        dim,
+        k: indices.len(),
+        encoding,
+        positions,
+        w: sparse_uniform_compress(w_vals, s_levels),
+        m: sparse_uniform_compress(m_vals, s_levels),
+        v: sparse_uniform_compress(v_vals, s_levels),
+    };
+    debug_assert_eq!(
+        msg.wire_bits(),
+        cost::fedadam_ssm_q(dim, msg.k, s_levels as usize),
+        "encoded quantized-SSM message disagrees with the priced ledger formula"
+    );
+    msg
+}
+
+/// Decode to the three exact dequantized [`SparseVec`]s the server sees.
+pub fn ssm_q_decode(msg: &SsmQUplink) -> (SparseVec, SparseVec, SparseVec) {
+    let indices = decode_positions(msg.encoding, msg.dim, msg.k, &msg.positions);
+    let w = reconstruct(msg.dim, &indices, &msg.w);
+    let m = reconstruct(msg.dim, &indices, &msg.m);
+    let v = reconstruct(msg.dim, &indices, &msg.v);
+    (w, m, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::top_k_indices;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_bin() {
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..500).map(|_| rng.normal() as f32).collect();
+        for &s in &[2u32, 3, 4, 5, 16, 256] {
+            let p = sparse_uniform_compress(&x, s);
+            let y = sparse_uniform_decompress(&p);
+            let bin = 2.0 * p.scale / (s - 1) as f32;
+            for (xi, yi) in x.iter().zip(&y) {
+                assert!((xi - yi).abs() <= bin / 2.0 + 1e-5, "s={s} x={xi} y={yi}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_uniform_quantizer_on_same_values() {
+        // The sparse quantizer is the dense one restricted to kept lanes:
+        // identical grid, identical codes, identical dequantization.
+        let mut rng = Rng::new(22);
+        let x: Vec<f32> = (0..200).map(|_| rng.normal() as f32).collect();
+        for &s in &[2u32, 5, 16] {
+            let dense = crate::quant::uniform_compress(&x, s);
+            let sparse = sparse_uniform_compress(&x, s);
+            assert_eq!(sparse.scale, dense.scale, "s={s}");
+            assert_eq!(sparse.codes, dense.codes, "s={s}");
+            assert_eq!(
+                sparse_uniform_decompress(&sparse),
+                crate::quant::uniform_decompress(&dense),
+                "s={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn all_zero_kept_lanes_reconstruct_exactly() {
+        let p = sparse_uniform_compress(&[0.0; 7], 16);
+        assert_eq!(p.scale, 0.0);
+        let sv = reconstruct(100, &[3, 10, 20, 30, 40, 50, 99], &p);
+        assert_eq!(sv.nnz(), 7, "zero-valued kept lanes must keep their indices");
+        assert_eq!(sv.values, vec![0.0; 7]);
+    }
+
+    #[test]
+    fn message_roundtrip_and_wire_bits() {
+        let mut rng = Rng::new(23);
+        let d = 4096;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        for &k in &[1usize, 64, 500, d] {
+            let idx = top_k_indices(&x, k);
+            let gather = |src: &[f32]| -> Vec<f32> {
+                idx.iter().map(|&i| src[i as usize]).collect()
+            };
+            let (wv, mv, vv) = (gather(&x), gather(&x), gather(&x));
+            for &s in &[2u32, 3, 16] {
+                let msg = ssm_q_encode(d, &idx, &wv, &mv, &vv, s);
+                assert_eq!(msg.wire_bits(), cost::fedadam_ssm_q(d, k, s as usize));
+                let (sw, sm, sv) = ssm_q_decode(&msg);
+                assert_eq!(sw.indices, idx, "k={k} s={s}: mask lost on the wire");
+                assert_eq!(sm.indices, idx);
+                assert_eq!(sv.indices, idx);
+                assert_eq!(sw.values, sparse_uniform_decompress(&msg.w));
+                assert_eq!(sw.nnz(), k);
+            }
+        }
+    }
+
+    #[test]
+    fn extremes_and_midpoint_are_exact_for_odd_s() {
+        // Odd s puts a representable level at exactly 0, so {-max, 0, max}
+        // survive the round trip bit-exactly.
+        let p = sparse_uniform_compress(&[-2.0, 0.0, 2.0], 5);
+        assert_eq!(sparse_uniform_decompress(&p), vec![-2.0, 0.0, 2.0]);
+    }
+}

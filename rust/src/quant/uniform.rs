@@ -45,15 +45,23 @@ pub fn uniform_compress(x: &[f32], s_levels: u32) -> UniformPacket {
 
 /// Dequantize.
 pub fn uniform_decompress(p: &UniformPacket) -> Vec<f32> {
-    if p.scale == 0.0 {
-        return vec![0.0; p.dim];
+    dequantize_codes(&p.codes, p.dim, p.scale, p.levels)
+}
+
+/// Unpack `n` codes and map them back onto the s-level grid — the shared
+/// back half of the dense ([`uniform_decompress`]) and sparse
+/// (`super::sparse_uniform`) decompressors, so the grid math lives once.
+pub(crate) fn dequantize_codes(codes: &[u8], n: usize, scale: f32, levels: u32) -> Vec<f32> {
+    if scale == 0.0 {
+        // All inputs were exactly 0.0 — reconstruct them exactly.
+        return vec![0.0; n];
     }
-    let bits = index_bits(p.levels as usize + 1);
-    let mut u = BitUnpacker::new(&p.codes);
-    (0..p.dim)
+    let bits = index_bits(levels as usize + 1);
+    let mut u = BitUnpacker::new(codes);
+    (0..n)
         .map(|_| {
             let q = u.pull(bits) as f32;
-            (q / p.levels as f32 * 2.0 - 1.0) * p.scale
+            (q / levels as f32 * 2.0 - 1.0) * scale
         })
         .collect()
 }

@@ -81,6 +81,21 @@ pub mod cost {
     pub fn uniform(d: usize, s_levels: usize) -> u64 {
         d as u64 * index_bits(s_levels) + Q
     }
+
+    /// Quantized SSM (FedAdam-SSM-Q / -QEF): three `s`-level-quantized
+    /// value lists under ONE shared mask, plus one f32 scale per vector —
+    /// `min{3k·ceil(log₂ s) + d, k(3·ceil(log₂ s) + log₂ d)} + 3q`.
+    ///
+    /// The value payload (`3k·ceil(log₂ s)` bits) and the three scales are
+    /// common to both branches, so the `min{}` reduces to the same
+    /// bitmap-vs-index-list choice [`super::mask_bits`] makes — the
+    /// encoded [`crate::quant::SsmQUplink`] is bit-for-bit this size.
+    pub fn fedadam_ssm_q(d: usize, k: usize, s_levels: usize) -> u64 {
+        let b = index_bits(s_levels);
+        let bitmap = 3 * k as u64 * b + d as u64;
+        let index = k as u64 * (3 * b + index_bits(d));
+        bitmap.min(index) + 3 * Q
+    }
 }
 
 /// A bit-exact encoded sparse vector (positions + f32 payloads).
@@ -110,26 +125,54 @@ fn mask_bits_for(enc: MaskEncoding, dim: usize, k: usize) -> (u64, MaskEncoding)
     }
 }
 
-/// Encode with the cheaper position encoding.
-pub fn encode(sv: &SparseVec) -> EncodedSparse {
-    let (_, enc) = mask_bits(sv.dim, sv.nnz());
-    let positions = match enc {
+/// Pack `indices` (sorted unique lanes of `[0, dim)`) with the cheaper
+/// position encoding — the shared front half of every sparse wire format
+/// (f32 [`encode`] and the quantized [`crate::quant::SsmQUplink`] alike).
+pub fn encode_positions(dim: usize, indices: &[u32]) -> (MaskEncoding, Vec<u8>) {
+    let (_, enc) = mask_bits(dim, indices.len());
+    let bytes = match enc {
         MaskEncoding::Bitmap => {
-            let mut bytes = vec![0u8; sv.dim.div_ceil(8)];
-            for &i in &sv.indices {
+            let mut bytes = vec![0u8; dim.div_ceil(8)];
+            for &i in indices {
                 bytes[i as usize / 8] |= 1 << (i % 8);
             }
             bytes
         }
         MaskEncoding::IndexList => {
-            let bits = index_bits(sv.dim);
-            let mut packer = BitPacker::with_capacity(sv.nnz() * bits as usize);
-            for &i in &sv.indices {
+            let bits = index_bits(dim);
+            let mut packer = BitPacker::with_capacity(indices.len() * bits as usize);
+            for &i in indices {
                 packer.push(i as u64, bits);
             }
             packer.finish()
         }
     };
+    (enc, bytes)
+}
+
+/// Recover the `k` sorted indices packed by [`encode_positions`].
+pub fn decode_positions(enc: MaskEncoding, dim: usize, k: usize, bytes: &[u8]) -> Vec<u32> {
+    match enc {
+        MaskEncoding::Bitmap => {
+            let mut out = Vec::with_capacity(k);
+            for i in 0..dim {
+                if bytes[i / 8] & (1 << (i % 8)) != 0 {
+                    out.push(i as u32);
+                }
+            }
+            out
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(dim);
+            let mut unpacker = BitUnpacker::new(bytes);
+            (0..k).map(|_| unpacker.pull(bits) as u32).collect()
+        }
+    }
+}
+
+/// Encode with the cheaper position encoding.
+pub fn encode(sv: &SparseVec) -> EncodedSparse {
+    let (enc, positions) = encode_positions(sv.dim, &sv.indices);
     let mut payload = Vec::with_capacity(sv.nnz() * 4);
     for &v in &sv.values {
         payload.extend_from_slice(&v.to_le_bytes());
@@ -145,22 +188,7 @@ pub fn encode(sv: &SparseVec) -> EncodedSparse {
 
 /// Decode back to a [`SparseVec`].
 pub fn decode(es: &EncodedSparse) -> SparseVec {
-    let indices: Vec<u32> = match es.encoding {
-        MaskEncoding::Bitmap => {
-            let mut out = Vec::with_capacity(es.k);
-            for i in 0..es.dim {
-                if es.positions[i / 8] & (1 << (i % 8)) != 0 {
-                    out.push(i as u32);
-                }
-            }
-            out
-        }
-        MaskEncoding::IndexList => {
-            let bits = index_bits(es.dim);
-            let mut unpacker = BitUnpacker::new(&es.positions);
-            (0..es.k).map(|_| unpacker.pull(bits) as u32).collect()
-        }
-    };
+    let indices = decode_positions(es.encoding, es.dim, es.k, &es.positions);
     let values = es
         .payload
         .chunks_exact(4)
@@ -318,6 +346,82 @@ mod tests {
         let mut u = BitUnpacker::new(&bytes);
         for &(v, n) in &vals {
             assert_eq!(u.pull(n), v);
+        }
+    }
+
+    #[test]
+    fn bitpacker_payload_ending_on_byte_boundary() {
+        // Regression: a payload whose bit-length is an exact multiple of 8
+        // must produce exactly bits/8 bytes (no trailing padding byte) and
+        // round-trip losslessly — the quantized-SSM wire format hits this
+        // whenever `k * ceil(log2 s) % 8 == 0`.
+        for &(width, count) in &[(4u64, 8usize), (8, 3), (2, 12), (3, 8), (5, 8), (1, 16)] {
+            assert_eq!((width as usize * count) % 8, 0, "case must end on a byte");
+            let mut p = BitPacker::with_capacity(width as usize * count);
+            let vals: Vec<u64> = (0..count as u64).map(|i| i % (1 << width)).collect();
+            for &v in &vals {
+                p.push(v, width);
+            }
+            let bytes = p.finish();
+            assert_eq!(
+                bytes.len(),
+                width as usize * count / 8,
+                "width {width} x {count}: byte-boundary payload grew a pad byte"
+            );
+            let mut u = BitUnpacker::new(&bytes);
+            for &v in &vals {
+                assert_eq!(u.pull(width), v, "width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitpacker_non_power_of_two_level_widths() {
+        // `ceil(log2 s)` for non-power-of-two s: s = 3 -> 2 bits,
+        // s = 5 -> 3 bits.  Every representable code must survive packing
+        // at that width, including runs that straddle byte boundaries.
+        for &s in &[3usize, 5, 6, 7, 9] {
+            let width = index_bits(s);
+            assert!((1u64 << width) >= s as u64 && (1u64 << (width - 1)) < s as u64);
+            let codes: Vec<u64> = (0..64u64).map(|i| i % s as u64).collect();
+            let mut p = BitPacker::with_capacity(codes.len() * width as usize);
+            for &c in &codes {
+                p.push(c, width);
+            }
+            let bytes = p.finish();
+            assert_eq!(bytes.len(), (codes.len() * width as usize).div_ceil(8));
+            let mut u = BitUnpacker::new(&bytes);
+            for (i, &c) in codes.iter().enumerate() {
+                assert_eq!(u.pull(width), c, "s={s} code #{i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ssm_q_cost_below_ssm_and_above_mask_only() {
+        // Quantizing the three value lists can only shrink the SSM uplink
+        // (for s < 2^32); the mask + scales are a hard floor.
+        for &(d, k) in &[(100_000usize, 5_000usize), (1_000_000, 10_000), (170, 8)] {
+            for &s in &[2usize, 3, 4, 5, 16, 256] {
+                let q = cost::fedadam_ssm_q(d, k, s);
+                assert!(q < cost::fedadam_ssm(d, k), "d={d} k={k} s={s}");
+                let (mask, _) = mask_bits(d, k);
+                assert!(q >= mask + 3 * Q, "d={d} k={k} s={s}");
+                // Exact composition: mask + 3k·ceil(log2 s) + 3 scales.
+                assert_eq!(q, mask + 3 * k as u64 * index_bits(s) + 3 * Q);
+            }
+        }
+        // More levels never cost fewer bits.
+        assert!(cost::fedadam_ssm_q(1000, 50, 16) >= cost::fedadam_ssm_q(1000, 50, 4));
+    }
+
+    #[test]
+    fn position_helpers_roundtrip_both_encodings() {
+        let d = 1 << 12;
+        for k in [1usize, 7, 100, d / 2, d] {
+            let indices: Vec<u32> = (0..k as u32).map(|i| i * (d / k) as u32).collect();
+            let (enc, bytes) = encode_positions(d, &indices);
+            assert_eq!(decode_positions(enc, d, k, &bytes), indices, "k={k} {enc:?}");
         }
     }
 }

@@ -2,18 +2,26 @@
 //!
 //! For every algorithm id in the cost table of `rust/src/algorithms/mod.rs`
 //! (`fedadam`, `fedadam-top`, `fedadam-ssm`, `fedadam-ssm-m`,
-//! `fedadam-ssm-v`, `fairness-top`, `onebit-adam`, `efficient-adam`,
-//! `fedsgd`), this suite runs a short multi-round coordinator loop on the
-//! pure-Rust reference backend (no PJRT artifacts needed — these tests
-//! run everywhere) and pins:
+//! `fedadam-ssm-v`, `fairness-top`, `fedadam-ssm-q`, `fedadam-ssm-qef`,
+//! `onebit-adam`, `efficient-adam`, `fedsgd` — the eleven-id
+//! [`algorithms::CONFORMANCE_ZOO`]), this suite runs a short multi-round
+//! coordinator loop on the pure-Rust reference backend (no PJRT artifacts
+//! needed — these tests run everywhere) and pins:
 //!
 //! - the per-round uplink **ledger bits** to the documented cost formula,
 //! - the reconstructed **support sizes** to the priced `k`,
 //! - the **momentum policy** (aggregated vs device-local `(m, v)`),
-//! - full-run **bit-identity** across `num_workers` × `agg_shards`,
+//! - full-run **bit-identity** across `num_workers` × `agg_shards`
+//!   (× `pipeline_depth`),
 //! - parallel eval **bit-identity** + zero-weight padding neutrality.
+//!
+//! The CI per-algorithm lane sets `FEDADAM_ALGORITHM` to pin the zoo
+//! sweeps to one id (crossed with `FEDADAM_PIPELINE_DEPTH`); without it
+//! the full zoo runs.
 
-use fedadam_ssm::algorithms::{self, Algorithm as _, LocalDelta, MomentumPolicy, Recon};
+use fedadam_ssm::algorithms::{
+    self, Algorithm as _, LocalDelta, MomentumPolicy, Recon, CONFORMANCE_ZOO,
+};
 use fedadam_ssm::config::ExperimentConfig;
 use fedadam_ssm::coordinator::{evaluate_model, evaluate_plan, Coordinator, EvalPlan};
 use fedadam_ssm::data::synthetic;
@@ -21,22 +29,40 @@ use fedadam_ssm::metrics::ExperimentLog;
 use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
 use fedadam_ssm::sparse::codec::cost;
 
-/// All nine ids of the §VII cost table, in table order.
-const ZOO: [&str; 9] = [
-    "fedadam",
-    "fedadam-top",
-    "fedadam-ssm",
-    "fedadam-ssm-m",
-    "fedadam-ssm-v",
-    "fairness-top",
-    "onebit-adam",
-    "efficient-adam",
-    "fedsgd",
-];
-
 const INPUT_SHAPE: [usize; 3] = [4, 4, 1]; // row 16
 const CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
 const WARMUP: usize = 2;
+
+/// Ids under test: the full eleven-id zoo, or just `FEDADAM_ALGORITHM`
+/// when the CI per-algorithm lane pins one.
+fn zoo_under_test() -> Vec<&'static str> {
+    match std::env::var("FEDADAM_ALGORITHM") {
+        Ok(a) if !a.is_empty() => {
+            let id = CONFORMANCE_ZOO
+                .iter()
+                .find(|z| **z == a)
+                .unwrap_or_else(|| panic!("FEDADAM_ALGORITHM={a:?} is not in the conformance zoo"));
+            vec![*id]
+        }
+        _ => CONFORMANCE_ZOO.to_vec(),
+    }
+}
+
+/// Algorithms for the (expensive) full-run bit-identity grids: the default
+/// trio of distinct state shapes plus the quantized-SSM pair, or the one
+/// id the CI lane pins.
+fn identity_zoo() -> Vec<&'static str> {
+    match std::env::var("FEDADAM_ALGORITHM") {
+        Ok(a) if !a.is_empty() => zoo_under_test(),
+        _ => vec![
+            "fedadam-ssm",
+            "fedadam-ssm-q",
+            "fedadam-ssm-qef",
+            "onebit-adam",
+            "efficient-adam",
+        ],
+    }
+}
 
 fn meta() -> ModelMeta {
     // dim = 10 * (16 + 1) = 170
@@ -47,7 +73,6 @@ fn base_cfg(algo: &str) -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
     cfg.name = "conformance".into();
     cfg.model = "reference-linear".into();
-    cfg.algorithm = algo.into();
     cfg.rounds = 4;
     cfg.devices = 3;
     cfg.local_epochs = 1;
@@ -61,7 +86,11 @@ fn base_cfg(algo: &str) -> ExperimentConfig {
     cfg.warmup_rounds = WARMUP;
     cfg.num_workers = 2;
     cfg.agg_shards = 0; // auto: one shard per pool worker
-    cfg.apply_env_overrides(); // CI determinism matrix hook
+    cfg.apply_env_overrides(); // CI determinism-matrix hook (workers/shards/depth)
+    // FEDADAM_ALGORITHM steers WHICH ids the zoo sweeps run
+    // (`zoo_under_test()` / `identity_zoo()` read it directly); each test
+    // still pins its current id explicitly here.
+    cfg.algorithm = algo.into();
     cfg
 }
 
@@ -81,6 +110,7 @@ fn expected_uplink(algo: &str, round: usize, d: usize, k: usize, s: usize) -> u6
         "fedadam-ssm" | "fedadam-ssm-m" | "fedadam-ssm-v" | "fairness-top" => {
             cost::fedadam_ssm(d, k)
         }
+        "fedadam-ssm-q" | "fedadam-ssm-qef" => cost::fedadam_ssm_q(d, k, s),
         "onebit-adam" => {
             if round < WARMUP {
                 cost::fedadam_dense(d)
@@ -106,7 +136,7 @@ fn per_round(cumulative: impl Iterator<Item = u64>) -> Vec<u64> {
 fn ledger_bits_match_cost_table_for_every_algorithm() {
     let m = meta();
     let d = m.dim;
-    for algo in ZOO {
+    for algo in zoo_under_test() {
         let cfg = base_cfg(algo);
         let k = cfg.k_for(d);
         let s = cfg.quant_levels;
@@ -185,9 +215,8 @@ fn compressed_support_matches_priced_k() {
         }
     };
 
-    for algo in ZOO {
-        let mut cfg = base_cfg(algo);
-        cfg.algorithm = algo.into();
+    for algo in zoo_under_test() {
+        let cfg = base_cfg(algo);
         let mut a = algorithms::build(&cfg, d).unwrap();
         assert_eq!(a.name(), algo);
         for round in 0..4 {
@@ -198,9 +227,12 @@ fn compressed_support_matches_priced_k() {
                 "{algo}: round {round} priced bits"
             );
             match algo {
-                "fedadam-ssm" | "fedadam-ssm-m" | "fedadam-ssm-v" | "fairness-top" => {
+                "fedadam-ssm" | "fedadam-ssm-m" | "fedadam-ssm-v" | "fairness-top"
+                | "fedadam-ssm-q" | "fedadam-ssm-qef" => {
                     // Shared mask: exactly k stored lanes in ALL THREE
-                    // vectors, on identical indices.
+                    // vectors, on identical indices — for the quantized
+                    // pair the support must survive dequantization even
+                    // where values land on exactly 0.0.
                     assert_eq!(nnz(&up.dw), k, "{algo}: ΔŴ support != priced k");
                     let iw = indices(&up.dw).expect("sparse ΔŴ");
                     let im = indices(up.dm.as_ref().expect("ΔM̂ present")).unwrap();
@@ -240,7 +272,7 @@ fn compressed_support_matches_priced_k() {
 #[test]
 fn momentum_policy_matches_table() {
     let d = meta().dim;
-    for algo in ZOO {
+    for algo in zoo_under_test() {
         let cfg = base_cfg(algo);
         let a = algorithms::build(&cfg, d).unwrap();
         for round in 0..4 {
@@ -263,7 +295,7 @@ fn momentum_policy_is_honored_by_global_state() {
     // Aggregated-moment algorithms must move the server's (M, V);
     // device-local (and momentum-free) algorithms must leave them at the
     // initial zeros — the server never sees their moments.
-    for algo in ZOO {
+    for algo in zoo_under_test() {
         let (_, _, m, v) = run(base_cfg(algo));
         let m_moved = m.iter().any(|&x| x != 0.0);
         let v_moved = v.iter().any(|&x| x != 0.0);
@@ -287,7 +319,7 @@ fn runs_are_bit_identical_across_workers_and_shards() {
     // batch-order-fixed, training is device-order-fixed — every logged
     // number and the final model must be byte-identical at any
     // (num_workers, agg_shards).
-    for algo in ["fedadam-ssm", "onebit-adam", "efficient-adam"] {
+    for algo in identity_zoo() {
         let run_with = |workers: usize, shards: usize| {
             let mut cfg = base_cfg(algo);
             cfg.participation = 0.75; // exercise the sampler path too
@@ -355,7 +387,7 @@ fn pipelined_loop_is_bit_identical_to_barrier() {
     // the depth × workers × shards grid.  eval_every = 2 leaves non-eval
     // rounds in the log, so overlapped evals patch earlier rows while the
     // loop is still running.
-    for algo in ["fedadam-ssm", "onebit-adam", "efficient-adam"] {
+    for algo in identity_zoo() {
         let run_with = |depth: usize, workers: usize, shards: usize| {
             let mut cfg = base_cfg(algo);
             cfg.rounds = 5;

@@ -4,9 +4,12 @@
 
 use fedadam_ssm::algorithms::{Recon, Upload};
 use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, ShardedAccumulator};
+use fedadam_ssm::quant::sparse_uniform::{
+    reconstruct, sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
+};
 use fedadam_ssm::quant::{onebit_compress, onebit_decompress, uniform_compress, uniform_decompress, ErrorFeedback};
 use fedadam_ssm::rng::Rng;
-use fedadam_ssm::sparse::codec::{self, cost};
+use fedadam_ssm::sparse::codec::{self, cost, index_bits};
 use fedadam_ssm::sparse::{top_k_indices, top_k_threshold, SparseVec};
 use fedadam_ssm::tensor;
 
@@ -152,6 +155,109 @@ fn prop_uniform_quant_error_within_half_bin() {
                 (xi - yi).abs()
             );
         }
+    }
+}
+
+#[test]
+fn prop_sparse_uniform_roundtrip_error_within_half_bin() {
+    // Quantized-SSM value lists: for every kept lane,
+    // |x - dequant(quant(x))| <= bin/2 where bin = 2·scale/(s-1) — same
+    // bound as the dense quantizer, restricted to the mask.
+    let mut rng = Rng::new(111);
+    for _ in 0..60 {
+        let d = 1 + rng.below(2000);
+        let k = 1 + rng.below(d);
+        let x = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&x, k);
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        let s = 2 + rng.below(255) as u32;
+        let p = sparse_uniform_compress(&vals, s);
+        let y = sparse_uniform_decompress(&p);
+        assert_eq!(y.len(), k);
+        let bin = if p.scale > 0.0 {
+            2.0 * p.scale / (s - 1) as f32
+        } else {
+            0.0
+        };
+        for (vi, yi) in vals.iter().zip(&y) {
+            assert!(
+                (vi - yi).abs() <= bin / 2.0 + 1e-5,
+                "d={d} k={k} s={s}: err {} > half-bin {}",
+                (vi - yi).abs(),
+                bin / 2.0
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_uniform_exact_zero_lanes_keep_indices() {
+    // A kept lane whose value is exactly 0.0 must survive
+    // quantize -> dequantize with its index intact: the reconstructed
+    // SparseVec's support is the mask, never a non-zero recount.  When ALL
+    // kept lanes are zero (scale 0) the values come back exactly 0.0 too.
+    let mut rng = Rng::new(112);
+    for trial in 0..60 {
+        let d = 2 + rng.below(1000);
+        let k = 1 + rng.below(d);
+        let scores = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&scores, k);
+        let all_zero = trial % 3 == 0;
+        let vals: Vec<f32> = idx
+            .iter()
+            .map(|_| {
+                if all_zero || rng.below(3) == 0 {
+                    0.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        let s = 2 + rng.below(30) as u32;
+        let p = sparse_uniform_compress(&vals, s);
+        let sv = reconstruct(d, &idx, &p);
+        assert_eq!(sv.indices, idx, "trial {trial}: support lost indices");
+        assert_eq!(sv.nnz(), k, "trial {trial}: support shrank below priced k");
+        if all_zero {
+            assert_eq!(p.scale, 0.0);
+            assert_eq!(sv.values, vec![0.0; k], "trial {trial}: zeros not exact");
+        }
+    }
+}
+
+#[test]
+fn prop_ssm_q_packed_bits_equal_priced_ledger_formula() {
+    // The encoded message's exact bit-length — coded mask + three packed
+    // k·ceil(log2 s) payloads + three f32 scales — must equal
+    // cost::fedadam_ssm_q(d, k, s) for random (d, k, s), and the packed
+    // byte buffers must carry no more than one byte of slack each.
+    let mut rng = Rng::new(114);
+    for _ in 0..80 {
+        let d = 1 + rng.below(5000);
+        let k = 1 + rng.below(d);
+        let s = 2 + rng.below(300) as u32;
+        let x = gen_vec(&mut rng, d.max(1));
+        let idx = top_k_indices(&x, k);
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        let msg = ssm_q_encode(d, &idx, &vals, &vals, &vals, s);
+        assert_eq!(
+            msg.wire_bits(),
+            cost::fedadam_ssm_q(d, k, s as usize),
+            "d={d} k={k} s={s}"
+        );
+        for packet in [&msg.w, &msg.m, &msg.v] {
+            assert_eq!(packet.payload_bits(), k as u64 * index_bits(s as usize));
+            assert_eq!(
+                packet.codes.len(),
+                (packet.payload_bits() as usize).div_ceil(8),
+                "d={d} k={k} s={s}: packed payload has byte slack"
+            );
+        }
+        // And the bits decode back to the exact dequantized triple.
+        let (sw, sm, sv) = ssm_q_decode(&msg);
+        assert_eq!(sw.indices, idx);
+        assert_eq!(sw.values, sparse_uniform_decompress(&msg.w));
+        assert_eq!(sm.values, sv.values, "same input values, same grid");
     }
 }
 

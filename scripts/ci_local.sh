@@ -7,13 +7,17 @@
 #      FEDADAM_* env overrides the test base configs read
 #      (the determinism-bearing suites only, to keep the sweep fast;
 #      CI re-runs the full suite per grid point)
-#   3. clippy -D warnings + rustfmt --check (skipped with a note when the
+#   3. quantized-SSM conformance lanes: FEDADAM_ALGORITHM in
+#      {fedadam-ssm-q, fedadam-ssm-qef} x FEDADAM_PIPELINE_DEPTH in {0, 2}
+#      pins the conformance suite to one quantized id per lane
+#   4. clippy -D warnings + rustfmt --check (skipped with a note when the
 #      components aren't installed)
-#   4. rustdoc + doc-tests
-#   5. benches stay buildable (cargo bench --no-run)
+#   5. rustdoc + doc-tests
+#   6. benches stay buildable (cargo bench --no-run)
 #
 # Usage: scripts/ci_local.sh [--quick]
-#   --quick  skip the determinism grid (tier-1 + lint + docs + benches only)
+#   --quick  skip the determinism + conformance grids
+#            (tier-1 + lint + docs + benches only)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -39,6 +43,15 @@ if [[ "$QUICK" == 0 ]]; then
         FEDADAM_PIPELINE_DEPTH=$pipeline \
           cargo test -q --test algorithm_conformance --test coordinator_e2e --test proptests
       done
+    done
+  done
+
+  for algo in fedadam-ssm-q fedadam-ssm-qef; do
+    for pipeline in 0 2; do
+      step "conformance: algorithm=$algo pipeline_depth=$pipeline"
+      FEDADAM_ALGORITHM=$algo \
+      FEDADAM_PIPELINE_DEPTH=$pipeline \
+        cargo test -q --test algorithm_conformance
     done
   done
 fi
