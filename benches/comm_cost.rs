@@ -1,17 +1,88 @@
 //! §IV communication-model bench + verification table.
 //!
 //! Prints the paper's uplink cost for every scheme across models and α,
-//! verifying the headline `O(3dq) → O(3kq+3d) → O(3kq+d)` reduction, and
-//! times the real wire codecs (encode+decode round trips).
+//! verifying the headline `O(3dq) → O(3kq+3d) → O(3kq+d)` reduction,
+//! prints the **canonical eleven-id formula table** (asserted to cover
+//! exactly [`fedadam_ssm::algorithms::CONFORMANCE_ZOO`] — the same table
+//! as `rust/src/algorithms/mod.rs`, README and `docs/ARCHITECTURE.md`),
+//! and times the real wire codecs (encode+decode round trips).
 //!
 //! Run: `cargo bench --bench comm_cost`.
 
+use fedadam_ssm::algorithms::CONFORMANCE_ZOO;
 use fedadam_ssm::benchlib::{black_box, from_env};
 use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::codec::{self, cost};
 use fedadam_ssm::sparse::{top_k_indices, SparseVec};
 
+/// The canonical per-device/round uplink formula per algorithm id, at a
+/// reference point — one row per conformance-zoo id (`q = 32`,
+/// `b = ceil(log₂ s)`; `onebit-adam` priced post-warmup).
+fn zoo_cost_table(d: usize, k: usize, s: usize) -> Vec<(&'static str, &'static str, u64)> {
+    vec![
+        ("fedadam", "3dq", cost::fedadam_dense(d)),
+        (
+            "fedadam-top",
+            "min{3(kq+d), 3k(q+log2 d)}",
+            cost::fedadam_top(d, k),
+        ),
+        (
+            "fedadam-ssm",
+            "min{3kq+d, k(3q+log2 d)}",
+            cost::fedadam_ssm(d, k),
+        ),
+        (
+            "fedadam-ssm-m",
+            "min{3kq+d, k(3q+log2 d)}",
+            cost::fedadam_ssm(d, k),
+        ),
+        (
+            "fedadam-ssm-v",
+            "min{3kq+d, k(3q+log2 d)}",
+            cost::fedadam_ssm(d, k),
+        ),
+        (
+            "fairness-top",
+            "min{3kq+d, k(3q+log2 d)}",
+            cost::fedadam_ssm(d, k),
+        ),
+        (
+            "fedadam-ssm-q",
+            "min{3kb+d, k(3b+log2 d)} + 3q",
+            cost::fedadam_ssm_q(d, k, s),
+        ),
+        (
+            "fedadam-ssm-qef",
+            "min{3kb+d, k(3b+log2 d)} + 3q",
+            cost::fedadam_ssm_q(d, k, s),
+        ),
+        ("onebit-adam", "warmup 3dq, then d + q", cost::onebit(d)),
+        ("efficient-adam", "d*ceil(log2 s) + q", cost::uniform(d, s)),
+        ("fedsgd", "dq", cost::fedsgd_dense(d)),
+    ]
+}
+
 fn main() {
+    // --- canonical eleven-id table (doc-drift guard) ---------------------
+    // The id set is asserted against algorithms::CONFORMANCE_ZOO so this
+    // bench, the module-doc table in rust/src/algorithms/mod.rs, README
+    // and docs/ARCHITECTURE.md can never silently diverge on WHICH ids
+    // exist; the conformance suite pins each id's ledger to these exact
+    // functions.
+    let (d_ref, s_ref) = (176_778usize, 16usize);
+    let k_ref = (d_ref as f64 * 0.05) as usize;
+    let table = zoo_cost_table(d_ref, k_ref, s_ref);
+    let mut ids: Vec<&str> = table.iter().map(|(id, _, _)| *id).collect();
+    let mut zoo: Vec<&str> = CONFORMANCE_ZOO.to_vec();
+    ids.sort_unstable();
+    zoo.sort_unstable();
+    assert_eq!(ids, zoo, "cost table must cover exactly the conformance zoo");
+    println!("=== uplink per device/round: the eleven-id zoo (d = {d_ref}, alpha = 0.05, s = {s_ref}, q = 32) ===");
+    println!("{:<17} {:>14}   formula", "id", "bits");
+    for (id, formula, bits) in &table {
+        println!("{id:<17} {bits:>14}   {formula}");
+    }
+    println!();
     // --- cost table (exact, no timing) ----------------------------------
     println!("=== §IV uplink bits per device/round (q = 32) ===");
     println!(

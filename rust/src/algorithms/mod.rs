@@ -7,6 +7,12 @@
 //! device's `(ΔW, ΔM, ΔV)` is compressed, what it costs in bits, what the
 //! server reconstructs, and which global state is updated.
 //!
+//! The canonical eleven-id cost table (`q = 32`, `k = round(α·d)`,
+//! `b = ceil(log2 s)`) — mirrored by README, `docs/ARCHITECTURE.md` and
+//! `benches/comm_cost.rs` (which asserts its id set against
+//! [`CONFORMANCE_ZOO`]); the conformance suite pins every id's per-round
+//! ledger to the matching `sparse::codec::cost` function:
+//!
 //! | id                | uplink per device/round                 | moments    |
 //! |-------------------|------------------------------------------|------------|
 //! | `fedadam`         | `3dq` dense                              | aggregated |
@@ -15,10 +21,10 @@
 //! | `fedadam-ssm-m`   | same cost (mask of ΔM)                   | aggregated |
 //! | `fedadam-ssm-v`   | same cost (mask of ΔV)                   | aggregated |
 //! | `fairness-top`    | same cost (mask of the normalized union) | aggregated |
-//! | `fedadam-ssm-q`   | `min{3k b+d, k(3b+log2 d)} + 3q`, `b = ceil(log2 s)` | aggregated |
+//! | `fedadam-ssm-q`   | `min{3kb+d, k(3b+log2 d)} + 3q`          | aggregated |
 //! | `fedadam-ssm-qef` | same cost (+ per-device pre-mask EF)     | aggregated |
-//! | `onebit-adam`     | warmup `3dq`, then `d + 32`              | local      |
-//! | `efficient-adam`  | `d ceil(log2 s) + 32`                    | local      |
+//! | `onebit-adam`     | warmup `3dq`, then `d + q`               | local      |
+//! | `efficient-adam`  | `d·b + q`                                | local      |
 //! | `fedsgd`          | `dq` dense                               | none       |
 //!
 //! (`fedadam-ssm-ef`, the un-quantized EF extension, prices like

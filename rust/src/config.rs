@@ -31,6 +31,43 @@ impl SparsifyBackend {
     }
 }
 
+/// Which cohort sampler picks each round's participants
+/// (see [`crate::coordinator::sampler`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticipationMode {
+    /// Uniform without replacement — the original loop's behavior and the
+    /// bit-identical default.
+    Uniform,
+    /// `m` i.i.d. draws with probability proportional to local data size,
+    /// with the unbiased `1/(m·p_i)` FedAvg re-weighting carried through
+    /// the cohort-weight path.
+    Importance,
+    /// Deterministic per-device on/off duty-cycle traces plus
+    /// over-selection with a deadline (the slowest over-selected
+    /// candidates are dropped).
+    Availability,
+}
+
+impl ParticipationMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => Ok(ParticipationMode::Uniform),
+            "importance" => Ok(ParticipationMode::Importance),
+            "availability" => Ok(ParticipationMode::Availability),
+            _ => bail!("unknown participation mode {s:?} (uniform|importance|availability)"),
+        }
+    }
+
+    /// The config-file spelling (inverse of [`Self::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ParticipationMode::Uniform => "uniform",
+            ParticipationMode::Importance => "importance",
+            ParticipationMode::Availability => "availability",
+        }
+    }
+}
+
 /// Full experiment description.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -78,8 +115,35 @@ pub struct ExperimentConfig {
     /// SSM selection backend.
     pub sparsify_backend: SparsifyBackend,
     /// Fraction of devices participating per round (1.0 = all, the paper's
-    /// setting; < 1.0 = uniform sampling without replacement).
+    /// setting; < 1.0 = partial participation through the configured
+    /// [`ParticipationMode`]).
     pub participation: f64,
+    /// How the per-round cohort is drawn (`uniform` | `importance` |
+    /// `availability`).  `uniform` reproduces the original loop bit for
+    /// bit; see [`crate::coordinator::sampler`] for the other two.
+    pub participation_mode: ParticipationMode,
+    /// `availability` mode: fraction of rounds each device is on-duty
+    /// (its deterministic duty-cycle trace fires with this rate).
+    pub duty_cycle: f64,
+    /// `availability` mode: over-selection factor — up to
+    /// `ceil(target · over_select)` available devices are contacted and
+    /// the slowest extras are dropped at the deadline (>= 1.0).
+    pub over_select: f64,
+    /// Advance a simulated wall-clock per round (virtual time — never
+    /// reads the host clock) and record it in the experiment log.  The
+    /// latency model itself ([`crate::simtime::LatencyModel`]) is always
+    /// built; this knob only gates the clock and the logged column.
+    pub simtime: bool,
+    /// Simulated per-device uplink bandwidth in Mbit/s (uplink seconds =
+    /// `wire_bits / (sim_bandwidth_mbps · 1e6)`).
+    pub sim_bandwidth_mbps: f64,
+    /// Simulated baseline training throughput in samples/second (the
+    /// fastest device; compute seconds = samples · slowdown / this).
+    pub sim_samples_per_sec: f64,
+    /// Device-speed heterogeneity: per-device slowdown factors are drawn
+    /// log-uniformly from `[1, sim_hetero]` (seed-deterministic).
+    /// `1.0` = homogeneous fleet.
+    pub sim_hetero: f64,
     /// Engine-pool worker threads (each owns its own PJRT client and
     /// compiled executables).  `0` = auto-detect core count; `1` (default)
     /// reproduces the original single-engine actor.  Results are bitwise
@@ -123,6 +187,13 @@ impl Default for ExperimentConfig {
             use_epoch_program: false,
             sparsify_backend: SparsifyBackend::Native,
             participation: 1.0,
+            participation_mode: ParticipationMode::Uniform,
+            duty_cycle: 0.8,
+            over_select: 1.5,
+            simtime: false,
+            sim_bandwidth_mbps: 8.0,
+            sim_samples_per_sec: 2000.0,
+            sim_hetero: 4.0,
             num_workers: 1,
             agg_shards: 0,
             pipeline_depth: 0,
@@ -194,6 +265,13 @@ impl ExperimentConfig {
             "use_epoch_program" => self.use_epoch_program = p(key, value)?,
             "sparsify_backend" => self.sparsify_backend = SparsifyBackend::parse(value)?,
             "participation" => self.participation = p(key, value)?,
+            "participation_mode" => self.participation_mode = ParticipationMode::parse(value)?,
+            "duty_cycle" => self.duty_cycle = p(key, value)?,
+            "over_select" => self.over_select = p(key, value)?,
+            "simtime" => self.simtime = p(key, value)?,
+            "sim_bandwidth_mbps" => self.sim_bandwidth_mbps = p(key, value)?,
+            "sim_samples_per_sec" => self.sim_samples_per_sec = p(key, value)?,
+            "sim_hetero" => self.sim_hetero = p(key, value)?,
             "num_workers" => self.num_workers = p(key, value)?,
             "agg_shards" => self.agg_shards = p(key, value)?,
             "pipeline_depth" => self.pipeline_depth = p(key, value)?,
@@ -239,15 +317,35 @@ impl ExperimentConfig {
         if !(0.0 < self.participation && self.participation <= 1.0) {
             bail!("participation must be in (0, 1], got {}", self.participation);
         }
+        if !(0.0 < self.duty_cycle && self.duty_cycle <= 1.0) {
+            bail!("duty_cycle must be in (0, 1], got {}", self.duty_cycle);
+        }
+        if !(1.0 <= self.over_select && self.over_select.is_finite()) {
+            bail!("over_select must be >= 1.0, got {}", self.over_select);
+        }
+        if !(0.0 < self.sim_bandwidth_mbps && self.sim_bandwidth_mbps.is_finite()) {
+            bail!("sim_bandwidth_mbps must be > 0, got {}", self.sim_bandwidth_mbps);
+        }
+        if !(0.0 < self.sim_samples_per_sec && self.sim_samples_per_sec.is_finite()) {
+            bail!("sim_samples_per_sec must be > 0, got {}", self.sim_samples_per_sec);
+        }
+        if !(1.0 <= self.sim_hetero && self.sim_hetero.is_finite()) {
+            bail!("sim_hetero must be >= 1.0, got {}", self.sim_hetero);
+        }
         Ok(())
     }
 
     /// Apply the CI determinism-matrix environment overrides:
-    /// `FEDADAM_NUM_WORKERS`, `FEDADAM_AGG_SHARDS` and
-    /// `FEDADAM_PIPELINE_DEPTH` (when set) override `num_workers` /
-    /// `agg_shards` / `pipeline_depth`.  Test base configs call this so
-    /// one test binary can be swept across the
-    /// worker × shard × pipeline grid without recompiling.
+    /// `FEDADAM_NUM_WORKERS`, `FEDADAM_AGG_SHARDS`,
+    /// `FEDADAM_PIPELINE_DEPTH` and `FEDADAM_PARTICIPATION_MODE` (when
+    /// set) override `num_workers` / `agg_shards` / `pipeline_depth` /
+    /// `participation_mode`.  Test base configs call this so one test
+    /// binary can be swept across the worker × shard × pipeline ×
+    /// participation-mode grid without recompiling.  (Tests whose
+    /// expectations depend on the cohort covering every device — e.g.
+    /// ledger totals of `devices × formula` — pin
+    /// `participation_mode = Uniform` explicitly after this call, the
+    /// same way every test pins `algorithm`.)
     ///
     /// (The per-algorithm CI lane's `FEDADAM_ALGORITHM` is deliberately
     /// NOT handled here: algorithm ids carry per-test expectations — cost
@@ -273,6 +371,10 @@ impl ExperimentConfig {
         }
         if let Some(n) = env_usize("FEDADAM_PIPELINE_DEPTH") {
             self.pipeline_depth = n;
+        }
+        if let Ok(v) = std::env::var("FEDADAM_PARTICIPATION_MODE") {
+            self.participation_mode = ParticipationMode::parse(&v)
+                .unwrap_or_else(|e| panic!("FEDADAM_PARTICIPATION_MODE: {e}"));
         }
     }
 }
@@ -319,6 +421,48 @@ mod tests {
         assert!(cfg.set("pipeline_depth", "many").is_err());
         assert!(cfg.set("nope", "1").is_err());
         assert!(cfg.set("lr", "abc").is_err());
+    }
+
+    #[test]
+    fn participation_and_simtime_knobs_ride_through_set() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.participation_mode, ParticipationMode::Uniform);
+        cfg.set("participation_mode", "importance").unwrap();
+        cfg.set("duty_cycle", "0.6").unwrap();
+        cfg.set("over_select", "2.0").unwrap();
+        cfg.set("simtime", "true").unwrap();
+        cfg.set("sim_bandwidth_mbps", "0.5").unwrap();
+        cfg.set("sim_samples_per_sec", "1500").unwrap();
+        cfg.set("sim_hetero", "2.5").unwrap();
+        assert_eq!(cfg.participation_mode, ParticipationMode::Importance);
+        assert_eq!(cfg.duty_cycle, 0.6);
+        assert_eq!(cfg.over_select, 2.0);
+        assert!(cfg.simtime);
+        assert_eq!(cfg.sim_bandwidth_mbps, 0.5);
+        assert_eq!(cfg.sim_samples_per_sec, 1500.0);
+        assert_eq!(cfg.sim_hetero, 2.5);
+        cfg.validate().unwrap();
+        cfg.set("participation_mode", "availability").unwrap();
+        assert_eq!(cfg.participation_mode, ParticipationMode::Availability);
+        assert_eq!(ParticipationMode::Availability.as_str(), "availability");
+        assert!(cfg.set("participation_mode", "round-robin").is_err());
+    }
+
+    #[test]
+    fn invalid_sampler_and_simtime_configs_rejected() {
+        let bad = [
+            ("duty_cycle", "0.0"),
+            ("duty_cycle", "1.5"),
+            ("over_select", "0.9"),
+            ("sim_bandwidth_mbps", "0"),
+            ("sim_samples_per_sec", "-1"),
+            ("sim_hetero", "0.5"),
+        ];
+        for (key, value) in bad {
+            let mut cfg = ExperimentConfig::default();
+            cfg.set(key, value).unwrap();
+            assert!(cfg.validate().is_err(), "{key}={value} must be rejected");
+        }
     }
 
     #[test]

@@ -24,6 +24,19 @@
 //!   snapshotted right after round `t`'s apply — exactly the state round
 //!   `t+1` trains from.
 //!
+//! ## Participation and simulated time
+//!
+//! Each round's cohort comes from a pluggable [`sampler`]
+//! ([`sampler::ParticipationSampler`], selected by the
+//! `participation_mode` knob): uniform without replacement (the default,
+//! bit-identical to the original loop), data-size-proportional importance
+//! sampling with unbiased `1/(m·p_i)` re-weighting carried through the
+//! cohort-weight path, or duty-cycle availability traces with
+//! over-selection and a deadline.  A [`crate::simtime`] latency model
+//! prices every round in deterministic *virtual* seconds (slowest
+//! participant's compute + uplink, eval inline or overlapped per the
+//! schedule), logged as the `sim_secs` column when `simtime` is on.
+//!
 //! ## Determinism
 //!
 //! Local training for every participant starts from the same downloaded
@@ -37,9 +50,13 @@
 //! pure function of its snapshotted `(w, test set)` — so every f32/f64
 //! sum keeps one fixed association order and the experiment log, comm
 //! ledger and final model are byte-identical at any
-//! `num_workers` / `agg_shards` / `pipeline_depth`.
+//! `num_workers` / `agg_shards` / `pipeline_depth`.  Cohorts and the
+//! simulated clock are pure functions of `(config, data partition,
+//! round, wire bits)` — never of scheduling or host time — so the same
+//! holds with every `participation_mode` and with `simtime` on.
 
 pub mod device;
+pub mod sampler;
 pub mod server;
 
 use std::collections::VecDeque;
@@ -54,9 +71,11 @@ use crate::data::{partition, synthetic, Dataset, Partition, Shard};
 use crate::metrics::comm::CommLedger;
 use crate::metrics::{ExperimentLog, RoundRecord};
 use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
+use crate::simtime::{LatencyModel, SimClock};
 use crate::tensor;
 
 pub use device::{Device, LocalRunConfig};
+pub use sampler::{Cohort, ParticipationSampler};
 pub use server::{aggregate, aggregate_sharded, GlobalState, ShardedAccumulator};
 
 /// A fully-wired experiment ready to run.
@@ -78,8 +97,13 @@ pub struct Coordinator {
     ledger: CommLedger,
     log: ExperimentLog,
     round: usize,
-    /// Round-robin participation RNG (partial participation).
-    sampler: crate::rng::Rng,
+    /// Per-round cohort selection (`participation_mode` knob).
+    sampler: Box<dyn ParticipationSampler>,
+    /// Deterministic per-device latency model (always built; prices the
+    /// availability deadline and, when `simtime` is on, the clock).
+    latency: LatencyModel,
+    /// The virtual round clock — `Some` only when `cfg.simtime` is on.
+    sim: Option<SimClock>,
     /// Overlapped evals still in flight, oldest first.
     pending_evals: VecDeque<PendingEval>,
 }
@@ -153,7 +177,22 @@ impl Coordinator {
         // `(test set, eval_batch)`, both fixed for the experiment's life.
         let eval_plan = Arc::new(EvalPlan::new(&task.test, &meta));
 
-        let cfg_seed = cfg.seed;
+        // The latency model is a pure function of (config, shard sizes):
+        // built unconditionally so the availability sampler's deadline
+        // ranking exists even when the simulated clock is off.  The
+        // per-device batch count comes from the SAME helper and the SAME
+        // run config the training loop uses, so the priced compute can
+        // never drift from the samples a device actually walks through.
+        let run_cfg = local_run_cfg(&cfg);
+        let samples_per_round: Vec<usize> = devices
+            .iter()
+            .map(|d| d.batches_per_epoch(&run_cfg) * meta.batch * cfg.local_epochs)
+            .collect();
+        let latency = LatencyModel::new(&cfg, &samples_per_round, task.test.len());
+        let data_weights: Vec<f64> = devices.iter().map(|d| d.weight()).collect();
+        let sampler = sampler::build(&cfg, &data_weights, latency.device_compute_secs());
+        let sim = cfg.simtime.then(|| SimClock::new(cfg.pipeline_depth));
+
         let log = ExperimentLog {
             name: cfg.name.clone(),
             algorithm: cfg.algorithm.clone(),
@@ -173,24 +212,11 @@ impl Coordinator {
             ledger: CommLedger::default(),
             log,
             round: 0,
-            sampler: crate::rng::Rng::new(cfg_seed ^ 0x5a3c_91f7),
+            sampler,
+            latency,
+            sim,
             pending_evals: VecDeque::new(),
         })
-    }
-
-    /// Devices participating this round (uniform without replacement when
-    /// `participation < 1`; at least one device always runs).
-    fn sample_participants(&mut self) -> Vec<usize> {
-        let n = self.devices.len();
-        let m = ((n as f64 * self.cfg.participation).round() as usize).clamp(1, n);
-        if m == n {
-            return (0..n).collect();
-        }
-        let mut idx: Vec<usize> = (0..n).collect();
-        self.sampler.shuffle(&mut idx);
-        idx.truncate(m);
-        idx.sort_unstable();
-        idx
     }
 
     /// Immutable view of the global state.
@@ -217,7 +243,7 @@ impl Coordinator {
         let t = self.round;
         let start = Instant::now();
         let dim = self.global.dim();
-        let participants = self.sample_participants();
+        let cohort = self.sampler.sample(t);
         let shards = if self.cfg.agg_shards == 0 {
             self.pool.num_workers()
         } else {
@@ -225,27 +251,25 @@ impl Coordinator {
         };
 
         // 1-4 (+5). Train → delta → compress → upload → aggregate.
-        let (loss_sum, mut agg) = if self.cfg.pipeline_depth == 0 {
+        let (loss_sum, mut agg, round_secs) = if self.cfg.pipeline_depth == 0 {
             // Legacy barrier: hold every upload, reduce once at the end.
-            let mut uploads: Vec<Upload> = Vec::with_capacity(participants.len());
-            let loss_sum = self.train_and_upload(t, &participants, |_slot, upload| {
+            let mut uploads: Vec<Upload> = Vec::with_capacity(cohort.len());
+            let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |_slot, upload| {
                 uploads.push(upload);
                 Ok(())
             })?;
-            (loss_sum, aggregate_sharded(&uploads, dim, shards))
+            (loss_sum, aggregate_sharded(&uploads, dim, shards), round_secs)
         } else {
             // Streaming aggregation: a folder thread owns the
             // ShardedAccumulator and folds each upload as it lands, while
             // the main thread keeps dispatching later training chunks.
             // FedAvg coefficients need the cohort's total weight up
-            // front — device weights are static shard sizes, known before
-            // any training finishes.
-            let weights: Vec<f64> = participants
-                .iter()
-                .map(|&di| self.devices[di].weight())
-                .collect();
+            // front — cohort weights come from the sampler (static shard
+            // sizes, importance-re-weighted shares, …), known before any
+            // training finishes.
+            let weights: Vec<f64> = cohort.weights.clone();
             let (tx, rx) = mpsc::channel::<(usize, Upload)>();
-            std::thread::scope(|scope| -> Result<(f64, Aggregate)> {
+            std::thread::scope(|scope| -> Result<(f64, Aggregate, f64)> {
                 // The folder returns the accumulator rather than the
                 // finalized aggregate: if training errors mid-round, the
                 // early `?` below drops `tx`, the stream ends with slots
@@ -258,7 +282,7 @@ impl Coordinator {
                     }
                     acc
                 });
-                let loss_sum = self.train_and_upload(t, &participants, |slot, upload| {
+                let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |slot, upload| {
                     tx.send((slot, upload))
                         .map_err(|_| anyhow!("upload folder thread hung up"))
                 })?;
@@ -266,14 +290,14 @@ impl Coordinator {
                 let acc = folder
                     .join()
                     .unwrap_or_else(|p| std::panic::resume_unwind(p));
-                Ok((loss_sum, acc.finalize()))
+                Ok((loss_sum, acc.finalize(), round_secs))
             })?
         };
 
         // 5b. Post-process + broadcast accounting + apply.
         self.algorithm.postprocess(&mut agg);
         self.ledger
-            .down(self.algorithm.downlink_bits(&agg), participants.len());
+            .down(self.algorithm.downlink_bits(&agg), cohort.len());
         let update_norm = tensor::l2_norm(&agg.dw);
         self.global.apply(&agg);
 
@@ -295,14 +319,32 @@ impl Coordinator {
             (f64::NAN, f64::NAN)
         };
 
+        // 7. Simulated wall-clock: the slowest participant's compute +
+        //    uplink gates the round; eval runs inline (barrier/streaming)
+        //    or hides under the next round's training (overlap).  Pure
+        //    virtual time — never reads the host clock.
+        let sim_secs = match self.sim.as_mut() {
+            Some(clock) => {
+                let eval_cost = if eval_due {
+                    Some(self.latency.eval_secs())
+                } else {
+                    None
+                };
+                clock.advance_round(round_secs, eval_cost);
+                clock.now()
+            }
+            None => f64::NAN,
+        };
+
         let record = RoundRecord {
             round: t,
-            train_loss: loss_sum / participants.len() as f64,
+            train_loss: loss_sum / cohort.len() as f64,
             test_loss,
             test_accuracy: test_acc,
             uplink_bits: self.ledger.uplink_bits,
             downlink_bits: self.ledger.downlink_bits,
             wall_secs: start.elapsed().as_secs_f64(),
+            sim_secs,
             update_norm,
         };
         self.log.rounds.push(record.clone());
@@ -310,13 +352,16 @@ impl Coordinator {
         Ok(record)
     }
 
-    /// Steps 1-4 of a round for `participants`: local training on scoped
+    /// Steps 1-4 of a round for the `cohort`: local training on scoped
     /// threads in bounded chunks of participants, so peak memory stays
     /// O(chunk · d) rather than O(N · d) (dense deltas are 3·d f32 each;
     /// at 100+ devices and ResNet-scale d an unbounded barrier would hold
     /// gigabytes).  Each finished [`Upload`] is handed to `sink` with its
-    /// slot (position in `participants`) the moment it is ready — the
-    /// streaming seam the pipelined aggregator folds through.
+    /// slot (position in the cohort) the moment it is ready — the
+    /// streaming seam the pipelined aggregator folds through.  Every
+    /// upload carries the *cohort* weight the sampler assigned to its
+    /// slot (for uniform/availability that is the device's data size; for
+    /// importance sampling it is the unbiased `1/(m·p_i)` share).
     ///
     /// Within a chunk, local training runs on one scoped thread per
     /// participant; threads block inside the engine pool's queue, so
@@ -326,23 +371,24 @@ impl Coordinator {
     /// mutate per-device algorithm state such as EF memories), ledger
     /// accounting and the sink calls all proceed in ascending device
     /// order, so the wire log is byte-identical at any worker count.
+    ///
+    /// Returns `(loss_sum, round_secs)` where `round_secs` is the round's
+    /// simulated critical path: the slowest participant's
+    /// `compute + uplink` seconds under the latency model.
     fn train_and_upload(
         &mut self,
         t: usize,
-        participants: &[usize],
+        cohort: &Cohort,
         mut sink: impl FnMut(usize, Upload) -> Result<()>,
-    ) -> Result<f64> {
-        let run_cfg = LocalRunConfig {
-            local_epochs: self.cfg.local_epochs,
-            max_batches_per_epoch: self.cfg.max_batches_per_epoch,
-            lr: self.cfg.lr as f32,
-            use_epoch_program: self.cfg.use_epoch_program,
-        };
+    ) -> Result<(f64, f64)> {
+        let participants = &cohort.devices;
+        let run_cfg = local_run_cfg(&self.cfg);
         let mode = self.algorithm.local_mode(t);
         let policy = self.algorithm.momentum_policy(t);
         let keep_moments = policy == MomentumPolicy::DeviceLocal;
         let chunk_size = (self.pool.num_workers() * 2).max(8);
         let mut loss_sum = 0.0f64;
+        let mut round_secs = 0.0f64;
         let mut slot = 0usize;
         for chunk in participants.chunks(chunk_size) {
             // Download: snapshot starting moments before any training runs
@@ -360,19 +406,25 @@ impl Coordinator {
             // compress stage below needs `&mut self`, which cannot coexist
             // with `&mut Device` borrows held for later chunks.  The rescan
             // is O(devices · log participants) per chunk — noise next to
-            // training.  Relies on `sample_participants` returning sorted
-            // indices (it does; binary_search would misassign otherwise).
+            // training.  Relies on the sampler contract that cohort device
+            // ids are sorted ascending (every `ParticipationSampler` does;
+            // binary_search would misassign otherwise).
             let chunk_devices: Vec<(usize, &mut Device)> = self
                 .devices
                 .iter_mut()
                 .enumerate()
                 .filter(|(i, _)| chunk.binary_search(i).is_ok())
                 .collect();
+            // The sampler's per-slot FedAvg weights for this chunk
+            // (uniform mode: exactly the device data sizes the legacy
+            // loop used, so the wire stays bit-identical).
+            let chunk_weights = &cohort.weights[slot..slot + chunk.len()];
             let outputs: Vec<Result<TrainOutput>> = std::thread::scope(|scope| {
                 let handles: Vec<_> = chunk_devices
                     .into_iter()
                     .zip(downloads)
-                    .map(|((_di, dev), (m0, v0))| {
+                    .zip(chunk_weights)
+                    .map(|(((_di, dev), (m0, v0)), &weight)| {
                         scope.spawn(move || -> Result<TrainOutput> {
                             let result = dev.train_round(
                                 mode,
@@ -385,7 +437,7 @@ impl Coordinator {
                                 dw: tensor::sub(&result.w, global_w),
                                 dm: tensor::sub(&result.m, &m0),
                                 dv: tensor::sub(&result.v, &v0),
-                                weight: dev.weight(),
+                                weight,
                             };
                             Ok(TrainOutput {
                                 mean_loss: result.mean_loss,
@@ -407,12 +459,16 @@ impl Coordinator {
                     self.device_moments[di] = moments;
                 }
                 let upload = self.compress_upload(t, di, output.delta)?;
+                // Simulated critical path: this device finishes when its
+                // local compute AND its (bits-priced) uplink are done.
+                round_secs = round_secs
+                    .max(self.latency.compute_secs(di) + self.latency.upload_secs(upload.bits));
                 self.ledger.up(upload.bits);
                 sink(slot, upload)?;
                 slot += 1;
             }
         }
-        Ok(loss_sum)
+        Ok((loss_sum, round_secs))
     }
 
     /// Compress via the configured backend (native quickselect, or the
@@ -491,9 +547,21 @@ impl Coordinator {
 
     /// Join every overlapped eval still in flight and fold the results
     /// into the log.  No-op at `pipeline_depth <= 1` or when idle.
+    ///
+    /// Also drains the simulated clock: an overlapped eval with no next
+    /// round to hide under still costs virtual time, so the pending eval
+    /// is folded in and the **last** log row's `sim_secs` is patched to
+    /// the drained clock (mirroring how eval cells are patched).  At
+    /// `pipeline_depth <= 1` nothing pends and the patch is a no-op.
     pub fn drain_pending_evals(&mut self) -> Result<()> {
         while !self.pending_evals.is_empty() {
             self.reap_oldest_eval()?;
+        }
+        if let Some(clock) = self.sim.as_mut() {
+            let drained = clock.drain();
+            if let Some(last) = self.log.rounds.last_mut() {
+                last.sim_secs = drained;
+            }
         }
         Ok(())
     }
@@ -550,6 +618,19 @@ impl Coordinator {
     }
 }
 
+/// The one place a [`LocalRunConfig`] is derived from the experiment
+/// config — both the training loop and the latency-model sizing go
+/// through here, so the simulated compute cost cannot drift from the
+/// batches a device actually trains on.
+fn local_run_cfg(cfg: &ExperimentConfig) -> LocalRunConfig {
+    LocalRunConfig {
+        local_epochs: cfg.local_epochs,
+        max_batches_per_epoch: cfg.max_batches_per_epoch,
+        lr: cfg.lr as f32,
+        use_epoch_program: cfg.use_epoch_program,
+    }
+}
+
 impl Drop for Coordinator {
     fn drop(&mut self) {
         // Overlapped evals hold a PoolHandle; `Drop::drop` runs before the
@@ -564,8 +645,11 @@ impl Drop for Coordinator {
 /// One pre-sliced eval batch, zero-weight-padded to the program's fixed
 /// `eval_batch` shape.
 pub struct EvalBatch {
+    /// Flattened input rows, `eval_batch · row` long.
     pub x: Vec<f32>,
+    /// Labels (padded lanes carry `0`).
     pub y: Vec<i32>,
+    /// Per-lane weights: `1.0` for real samples, `0.0` for padding.
     pub wt: Vec<f32>,
 }
 

@@ -1,0 +1,468 @@
+//! Pluggable partial-participation device sampling.
+//!
+//! Every round the coordinator asks its [`ParticipationSampler`] for a
+//! [`Cohort`]: *which* devices train, and *what FedAvg weight* each one's
+//! upload carries through the aggregation path.  Three deterministic,
+//! seed-driven implementations sit behind the `participation_mode` knob:
+//!
+//! - [`UniformSampler`] (`uniform`, default) — uniform without
+//!   replacement, **bit-identical to the original loop**: the same RNG
+//!   stream (`seed ^ 0x5a3c_91f7`), the same shuffle/truncate/sort, and
+//!   cohort weights equal to the devices' data sizes.
+//! - [`ImportanceSampler`] (`importance`) — `m` i.i.d. draws with
+//!   probability `p_i ∝ |D_i|` (local data size).  Each unique selected
+//!   device carries weight `mult_i · |D_i| / (m·p_i)`, the classical
+//!   unbiased importance re-weighting: the cohort's weighted FedAvg
+//!   aggregate has the full-participation aggregate as its expectation,
+//!   and the cohort weights always sum to the full corpus weight, so the
+//!   downstream `weight / Σweights` normalization *is* the `1/(m·p_i)`
+//!   estimator.
+//! - [`AvailabilitySampler`] (`availability`) — each device follows a
+//!   deterministic per-round on/off duty-cycle trace (a pure function of
+//!   `(seed, device, round)`).  The sampler over-selects up to
+//!   `ceil(target · over_select)` available candidates, then enforces the
+//!   round deadline by keeping the `target` fastest (by simulated compute
+//!   latency, ties by id) and dropping the over-selected stragglers.  A
+//!   floor of one device is always enforced — an all-off round falls back
+//!   to a deterministic single device.
+//!
+//! All three are pure functions of `(config, data sizes, latencies,
+//! round)` — no host entropy, no wall clock — so cohorts are identical at
+//! any `num_workers` / `agg_shards` / `pipeline_depth`.
+//!
+//! ```
+//! use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+//! use fedadam_ssm::coordinator::sampler::{self, ParticipationSampler as _};
+//!
+//! let mut cfg = ExperimentConfig::default();
+//! cfg.participation = 0.5;
+//! cfg.participation_mode = ParticipationMode::Importance;
+//! let data = [60.0, 30.0, 10.0, 20.0];
+//! let latency = [0.0; 4];
+//! let mut a = sampler::build(&cfg, &data, &latency);
+//! let mut b = sampler::build(&cfg, &data, &latency);
+//! // Seed-deterministic: an identically-built sampler replays the cohort.
+//! let cohort = a.sample(0);
+//! assert_eq!(cohort.devices, b.sample(0).devices);
+//! assert!(!cohort.devices.is_empty());
+//! ```
+
+use crate::config::{ExperimentConfig, ParticipationMode};
+use crate::rng::Rng;
+
+/// The legacy participation stream tag (pre-sampler coordinator seeded its
+/// shuffle RNG with `seed ^ 0x5a3c_91f7`) — [`UniformSampler`] must keep
+/// it to stay bit-identical.
+const UNIFORM_STREAM: u64 = 0x5a3c_91f7;
+/// Importance-draw stream tag (domain-separated from every other seed use).
+const IMPORTANCE_STREAM: u64 = 0x7e2d_9b14_55c3_a86f;
+/// Availability duty-cycle trace tag.
+const TRACE_STREAM: u64 = 0x3f91_44d0_8ae7_125b;
+/// Availability per-round candidate-shuffle tag.
+const SELECT_STREAM: u64 = 0xc65a_07e9_31fd_b842;
+
+/// One round's participants: device ids (ascending, unique) and the
+/// FedAvg weight each upload carries (same order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cohort {
+    /// Participating device ids, strictly ascending.
+    pub devices: Vec<usize>,
+    /// Effective FedAvg weight per participant (aligned with `devices`).
+    pub weights: Vec<f64>,
+}
+
+impl Cohort {
+    /// Number of participating devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// `true` when no device participates (samplers never produce this —
+    /// a floor of one device is enforced everywhere).
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Sum of the cohort's FedAvg weights.
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+}
+
+/// Per-round cohort selection strategy — one instance per experiment.
+pub trait ParticipationSampler: Send {
+    /// Stable id (matches `ParticipationMode::as_str`).
+    fn name(&self) -> &'static str;
+
+    /// The cohort for communication round `round`.  Must be deterministic
+    /// given the constructor inputs and `round`, return strictly
+    /// ascending unique device ids, and never be empty.
+    fn sample(&mut self, round: usize) -> Cohort;
+}
+
+/// Target cohort size: `round(n · participation)` clamped to `[1, n]` —
+/// the exact formula of the original loop.
+pub fn target_cohort_size(devices: usize, participation: f64) -> usize {
+    ((devices as f64 * participation).round() as usize).clamp(1, devices)
+}
+
+/// Build the sampler the config asks for.  `data_weights[i]` is device
+/// `i`'s FedAvg data weight (`|D_i|`); `compute_secs[i]` its simulated
+/// per-round compute latency (the availability deadline ranking).
+pub fn build(
+    cfg: &ExperimentConfig,
+    data_weights: &[f64],
+    compute_secs: &[f64],
+) -> Box<dyn ParticipationSampler> {
+    assert_eq!(
+        data_weights.len(),
+        compute_secs.len(),
+        "one latency per device"
+    );
+    match cfg.participation_mode {
+        ParticipationMode::Uniform => Box::new(UniformSampler::new(
+            cfg.seed,
+            cfg.participation,
+            data_weights.to_vec(),
+        )),
+        ParticipationMode::Importance => Box::new(ImportanceSampler::new(
+            cfg.seed,
+            cfg.participation,
+            data_weights.to_vec(),
+        )),
+        ParticipationMode::Availability => Box::new(AvailabilitySampler::new(
+            cfg.seed,
+            cfg.participation,
+            cfg.duty_cycle,
+            cfg.over_select,
+            data_weights.to_vec(),
+            compute_secs.to_vec(),
+        )),
+    }
+}
+
+/// Uniform without replacement — the original loop, verbatim.
+pub struct UniformSampler {
+    rng: Rng,
+    participation: f64,
+    data_weights: Vec<f64>,
+}
+
+impl UniformSampler {
+    pub fn new(seed: u64, participation: f64, data_weights: Vec<f64>) -> UniformSampler {
+        UniformSampler {
+            // The legacy stream: MUST stay `seed ^ 0x5a3c_91f7` (and be
+            // consumed only on m < n rounds) for bit-identity with the
+            // pre-sampler coordinator.
+            rng: Rng::new(seed ^ UNIFORM_STREAM),
+            participation,
+            data_weights,
+        }
+    }
+}
+
+impl ParticipationSampler for UniformSampler {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn sample(&mut self, _round: usize) -> Cohort {
+        let n = self.data_weights.len();
+        let m = target_cohort_size(n, self.participation);
+        let devices: Vec<usize> = if m == n {
+            // Full participation consumes no randomness (legacy contract).
+            (0..n).collect()
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            self.rng.shuffle(&mut idx);
+            idx.truncate(m);
+            idx.sort_unstable();
+            idx
+        };
+        let weights = devices.iter().map(|&i| self.data_weights[i]).collect();
+        Cohort { devices, weights }
+    }
+}
+
+/// Data-size-proportional sampling with unbiased re-weighting.
+pub struct ImportanceSampler {
+    rng: Rng,
+    participation: f64,
+    data_weights: Vec<f64>,
+    /// `Σ |D_i|` over the whole fleet.
+    total: f64,
+}
+
+impl ImportanceSampler {
+    pub fn new(seed: u64, participation: f64, data_weights: Vec<f64>) -> ImportanceSampler {
+        let total: f64 = data_weights.iter().sum();
+        assert!(
+            total > 0.0 && data_weights.iter().all(|&w| w > 0.0),
+            "importance sampling needs strictly positive data weights"
+        );
+        ImportanceSampler {
+            rng: Rng::new(seed ^ IMPORTANCE_STREAM),
+            participation,
+            data_weights,
+            total,
+        }
+    }
+
+    /// Selection probability of device `i` in one draw.
+    pub fn prob(&self, i: usize) -> f64 {
+        self.data_weights[i] / self.total
+    }
+}
+
+impl ParticipationSampler for ImportanceSampler {
+    fn name(&self) -> &'static str {
+        "importance"
+    }
+
+    fn sample(&mut self, _round: usize) -> Cohort {
+        let n = self.data_weights.len();
+        let m = target_cohort_size(n, self.participation);
+        // m i.i.d. draws with replacement, p_i ∝ |D_i|; a device drawn
+        // `mult` times trains once and its upload carries `mult` shares.
+        let mut mult = vec![0usize; n];
+        for _ in 0..m {
+            mult[self.rng.categorical(&self.data_weights)] += 1;
+        }
+        let mut devices = Vec::new();
+        let mut weights = Vec::new();
+        for (i, &c) in mult.iter().enumerate() {
+            if c > 0 {
+                devices.push(i);
+                // Unbiased estimator share: mult · w_i / (m·p_i).  With
+                // p_i ∝ w_i each share is total/m, so the cohort weights
+                // sum to the FULL corpus weight and the aggregate's
+                // `weight/Σweights` normalization equals the 1/(m·p_i)
+                // re-weighted FedAvg estimator exactly.
+                let p = self.prob(i);
+                weights.push(c as f64 * self.data_weights[i] / (m as f64 * p));
+            }
+        }
+        Cohort { devices, weights }
+    }
+}
+
+/// Duty-cycle availability traces with over-selection and a deadline.
+pub struct AvailabilitySampler {
+    seed: u64,
+    participation: f64,
+    duty_cycle: f64,
+    over_select: f64,
+    data_weights: Vec<f64>,
+    compute_secs: Vec<f64>,
+}
+
+impl AvailabilitySampler {
+    pub fn new(
+        seed: u64,
+        participation: f64,
+        duty_cycle: f64,
+        over_select: f64,
+        data_weights: Vec<f64>,
+        compute_secs: Vec<f64>,
+    ) -> AvailabilitySampler {
+        assert_eq!(data_weights.len(), compute_secs.len());
+        AvailabilitySampler {
+            seed,
+            participation,
+            duty_cycle,
+            over_select,
+            data_weights,
+            compute_secs,
+        }
+    }
+
+    /// Device `device`'s on/off duty-cycle trace at round `round` — a pure
+    /// function of `(seed, device, round)`, so any schedule replays it.
+    pub fn available(&self, device: usize, round: usize) -> bool {
+        let mut rng = Rng::new(
+            self.seed
+                ^ TRACE_STREAM
+                ^ (device as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (round as u64).wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        rng.uniform() < self.duty_cycle
+    }
+}
+
+impl ParticipationSampler for AvailabilitySampler {
+    fn name(&self) -> &'static str {
+        "availability"
+    }
+
+    fn sample(&mut self, round: usize) -> Cohort {
+        let n = self.data_weights.len();
+        let m = target_cohort_size(n, self.participation);
+        let mut avail: Vec<usize> = (0..n).filter(|&i| self.available(i, round)).collect();
+        if avail.is_empty() {
+            // Floor of 1: an all-off round still trains one device
+            // (deterministic round-robin fallback).
+            let fallback = round % n;
+            return Cohort {
+                devices: vec![fallback],
+                weights: vec![self.data_weights[fallback]],
+            };
+        }
+        let target = m.min(avail.len());
+        // Over-select: contact extra candidates so deadline drops don't
+        // shrink the cohort below target.
+        let contacted = ((m as f64 * self.over_select).ceil() as usize)
+            .clamp(target, avail.len());
+        let mut rng = Rng::new(
+            self.seed ^ SELECT_STREAM ^ (round as u64).wrapping_mul(0xA24B_AED4_963E_E407),
+        );
+        rng.shuffle(&mut avail);
+        let mut candidates: Vec<usize> = avail.into_iter().take(contacted).collect();
+        // Deadline: the round closes once `target` devices have finished —
+        // keep the fastest by simulated compute latency (ties by id),
+        // dropping the over-selected stragglers.
+        candidates.sort_by(|&a, &b| {
+            self.compute_secs[a]
+                .partial_cmp(&self.compute_secs[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        candidates.truncate(target);
+        candidates.sort_unstable();
+        let weights = candidates.iter().map(|&i| self.data_weights[i]).collect();
+        Cohort {
+            devices: candidates,
+            weights,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: ParticipationMode, participation: f64, seed: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.participation_mode = mode;
+        cfg.participation = participation;
+        cfg.seed = seed;
+        cfg
+    }
+
+    #[test]
+    fn uniform_replays_the_legacy_rng_stream() {
+        let n = 7;
+        let weights: Vec<f64> = (0..n).map(|i| 10.0 + i as f64).collect();
+        let lat = vec![0.0; n];
+        let c = cfg(ParticipationMode::Uniform, 0.5, 42);
+        let mut s = build(&c, &weights, &lat);
+        // Legacy replica: the pre-sampler coordinator's exact logic.
+        let mut legacy = Rng::new(42 ^ 0x5a3c_91f7);
+        for round in 0..10 {
+            let m = ((n as f64 * 0.5).round() as usize).clamp(1, n);
+            let mut idx: Vec<usize> = (0..n).collect();
+            legacy.shuffle(&mut idx);
+            idx.truncate(m);
+            idx.sort_unstable();
+            let cohort = s.sample(round);
+            assert_eq!(cohort.devices, idx, "round {round}");
+            let want: Vec<f64> = idx.iter().map(|&i| weights[i]).collect();
+            assert_eq!(cohort.weights, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn uniform_full_participation_consumes_no_randomness() {
+        let weights = vec![5.0; 4];
+        let lat = vec![0.0; 4];
+        let c = cfg(ParticipationMode::Uniform, 1.0, 9);
+        let mut s = build(&c, &weights, &lat);
+        for round in 0..5 {
+            let cohort = s.sample(round);
+            assert_eq!(cohort.devices, vec![0, 1, 2, 3], "round {round}");
+            assert_eq!(cohort.total_weight(), 20.0);
+        }
+    }
+
+    #[test]
+    fn importance_weights_sum_to_the_full_corpus() {
+        let weights = vec![60.0, 30.0, 10.0, 50.0, 2.0];
+        let lat = vec![0.0; 5];
+        let c = cfg(ParticipationMode::Importance, 0.6, 3);
+        let mut s = build(&c, &weights, &lat);
+        let total: f64 = weights.iter().sum();
+        for round in 0..50 {
+            let cohort = s.sample(round);
+            assert!(!cohort.is_empty());
+            assert!(cohort.devices.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+            assert!(
+                (cohort.total_weight() - total).abs() < 1e-9 * total,
+                "round {round}: cohort weight {} != corpus {total}",
+                cohort.total_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn availability_respects_traces_and_deadline() {
+        let n = 9;
+        let weights: Vec<f64> = vec![3.0; n];
+        let lat: Vec<f64> = (0..n).map(|i| (n - i) as f64).collect(); // device 8 fastest
+        let mut s = AvailabilitySampler::new(21, 0.5, 0.7, 2.0, weights.clone(), lat);
+        for round in 0..60 {
+            let cohort = s.sample(round);
+            assert!(!cohort.is_empty(), "round {round}");
+            assert!(cohort.len() <= ((n as f64 * 0.5).round() as usize), "round {round}");
+            assert!(cohort.devices.windows(2).all(|w| w[0] < w[1]));
+            for (&d, &w) in cohort.devices.iter().zip(&cohort.weights) {
+                assert_eq!(w, weights[d]);
+            }
+            // Every selected device was on duty (no fallback fires at
+            // duty 0.7 with 9 devices under this seed — and if it did,
+            // the single fallback device is also a legal cohort).
+            if cohort.len() > 1 {
+                for &d in &cohort.devices {
+                    assert!(s.available(d, round), "round {round}: device {d} off-duty");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn availability_deadline_keeps_the_fastest_candidates() {
+        // Duty cycle 1.0 ⇒ everyone available; over_select covers the whole
+        // fleet ⇒ candidates = all devices ⇒ the deadline must keep exactly
+        // the `target` fastest.
+        let n = 6;
+        let weights = vec![1.0; n];
+        let lat = vec![5.0, 1.0, 4.0, 0.5, 3.0, 2.0];
+        let mut s = AvailabilitySampler::new(7, 0.5, 1.0, 10.0, weights, lat);
+        let cohort = s.sample(0);
+        // target = round(6·0.5) = 3 fastest: devices 3 (0.5), 1 (1.0), 5 (2.0).
+        assert_eq!(cohort.devices, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn builder_dispatches_by_mode() {
+        let weights = vec![1.0, 2.0];
+        let lat = vec![0.1, 0.2];
+        for (mode, name) in [
+            (ParticipationMode::Uniform, "uniform"),
+            (ParticipationMode::Importance, "importance"),
+            (ParticipationMode::Availability, "availability"),
+        ] {
+            let c = cfg(mode, 1.0, 5);
+            let s = build(&c, &weights, &lat);
+            assert_eq!(s.name(), name);
+            assert_eq!(s.name(), mode.as_str());
+        }
+    }
+
+    #[test]
+    fn target_cohort_size_matches_the_legacy_formula() {
+        assert_eq!(target_cohort_size(8, 1.0), 8);
+        assert_eq!(target_cohort_size(8, 0.5), 4);
+        assert_eq!(target_cohort_size(8, 0.01), 1);
+        assert_eq!(target_cohort_size(3, 0.5), 2); // 1.5 rounds away from zero
+        assert_eq!(target_cohort_size(1, 0.1), 1);
+    }
+}

@@ -46,6 +46,7 @@ pub mod metrics;
 pub mod quant;
 pub mod rng;
 pub mod runtime;
+pub mod simtime;
 pub mod sparse;
 pub mod tensor;
 pub mod theory;

@@ -79,6 +79,17 @@ OPTIONS:
                           codes on the k kept lanes; -qef adds per-device
                           error feedback.  quant_levels must be >= 2 for
                           fedadam-ssm-q / fedadam-ssm-qef / efficient-adam)
+                          --set participation_mode=importance (cohort
+                          sampler: uniform = legacy bit-identical default,
+                          importance = draws ~ local data size with
+                          unbiased 1/(m*p_i) re-weighting, availability =
+                          duty-cycle traces + over-selection; see also
+                          duty_cycle / over_select)
+                          --set simtime=true (simulated wall-clock column
+                          sim_secs: per-device compute latency with a
+                          sim_hetero straggler spread, uplink latency =
+                          wire bits / sim_bandwidth_mbps; virtual time,
+                          byte-identical at any worker count)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -24,6 +24,10 @@ pub struct RoundRecord {
     pub downlink_bits: u64,
     /// Wall-clock seconds spent in this round.
     pub wall_secs: f64,
+    /// Cumulative *simulated* seconds since round 0 under the configured
+    /// latency model (`NaN` when the run carries no simulated clock —
+    /// `simtime = false`).  See [`crate::simtime`].
+    pub sim_secs: f64,
     /// L2 norm of the aggregated ΔW (convergence diagnostics).
     pub update_norm: f64,
 }
@@ -65,13 +69,26 @@ impl ExperimentLog {
             .map(|r| r.uplink_bits as f64 / 1e6)
     }
 
+    /// Simulated seconds at which `target` accuracy was first reached —
+    /// the time-to-accuracy axis sparse uplinks are supposed to win.
+    /// `None` when the target was never hit *or* the run carried no
+    /// simulated clock (`simtime = false` leaves `sim_secs` at `NaN`).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_accuracy.is_finite() && r.test_accuracy >= target)
+            .and_then(|r| r.sim_secs.is_finite().then_some(r.sim_secs))
+    }
+
     /// CSV with a header row.
     ///
     /// Rounds that were not evaluated carry `NaN` in
-    /// `test_loss`/`test_accuracy`; those cells are emitted **empty**
+    /// `test_loss`/`test_accuracy`, and runs without a simulated clock
+    /// carry `NaN` in `sim_secs`; those cells are emitted **empty**
     /// (strict CSV consumers reject a literal `NaN` token).  A genuinely
     /// evaluated round that diverged to `±inf` still prints `inf` — an
-    /// empty cell means "not evaluated", never "diverged".
+    /// empty cell means "not evaluated" / "not simulated", never
+    /// "diverged".
     pub fn to_csv(&self) -> String {
         fn cell(x: f64) -> String {
             if x.is_nan() {
@@ -81,12 +98,12 @@ impl ExperimentLog {
             }
         }
         let mut out = String::from(
-            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,update_norm\n",
+            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,sim_secs,update_norm\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{},{},{},{},{:.4},{:.6e}",
+                "{},{:.6},{},{},{},{},{:.4},{},{:.6e}",
                 r.round,
                 r.train_loss,
                 cell(r.test_loss),
@@ -94,6 +111,7 @@ impl ExperimentLog {
                 r.uplink_bits,
                 r.downlink_bits,
                 r.wall_secs,
+                cell(r.sim_secs),
                 r.update_norm
             );
         }
@@ -126,6 +144,7 @@ impl ExperimentLog {
                 m.insert("uplink_bits".into(), Value::Num(r.uplink_bits as f64));
                 m.insert("downlink_bits".into(), Value::Num(r.downlink_bits as f64));
                 m.insert("wall_secs".into(), Value::Num(r.wall_secs));
+                m.insert("sim_secs".into(), finite(r.sim_secs));
                 m.insert("update_norm".into(), Value::Num(r.update_norm));
                 Value::Obj(m)
             })
@@ -181,6 +200,7 @@ mod tests {
                     uplink_bits: (i as u64 + 1) * 1_000_000,
                     downlink_bits: (i as u64 + 1) * 500_000,
                     wall_secs: 0.5,
+                    sim_secs: (i as f64 + 1.0) * 2.0,
                     update_norm: 1.0,
                 })
                 .collect(),
@@ -212,15 +232,17 @@ mod tests {
         l.rounds[1].test_accuracy = f64::NAN;
         l.rounds[3].test_loss = f64::NAN;
         l.rounds[3].test_accuracy = f64::NAN;
+        l.rounds[2].sim_secs = f64::NAN; // no simulated clock that round
         let csv = l.to_csv();
         assert!(!csv.contains("NaN"), "literal NaN leaked into CSV:\n{csv}");
 
         let lines: Vec<&str> = csv.lines().collect();
         let header: Vec<&str> = lines[0].split(',').collect();
-        assert_eq!(header.len(), 8);
+        assert_eq!(header.len(), 9);
+        assert_eq!(header[7], "sim_secs");
         for (i, line) in lines[1..].iter().enumerate() {
             let cells: Vec<&str> = line.split(',').collect();
-            assert_eq!(cells.len(), 8, "row {i} lost a column: {line}");
+            assert_eq!(cells.len(), 9, "row {i} lost a column: {line}");
             // round + train_loss always parse.
             assert_eq!(cells[0].parse::<usize>().unwrap(), i);
             let train: f64 = cells[1].parse().unwrap();
@@ -237,7 +259,28 @@ mod tests {
             // Ledger columns survive exactly.
             assert_eq!(cells[4].parse::<u64>().unwrap(), l.rounds[i].uplink_bits);
             assert_eq!(cells[5].parse::<u64>().unwrap(), l.rounds[i].downlink_bits);
+            // Simulated-clock cell: empty exactly when not simulated.
+            if l.rounds[i].sim_secs.is_finite() {
+                let sim: f64 = cells[7].parse().unwrap();
+                assert!((sim - l.rounds[i].sim_secs).abs() < 1e-9, "row {i}");
+            } else {
+                assert!(cells[7].is_empty(), "row {i}: want empty sim_secs");
+            }
         }
+    }
+
+    #[test]
+    fn time_to_accuracy_reads_the_simulated_clock() {
+        let l = log(); // acc 0.2, 0.3, ... 0.6 at sim 2, 4, ... 10
+        assert_eq!(l.time_to_accuracy(0.45), Some(8.0)); // round 3
+        assert_eq!(l.time_to_accuracy(0.2), Some(2.0));
+        assert_eq!(l.time_to_accuracy(0.9), None, "never reached");
+        // A run without the simulated clock has no time axis at all.
+        let mut dry = log();
+        for r in &mut dry.rounds {
+            r.sim_secs = f64::NAN;
+        }
+        assert_eq!(dry.time_to_accuracy(0.2), None);
     }
 
     #[test]

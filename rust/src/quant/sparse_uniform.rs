@@ -80,14 +80,19 @@ pub fn reconstruct(dim: usize, indices: &[u32], p: &SparseUniformPacket) -> Spar
 /// packed value lists + three f32 scales.
 #[derive(Clone, Debug)]
 pub struct SsmQUplink {
+    /// Model dimension `d` (the mask's index space).
     pub dim: usize,
+    /// Kept-lane count `k` (the shared mask's support size).
     pub k: usize,
     /// Which position coding `min{bitmap, index-list}` picked.
     pub encoding: MaskEncoding,
     /// Packed mask bits (shared by all three vectors).
     pub positions: Vec<u8>,
+    /// Quantized kept-lane values of `ΔW`.
     pub w: SparseUniformPacket,
+    /// Quantized kept-lane values of `ΔM`.
     pub m: SparseUniformPacket,
+    /// Quantized kept-lane values of `ΔV`.
     pub v: SparseUniformPacket,
 }
 
@@ -106,6 +111,26 @@ impl SsmQUplink {
 }
 
 /// Encode the shared mask + the three kept-lane value lists.
+///
+/// The encoded message prices exactly to the ledger formula, and the
+/// decode side reconstructs the support verbatim:
+///
+/// ```
+/// use fedadam_ssm::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
+/// use fedadam_ssm::sparse::codec::cost;
+///
+/// let idx = [2u32, 5, 9];
+/// let msg = ssm_q_encode(
+///     12, &idx,
+///     &[0.5, -1.0, 0.0],    // ΔW kept values (one exactly 0.0)
+///     &[0.1, 0.2, 0.3],     // ΔM
+///     &[0.01, 0.02, 0.03],  // ΔV
+///     16,
+/// );
+/// assert_eq!(msg.wire_bits(), cost::fedadam_ssm_q(12, 3, 16));
+/// let (w, _m, _v) = ssm_q_decode(&msg);
+/// assert_eq!(w.indices, idx); // exact support — zero-valued lanes stay
+/// ```
 pub fn ssm_q_encode(
     dim: usize,
     indices: &[u32],

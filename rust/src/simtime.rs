@@ -1,0 +1,266 @@
+//! Simulated wall-clock: deterministic *virtual* time for heterogeneous
+//! federated rounds.
+//!
+//! The paper's pitch for sparse uplinks is ultimately **time-to-accuracy**
+//! on bandwidth-constrained devices, a metric the real `wall_secs` column
+//! (host CPU time of a CPU-scale reproduction) cannot measure.  This
+//! module prices each round in *simulated seconds* instead:
+//!
+//! - **compute latency** per device: proportional to the samples one local
+//!   round walks through (`batches/epoch × batch × local_epochs`) divided
+//!   by a baseline throughput (`sim_samples_per_sec`), times a per-device
+//!   slowdown factor drawn log-uniformly from `[1, sim_hetero]` — the
+//!   stragglers;
+//! - **uplink latency** per device: the compressed message's exact
+//!   `wire_bits` divided by `sim_bandwidth_mbps` — this is where the SSM
+//!   family's smaller uplinks shift the accuracy-vs-seconds frontier;
+//! - **eval latency**: test-set size over the baseline throughput.
+//!
+//! A round finishes when its slowest participant's `compute + upload` has
+//! landed ([`SimClock::advance_round`]); under the overlapped schedule
+//! (`pipeline_depth >= 2`) an eval-due round's eval runs concurrently
+//! with the next round's training, exactly mirroring the real pipelined
+//! loop in [`crate::coordinator`].
+//!
+//! ## Determinism
+//!
+//! Virtual time is a pure function of the config, the data partition and
+//! the per-round uplink bits — it **never reads the host clock**, so the
+//! simulated column is byte-identical at any `num_workers` / `agg_shards`
+//! (and across the barrier/streaming depths `0` and `1`, which share one
+//! schedule).  The per-device slowdown factors come from their own
+//! [`crate::rng::Rng`] stream seeded by `cfg.seed`, so a worker-count
+//! change cannot perturb them.
+//!
+//! ```
+//! use fedadam_ssm::simtime::SimClock;
+//!
+//! let mut barrier = SimClock::new(0);
+//! let mut overlap = SimClock::new(2);
+//! for _ in 0..3 {
+//!     barrier.advance_round(2.0, Some(1.0));
+//!     overlap.advance_round(2.0, Some(1.0));
+//! }
+//! assert_eq!(barrier.now(), 9.0); // train+upload and eval in series
+//! assert_eq!(overlap.now(), 6.0); // evals hidden under the next round
+//! assert_eq!(overlap.drain(), 7.0); // ... except the last one
+//! ```
+
+use crate::config::ExperimentConfig;
+use crate::rng::Rng;
+
+/// Stream tag for the per-device slowdown factors (domain-separated from
+/// every other consumer of `cfg.seed`).
+const SPEED_STREAM: u64 = 0x51b7_73a9_0c2d_4e01;
+
+/// Deterministic per-device latency model (always constructed; the
+/// `simtime` knob only gates the [`SimClock`] and the logged column).
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// Seconds of local compute per round, per device (slowdown applied).
+    compute_secs: Vec<f64>,
+    /// Uplink seconds per wire bit.
+    secs_per_bit: f64,
+    /// Seconds of one full test-set evaluation.
+    eval_secs: f64,
+}
+
+impl LatencyModel {
+    /// Build the model: `samples_per_round[i]` is the number of training
+    /// samples device `i` walks through in one local round
+    /// (`batches/epoch × batch × local_epochs`).
+    pub fn new(
+        cfg: &ExperimentConfig,
+        samples_per_round: &[usize],
+        test_samples: usize,
+    ) -> LatencyModel {
+        let mut rng = Rng::new(cfg.seed ^ SPEED_STREAM);
+        let ln_hetero = cfg.sim_hetero.max(1.0).ln();
+        let compute_secs = samples_per_round
+            .iter()
+            .map(|&samples| {
+                // Log-uniform slowdown in [1, sim_hetero]: half the fleet
+                // within sqrt(hetero) of the fastest, a heavy straggler tail.
+                let slowdown = (rng.uniform() * ln_hetero).exp();
+                samples as f64 * slowdown / cfg.sim_samples_per_sec
+            })
+            .collect();
+        LatencyModel {
+            compute_secs,
+            secs_per_bit: 1.0 / (cfg.sim_bandwidth_mbps * 1e6),
+            eval_secs: test_samples as f64 / cfg.sim_samples_per_sec,
+        }
+    }
+
+    /// Seconds device `device` spends on one local training round.
+    pub fn compute_secs(&self, device: usize) -> f64 {
+        self.compute_secs[device]
+    }
+
+    /// Seconds one device spends uploading a `bits`-bit message.
+    pub fn upload_secs(&self, bits: u64) -> f64 {
+        bits as f64 * self.secs_per_bit
+    }
+
+    /// Seconds of one full test-set evaluation.
+    pub fn eval_secs(&self) -> f64 {
+        self.eval_secs
+    }
+
+    /// Every device's per-round compute seconds (the availability
+    /// sampler's deadline ranking reads this).
+    pub fn device_compute_secs(&self) -> &[f64] {
+        &self.compute_secs
+    }
+}
+
+/// The virtual round clock.
+///
+/// Two schedules, mirroring the real loop's `pipeline_depth` semantics:
+///
+/// - **barrier / streaming** (`depth <= 1`): eval runs inline, so an
+///   eval-due round costs `train_upload + eval`;
+/// - **overlapped** (`depth >= 2`): round `t`'s eval runs concurrently
+///   with round `t+1`'s training, so each round costs
+///   `max(train_upload, previous pending eval)` and the final pending
+///   eval is folded in by [`Self::drain`].
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    now: f64,
+    pending_eval: f64,
+    overlap: bool,
+}
+
+impl SimClock {
+    /// A clock for the given `pipeline_depth` (`>= 2` = overlapped).
+    pub fn new(pipeline_depth: usize) -> SimClock {
+        SimClock {
+            now: 0.0,
+            pending_eval: 0.0,
+            overlap: pipeline_depth >= 2,
+        }
+    }
+
+    /// Virtual seconds elapsed since round 0.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance over one round: `train_upload_secs` is the slowest
+    /// participant's `compute + upload`; `eval` is `Some(secs)` on
+    /// eval-due rounds.
+    pub fn advance_round(&mut self, train_upload_secs: f64, eval: Option<f64>) {
+        if self.overlap {
+            self.now += train_upload_secs.max(self.pending_eval);
+            self.pending_eval = eval.unwrap_or(0.0);
+        } else {
+            self.now += train_upload_secs + eval.unwrap_or(0.0);
+        }
+    }
+
+    /// Fold in any still-pending overlapped eval (the run's last one has
+    /// no next round to hide under); returns the final clock.
+    pub fn drain(&mut self) -> f64 {
+        self.now += self.pending_eval;
+        self.pending_eval = 0.0;
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = 11;
+        cfg.sim_samples_per_sec = 1000.0;
+        cfg.sim_bandwidth_mbps = 1.0;
+        cfg.sim_hetero = 4.0;
+        cfg
+    }
+
+    #[test]
+    fn latency_model_is_deterministic_and_bounded() {
+        let samples = vec![500usize, 1000, 250, 800];
+        let a = LatencyModel::new(&cfg(), &samples, 100);
+        let b = LatencyModel::new(&cfg(), &samples, 100);
+        for i in 0..samples.len() {
+            assert_eq!(a.compute_secs(i).to_bits(), b.compute_secs(i).to_bits());
+            // slowdown in [1, hetero]: compute in [samples/sps, hetero * that]
+            let base = samples[i] as f64 / 1000.0;
+            assert!(a.compute_secs(i) >= base, "device {i}");
+            assert!(a.compute_secs(i) <= base * 4.0 + 1e-12, "device {i}");
+        }
+        assert_eq!(a.device_compute_secs().len(), samples.len());
+        // 1 Mbit at 1 Mbit/s = 1 second.
+        assert!((a.upload_secs(1_000_000) - 1.0).abs() < 1e-12);
+        assert!((a.eval_secs() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn homogeneous_fleet_has_unit_slowdown() {
+        let mut c = cfg();
+        c.sim_hetero = 1.0;
+        let m = LatencyModel::new(&c, &[100, 100], 10);
+        assert_eq!(m.compute_secs(0).to_bits(), m.compute_secs(1).to_bits());
+        assert!((m.compute_secs(0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn different_seeds_draw_different_stragglers() {
+        let samples = vec![1000usize; 8];
+        let a = LatencyModel::new(&cfg(), &samples, 10);
+        let mut c2 = cfg();
+        c2.seed = 12;
+        let b = LatencyModel::new(&c2, &samples, 10);
+        assert!(
+            (0..8).any(|i| a.compute_secs(i) != b.compute_secs(i)),
+            "seed must steer the straggler draw"
+        );
+    }
+
+    #[test]
+    fn barrier_clock_serializes_eval() {
+        let mut c = SimClock::new(0);
+        c.advance_round(2.0, Some(0.5));
+        assert_eq!(c.now(), 2.5);
+        c.advance_round(3.0, None);
+        assert_eq!(c.now(), 5.5);
+        assert_eq!(c.drain(), 5.5, "barrier never has a pending eval");
+        // depth 1 (streaming aggregation) shares the barrier schedule.
+        let mut s = SimClock::new(1);
+        s.advance_round(2.0, Some(0.5));
+        assert_eq!(s.now(), 2.5);
+    }
+
+    #[test]
+    fn overlapped_clock_hides_eval_under_training() {
+        let mut c = SimClock::new(2);
+        c.advance_round(2.0, Some(1.5)); // eval pends
+        assert_eq!(c.now(), 2.0);
+        c.advance_round(1.0, Some(0.5)); // prev eval (1.5) gates this round
+        assert_eq!(c.now(), 3.5);
+        c.advance_round(2.0, None); // train (2.0) > pending (0.5)
+        assert_eq!(c.now(), 5.5);
+        assert_eq!(c.drain(), 5.5);
+        // A still-pending last eval is drained, not dropped.
+        let mut d = SimClock::new(3);
+        d.advance_round(1.0, Some(2.0));
+        assert_eq!(d.drain(), 3.0);
+    }
+
+    #[test]
+    fn overlap_is_never_slower_than_barrier() {
+        // Same per-round costs: the overlapped schedule's total is <= the
+        // barrier total (max(a, b) <= a + b for non-negative costs).
+        let rounds = [(2.0, Some(0.7)), (1.0, None), (3.0, Some(0.7)), (0.5, Some(0.7))];
+        let mut barrier = SimClock::new(0);
+        let mut overlap = SimClock::new(2);
+        for &(t, e) in &rounds {
+            barrier.advance_round(t, e);
+            overlap.advance_round(t, e);
+        }
+        assert!(overlap.drain() <= barrier.drain());
+    }
+}

@@ -12,17 +12,23 @@
 //! - the reconstructed **support sizes** to the priced `k`,
 //! - the **momentum policy** (aggregated vs device-local `(m, v)`),
 //! - full-run **bit-identity** across `num_workers` × `agg_shards`
-//!   (× `pipeline_depth`),
+//!   (× `pipeline_depth`) — for the uniform, importance and availability
+//!   participation samplers,
+//! - the **simulated clock** (`sim_secs`): worker-count invariance,
+//!   monotonicity, eval overlap at `pipeline_depth >= 2`, and the
+//!   sparse-beats-dense time-to-accuracy race,
 //! - parallel eval **bit-identity** + zero-weight padding neutrality.
 //!
 //! The CI per-algorithm lane sets `FEDADAM_ALGORITHM` to pin the zoo
-//! sweeps to one id (crossed with `FEDADAM_PIPELINE_DEPTH`); without it
-//! the full zoo runs.
+//! sweeps to one id (crossed with `FEDADAM_PIPELINE_DEPTH`); the
+//! determinism matrix additionally crosses `FEDADAM_PARTICIPATION_MODE ∈
+//! {uniform, importance}` through `apply_env_overrides`.  Without the
+//! env vars the full zoo runs under the uniform default.
 
 use fedadam_ssm::algorithms::{
     self, Algorithm as _, LocalDelta, MomentumPolicy, Recon, CONFORMANCE_ZOO,
 };
-use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
 use fedadam_ssm::coordinator::{evaluate_model, evaluate_plan, Coordinator, EvalPlan};
 use fedadam_ssm::data::synthetic;
 use fedadam_ssm::metrics::ExperimentLog;
@@ -86,7 +92,12 @@ fn base_cfg(algo: &str) -> ExperimentConfig {
     cfg.warmup_rounds = WARMUP;
     cfg.num_workers = 2;
     cfg.agg_shards = 0; // auto: one shard per pool worker
-    cfg.apply_env_overrides(); // CI determinism-matrix hook (workers/shards/depth)
+    // CI determinism-matrix hook (workers/shards/depth/participation
+    // mode).  Tests whose expectations depend on the cohort covering
+    // every device (ledger totals = devices × formula) pin
+    // `participation_mode = Uniform` after this call, exactly like every
+    // test pins `algorithm`.
+    cfg.apply_env_overrides();
     // FEDADAM_ALGORITHM steers WHICH ids the zoo sweeps run
     // (`zoo_under_test()` / `identity_zoo()` read it directly); each test
     // still pins its current id explicitly here.
@@ -137,7 +148,10 @@ fn ledger_bits_match_cost_table_for_every_algorithm() {
     let m = meta();
     let d = m.dim;
     for algo in zoo_under_test() {
-        let cfg = base_cfg(algo);
+        let mut cfg = base_cfg(algo);
+        // Full-cohort expectation (`n × formula` every round) — pin the
+        // uniform sampler regardless of the CI lane's mode override.
+        cfg.participation_mode = ParticipationMode::Uniform;
         let k = cfg.k_for(d);
         let s = cfg.quant_levels;
         let n = cfg.devices as u64;
@@ -514,6 +528,156 @@ fn eval_padding_is_neutral_and_fanout_bit_identical() {
     assert!(
         (l1 - l_div).abs() < 1e-3,
         "padded vs exact batching loss drifted: {l1} vs {l_div}"
+    );
+}
+
+#[test]
+fn sampler_modes_hold_the_identity_contract() {
+    // Importance and availability cohorts (and the simulated clock) are
+    // pure functions of (config, partition, round) — every logged number
+    // and the final model must stay byte-identical at any
+    // workers × shards × depth.  Depths 0 and 1 share the barrier
+    // simulated schedule, so sim_secs is compared there; depth 2 swaps in
+    // the overlapped schedule, so only the non-sim fields are compared.
+    for mode in [ParticipationMode::Importance, ParticipationMode::Availability] {
+        let run_with = |workers: usize, shards: usize, depth: usize| {
+            let mut cfg = base_cfg("fedadam-ssm");
+            cfg.participation_mode = mode;
+            cfg.participation = 0.6;
+            cfg.duty_cycle = 0.7;
+            cfg.over_select = 2.0;
+            cfg.simtime = true;
+            cfg.rounds = 5;
+            cfg.num_workers = workers;
+            cfg.agg_shards = shards;
+            cfg.pipeline_depth = depth;
+            run(cfg)
+        };
+        let (log1, w1, m1, v1) = run_with(1, 1, 0);
+        for (workers, shards, depth) in [(2, 1, 0), (1, 4, 1), (3, 3, 1), (2, 2, 2)] {
+            let (log, w, m, v) = run_with(workers, shards, depth);
+            let mode = mode.as_str();
+            assert_eq!(w1, w, "{mode} ({workers}w/{shards}s/d{depth}): W diverged");
+            assert_eq!(m1, m, "{mode} ({workers}w/{shards}s/d{depth}): M diverged");
+            assert_eq!(v1, v, "{mode} ({workers}w/{shards}s/d{depth}): V diverged");
+            assert_eq!(log1.rounds.len(), log.rounds.len());
+            for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+                let tag = format!("{mode} ({workers}w/{shards}s/d{depth}) round {}", a.round);
+                assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag}");
+                assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{tag}");
+                assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits(), "{tag}");
+                assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+                assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}");
+                assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{tag}");
+                if depth <= 1 {
+                    assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits(), "{tag}: sim");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simulated_clock_is_identical_at_any_worker_count() {
+    // Virtual time must never read real time: the sim_secs column is a
+    // pure function of (config, partition, wire bits), so it is
+    // bit-identical at any num_workers / agg_shards (and across depths 0
+    // and 1, which share the barrier schedule), finite, positive and
+    // monotone — and a repeated run reproduces it exactly.
+    let run_with = |workers: usize, shards: usize, depth: usize| {
+        let mut cfg = base_cfg("fedadam-ssm-q");
+        cfg.participation_mode = ParticipationMode::Uniform;
+        cfg.participation = 0.75;
+        cfg.simtime = true;
+        cfg.num_workers = workers;
+        cfg.agg_shards = shards;
+        cfg.pipeline_depth = depth;
+        run(cfg)
+    };
+    let (log1, _, _, _) = run_with(1, 1, 0);
+    let mut prev = 0.0;
+    for r in &log1.rounds {
+        assert!(r.sim_secs.is_finite() && r.sim_secs > 0.0, "round {}", r.round);
+        assert!(r.sim_secs >= prev, "round {}: clock ran backwards", r.round);
+        prev = r.sim_secs;
+    }
+    for (workers, shards, depth) in [(2, 1, 0), (4, 4, 0), (1, 4, 1), (3, 2, 1), (1, 1, 0)] {
+        let (log, _, _, _) = run_with(workers, shards, depth);
+        for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+            assert_eq!(
+                a.sim_secs.to_bits(),
+                b.sim_secs.to_bits(),
+                "({workers}w/{shards}s/d{depth}) round {}: simulated clock drifted",
+                a.round
+            );
+        }
+    }
+    // simtime off ⇒ the column is absent (NaN), never zero-filled.
+    let mut cfg = base_cfg("fedadam-ssm-q");
+    cfg.participation_mode = ParticipationMode::Uniform;
+    cfg.simtime = false;
+    let (dry, _, _, _) = run(cfg);
+    assert!(dry.rounds.iter().all(|r| r.sim_secs.is_nan()));
+}
+
+#[test]
+fn overlapped_schedule_hides_eval_time() {
+    // Same experiment, barrier vs overlapped simulated schedule: with an
+    // eval every round, the overlapped clock must finish strictly earlier
+    // (each eval hides under the next round's training) while every
+    // non-sim number stays byte-identical (the existing depth-identity
+    // contract).
+    let run_with = |depth: usize| {
+        let mut cfg = base_cfg("fedadam-ssm");
+        cfg.participation_mode = ParticipationMode::Uniform;
+        cfg.simtime = true;
+        cfg.eval_every = 1;
+        cfg.rounds = 4;
+        cfg.pipeline_depth = depth;
+        run(cfg)
+    };
+    let (barrier, wb, _, _) = run_with(0);
+    let (overlap, wo, _, _) = run_with(2);
+    assert_eq!(wb, wo, "depth must not change the model");
+    let t_barrier = barrier.rounds.last().unwrap().sim_secs;
+    let t_overlap = overlap.rounds.last().unwrap().sim_secs;
+    assert!(
+        t_overlap < t_barrier,
+        "overlap must hide eval time: {t_overlap} !< {t_barrier}"
+    );
+}
+
+#[test]
+fn sparse_uplinks_win_the_simulated_time_race() {
+    // The metric that motivates the whole paper: on a bandwidth-bound
+    // fleet, FedAdam-SSM (and its quantized composition) must reach the
+    // common accuracy target in less *simulated* time than dense FedAdam,
+    // because the per-round uplink is the critical path.
+    let run_algo = |algo: &str| {
+        let mut cfg = base_cfg(algo);
+        cfg.participation_mode = ParticipationMode::Uniform;
+        cfg.simtime = true;
+        cfg.sim_bandwidth_mbps = 0.01; // 10 kbit/s uplinks
+        cfg.rounds = 6;
+        run(cfg).0
+    };
+    let dense = run_algo("fedadam");
+    let ssm = run_algo("fedadam-ssm");
+    let ssm_q = run_algo("fedadam-ssm-q");
+    let target = dense
+        .best_accuracy()
+        .min(ssm.best_accuracy())
+        .min(ssm_q.best_accuracy());
+    let t_dense = dense.time_to_accuracy(target).expect("dense never hit target");
+    let t_ssm = ssm.time_to_accuracy(target).expect("ssm never hit target");
+    let t_ssm_q = ssm_q.time_to_accuracy(target).expect("ssm-q never hit target");
+    assert!(
+        t_ssm < t_dense,
+        "SSM must win the time race: {t_ssm}s !< {t_dense}s (target {target:.3})"
+    );
+    assert!(
+        t_ssm_q < t_dense,
+        "SSM-Q must win the time race: {t_ssm_q}s !< {t_dense}s (target {target:.3})"
     );
 }
 

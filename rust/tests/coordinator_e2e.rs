@@ -4,7 +4,7 @@
 //! Requires `make artifacts`.
 
 use fedadam_ssm::algorithms::ALL_ALGORITHMS;
-use fedadam_ssm::config::{ExperimentConfig, SparsifyBackend};
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode, SparsifyBackend};
 use fedadam_ssm::coordinator::Coordinator;
 use fedadam_ssm::runtime::Manifest;
 use fedadam_ssm::sparse::codec::cost;
@@ -86,6 +86,9 @@ fn comm_accounting_matches_formulas() {
     ];
     for (algo, per_device) in cases {
         let mut cfg = base_cfg();
+        // `n × formula` needs the full cohort every round: pin the
+        // uniform sampler regardless of FEDADAM_PARTICIPATION_MODE.
+        cfg.participation_mode = ParticipationMode::Uniform;
         cfg.rounds = 2;
         cfg.algorithm = algo.into();
         let mut coord = Coordinator::new(cfg, "artifacts").unwrap();
@@ -106,6 +109,8 @@ fn onebit_phases_price_differently() {
     }
     let d = 2410usize;
     let mut cfg = base_cfg();
+    // Per-round `3 × formula` needs all 3 devices every round.
+    cfg.participation_mode = ParticipationMode::Uniform;
     cfg.algorithm = "onebit-adam".into();
     cfg.rounds = 4;
     cfg.warmup_rounds = 2;
@@ -292,6 +297,9 @@ fn partial_participation_scales_uplink() {
     let run = |part: f64| {
         let mut cfg = base_cfg();
         cfg.algorithm = "fedadam".into();
+        // Exact-cohort-size expectation: pin the uniform sampler
+        // regardless of the CI lane's FEDADAM_PARTICIPATION_MODE.
+        cfg.participation_mode = ParticipationMode::Uniform;
         cfg.participation = part;
         cfg.rounds = 3;
         cfg.devices = 4;

@@ -3,6 +3,8 @@
 //! fixed so failures reproduce exactly).
 
 use fedadam_ssm::algorithms::{Recon, Upload};
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+use fedadam_ssm::coordinator::sampler::{self, AvailabilitySampler, ParticipationSampler};
 use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, ShardedAccumulator};
 use fedadam_ssm::quant::sparse_uniform::{
     reconstruct, sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
@@ -488,6 +490,192 @@ fn prop_weighted_mean_is_convex_combination() {
             let lo = rows.iter().map(|r| r[j]).fold(f32::INFINITY, f32::min);
             let hi = rows.iter().map(|r| r[j]).fold(f32::NEG_INFINITY, f32::max);
             assert!(out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Participation samplers (coordinator::sampler)
+// ---------------------------------------------------------------------------
+
+fn sampler_cfg(mode: ParticipationMode, seed: u64, participation: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.participation_mode = mode;
+    cfg.participation = participation;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn prop_uniform_sampler_replays_the_legacy_loop_bit_for_bit() {
+    // The pre-sampler coordinator drew cohorts from Rng::new(seed ^
+    // 0x5a3c_91f7) with shuffle/truncate/sort (consuming NO randomness on
+    // full-participation rounds) and weighted uploads by data size.  The
+    // uniform sampler must replay that stream exactly — this is the
+    // "participation_mode=uniform is byte-identical to the pre-PR loop"
+    // contract at its root.
+    let mut rng = Rng::new(2024);
+    for trial in 0..50 {
+        let n = 1 + rng.below(12);
+        let participation = 0.05 + 0.95 * rng.uniform();
+        let seed = rng.next_u64();
+        let weights: Vec<f64> = (0..n).map(|_| 1.0 + rng.below(64) as f64).collect();
+        let lat = vec![0.0; n];
+        let cfg = sampler_cfg(ParticipationMode::Uniform, seed, participation);
+        let mut s = sampler::build(&cfg, &weights, &lat);
+        let mut legacy = Rng::new(seed ^ 0x5a3c_91f7);
+        for round in 0..8 {
+            let m = ((n as f64 * participation).round() as usize).clamp(1, n);
+            let expect: Vec<usize> = if m == n {
+                (0..n).collect()
+            } else {
+                let mut idx: Vec<usize> = (0..n).collect();
+                legacy.shuffle(&mut idx);
+                idx.truncate(m);
+                idx.sort_unstable();
+                idx
+            };
+            let cohort = s.sample(round);
+            assert_eq!(cohort.devices, expect, "trial {trial} round {round}");
+            let want: Vec<f64> = expect.iter().map(|&i| weights[i]).collect();
+            assert_eq!(cohort.weights, want, "trial {trial} round {round}");
+        }
+    }
+}
+
+#[test]
+fn prop_importance_draws_are_deterministic_and_cover_every_device() {
+    // Same seed ⇒ same cohort stream; and because every device has
+    // nonzero data weight, every device has nonzero selection probability
+    // per draw — over enough rounds each one must participate.
+    let mut rng = Rng::new(2025);
+    for trial in 0..20 {
+        let n = 2 + rng.below(7);
+        let participation = 0.05 + 0.95 * rng.uniform();
+        let seed = rng.next_u64();
+        // Bounded weight skew keeps the smallest p_i >= 1/(8n).
+        let weights: Vec<f64> = (0..n).map(|_| 1.0 + rng.below(8) as f64).collect();
+        let lat = vec![0.0; n];
+        let cfg = sampler_cfg(ParticipationMode::Importance, seed, participation);
+        let mut a = sampler::build(&cfg, &weights, &lat);
+        let mut b = sampler::build(&cfg, &weights, &lat);
+        let mut seen = vec![false; n];
+        let mut rounds_until_covered = None;
+        for round in 0..5000 {
+            let ca = a.sample(round);
+            assert!(!ca.is_empty(), "trial {trial} round {round}");
+            assert!(
+                ca.devices.windows(2).all(|w| w[0] < w[1]),
+                "trial {trial} round {round}: cohort not sorted-unique"
+            );
+            if round < 32 {
+                let cb = b.sample(round);
+                assert_eq!(ca.devices, cb.devices, "trial {trial} round {round}");
+                assert_eq!(ca.weights, cb.weights, "trial {trial} round {round}");
+            }
+            for &d in &ca.devices {
+                seen[d] = true;
+            }
+            if seen.iter().all(|&s| s) {
+                rounds_until_covered = Some(round);
+                break;
+            }
+        }
+        assert!(
+            rounds_until_covered.is_some(),
+            "trial {trial}: a positive-weight device was never sampled in 5000 rounds"
+        );
+    }
+}
+
+#[test]
+fn prop_importance_reweighting_is_unbiased_on_cancelling_twins() {
+    // Cancelling-twin fixture: devices 2j and 2j+1 share a data weight
+    // and carry exactly opposite scalar updates, so the full-participation
+    // FedAvg aggregate is exactly zero.  The sampler's 1/(m·p_i) cohort
+    // weights must (a) sum to the full corpus weight every round — which
+    // makes the aggregate path's weight/Sigma-weights normalization THE
+    // unbiased estimator — and (b) drive the Monte-Carlo mean of the
+    // realized aggregate to ~zero.
+    let mut rng = Rng::new(2026);
+    for trial in 0..5u64 {
+        let pairs = 2 + rng.below(3);
+        let n = 2 * pairs;
+        let mut weights = Vec::with_capacity(n);
+        let mut deltas = Vec::with_capacity(n);
+        for _ in 0..pairs {
+            let w = 1.0 + rng.below(16) as f64;
+            let x = 0.5 + rng.uniform();
+            weights.push(w);
+            weights.push(w);
+            deltas.push(x);
+            deltas.push(-x);
+        }
+        let total: f64 = weights.iter().sum();
+        let cfg = sampler_cfg(ParticipationMode::Importance, 1000 + trial, 0.5);
+        let lat = vec![0.0; n];
+        let mut s = sampler::build(&cfg, &weights, &lat);
+        let rounds = 2000usize;
+        let mut mean = 0.0f64;
+        for round in 0..rounds {
+            let cohort = s.sample(round);
+            let wsum = cohort.total_weight();
+            assert!(
+                (wsum - total).abs() < 1e-9 * total,
+                "trial {trial} round {round}: cohort weight {wsum} != corpus {total}"
+            );
+            let est: f64 = cohort
+                .devices
+                .iter()
+                .zip(&cohort.weights)
+                .map(|(&d, &w)| w * deltas[d])
+                .sum::<f64>()
+                / wsum;
+            mean += est / rounds as f64;
+        }
+        // Per-round std <= ~1.5/sqrt(m); mean-of-2000 std <= ~0.024.
+        assert!(
+            mean.abs() < 0.1,
+            "trial {trial}: biased importance estimator, Monte-Carlo mean {mean}"
+        );
+    }
+}
+
+#[test]
+fn prop_availability_traces_never_yield_an_empty_cohort() {
+    // Floor of 1: even pathological duty cycles (nearly always off) must
+    // produce a cohort every round, deterministically, sorted-unique, and
+    // only from on-duty devices (unless the all-off fallback fired).
+    let mut rng = Rng::new(2027);
+    for trial in 0..40 {
+        let n = 1 + rng.below(10);
+        let duty = 0.05 + 0.95 * rng.uniform();
+        let over = 1.0 + 2.0 * rng.uniform();
+        let participation = 0.05 + 0.95 * rng.uniform();
+        let seed = rng.next_u64();
+        let weights: Vec<f64> = (0..n).map(|_| 1.0 + rng.below(32) as f64).collect();
+        let lat: Vec<f64> = (0..n).map(|_| rng.uniform() * 5.0).collect();
+        let mut a =
+            AvailabilitySampler::new(seed, participation, duty, over, weights.clone(), lat.clone());
+        let mut b = AvailabilitySampler::new(seed, participation, duty, over, weights, lat);
+        for round in 0..100 {
+            let ca = a.sample(round);
+            assert!(!ca.is_empty(), "trial {trial} round {round}: empty cohort");
+            assert!(ca.len() <= n, "trial {trial} round {round}");
+            assert!(
+                ca.devices.windows(2).all(|w| w[0] < w[1]),
+                "trial {trial} round {round}: cohort not sorted-unique"
+            );
+            if ca.len() > 1 {
+                // More than the floor ⇒ every member came from the trace.
+                for &d in &ca.devices {
+                    assert!(
+                        a.available(d, round),
+                        "trial {trial} round {round}: off-duty device {d} selected"
+                    );
+                }
+            }
+            assert_eq!(ca, b.sample(round), "trial {trial} round {round}: nondeterministic");
         }
     }
 }

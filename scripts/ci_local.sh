@@ -3,16 +3,16 @@
 # .github/workflows/ci.yml runs on every push:
 #
 #   1. tier-1: release build + full test suite
-#   2. determinism grid: workers x shards x pipeline_depth, via the
-#      FEDADAM_* env overrides the test base configs read
-#      (the determinism-bearing suites only, to keep the sweep fast;
-#      CI re-runs the full suite per grid point)
+#   2. determinism grid: workers x shards x pipeline_depth x
+#      participation_mode, via the FEDADAM_* env overrides the test base
+#      configs read (the determinism-bearing suites only, to keep the
+#      sweep fast; CI re-runs the full suite per grid point)
 #   3. quantized-SSM conformance lanes: FEDADAM_ALGORITHM in
 #      {fedadam-ssm-q, fedadam-ssm-qef} x FEDADAM_PIPELINE_DEPTH in {0, 2}
 #      pins the conformance suite to one quantized id per lane
 #   4. clippy -D warnings + rustfmt --check (skipped with a note when the
 #      components aren't installed)
-#   5. rustdoc + doc-tests
+#   5. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
 #   6. benches stay buildable (cargo bench --no-run)
 #
 # Usage: scripts/ci_local.sh [--quick]
@@ -37,11 +37,14 @@ if [[ "$QUICK" == 0 ]]; then
   for workers in 1 4; do
     for shards in 1 4; do
       for pipeline in 0 2; do
-        step "determinism: workers=$workers shards=$shards pipeline_depth=$pipeline"
-        FEDADAM_NUM_WORKERS=$workers \
-        FEDADAM_AGG_SHARDS=$shards \
-        FEDADAM_PIPELINE_DEPTH=$pipeline \
-          cargo test -q --test algorithm_conformance --test coordinator_e2e --test proptests
+        for mode in uniform importance; do
+          step "determinism: workers=$workers shards=$shards pipeline_depth=$pipeline mode=$mode"
+          FEDADAM_NUM_WORKERS=$workers \
+          FEDADAM_AGG_SHARDS=$shards \
+          FEDADAM_PIPELINE_DEPTH=$pipeline \
+          FEDADAM_PARTICIPATION_MODE=$mode \
+            cargo test -q --test algorithm_conformance --test coordinator_e2e --test proptests
+        done
       done
     done
   done
