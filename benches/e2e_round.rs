@@ -16,12 +16,25 @@
 //! `make artifacts`; skipped with a message otherwise.
 //!
 //! Run: `cargo bench --bench e2e_round`.
+//!
+//! **JSON mode** (`-- --json`) — the CI perf pin: reference-backend runs
+//! at `pipeline_depth ∈ {0, 2}` × journaling {off, on}, emitting median
+//! wall-clock per round, final uplink bits and the journal on/off
+//! overhead ratio as `BENCH_e2e_round.json` (`--json-out PATH` to
+//! redirect).  With `--baseline PATH` the fresh medians are compared
+//! against a checked-in file and any >10% wall-clock regression prints a
+//! `WARN:` line (informational — absolute numbers are host-dependent, so
+//! the comparison never fails the build).
+
+use std::collections::BTreeMap;
+use std::path::Path;
 
 use fedadam_ssm::benchlib::{black_box, from_env};
 use fedadam_ssm::config::ExperimentConfig;
 use fedadam_ssm::coordinator::Coordinator;
 use fedadam_ssm::metrics::ExperimentLog;
 use fedadam_ssm::runtime::{reference_meta, reference_pool};
+use fedadam_ssm::util::json::{self, Value};
 
 const PIPE_INPUT: [usize; 3] = [8, 8, 1]; // row 64
 const PIPE_CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
@@ -49,7 +62,18 @@ fn pipeline_cfg(depth: usize, workers: usize) -> ExperimentConfig {
 }
 
 fn run_reference(depth: usize, workers: usize) -> (ExperimentLog, Vec<f32>) {
-    let cfg = pipeline_cfg(depth, workers);
+    run_journaled(depth, workers, None)
+}
+
+fn run_journaled(
+    depth: usize,
+    workers: usize,
+    journal: Option<&Path>,
+) -> (ExperimentLog, Vec<f32>) {
+    let mut cfg = pipeline_cfg(depth, workers);
+    if let Some(dir) = journal {
+        cfg.journal = dir.to_string_lossy().into_owned();
+    }
     let meta = reference_meta(&PIPE_INPUT, PIPE_CLASSES, 8, 32, 1);
     let pool = reference_pool(meta, cfg.num_workers).expect("reference pool");
     let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
@@ -58,7 +82,129 @@ fn run_reference(depth: usize, workers: usize) -> (ExperimentLog, Vec<f32>) {
     (log, w)
 }
 
+/// `--json` mode: the machine-readable perf pin (see the module docs).
+fn json_mode(args: &[String]) {
+    let opt = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let out_path = opt("--json-out").unwrap_or_else(|| "BENCH_e2e_round.json".into());
+    let baseline = opt("--baseline");
+
+    let mut bench = from_env();
+    bench.max_iters = 5; // a full 4-round run per iteration
+    let workers = 2;
+    let rounds = pipeline_cfg(0, workers).rounds;
+
+    let mut cases: Vec<Value> = Vec::new();
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+    for depth in [0usize, 2] {
+        for journal_on in [false, true] {
+            let name = format!(
+                "depth{depth}-journal-{}",
+                if journal_on { "on" } else { "off" }
+            );
+            let dir = std::env::temp_dir()
+                .join(format!("fedadam-bench-journal-{}", std::process::id()));
+            let journal = journal_on.then(|| dir.clone());
+            let result = bench.run(name.clone(), || {
+                black_box(run_journaled(depth, workers, journal.as_deref()));
+            });
+            let median_round_ns = result.p50_ns / rounds as f64;
+            // One more (untimed) run for the deterministic wire totals.
+            let (log, _) = run_journaled(depth, workers, journal.as_deref());
+            let uplink_bits = log.rounds.last().map(|r| r.uplink_bits).unwrap_or(0);
+            let _ = std::fs::remove_dir_all(&dir);
+            medians.insert(name.clone(), median_round_ns);
+            let mut obj = BTreeMap::new();
+            obj.insert("name".into(), Value::Str(name));
+            obj.insert("pipeline_depth".into(), Value::Num(depth as f64));
+            obj.insert("journal".into(), Value::Bool(journal_on));
+            obj.insert("median_round_ns".into(), Value::Num(median_round_ns));
+            obj.insert("uplink_bits".into(), Value::Num(uplink_bits as f64));
+            cases.push(Value::Obj(obj));
+        }
+    }
+
+    let mut overhead = BTreeMap::new();
+    for depth in [0usize, 2] {
+        let off = medians[&format!("depth{depth}-journal-off")];
+        let on = medians[&format!("depth{depth}-journal-on")];
+        overhead.insert(format!("depth{depth}"), Value::Num(on / off.max(1.0)));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Value::Str("e2e_round".into()));
+    root.insert("backend".into(), Value::Str("reference-linear".into()));
+    root.insert("rounds_per_run".into(), Value::Num(rounds as f64));
+    root.insert("workers".into(), Value::Num(workers as f64));
+    root.insert("cases".into(), Value::Arr(cases));
+    root.insert("journal_overhead".into(), Value::Obj(overhead));
+    let doc = Value::Obj(root);
+    std::fs::write(&out_path, doc.render() + "\n").expect("writing bench json");
+    println!("wrote {out_path}");
+
+    if let Some(bp) = baseline {
+        compare_with_baseline(&bp, &medians);
+    }
+}
+
+/// Warn (never fail) when a fresh median regresses >10% vs `path`.
+fn compare_with_baseline(path: &str, medians: &BTreeMap<String, f64>) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("no baseline at {path}: {e}");
+            return;
+        }
+    };
+    let base = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("unparseable baseline {path}: {e}");
+            return;
+        }
+    };
+    let Some(base_cases) = base.get("cases").and_then(|c| c.as_arr()) else {
+        eprintln!("baseline {path} has no cases array");
+        return;
+    };
+    let mut warned = false;
+    for c in base_cases {
+        let name = c.get("name").and_then(|v| v.as_str());
+        let old = c.get("median_round_ns").and_then(|v| v.as_f64());
+        let (Some(name), Some(old)) = (name, old) else {
+            continue;
+        };
+        let Some(&new) = medians.get(name) else {
+            continue;
+        };
+        let ratio = new / old.max(1.0);
+        if ratio > 1.10 {
+            warned = true;
+            println!(
+                "WARN: {name}: median round {:.2} ms vs baseline {:.2} ms (+{:.0}%)",
+                new / 1e6,
+                old / 1e6,
+                (ratio - 1.0) * 100.0
+            );
+        } else {
+            println!("ok: {name}: {ratio:.2}x baseline");
+        }
+    }
+    if !warned {
+        println!("no >10% wall-clock regressions vs {path}");
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        json_mode(&args);
+        return;
+    }
     let mut bench = from_env();
     // One full run is already ~100ms-scale; cap iterations regardless of
     // budget.

@@ -6,9 +6,12 @@
 //! update ΔW travels, uniformly quantized: device→server with per-device
 //! EF, and server→devices re-quantized with a server-side EF.
 
+use anyhow::{ensure, Result};
+
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
 use crate::quant::{uniform_compress, uniform_decompress, ErrorFeedback};
 use crate::sparse::codec::cost;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub struct EfficientAdam {
     dim: usize,
@@ -69,6 +72,26 @@ impl Algorithm for EfficientAdam {
         let deq = uniform_decompress(&packet);
         self.ef_down.update(&compensated, &deq);
         agg.dw = deq;
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_usize(self.ef_up.len());
+        for e in &self.ef_up {
+            out.put_f32s(&e.residual);
+        }
+        out.put_f32s(&self.ef_down.residual);
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let n = input.take_usize()?;
+        ensure!(n == self.ef_up.len(), "snapshot has {n} EF residuals, config builds {}", self.ef_up.len());
+        for e in &mut self.ef_up {
+            e.residual = input.take_f32s()?;
+            ensure!(e.residual.len() == self.dim, "EF residual dim mismatch");
+        }
+        self.ef_down.residual = input.take_f32s()?;
+        ensure!(self.ef_down.residual.len() == self.dim, "EF residual dim mismatch");
+        Ok(())
     }
 }
 

@@ -46,6 +46,7 @@ use anyhow::{bail, Result};
 
 use crate::config::ExperimentConfig;
 use crate::sparse::SparseVec;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// How devices train locally this round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -162,6 +163,21 @@ pub trait Algorithm: Send {
     /// (e.g. Efficient-Adam re-quantizes the broadcast). Default: identity.
     fn postprocess(&mut self, agg: &mut Aggregate) {
         let _ = agg;
+    }
+
+    /// Serialize all cross-round mutable state (per-device EF residual
+    /// memories, server-side EF, …) into a coordinator snapshot.
+    /// Stateless algorithms write nothing (the default).
+    fn save_state(&self, out: &mut ByteWriter) {
+        let _ = out;
+    }
+
+    /// Restore exactly what [`Algorithm::save_state`] wrote — must consume
+    /// the same bytes, bit-exactly, so a resumed run replays the original
+    /// byte for byte.  Default: nothing to restore.
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let _ = input;
+        Ok(())
     }
 }
 

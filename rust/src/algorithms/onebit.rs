@@ -16,9 +16,12 @@
 //! cost match [29]; Table I's "∞" behaviour reproduces because the frozen,
 //! never-aggregated moments degrade exactly as the paper argues.
 
+use anyhow::{ensure, Result};
+
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
 use crate::quant::{onebit_compress, onebit_decompress, ErrorFeedback};
 use crate::sparse::codec::cost;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub struct OneBitAdam {
     dim: usize,
@@ -98,6 +101,23 @@ impl Algorithm for OneBitAdam {
                 *v = if *v >= 0.0 { scale } else { -scale };
             }
         }
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_usize(self.ef.len());
+        for e in &self.ef {
+            out.put_f32s(&e.residual);
+        }
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let n = input.take_usize()?;
+        ensure!(n == self.ef.len(), "snapshot has {n} EF residuals, config builds {}", self.ef.len());
+        for e in &mut self.ef {
+            e.residual = input.take_f32s()?;
+            ensure!(e.residual.len() == self.dim, "EF residual dim mismatch");
+        }
+        Ok(())
     }
 }
 

@@ -11,9 +11,12 @@
 //!
 //! Wire cost is identical to FedAdam-SSM: `min{3kq + d, k(3q + log₂ d)}`.
 
+use anyhow::{ensure, Result};
+
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
 use crate::sparse::codec::cost;
 use crate::sparse::{top_k_indices, SparseVec};
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// Per-device residual memories for the three vectors.
 struct Memory {
@@ -86,6 +89,27 @@ impl Algorithm for FedAdamSsmEf {
         // Union support carried through `Aggregate` (see ssm.rs: a recount
         // of non-zeros undercounts on exact-zero cancellation).
         cost::fedadam_ssm(self.dim, agg.dw_support)
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_usize(self.memory.len());
+        for mem in &self.memory {
+            out.put_f32s(&mem.w);
+            out.put_f32s(&mem.m);
+            out.put_f32s(&mem.v);
+        }
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let n = input.take_usize()?;
+        ensure!(n == self.memory.len(), "snapshot has {n} EF memories, config builds {}", self.memory.len());
+        for mem in &mut self.memory {
+            mem.w = input.take_f32s()?;
+            mem.m = input.take_f32s()?;
+            mem.v = input.take_f32s()?;
+            ensure!(mem.w.len() == self.dim, "EF memory dim mismatch");
+        }
+        Ok(())
     }
 }
 

@@ -22,10 +22,13 @@
 //! FedAMS-style compensation Wang et al. argue compressed FedAdam needs
 //! for convergence.  Same wire cost as the plain variant.
 
+use anyhow::{ensure, Result};
+
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
 use crate::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
 use crate::sparse::codec::cost;
 use crate::sparse::{top_k_indices, SparseVec};
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// Gather `src[indices]` as a plain value list (mask handled separately).
 fn gather_vals(src: &[f32], indices: &[u32]) -> Vec<f32> {
@@ -170,6 +173,27 @@ impl Algorithm for FedAdamSsmQEf {
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {
         cost::fedadam_ssm(self.dim, agg.dw_support)
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_usize(self.memory.len());
+        for mem in &self.memory {
+            out.put_f32s(&mem.w);
+            out.put_f32s(&mem.m);
+            out.put_f32s(&mem.v);
+        }
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let n = input.take_usize()?;
+        ensure!(n == self.memory.len(), "snapshot has {n} EF memories, config builds {}", self.memory.len());
+        for mem in &mut self.memory {
+            mem.w = input.take_f32s()?;
+            mem.m = input.take_f32s()?;
+            mem.v = input.take_f32s()?;
+            ensure!(mem.w.len() == self.dim, "EF memory dim mismatch");
+        }
+        Ok(())
     }
 }
 

@@ -162,6 +162,22 @@ pub struct ExperimentConfig {
     /// most `pipeline_depth - 1` evals stay in flight).  Results are
     /// bitwise identical at any depth — only wall-clock changes.
     pub pipeline_depth: usize,
+    /// Event-journal directory (see [`crate::coordinator::journal`]).
+    /// Non-empty = journal every round-loop state transition there and
+    /// snapshot full coordinator state every `snapshot_every` rounds;
+    /// empty (default) = journaling off.  Journaling is pure observation:
+    /// results are bitwise identical with it on or off.
+    pub journal: String,
+    /// Resume an interrupted run from this journal directory (empty =
+    /// fresh start).  The resumed run restores the latest snapshot,
+    /// re-executes the logged tail under byte-exact replay verification,
+    /// finishes the remaining rounds, and keeps appending to the same
+    /// journal.  The journal must have been written by a config with the
+    /// same [`ExperimentConfig::fingerprint`].
+    pub resume: String,
+    /// Snapshot cadence in rounds when journaling (must be >= 1; a crash
+    /// re-executes at most this many rounds on resume).
+    pub snapshot_every: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -197,6 +213,9 @@ impl Default for ExperimentConfig {
             num_workers: 1,
             agg_shards: 0,
             pipeline_depth: 0,
+            journal: String::new(),
+            resume: String::new(),
+            snapshot_every: 8,
         }
     }
 }
@@ -275,6 +294,9 @@ impl ExperimentConfig {
             "num_workers" => self.num_workers = p(key, value)?,
             "agg_shards" => self.agg_shards = p(key, value)?,
             "pipeline_depth" => self.pipeline_depth = p(key, value)?,
+            "journal" => self.journal = value.into(),
+            "resume" => self.resume = value.into(),
+            "snapshot_every" => self.snapshot_every = p(key, value)?,
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -332,7 +354,70 @@ impl ExperimentConfig {
         if !(1.0 <= self.sim_hetero && self.sim_hetero.is_finite()) {
             bail!("sim_hetero must be >= 1.0, got {}", self.sim_hetero);
         }
+        if self.snapshot_every == 0 {
+            bail!("snapshot_every must be >= 1 (0 would journal without ever snapshotting)");
+        }
+        if !self.resume.is_empty() {
+            // The knob must point at a journal written by an equivalent
+            // config; `verify_resumable` checks existence, format version
+            // and the determinism fingerprint.
+            crate::coordinator::journal::verify_resumable(
+                Path::new(&self.resume),
+                self.fingerprint(),
+            )
+            .with_context(|| format!("resume = {:?} is not a resumable journal", self.resume))?;
+        }
         Ok(())
+    }
+
+    /// FNV-1a hash over every determinism-bearing knob — the journal
+    /// header records it so `resume` can reject a foreign journal.
+    ///
+    /// Included: everything that steers the data, training, cohorts,
+    /// wire pricing, the eval cadence or the event-stream shape
+    /// (`pipeline_depth` changes which eval events fire and the
+    /// overlapped sim-clock schedule, so it is determinism-bearing here).
+    /// Excluded: pure perf knobs (`num_workers`, `agg_shards`) — the
+    /// determinism contract makes resuming under a different worker or
+    /// shard count bit-neutral — and the journal plumbing itself
+    /// (`name`, `journal`, `resume`, `snapshot_every`).
+    pub fn fingerprint(&self) -> u64 {
+        let canon = format!(
+            "{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{}|{:?}|{:016x}|{}|{:016x}|{:016x}|{}|{:016x}|{:016x}|{:016x}|{}",
+            self.model,
+            self.algorithm,
+            self.rounds,
+            self.devices,
+            self.local_epochs,
+            self.max_batches_per_epoch,
+            self.lr.to_bits(),
+            self.sparsity.to_bits(),
+            self.iid,
+            self.dirichlet_theta.to_bits(),
+            self.train_samples,
+            self.test_samples,
+            self.seed,
+            self.eval_every,
+            self.quant_levels,
+            self.warmup_rounds,
+            self.use_epoch_program,
+            self.sparsify_backend,
+            self.participation.to_bits(),
+            self.participation_mode.as_str(),
+            self.duty_cycle.to_bits(),
+            self.over_select.to_bits(),
+            self.simtime,
+            self.sim_bandwidth_mbps.to_bits(),
+            self.sim_samples_per_sec.to_bits(),
+            self.sim_hetero.to_bits(),
+            self.pipeline_depth,
+        );
+        let mut h = 0xCBF2_9CE4_8422_2325u64;
+        for b in canon.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
     }
 
     /// Apply the CI determinism-matrix environment overrides:
@@ -375,6 +460,18 @@ impl ExperimentConfig {
         if let Ok(v) = std::env::var("FEDADAM_PARTICIPATION_MODE") {
             self.participation_mode = ParticipationMode::parse(&v)
                 .unwrap_or_else(|e| panic!("FEDADAM_PARTICIPATION_MODE: {e}"));
+        }
+        if let Some(n) = env_usize("FEDADAM_SNAPSHOT_EVERY") {
+            self.snapshot_every = n;
+        }
+        if let Ok(v) = std::env::var("FEDADAM_RESUME") {
+            // A present-but-empty value is a typo'd lane (an empty string
+            // would silently mean "fresh run") — fail it loudly, matching
+            // the override contract.
+            if v.is_empty() {
+                panic!("FEDADAM_RESUME is set but empty; point it at a journal directory");
+            }
+            self.resume = v;
         }
     }
 }
@@ -509,6 +606,106 @@ mod tests {
         cfg.quant_levels = 0;
         let err = cfg.validate().unwrap_err().to_string();
         assert!(!err.contains("fedadam-ssm"), "generic bound names no id: {err:?}");
+    }
+
+    #[test]
+    fn journal_knobs_ride_through_set_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.snapshot_every, 8);
+        cfg.set("journal", "/tmp/j").unwrap();
+        cfg.set("snapshot_every", "3").unwrap();
+        assert_eq!(cfg.journal, "/tmp/j");
+        assert_eq!(cfg.snapshot_every, 3);
+        assert!(cfg.set("snapshot_every", "often").is_err());
+        cfg.validate().unwrap();
+        cfg.set("snapshot_every", "0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("snapshot_every"), "error must name the knob: {err}");
+    }
+
+    #[test]
+    fn resume_must_point_at_a_real_compatible_journal() {
+        // Missing directory: rejected, error names the knob.
+        let mut cfg = ExperimentConfig::default();
+        cfg.resume = "/nonexistent/journal-dir".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("resume"), "error must name the knob: {err}");
+
+        // Foreign journal (different fingerprint): rejected by name too.
+        let dir = std::env::temp_dir().join(format!("fedadam-cfg-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let other = {
+            let mut c = ExperimentConfig::default();
+            c.seed = 12345; // determinism-bearing difference
+            c.fingerprint()
+        };
+        crate::coordinator::journal::Journal::create(&dir, other).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.resume = dir.to_string_lossy().into_owned();
+        let err = format!("{:#}", cfg.validate().unwrap_err());
+        assert!(err.contains("resume"), "error must name the knob: {err}");
+        assert!(err.contains("foreign"), "{err}");
+
+        // Matching journal: accepted.
+        crate::coordinator::journal::Journal::create(&dir, cfg.fingerprint()).unwrap();
+        cfg.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_determinism_bearing_knobs_only() {
+        let base = ExperimentConfig::default().fingerprint();
+        // Perf + plumbing knobs must NOT move the fingerprint.
+        let mut cfg = ExperimentConfig::default();
+        cfg.num_workers = 8;
+        cfg.agg_shards = 4;
+        cfg.name = "other-name".into();
+        cfg.journal = "/tmp/j".into();
+        cfg.snapshot_every = 2;
+        assert_eq!(cfg.fingerprint(), base);
+        // Determinism-bearing knobs must.
+        for (key, value) in [
+            ("seed", "99"),
+            ("rounds", "7"),
+            ("algorithm", "fedadam-ssm-qef"),
+            ("participation_mode", "importance"),
+            ("pipeline_depth", "2"),
+            ("simtime", "true"),
+        ] {
+            let mut cfg = ExperimentConfig::default();
+            cfg.set(key, value).unwrap();
+            assert_ne!(cfg.fingerprint(), base, "{key}={value} must move the fingerprint");
+        }
+    }
+
+    #[test]
+    fn typoed_journal_env_overrides_panic() {
+        // Serialized against other env tests by unique var usage; the
+        // suite never sets these two vars elsewhere.
+        std::env::set_var("FEDADAM_SNAPSHOT_EVERY", "often");
+        let result = std::panic::catch_unwind(|| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.apply_env_overrides();
+        });
+        std::env::remove_var("FEDADAM_SNAPSHOT_EVERY");
+        assert!(result.is_err(), "typo'd FEDADAM_SNAPSHOT_EVERY must panic");
+
+        std::env::set_var("FEDADAM_RESUME", "");
+        let result = std::panic::catch_unwind(|| {
+            let mut cfg = ExperimentConfig::default();
+            cfg.apply_env_overrides();
+        });
+        std::env::remove_var("FEDADAM_RESUME");
+        assert!(result.is_err(), "empty FEDADAM_RESUME must panic");
+
+        std::env::set_var("FEDADAM_SNAPSHOT_EVERY", "5");
+        std::env::set_var("FEDADAM_RESUME", "/tmp/some-journal");
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_env_overrides();
+        std::env::remove_var("FEDADAM_SNAPSHOT_EVERY");
+        std::env::remove_var("FEDADAM_RESUME");
+        assert_eq!(cfg.snapshot_every, 5);
+        assert_eq!(cfg.resume, "/tmp/some-journal");
     }
 
     #[test]

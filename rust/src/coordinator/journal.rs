@@ -1,0 +1,641 @@
+//! The coordinator's event journal: an append-only, length-prefixed,
+//! checksummed log of every round-loop state transition, plus periodic
+//! full-state snapshots — the persistence layer behind
+//! [`Coordinator::resume`](super::Coordinator::resume).
+//!
+//! ## On-disk layout (`<dir>/`)
+//!
+//! - `journal.log` — the event log.  Each record is framed as
+//!   `[len: u32 le][crc32: u32 le][payload: len bytes]`; the payload is
+//!   one [`Event`] encoded by the [`crate::util::bytes`] codec.  Record 0
+//!   is always [`Event::RunStarted`] carrying the journal format version
+//!   and the config fingerprint
+//!   ([`ExperimentConfig::fingerprint`](crate::config::ExperimentConfig::fingerprint)),
+//!   so a resume can reject a foreign or incompatible journal up front.
+//! - `snapshot_<round>.bin` — a full coordinator state snapshot taken
+//!   after round `round - 1` completed (i.e. `round` is the next round to
+//!   run), framed as `[magic: u32][version: u32][crc32: u32][payload]`.
+//!   A snapshot only *counts* once its [`Event::SnapshotWritten`] record
+//!   landed in the log — a crash between the file write and the event
+//!   append falls back to the previous snapshot.
+//!
+//! ## Torn-tail tolerance
+//!
+//! A crash can leave a partial final record.  [`read_log`] stops at the
+//! first record whose header is truncated, whose payload is short, or
+//! whose CRC-32 mismatches, returning everything before it plus the byte
+//! offset of the last valid record end; [`Journal::open_resume`]
+//! truncates the file there so subsequent appends continue from a clean
+//! prefix.  Nothing before the torn record is ever lost.
+//!
+//! ## Replay verification
+//!
+//! Resume does not *apply* logged events — re-execution from the last
+//! snapshot regenerates all state deterministically.  Instead the logged
+//! tail becomes an oracle: [`Journal::set_replay`] arms the journal with
+//! the tail's encoded payloads, and each [`Journal::record`] during
+//! re-execution must byte-match the next logged record (nothing is
+//! re-written to disk while replaying).  Any mismatch is a determinism
+//! violation and fails the resume loudly rather than silently forking
+//! history.  Once the tail is exhausted, `record` switches back to
+//! appending.
+
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+
+/// Journal format version — bumped on any event/snapshot schema change.
+pub const JOURNAL_VERSION: u32 = 1;
+/// Snapshot file magic (`"FJS1"`).
+pub const SNAPSHOT_MAGIC: u32 = 0x464A_5331;
+/// Event-log file name inside the journal directory.
+pub const LOG_FILE: &str = "journal.log";
+
+/// One typed round-loop transition.  Every floating-point field is
+/// stored as raw bits (`to_bits`) so event equality — the replay
+/// oracle's byte comparison — is exact, NaN included.  `wall_secs` is
+/// deliberately absent everywhere: host time is the one non-deterministic
+/// column and is excluded from the replay contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Record 0 of every journal: format version + config fingerprint.
+    RunStarted { version: u32, fingerprint: u64 },
+    /// `WaitingForCohort → Training`: the sampler picked this round's
+    /// participants (ids ascending; weights as f64 bits, slot-aligned).
+    CohortSelected {
+        round: u64,
+        devices: Vec<u64>,
+        weights: Vec<u64>,
+    },
+    /// `Training/Aggregating → Applying`: every upload folded.  `folded`
+    /// / `expected` surface the accumulator's progress counters;
+    /// `uplink_bits` is the ledger's cumulative uplink after this round's
+    /// uploads.
+    Aggregated {
+        round: u64,
+        folded: u64,
+        expected: u64,
+        uplink_bits: u64,
+    },
+    /// `Applying → Evaluating`: post-processed aggregate applied to the
+    /// global state (`update_norm` = ‖ΔŴ‖₂ bits; `downlink_bits`
+    /// cumulative).
+    Applied {
+        round: u64,
+        update_norm: u64,
+        downlink_bits: u64,
+    },
+    /// `Evaluating → RoundDone`, inline schedule: eval ran synchronously.
+    EvalInline {
+        round: u64,
+        test_loss: u64,
+        test_accuracy: u64,
+    },
+    /// `Evaluating → RoundDone`, overlapped schedule: eval launched; its
+    /// result arrives later as [`Event::EvalReaped`].
+    EvalLaunched { round: u64 },
+    /// `Evaluating → RoundDone`: not an eval-due round.
+    EvalSkipped { round: u64 },
+    /// An overlapped eval joined and its log row was patched (emitted at
+    /// the deterministic reap point, not at thread completion).
+    EvalReaped {
+        round: u64,
+        test_loss: u64,
+        test_accuracy: u64,
+    },
+    /// `RoundDone → WaitingForCohort`: the round's record was logged
+    /// (`train_loss`/`sim_secs` as bits; `wall_secs` excluded by design).
+    RoundDone {
+        round: u64,
+        train_loss: u64,
+        sim_secs: u64,
+    },
+    /// `snapshot_<round>.bin` was fully written and is valid to resume
+    /// from (`round` = the next round to run).
+    SnapshotWritten { round: u64 },
+}
+
+impl Event {
+    /// Encode to the journal payload format (framing is the caller's job).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Event::RunStarted { version, fingerprint } => {
+                w.put_u8(1);
+                w.put_u32(*version);
+                w.put_u64(*fingerprint);
+            }
+            Event::CohortSelected { round, devices, weights } => {
+                w.put_u8(2);
+                w.put_u64(*round);
+                w.put_u64s(devices);
+                w.put_u64s(weights);
+            }
+            Event::Aggregated { round, folded, expected, uplink_bits } => {
+                w.put_u8(3);
+                w.put_u64(*round);
+                w.put_u64(*folded);
+                w.put_u64(*expected);
+                w.put_u64(*uplink_bits);
+            }
+            Event::Applied { round, update_norm, downlink_bits } => {
+                w.put_u8(4);
+                w.put_u64(*round);
+                w.put_u64(*update_norm);
+                w.put_u64(*downlink_bits);
+            }
+            Event::EvalInline { round, test_loss, test_accuracy } => {
+                w.put_u8(5);
+                w.put_u64(*round);
+                w.put_u64(*test_loss);
+                w.put_u64(*test_accuracy);
+            }
+            Event::EvalLaunched { round } => {
+                w.put_u8(6);
+                w.put_u64(*round);
+            }
+            Event::EvalSkipped { round } => {
+                w.put_u8(7);
+                w.put_u64(*round);
+            }
+            Event::EvalReaped { round, test_loss, test_accuracy } => {
+                w.put_u8(8);
+                w.put_u64(*round);
+                w.put_u64(*test_loss);
+                w.put_u64(*test_accuracy);
+            }
+            Event::RoundDone { round, train_loss, sim_secs } => {
+                w.put_u8(9);
+                w.put_u64(*round);
+                w.put_u64(*train_loss);
+                w.put_u64(*sim_secs);
+            }
+            Event::SnapshotWritten { round } => {
+                w.put_u8(10);
+                w.put_u64(*round);
+            }
+        }
+        w.into_inner()
+    }
+
+    /// Decode one payload (inverse of [`Event::encode`]; rejects trailing
+    /// bytes).
+    pub fn decode(payload: &[u8]) -> Result<Event> {
+        let mut r = ByteReader::new(payload);
+        let tag = r.take_u8()?;
+        let ev = match tag {
+            1 => Event::RunStarted {
+                version: r.take_u32()?,
+                fingerprint: r.take_u64()?,
+            },
+            2 => Event::CohortSelected {
+                round: r.take_u64()?,
+                devices: r.take_u64s()?,
+                weights: r.take_u64s()?,
+            },
+            3 => Event::Aggregated {
+                round: r.take_u64()?,
+                folded: r.take_u64()?,
+                expected: r.take_u64()?,
+                uplink_bits: r.take_u64()?,
+            },
+            4 => Event::Applied {
+                round: r.take_u64()?,
+                update_norm: r.take_u64()?,
+                downlink_bits: r.take_u64()?,
+            },
+            5 => Event::EvalInline {
+                round: r.take_u64()?,
+                test_loss: r.take_u64()?,
+                test_accuracy: r.take_u64()?,
+            },
+            6 => Event::EvalLaunched { round: r.take_u64()? },
+            7 => Event::EvalSkipped { round: r.take_u64()? },
+            8 => Event::EvalReaped {
+                round: r.take_u64()?,
+                test_loss: r.take_u64()?,
+                test_accuracy: r.take_u64()?,
+            },
+            9 => Event::RoundDone {
+                round: r.take_u64()?,
+                train_loss: r.take_u64()?,
+                sim_secs: r.take_u64()?,
+            },
+            10 => Event::SnapshotWritten { round: r.take_u64()? },
+            other => bail!("unknown journal event tag {other}"),
+        };
+        r.finish()?;
+        Ok(ev)
+    }
+}
+
+/// Path of the event log inside a journal directory.
+pub fn log_path(dir: &Path) -> PathBuf {
+    dir.join(LOG_FILE)
+}
+
+/// Path of the snapshot taken with `round` as the next round to run.
+pub fn snapshot_path(dir: &Path, round: u64) -> PathBuf {
+    dir.join(format!("snapshot_{round}.bin"))
+}
+
+/// Everything [`read_log`] recovered from a journal's event log.
+pub struct LogContents {
+    /// Decoded events, in append order.
+    pub events: Vec<Event>,
+    /// The exact encoded payload of each event (the replay oracle
+    /// compares against these bytes, not a re-decode).
+    pub payloads: Vec<Vec<u8>>,
+    /// Byte offset of the end of the last valid record — anything past
+    /// it is a torn tail to truncate before appending.
+    pub valid_len: u64,
+}
+
+/// Read a journal's event log, dropping a torn final record (truncated
+/// frame, short payload, or CRC mismatch) — see the module docs.
+pub fn read_log(dir: &Path) -> Result<LogContents> {
+    let path = log_path(dir);
+    let bytes = std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+    let mut events = Vec::new();
+    let mut payloads = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= 8 {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            break; // torn: payload shorter than the frame promises
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break; // torn or corrupt: checksum mismatch
+        }
+        // A payload that frames+checksums but does not decode is schema
+        // corruption, not a torn tail — fail loudly.
+        events.push(Event::decode(payload).with_context(|| {
+            format!("decoding journal record {} at byte {pos}", events.len())
+        })?);
+        payloads.push(payload.to_vec());
+        pos += 8 + len;
+    }
+    Ok(LogContents {
+        events,
+        payloads,
+        valid_len: pos as u64,
+    })
+}
+
+/// Check that `dir` holds a journal this config can resume
+/// (`config::validate` calls this for the `resume` knob): the log exists,
+/// record 0 is a [`Event::RunStarted`] with the current
+/// [`JOURNAL_VERSION`], and the fingerprint matches.
+pub fn verify_resumable(dir: &Path, fingerprint: u64) -> Result<()> {
+    if !log_path(dir).is_file() {
+        bail!("no event log at {}", log_path(dir).display());
+    }
+    let contents = read_log(dir)?;
+    match contents.events.first() {
+        Some(Event::RunStarted { version, fingerprint: fp }) => {
+            if *version != JOURNAL_VERSION {
+                bail!(
+                    "journal format version {version} != supported {JOURNAL_VERSION}"
+                );
+            }
+            if *fp != fingerprint {
+                bail!(
+                    "foreign journal: its config fingerprint {fp:#018x} does not match \
+                     this config's {fingerprint:#018x} (a determinism-bearing knob differs)"
+                );
+            }
+            Ok(())
+        }
+        Some(other) => bail!("journal record 0 is {other:?}, expected RunStarted"),
+        None => bail!("journal at {} has no valid records", dir.display()),
+    }
+}
+
+/// An open journal: appends framed records, or verifies them against a
+/// logged tail while a resume replays.
+pub struct Journal {
+    file: File,
+    dir: PathBuf,
+    /// Encoded payloads still expected during replay (front = next).
+    replay: VecDeque<Vec<u8>>,
+    /// How many events this journal has observed (logged + verified).
+    position: usize,
+}
+
+impl Journal {
+    /// Start a fresh journal in `dir` (created if missing; an existing
+    /// log is truncated — a fresh run owns its directory) and append the
+    /// [`Event::RunStarted`] header.
+    pub fn create(dir: &Path, fingerprint: u64) -> Result<Journal> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        let file = File::create(log_path(dir))
+            .with_context(|| format!("creating {}", log_path(dir).display()))?;
+        let mut j = Journal {
+            file,
+            dir: dir.to_path_buf(),
+            replay: VecDeque::new(),
+            position: 0,
+        };
+        j.record(&Event::RunStarted {
+            version: JOURNAL_VERSION,
+            fingerprint,
+        })?;
+        Ok(j)
+    }
+
+    /// Open an existing journal for resume: verify the header, read every
+    /// valid record, truncate a torn tail, and return the journal (append
+    /// handle positioned past the last valid record) plus the recovered
+    /// contents.  The replay oracle starts empty — arm it with
+    /// [`Journal::set_replay`] once the resume point is chosen.
+    pub fn open_resume(dir: &Path, fingerprint: u64) -> Result<(Journal, LogContents)> {
+        verify_resumable(dir, fingerprint)?;
+        let contents = read_log(dir)?;
+        let file = OpenOptions::new()
+            .write(true)
+            .open(log_path(dir))
+            .with_context(|| format!("opening {} for append", log_path(dir).display()))?;
+        // Drop the torn tail (no-op when the log ended cleanly) so new
+        // records continue from a checksummed prefix.
+        file.set_len(contents.valid_len)?;
+        let mut j = Journal {
+            file,
+            dir: dir.to_path_buf(),
+            replay: VecDeque::new(),
+            position: contents.events.len(),
+        };
+        use std::io::Seek;
+        j.file.seek(std::io::SeekFrom::End(0))?;
+        Ok((j, contents))
+    }
+
+    /// The journal directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Arm the replay oracle with the logged tail's encoded payloads.
+    pub fn set_replay(&mut self, payloads: Vec<Vec<u8>>) {
+        self.position -= payloads.len();
+        self.replay = payloads.into();
+    }
+
+    /// `true` while logged tail records remain to verify.
+    pub fn replaying(&self) -> bool {
+        !self.replay.is_empty()
+    }
+
+    /// Observe one event: while replaying, byte-verify it against the
+    /// logged tail (a mismatch is a determinism violation and errors);
+    /// otherwise frame and append it to disk.
+    pub fn record(&mut self, event: &Event) -> Result<()> {
+        let payload = event.encode();
+        if let Some(expected) = self.replay.pop_front() {
+            if expected != payload {
+                let logged = Event::decode(&expected)
+                    .map(|e| format!("{e:?}"))
+                    .unwrap_or_else(|_| "<undecodable>".into());
+                bail!(
+                    "journal replay diverged at record {}: re-execution produced {event:?} \
+                     but the log holds {logged} — the resumed run is not reproducing the \
+                     original (determinism violation)",
+                    self.position
+                );
+            }
+            self.position += 1;
+            return Ok(());
+        }
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to {}", log_path(&self.dir).display()))?;
+        self.position += 1;
+        Ok(())
+    }
+
+    /// Write `snapshot_<round>.bin` (magic + version + CRC framing around
+    /// `payload`).  The caller must follow up with a
+    /// [`Event::SnapshotWritten`] record — only that makes it resumable.
+    pub fn write_snapshot(&self, round: u64, payload: &[u8]) -> Result<()> {
+        let mut framed = Vec::with_capacity(12 + payload.len());
+        framed.extend_from_slice(&SNAPSHOT_MAGIC.to_le_bytes());
+        framed.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+        framed.extend_from_slice(&crc32(payload).to_le_bytes());
+        framed.extend_from_slice(payload);
+        let path = snapshot_path(&self.dir, round);
+        std::fs::write(&path, framed).with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Read and validate a snapshot file, returning its payload.
+pub fn read_snapshot(path: &Path) -> Result<Vec<u8>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() < 12 {
+        bail!("snapshot {} is truncated ({} bytes)", path.display(), bytes.len());
+    }
+    let magic = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    let crc = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if magic != SNAPSHOT_MAGIC {
+        bail!("snapshot {} has bad magic {magic:#010x}", path.display());
+    }
+    if version != JOURNAL_VERSION {
+        bail!(
+            "snapshot {} has format version {version} != supported {JOURNAL_VERSION}",
+            path.display()
+        );
+    }
+    let payload = &bytes[12..];
+    if crc32(payload) != crc {
+        bail!("snapshot {} fails its checksum", path.display());
+    }
+    Ok(payload.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("fedadam-journal-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::CohortSelected {
+                round: 0,
+                devices: vec![0, 2],
+                weights: vec![64.0f64.to_bits(), 32.0f64.to_bits()],
+            },
+            Event::Aggregated {
+                round: 0,
+                folded: 2,
+                expected: 2,
+                uplink_bits: 12_345,
+            },
+            Event::Applied {
+                round: 0,
+                update_norm: 0.5f64.to_bits(),
+                downlink_bits: 777,
+            },
+            Event::EvalInline {
+                round: 0,
+                test_loss: 2.3f64.to_bits(),
+                test_accuracy: 0.1f64.to_bits(),
+            },
+            Event::RoundDone {
+                round: 0,
+                train_loss: 1.25f64.to_bits(),
+                sim_secs: f64::NAN.to_bits(),
+            },
+            Event::SnapshotWritten { round: 1 },
+            Event::EvalLaunched { round: 1 },
+            Event::EvalSkipped { round: 2 },
+            Event::EvalReaped {
+                round: 1,
+                test_loss: 2.2f64.to_bits(),
+                test_accuracy: 0.2f64.to_bits(),
+            },
+        ]
+    }
+
+    #[test]
+    fn events_roundtrip_through_the_codec() {
+        for ev in sample_events() {
+            let decoded = Event::decode(&ev.encode()).unwrap();
+            assert_eq!(decoded, ev);
+        }
+        assert!(Event::decode(&[99]).is_err(), "unknown tag must error");
+        assert!(Event::decode(&[]).is_err(), "empty payload must error");
+        // Trailing garbage after a valid event must be rejected.
+        let mut bytes = Event::EvalLaunched { round: 3 }.encode();
+        bytes.push(0);
+        assert!(Event::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn journal_appends_and_reads_back() {
+        let dir = tmp_dir("append");
+        let mut j = Journal::create(&dir, 0xABCD).unwrap();
+        for ev in sample_events() {
+            j.record(&ev).unwrap();
+        }
+        drop(j);
+        let contents = read_log(&dir).unwrap();
+        assert_eq!(
+            contents.events[0],
+            Event::RunStarted {
+                version: JOURNAL_VERSION,
+                fingerprint: 0xABCD
+            }
+        );
+        assert_eq!(&contents.events[1..], sample_events().as_slice());
+        verify_resumable(&dir, 0xABCD).unwrap();
+        let err = verify_resumable(&dir, 0xEF01).unwrap_err().to_string();
+        assert!(err.contains("foreign journal"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_and_truncated_on_resume() {
+        let dir = tmp_dir("torn");
+        let mut j = Journal::create(&dir, 7).unwrap();
+        for ev in sample_events() {
+            j.record(&ev).unwrap();
+        }
+        drop(j);
+        let clean = read_log(&dir).unwrap();
+        // Tear the final record: chop 3 bytes off the file.
+        let path = log_path(&dir);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let torn = read_log(&dir).unwrap();
+        assert_eq!(torn.events.len(), clean.events.len() - 1);
+        assert_eq!(torn.events, clean.events[..clean.events.len() - 1]);
+        // Resume truncates the tail and can append cleanly again.
+        let (mut j, contents) = Journal::open_resume(&dir, 7).unwrap();
+        assert_eq!(contents.events.len(), torn.events.len());
+        j.record(&Event::EvalSkipped { round: 9 }).unwrap();
+        drop(j);
+        let again = read_log(&dir).unwrap();
+        assert_eq!(again.events.last(), Some(&Event::EvalSkipped { round: 9 }));
+        assert_eq!(again.events.len(), torn.events.len() + 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_payload_fails_its_checksum() {
+        let dir = tmp_dir("crc");
+        let mut j = Journal::create(&dir, 1).unwrap();
+        j.record(&Event::EvalLaunched { round: 5 }).unwrap();
+        drop(j);
+        let path = log_path(&dir);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF; // flip a payload byte of the final record
+        std::fs::write(&path, &bytes).unwrap();
+        let contents = read_log(&dir).unwrap();
+        // The corrupted final record is dropped; the header survives.
+        assert_eq!(contents.events.len(), 1);
+        assert!(matches!(contents.events[0], Event::RunStarted { .. }));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn replay_oracle_verifies_and_rejects_divergence() {
+        let dir = tmp_dir("replay");
+        let mut j = Journal::create(&dir, 2).unwrap();
+        let evs = sample_events();
+        for ev in &evs {
+            j.record(ev).unwrap();
+        }
+        drop(j);
+        let (mut j, contents) = Journal::open_resume(&dir, 2).unwrap();
+        j.set_replay(contents.payloads[1..].to_vec());
+        assert!(j.replaying());
+        for ev in &evs {
+            j.record(ev).unwrap();
+        }
+        assert!(!j.replaying());
+        // Past the tail, appends go to disk again.
+        j.record(&Event::EvalSkipped { round: 42 }).unwrap();
+        drop(j);
+        assert_eq!(read_log(&dir).unwrap().events.len(), evs.len() + 2);
+        // A diverging event must error, not silently fork history.
+        let (mut j, contents) = Journal::open_resume(&dir, 2).unwrap();
+        j.set_replay(contents.payloads[1..].to_vec());
+        let err = j
+            .record(&Event::EvalSkipped { round: 1234 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("determinism violation"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn snapshot_files_roundtrip_and_reject_corruption() {
+        let dir = tmp_dir("snap");
+        let j = Journal::create(&dir, 3).unwrap();
+        let payload: Vec<u8> = (0..=255).collect();
+        j.write_snapshot(4, &payload).unwrap();
+        assert_eq!(read_snapshot(&snapshot_path(&dir, 4)).unwrap(), payload);
+        let mut bytes = std::fs::read(snapshot_path(&dir, 4)).unwrap();
+        bytes[20] ^= 1;
+        std::fs::write(snapshot_path(&dir, 4), &bytes).unwrap();
+        assert!(read_snapshot(&snapshot_path(&dir, 4)).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

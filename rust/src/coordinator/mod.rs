@@ -37,6 +37,24 @@
 //! participant's compute + uplink, eval inline or overlapped per the
 //! schedule), logged as the `sim_secs` column when `simtime` is on.
 //!
+//! ## The round state machine and the event journal
+//!
+//! Each round is an explicit walk through [`RunState`]:
+//! `WaitingForCohort → Training → Aggregating → Applying → Evaluating →
+//! RoundDone → WaitingForCohort`, one cycle per `step_round`, at every
+//! `pipeline_depth` (the depths differ only in *where* work overlaps, not
+//! in which transitions fire).  When the `journal` knob names a
+//! directory, every transition appends a typed, versioned, checksummed
+//! event to [`journal`]'s append-only log, and every `snapshot_every`
+//! completed rounds the coordinator's full mutable state (global model +
+//! moments, per-device EF residuals, sampler cursors, ledger, clock, log
+//! rows, in-flight eval snapshots) is written as `snapshot_<round>.bin`.
+//! [`Coordinator::resume`] restores the newest durable snapshot and
+//! re-executes the logged tail under a byte-exact replay oracle — see the
+//! [`journal`] module docs and `docs/ARCHITECTURE.md`'s crash-recovery
+//! chapter.  Journaling is pure observation: a journaled run is
+//! bit-identical to an unjournaled one.
+//!
 //! ## Determinism
 //!
 //! Local training for every participant starts from the same downloaded
@@ -56,6 +74,7 @@
 //! holds with every `participation_mode` and with `simtime` on.
 
 pub mod device;
+pub mod journal;
 pub mod sampler;
 pub mod server;
 
@@ -63,7 +82,7 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::algorithms::{self, Aggregate, Algorithm, LocalDelta, MomentumPolicy, Upload};
 use crate::config::{ExperimentConfig, SparsifyBackend};
@@ -73,10 +92,49 @@ use crate::metrics::{ExperimentLog, RoundRecord};
 use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
 use crate::simtime::{LatencyModel, SimClock};
 use crate::tensor;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub use device::{Device, LocalRunConfig};
 pub use sampler::{Cohort, ParticipationSampler};
 pub use server::{aggregate, aggregate_sharded, GlobalState, ShardedAccumulator};
+
+/// The round loop's explicit state machine.  One cycle per
+/// [`Coordinator::step_round`], the same six transitions at every
+/// `pipeline_depth`; each transition is journaled as a typed
+/// [`journal::Event`] when journaling is on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// Between rounds: the next step begins with cohort selection.
+    WaitingForCohort,
+    /// Local training in flight (at `pipeline_depth >= 1` the streaming
+    /// folder aggregates concurrently under this state).
+    Training,
+    /// Every upload folded; the reduce finalizes.
+    Aggregating,
+    /// Post-process + broadcast accounting + global apply.
+    Applying,
+    /// The eval decision point: inline, launched overlapped, or skipped.
+    Evaluating,
+    /// Clock advanced, record logged, snapshot-if-due.
+    RoundDone,
+}
+
+impl RunState {
+    /// Whether `self → next` is a legal round-loop transition (the loop
+    /// is a single fixed cycle).
+    pub fn can_step(self, next: RunState) -> bool {
+        use RunState::*;
+        matches!(
+            (self, next),
+            (WaitingForCohort, Training)
+                | (Training, Aggregating)
+                | (Aggregating, Applying)
+                | (Applying, Evaluating)
+                | (Evaluating, RoundDone)
+                | (RoundDone, WaitingForCohort)
+        )
+    }
+}
 
 /// A fully-wired experiment ready to run.
 pub struct Coordinator {
@@ -106,11 +164,21 @@ pub struct Coordinator {
     sim: Option<SimClock>,
     /// Overlapped evals still in flight, oldest first.
     pending_evals: VecDeque<PendingEval>,
+    /// Where the round loop stands (see [`RunState`]); always
+    /// `WaitingForCohort` between `step_round` calls.
+    state: RunState,
+    /// The event journal — `Some` when the `journal` knob (or a resume)
+    /// names a directory.
+    journal: Option<journal::Journal>,
 }
 
 /// One overlapped eval: joins to `(test_loss, test_accuracy)` for `round`.
 struct PendingEval {
     round: usize,
+    /// The model snapshot the eval reads.  Kept so a journal snapshot can
+    /// persist the in-flight eval as `(round, w)` — results are never
+    /// persisted; a resume re-launches the eval from these weights.
+    w: Arc<Vec<f32>>,
     join: std::thread::JoinHandle<Result<(f64, f64)>>,
 }
 
@@ -145,8 +213,27 @@ impl Coordinator {
     /// needs no PJRT artifacts), and the full round loop — training,
     /// compression, streaming aggregation, overlapped eval, ledger — runs
     /// against it.
+    ///
+    /// When `cfg.resume` names a journal directory this transparently
+    /// delegates to [`Self::resume_with_pool`], so every entry point
+    /// (CLI, tests, benches) resumes the same way.  Otherwise a non-empty
+    /// `cfg.journal` starts a fresh event journal there.
     pub fn with_pool(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
         cfg.validate()?;
+        if !cfg.resume.is_empty() {
+            return Self::resume_with_pool(cfg, pool);
+        }
+        let mut c = Self::fresh(cfg, pool)?;
+        if !c.cfg.journal.is_empty() {
+            let dir = std::path::Path::new(&c.cfg.journal);
+            c.journal = Some(journal::Journal::create(dir, c.cfg.fingerprint())?);
+        }
+        Ok(c)
+    }
+
+    /// The journal-free construction path shared by fresh runs and the
+    /// resume restore (which overwrites the state this builds).
+    fn fresh(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
         let meta = pool.meta().clone();
 
         // Synthetic stand-in corpus shaped for this model.
@@ -216,7 +303,70 @@ impl Coordinator {
             latency,
             sim,
             pending_evals: VecDeque::new(),
+            state: RunState::WaitingForCohort,
+            journal: None,
         })
+    }
+
+    /// Resume an interrupted journaled run: `cfg.resume` must name the
+    /// journal directory of a compatible earlier run (same config
+    /// fingerprint).  Restores the newest durable snapshot, then
+    /// re-executes the logged tail under the byte-exact replay oracle —
+    /// the returned coordinator stands exactly where the original stood
+    /// when its log ended, in-flight overlapped evals re-launched from
+    /// their logged model snapshots.  Convenience wrapper over
+    /// [`Self::new`] (which delegates through [`Self::with_pool`]).
+    pub fn resume(cfg: ExperimentConfig, artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        ensure!(
+            !cfg.resume.is_empty(),
+            "Coordinator::resume needs cfg.resume to name the journal directory"
+        );
+        Self::new(cfg, artifacts_dir)
+    }
+
+    /// [`Self::resume`] on an injected engine pool (the test/bench seam).
+    pub fn resume_with_pool(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
+        cfg.validate()?;
+        ensure!(
+            !cfg.resume.is_empty(),
+            "resume_with_pool needs cfg.resume to name the journal directory"
+        );
+        let dir = std::path::PathBuf::from(cfg.resume.clone());
+        let (mut jrnl, contents) = journal::Journal::open_resume(&dir, cfg.fingerprint())?;
+        let mut c = Self::fresh(cfg, pool)?;
+        // Newest snapshot that is durable: its file exists AND its
+        // SnapshotWritten record landed in the log (a crash between the
+        // file write and the event append falls back to the previous one).
+        let mut snap: Option<(u64, usize)> = None;
+        for (i, ev) in contents.events.iter().enumerate() {
+            if let journal::Event::SnapshotWritten { round } = ev {
+                if journal::snapshot_path(&dir, *round).is_file() {
+                    snap = Some((*round, i));
+                }
+            }
+        }
+        let tail_from = match snap {
+            Some((round, i)) => {
+                let bytes = journal::read_snapshot(&journal::snapshot_path(&dir, round))?;
+                c.restore_snapshot(&bytes)
+                    .with_context(|| format!("restoring snapshot_{round}.bin"))?;
+                i + 1
+            }
+            // No durable snapshot yet: re-execute from round 0, with the
+            // whole log past the RunStarted header as the oracle.
+            None => 1,
+        };
+        jrnl.set_replay(contents.payloads[tail_from..].to_vec());
+        c.journal = Some(jrnl);
+        // Re-execute the tail: every re-emitted event must byte-match the
+        // log (anything else errors as a determinism violation); once the
+        // tail is exhausted the journal switches back to appending and
+        // the run continues as if never interrupted.
+        while c.journal.as_ref().is_some_and(|j| j.replaying()) && c.round < c.cfg.rounds {
+            c.step_round()
+                .with_context(|| format!("re-executing journaled round {}", c.round))?;
+        }
+        Ok(c)
     }
 
     /// Immutable view of the global state.
@@ -240,25 +390,42 @@ impl Coordinator {
     /// carries `NaN` eval cells until the overlapped eval is reaped by a
     /// later round, [`Self::drain_pending_evals`] or [`Self::run`].
     pub fn step_round(&mut self) -> Result<RoundRecord> {
+        assert_eq!(
+            self.state,
+            RunState::WaitingForCohort,
+            "step_round re-entered mid-round"
+        );
         let t = self.round;
         let start = Instant::now();
         let dim = self.global.dim();
+
+        // WaitingForCohort → Training: pick this round's participants.
         let cohort = self.sampler.sample(t);
+        self.emit(journal::Event::CohortSelected {
+            round: t as u64,
+            devices: cohort.devices.iter().map(|&d| d as u64).collect(),
+            weights: cohort.weights.iter().map(|w| w.to_bits()).collect(),
+        })?;
+        self.transition(RunState::Training);
+
         let shards = if self.cfg.agg_shards == 0 {
             self.pool.num_workers()
         } else {
             self.cfg.agg_shards
         };
 
-        // 1-4 (+5). Train → delta → compress → upload → aggregate.
-        let (loss_sum, mut agg, round_secs) = if self.cfg.pipeline_depth == 0 {
+        // Training → Aggregating (1-4 (+5): train → delta → compress →
+        // upload → aggregate).
+        let (loss_sum, mut agg, round_secs, folded, expected) = if self.cfg.pipeline_depth == 0 {
             // Legacy barrier: hold every upload, reduce once at the end.
             let mut uploads: Vec<Upload> = Vec::with_capacity(cohort.len());
             let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |_slot, upload| {
                 uploads.push(upload);
                 Ok(())
             })?;
-            (loss_sum, aggregate_sharded(&uploads, dim, shards), round_secs)
+            self.transition(RunState::Aggregating);
+            let n = uploads.len();
+            (loss_sum, aggregate_sharded(&uploads, dim, shards), round_secs, n, n)
         } else {
             // Streaming aggregation: a folder thread owns the
             // ShardedAccumulator and folds each upload as it lands, while
@@ -269,7 +436,7 @@ impl Coordinator {
             // training finishes.
             let weights: Vec<f64> = cohort.weights.clone();
             let (tx, rx) = mpsc::channel::<(usize, Upload)>();
-            std::thread::scope(|scope| -> Result<(f64, Aggregate, f64)> {
+            std::thread::scope(|scope| -> Result<(f64, Aggregate, f64, usize, usize)> {
                 // The folder returns the accumulator rather than the
                 // finalized aggregate: if training errors mid-round, the
                 // early `?` below drops `tx`, the stream ends with slots
@@ -290,39 +457,64 @@ impl Coordinator {
                 let acc = folder
                     .join()
                     .unwrap_or_else(|p| std::panic::resume_unwind(p));
-                Ok((loss_sum, acc.finalize(), round_secs))
+                self.transition(RunState::Aggregating);
+                let (folded, expected) = (acc.folded(), acc.expected());
+                Ok((loss_sum, acc.finalize(), round_secs, folded, expected))
             })?
         };
+        self.emit(journal::Event::Aggregated {
+            round: t as u64,
+            folded: folded as u64,
+            expected: expected as u64,
+            uplink_bits: self.ledger.uplink_bits,
+        })?;
 
-        // 5b. Post-process + broadcast accounting + apply.
+        // Aggregating → Applying: post-process + broadcast accounting +
+        // apply.
+        self.transition(RunState::Applying);
         self.algorithm.postprocess(&mut agg);
         self.ledger
             .down(self.algorithm.downlink_bits(&agg), cohort.len());
         let update_norm = tensor::l2_norm(&agg.dw);
         self.global.apply(&agg);
+        self.emit(journal::Event::Applied {
+            round: t as u64,
+            update_norm: update_norm.to_bits(),
+            downlink_bits: self.ledger.downlink_bits,
+        })?;
 
-        // 6. Evaluate — inline at `pipeline_depth <= 1`, otherwise
-        //    overlapped with the next round's training dispatch.  The
-        //    overlapped eval snapshots the just-applied model, so it reads
-        //    exactly the state round `t+1` trains from.
+        // Applying → Evaluating — inline at `pipeline_depth <= 1`,
+        // otherwise overlapped with the next round's training dispatch.
+        // The overlapped eval snapshots the just-applied model, so it
+        // reads exactly the state round `t+1` trains from.
+        self.transition(RunState::Evaluating);
         let eval_due = t % self.cfg.eval_every == 0 || t + 1 == self.cfg.rounds;
         let in_flight_cap = self.cfg.pipeline_depth.saturating_sub(1);
         let (test_loss, test_acc) = if !eval_due {
+            self.emit(journal::Event::EvalSkipped { round: t as u64 })?;
             (f64::NAN, f64::NAN)
         } else if in_flight_cap == 0 {
-            self.evaluate()?
+            let (l, a) = self.evaluate()?;
+            self.emit(journal::Event::EvalInline {
+                round: t as u64,
+                test_loss: l.to_bits(),
+                test_accuracy: a.to_bits(),
+            })?;
+            (l, a)
         } else {
             while self.pending_evals.len() >= in_flight_cap {
                 self.reap_oldest_eval()?;
             }
             self.spawn_eval(t);
+            self.emit(journal::Event::EvalLaunched { round: t as u64 })?;
             (f64::NAN, f64::NAN)
         };
 
-        // 7. Simulated wall-clock: the slowest participant's compute +
-        //    uplink gates the round; eval runs inline (barrier/streaming)
-        //    or hides under the next round's training (overlap).  Pure
-        //    virtual time — never reads the host clock.
+        // Evaluating → RoundDone.  Simulated wall-clock: the slowest
+        // participant's compute + uplink gates the round; eval runs
+        // inline (barrier/streaming) or hides under the next round's
+        // training (overlap).  Pure virtual time — never the host clock.
+        self.transition(RunState::RoundDone);
         let sim_secs = match self.sim.as_mut() {
             Some(clock) => {
                 let eval_cost = if eval_due {
@@ -349,7 +541,157 @@ impl Coordinator {
         };
         self.log.rounds.push(record.clone());
         self.round += 1;
+        self.emit(journal::Event::RoundDone {
+            round: t as u64,
+            train_loss: record.train_loss.to_bits(),
+            sim_secs: sim_secs.to_bits(),
+        })?;
+        self.snapshot_if_due()?;
+
+        // RoundDone → WaitingForCohort: ready for the next step.
+        self.transition(RunState::WaitingForCohort);
         Ok(record)
+    }
+
+    /// Step the state machine, asserting the transition is legal.
+    fn transition(&mut self, next: RunState) {
+        assert!(
+            self.state.can_step(next),
+            "illegal round-loop transition {:?} -> {next:?}",
+            self.state
+        );
+        self.state = next;
+    }
+
+    /// Append `event` to the journal (or, while a resume replays, verify
+    /// it byte-exactly against the logged tail).  No-op when journaling
+    /// is off.  Journaling is pure observation — nothing here touches
+    /// RNGs, the clock, or any state the round loop reads — so a
+    /// journaled run is bit-identical to an unjournaled one.
+    fn emit(&mut self, event: journal::Event) -> Result<()> {
+        match self.journal.as_mut() {
+            Some(j) => j.record(&event),
+            None => Ok(()),
+        }
+    }
+
+    /// Take a full-state snapshot every `snapshot_every` completed rounds
+    /// (journaling only).  The file is written *before* its
+    /// [`journal::Event::SnapshotWritten`] record: a crash between the
+    /// two leaves a file no resume will trust, falling back to the
+    /// previous snapshot.
+    fn snapshot_if_due(&mut self) -> Result<()> {
+        if self.journal.is_none() || self.round == 0 || self.round % self.cfg.snapshot_every != 0 {
+            return Ok(());
+        }
+        let payload = self.save_snapshot();
+        let round = self.round as u64;
+        self.journal.as_ref().unwrap().write_snapshot(round, &payload)?;
+        self.emit(journal::Event::SnapshotWritten { round })
+    }
+
+    /// Serialize the coordinator's full mutable state — everything
+    /// [`Self::restore_snapshot`] needs to continue the run bit-exactly
+    /// (floats as raw bits throughout).  In-flight overlapped evals
+    /// persist as `(round, model snapshot)` pairs: results are
+    /// recomputed on restore, never persisted.
+    fn save_snapshot(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.round as u64);
+        self.global.save_state(&mut w);
+        w.put_usize(self.device_moments.len());
+        for (m, v) in &self.device_moments {
+            w.put_f32s(m);
+            w.put_f32s(v);
+        }
+        self.algorithm.save_state(&mut w);
+        self.sampler.save_state(&mut w);
+        w.put_u64(self.ledger.uplink_bits);
+        w.put_u64(self.ledger.downlink_bits);
+        match &self.sim {
+            Some(clock) => {
+                w.put_bool(true);
+                let (now, pending) = clock.state();
+                w.put_f64(now);
+                w.put_f64(pending);
+            }
+            None => w.put_bool(false),
+        }
+        w.put_usize(self.log.rounds.len());
+        for r in &self.log.rounds {
+            w.put_u64(r.round as u64);
+            w.put_f64(r.train_loss);
+            w.put_f64(r.test_loss);
+            w.put_f64(r.test_accuracy);
+            w.put_u64(r.uplink_bits);
+            w.put_u64(r.downlink_bits);
+            w.put_f64(r.wall_secs);
+            w.put_f64(r.sim_secs);
+            w.put_f64(r.update_norm);
+        }
+        w.put_usize(self.pending_evals.len());
+        for p in &self.pending_evals {
+            w.put_u64(p.round as u64);
+            w.put_f32s(&p.w);
+        }
+        w.into_inner()
+    }
+
+    /// Restore the state written by [`Self::save_snapshot`] over a
+    /// freshly-built coordinator, re-launching any persisted in-flight
+    /// evals from their logged model snapshots.
+    fn restore_snapshot(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.round = r.take_u64()? as usize;
+        self.global.load_state(&mut r)?;
+        let n = r.take_usize()?;
+        ensure!(
+            n == self.device_moments.len(),
+            "snapshot has {n} device moment pairs, config builds {}",
+            self.device_moments.len()
+        );
+        for (m, v) in &mut self.device_moments {
+            *m = r.take_f32s()?;
+            *v = r.take_f32s()?;
+        }
+        self.algorithm.load_state(&mut r)?;
+        self.sampler.load_state(&mut r)?;
+        self.ledger.uplink_bits = r.take_u64()?;
+        self.ledger.downlink_bits = r.take_u64()?;
+        let has_clock = r.take_bool()?;
+        ensure!(
+            has_clock == self.sim.is_some(),
+            "snapshot simtime presence disagrees with the config"
+        );
+        if has_clock {
+            let now = r.take_f64()?;
+            let pending = r.take_f64()?;
+            self.sim = Some(SimClock::from_state(self.cfg.pipeline_depth, now, pending));
+        }
+        let rows = r.take_usize()?;
+        self.log.rounds.clear();
+        for _ in 0..rows {
+            self.log.rounds.push(RoundRecord {
+                round: r.take_u64()? as usize,
+                train_loss: r.take_f64()?,
+                test_loss: r.take_f64()?,
+                test_accuracy: r.take_f64()?,
+                uplink_bits: r.take_u64()?,
+                downlink_bits: r.take_u64()?,
+                wall_secs: r.take_f64()?,
+                sim_secs: r.take_f64()?,
+                update_norm: r.take_f64()?,
+            });
+        }
+        let pend = r.take_usize()?;
+        for _ in 0..pend {
+            let round = r.take_u64()? as usize;
+            let w = Arc::new(r.take_f32s()?);
+            self.spawn_eval_of(round, w);
+        }
+        r.finish()?;
+        self.state = RunState::WaitingForCohort;
+        Ok(())
     }
 
     /// Steps 1-4 of a round for the `cohort`: local training on scoped
@@ -511,13 +853,22 @@ impl Coordinator {
     /// current global model and fans batches through the pool at `Eval`
     /// priority, overlapping the next round's training dispatch.
     fn spawn_eval(&mut self, t: usize) {
+        self.spawn_eval_of(t, Arc::new(self.global.w.clone()));
+    }
+
+    /// Launch an eval of the given model snapshot for round `t` — the
+    /// shared seam between a live launch ([`Self::spawn_eval`]) and a
+    /// resume re-launching a persisted in-flight eval.
+    fn spawn_eval_of(&mut self, t: usize, w: Arc<Vec<f32>>) {
         self.assert_eval_plan_fresh();
         let engine = self.pool.handle();
-        let w = self.global.w.clone();
         let plan = Arc::clone(&self.eval_plan);
         let workers = self.pool.num_workers();
-        let join = std::thread::spawn(move || evaluate_plan(&engine, &w, &plan, workers));
-        self.pending_evals.push_back(PendingEval { round: t, join });
+        let join = {
+            let w = Arc::clone(&w);
+            std::thread::spawn(move || evaluate_plan(&engine, &w, &plan, workers))
+        };
+        self.pending_evals.push_back(PendingEval { round: t, w, join });
     }
 
     /// Join the oldest overlapped eval and patch its log row in place.
@@ -542,6 +893,13 @@ impl Coordinator {
             rec.test_loss = test_loss;
             rec.test_accuracy = test_acc;
         }
+        // Journaled at the deterministic reap point (the round that
+        // joined it), never at thread completion time.
+        self.emit(journal::Event::EvalReaped {
+            round: pending.round as u64,
+            test_loss: test_loss.to_bits(),
+            test_accuracy: test_acc.to_bits(),
+        })?;
         Ok(())
     }
 
@@ -615,6 +973,17 @@ impl Coordinator {
     /// The log accumulated so far.
     pub fn log(&self) -> &ExperimentLog {
         &self.log
+    }
+
+    /// Where the round state machine stands — `WaitingForCohort` between
+    /// `step_round` calls.
+    pub fn run_state(&self) -> RunState {
+        self.state
+    }
+
+    /// The round the next `step_round` call will run.
+    pub fn round(&self) -> usize {
+        self.round
     }
 }
 

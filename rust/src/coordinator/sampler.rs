@@ -47,8 +47,11 @@
 //! assert!(!cohort.devices.is_empty());
 //! ```
 
+use anyhow::Result;
+
 use crate::config::{ExperimentConfig, ParticipationMode};
 use crate::rng::Rng;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// The legacy participation stream tag (pre-sampler coordinator seeded its
 /// shuffle RNG with `seed ^ 0x5a3c_91f7`) — [`UniformSampler`] must keep
@@ -98,6 +101,19 @@ pub trait ParticipationSampler: Send {
     /// given the constructor inputs and `round`, return strictly
     /// ascending unique device ids, and never be empty.
     fn sample(&mut self, round: usize) -> Cohort;
+
+    /// Serialize the sampler's advancing cursor (RNG stream position) into
+    /// a journal snapshot.  Stateless samplers (pure functions of `round`)
+    /// write nothing.
+    fn save_state(&self, out: &mut ByteWriter) {
+        let _ = out;
+    }
+
+    /// Restore the cursor written by [`Self::save_state`].
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let _ = input;
+        Ok(())
+    }
 }
 
 /// Target cohort size: `round(n · participation)` clamped to `[1, n]` —
@@ -182,6 +198,17 @@ impl ParticipationSampler for UniformSampler {
         let weights = devices.iter().map(|&i| self.data_weights[i]).collect();
         Cohort { devices, weights }
     }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_u64s(&self.rng.state());
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let s = input.take_u64s()?;
+        anyhow::ensure!(s.len() == 4, "sampler cursor must be 4 words");
+        self.rng = Rng::from_state([s[0], s[1], s[2], s[3]]);
+        Ok(())
+    }
 }
 
 /// Data-size-proportional sampling with unbiased re-weighting.
@@ -243,6 +270,17 @@ impl ParticipationSampler for ImportanceSampler {
             }
         }
         Cohort { devices, weights }
+    }
+
+    fn save_state(&self, out: &mut ByteWriter) {
+        out.put_u64s(&self.rng.state());
+    }
+
+    fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let s = input.take_u64s()?;
+        anyhow::ensure!(s.len() == 4, "sampler cursor must be 4 words");
+        self.rng = Rng::from_state([s[0], s[1], s[2], s[3]]);
+        Ok(())
     }
 }
 
@@ -454,6 +492,30 @@ mod tests {
             let s = build(&c, &weights, &lat);
             assert_eq!(s.name(), name);
             assert_eq!(s.name(), mode.as_str());
+        }
+    }
+
+    #[test]
+    fn cursor_snapshot_resumes_the_sampling_stream() {
+        for mode in [ParticipationMode::Uniform, ParticipationMode::Importance] {
+            let weights = vec![9.0, 4.0, 7.0, 1.0, 3.0];
+            let lat = vec![0.0; 5];
+            let c = cfg(mode, 0.5, 77);
+            let mut a = build(&c, &weights, &lat);
+            for round in 0..3 {
+                a.sample(round);
+            }
+            // Snapshot mid-stream, rebuild fresh, restore the cursor.
+            let mut out = ByteWriter::new();
+            a.save_state(&mut out);
+            let mut b = build(&c, &weights, &lat);
+            let bytes = out.into_inner();
+            let mut r = ByteReader::new(&bytes);
+            b.load_state(&mut r).unwrap();
+            r.finish().unwrap();
+            for round in 3..8 {
+                assert_eq!(a.sample(round), b.sample(round), "{mode:?} round {round}");
+            }
         }
     }
 

@@ -12,8 +12,11 @@
 
 use std::collections::BTreeMap;
 
+use anyhow::{ensure, Result};
+
 use crate::algorithms::{Aggregate, Recon, Upload};
 use crate::tensor;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// The server's global model + moment estimates.
 #[derive(Clone, Debug)]
@@ -47,6 +50,27 @@ impl GlobalState {
         if let Some(dv) = &agg.dv {
             tensor::add_assign(&mut self.v, dv);
         }
+    }
+
+    /// Serialize `(W, M, V)` bit-exactly into a journal snapshot.
+    pub fn save_state(&self, out: &mut ByteWriter) {
+        out.put_f32s(&self.w);
+        out.put_f32s(&self.m);
+        out.put_f32s(&self.v);
+    }
+
+    /// Restore the triple written by [`Self::save_state`].
+    pub fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        let dim = self.dim();
+        self.w = input.take_f32s()?;
+        self.m = input.take_f32s()?;
+        self.v = input.take_f32s()?;
+        ensure!(
+            self.w.len() == dim && self.m.len() == dim && self.v.len() == dim,
+            "snapshot global state dim {} != model dim {dim}",
+            self.w.len()
+        );
+        Ok(())
     }
 }
 

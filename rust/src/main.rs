@@ -90,6 +90,19 @@ OPTIONS:
                           sim_hetero straggler spread, uplink latency =
                           wire bits / sim_bandwidth_mbps; virtual time,
                           byte-identical at any worker count)
+                          --set journal=results/j1 (event-journal the run:
+                          append every round-loop transition to
+                          journal.log and snapshot full state every
+                          snapshot_every rounds; pure observation — the
+                          run's bits are identical with journaling off)
+                          --set resume=results/j1 (resume an interrupted
+                          journaled run: restores the newest snapshot and
+                          replays the log tail byte-exactly, then keeps
+                          going — final model and CSV are bit-identical
+                          to the uninterrupted run.  The journal must
+                          come from the same config fingerprint)
+                          --set snapshot_every=8 (snapshot cadence in
+                          rounds; must be >= 1)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -36,6 +36,20 @@ impl Rng {
         Rng { s }
     }
 
+    /// The raw xoshiro256++ state — a snapshot of this stream's cursor.
+    /// Persisting it (e.g. in a coordinator journal snapshot) and later
+    /// rebuilding via [`Rng::from_state`] resumes the stream exactly
+    /// where it left off.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator at an exact saved cursor (inverse of
+    /// [`Rng::state`] — NOT a seeding function; use [`Rng::new`] for that).
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Derive an independent stream (e.g. per device, per round).
     pub fn fork(&mut self, tag: u64) -> Rng {
         let base = self.next_u64();
@@ -257,6 +271,18 @@ mod tests {
         let mut r = Rng::new(8);
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_the_stream() {
+        let mut a = Rng::new(99);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
         }
     }
 }

@@ -146,6 +146,23 @@ impl SimClock {
         self.now
     }
 
+    /// `(now, pending_eval)` — the clock's full mutable state, for a
+    /// coordinator snapshot (`overlap` is re-derived from the config).
+    pub fn state(&self) -> (f64, f64) {
+        (self.now, self.pending_eval)
+    }
+
+    /// Rebuild a clock at an exact saved state (inverse of
+    /// [`SimClock::state`]; `pipeline_depth` must come from the same
+    /// config the snapshot was taken under).
+    pub fn from_state(pipeline_depth: usize, now: f64, pending_eval: f64) -> SimClock {
+        SimClock {
+            now,
+            pending_eval,
+            overlap: pipeline_depth >= 2,
+        }
+    }
+
     /// Advance over one round: `train_upload_secs` is the slowest
     /// participant's `compute + upload`; `eval` is `Some(secs)` on
     /// eval-due rounds.
@@ -248,6 +265,19 @@ mod tests {
         let mut d = SimClock::new(3);
         d.advance_round(1.0, Some(2.0));
         assert_eq!(d.drain(), 3.0);
+    }
+
+    #[test]
+    fn clock_state_roundtrips_bit_exact() {
+        let mut c = SimClock::new(2);
+        c.advance_round(2.0, Some(1.5));
+        c.advance_round(0.3, Some(0.7));
+        let (now, pending) = c.state();
+        let mut restored = SimClock::from_state(2, now, pending);
+        c.advance_round(1.0, None);
+        restored.advance_round(1.0, None);
+        assert_eq!(c.now().to_bits(), restored.now().to_bits());
+        assert_eq!(c.drain().to_bits(), restored.drain().to_bits());
     }
 
     #[test]

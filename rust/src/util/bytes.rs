@@ -1,0 +1,291 @@
+//! Little-endian binary codec + CRC-32 for the coordinator's event
+//! journal and state snapshots.
+//!
+//! The sandbox builds fully offline against the vendored crate set (no
+//! serde/bincode), so the journal's wire format is hand-rolled here:
+//! a [`ByteWriter`]/[`ByteReader`] pair over flat little-endian scalars,
+//! with floats stored via `to_bits`/`from_bits` so snapshot/restore is
+//! exact at the bit level (NaN payloads and `-0.0` included), plus the
+//! table-driven CRC-32 (IEEE 802.3 polynomial) every journal record and
+//! snapshot blob is checksummed with.
+
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_inner(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn put_bool(&mut self, x: bool) {
+        self.put_u8(x as u8);
+    }
+
+    pub fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, x: usize) {
+        self.put_u64(x as u64);
+    }
+
+    /// Bit-exact f32 (`to_bits`).
+    pub fn put_f32(&mut self, x: f32) {
+        self.put_u32(x.to_bits());
+    }
+
+    /// Bit-exact f64 (`to_bits`).
+    pub fn put_f64(&mut self, x: f64) {
+        self.put_u64(x.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 slice (bit-exact).
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f32(x);
+        }
+    }
+
+    /// Length-prefixed f64 slice (bit-exact).
+    pub fn put_f64s(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_f64(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+}
+
+/// Cursor-based decoder over a byte slice; every `take_*` errors (never
+/// panics) on truncated input so a torn journal record surfaces as a
+/// recoverable `Result`.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Error unless every byte has been consumed — catches schema drift
+    /// between `save_state` and `load_state` pairs.
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{} trailing bytes after decode", self.remaining());
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated input: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn take_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn take_bool(&mut self) -> Result<bool> {
+        match self.take_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    pub fn take_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn take_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn take_usize(&mut self) -> Result<usize> {
+        Ok(self.take_u64()? as usize)
+    }
+
+    pub fn take_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.take_u32()?))
+    }
+
+    pub fn take_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.take_u64()?))
+    }
+
+    fn take_len(&mut self) -> Result<usize> {
+        let n = self.take_u64()?;
+        // A length can never exceed the bytes actually present — reject
+        // early so a corrupt prefix cannot drive a huge allocation.
+        if n > self.remaining() as u64 {
+            bail!("corrupt length prefix {n} with {} bytes left", self.remaining());
+        }
+        Ok(n as usize)
+    }
+
+    pub fn take_str(&mut self) -> Result<String> {
+        let n = self.take_len()?;
+        Ok(std::str::from_utf8(self.take(n)?)?.to_string())
+    }
+
+    pub fn take_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.take_u64()? as usize;
+        (0..n).map(|_| self.take_f32()).collect()
+    }
+
+    pub fn take_f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.take_u64()? as usize;
+        (0..n).map(|_| self.take_f64()).collect()
+    }
+
+    pub fn take_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.take_u64()? as usize;
+        (0..n).map(|_| self.take_u64()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // The classic check value of CRC-32/IEEE.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"abc"), crc32(b"abd"));
+    }
+
+    #[test]
+    fn scalars_roundtrip_bit_exact() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_bool(true);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_f32(-0.0);
+        w.put_f64(f64::NAN);
+        w.put_str("journal");
+        w.put_f32s(&[1.5, f32::NEG_INFINITY]);
+        w.put_f64s(&[0.1]);
+        w.put_u64s(&[3, 4]);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.take_u8().unwrap(), 7);
+        assert!(r.take_bool().unwrap());
+        assert_eq!(r.take_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_u64().unwrap(), u64::MAX);
+        assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.take_f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(r.take_str().unwrap(), "journal");
+        let f32s = r.take_f32s().unwrap();
+        assert_eq!(f32s.len(), 2);
+        assert_eq!(f32s[1], f32::NEG_INFINITY);
+        assert_eq!(r.take_f64s().unwrap(), vec![0.1]);
+        assert_eq!(r.take_u64s().unwrap(), vec![3, 4]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_input_errors_not_panics() {
+        let mut w = ByteWriter::new();
+        w.put_u64(42);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes[..5]);
+        assert!(r.take_u64().is_err());
+        // Corrupt length prefix must not drive a huge allocation.
+        let mut w = ByteWriter::new();
+        w.put_u64(u64::MAX);
+        let bytes = w.into_inner();
+        assert!(ByteReader::new(&bytes).take_str().is_err());
+    }
+
+    #[test]
+    fn finish_flags_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_u32(1);
+        w.put_u32(2);
+        let bytes = w.into_inner();
+        let mut r = ByteReader::new(&bytes);
+        r.take_u32().unwrap();
+        assert!(r.finish().is_err());
+        r.take_u32().unwrap();
+        r.finish().unwrap();
+    }
+}

@@ -1,6 +1,8 @@
 //! Small self-contained substrates (the offline build has no serde):
-//! a JSON parser for the AOT manifest and a TOML-subset parser for
-//! experiment configs.
+//! a JSON parser for the AOT manifest, a TOML-subset parser for
+//! experiment configs, and the binary codec the event journal's records
+//! and snapshots are framed with.
 
+pub mod bytes;
 pub mod json;
 pub mod toml;

@@ -2,10 +2,11 @@
 //! generator loops — the offline build has no proptest crate; seeds are
 //! fixed so failures reproduce exactly).
 
-use fedadam_ssm::algorithms::{Recon, Upload};
+use fedadam_ssm::algorithms::{self, Aggregate, LocalDelta, Recon, Upload};
 use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+use fedadam_ssm::coordinator::journal::{self, read_log, Event, Journal, JOURNAL_VERSION};
 use fedadam_ssm::coordinator::sampler::{self, AvailabilitySampler, ParticipationSampler};
-use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, ShardedAccumulator};
+use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, GlobalState, ShardedAccumulator};
 use fedadam_ssm::quant::sparse_uniform::{
     reconstruct, sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
 };
@@ -14,6 +15,7 @@ use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::codec::{self, cost, index_bits};
 use fedadam_ssm::sparse::{top_k_indices, top_k_threshold, SparseVec};
 use fedadam_ssm::tensor;
+use fedadam_ssm::util::bytes::{ByteReader, ByteWriter};
 
 /// Random vector with occasional exact duplicates and zeros (tie stress).
 fn gen_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
@@ -677,5 +679,259 @@ fn prop_availability_traces_never_yield_an_empty_cohort() {
             }
             assert_eq!(ca, b.sample(round), "trial {trial} round {round}: nondeterministic");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event journal (coordinator::journal) and state snapshots
+// ---------------------------------------------------------------------------
+
+fn journal_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedadam-prop-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One random journal event, every variant reachable.
+fn gen_event(rng: &mut Rng) -> Event {
+    match rng.below(10) {
+        0 => Event::RunStarted {
+            version: rng.next_u64() as u32,
+            fingerprint: rng.next_u64(),
+        },
+        1 => Event::CohortSelected {
+            round: rng.next_u64(),
+            devices: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+            weights: (0..rng.below(6)).map(|_| rng.next_u64()).collect(),
+        },
+        2 => Event::Aggregated {
+            round: rng.next_u64(),
+            folded: rng.next_u64(),
+            expected: rng.next_u64(),
+            uplink_bits: rng.next_u64(),
+        },
+        3 => Event::Applied {
+            round: rng.next_u64(),
+            update_norm: rng.next_u64(),
+            downlink_bits: rng.next_u64(),
+        },
+        4 => Event::EvalInline {
+            round: rng.next_u64(),
+            test_loss: rng.next_u64(),
+            test_accuracy: rng.next_u64(),
+        },
+        5 => Event::EvalLaunched { round: rng.next_u64() },
+        6 => Event::EvalSkipped { round: rng.next_u64() },
+        7 => Event::EvalReaped {
+            round: rng.next_u64(),
+            test_loss: rng.next_u64(),
+            test_accuracy: rng.next_u64(),
+        },
+        8 => Event::RoundDone {
+            round: rng.next_u64(),
+            train_loss: rng.next_u64(),
+            sim_secs: rng.next_u64(),
+        },
+        _ => Event::SnapshotWritten { round: rng.next_u64() },
+    }
+}
+
+#[test]
+fn prop_journal_event_codec_roundtrips_any_event() {
+    let mut rng = Rng::new(3001);
+    for trial in 0..300 {
+        let ev = gen_event(&mut rng);
+        let bytes = ev.encode();
+        assert_eq!(Event::decode(&bytes).unwrap(), ev, "trial {trial}");
+        // Any strict prefix must error (every field is mandatory), never
+        // silently mis-decode.
+        let cut = rng.below(bytes.len());
+        assert!(
+            Event::decode(&bytes[..cut]).is_err(),
+            "trial {trial}: truncated payload ({cut}/{}) decoded",
+            bytes.len()
+        );
+        // Trailing garbage must be rejected too.
+        let mut padded = bytes.clone();
+        padded.push(rng.below(256) as u8);
+        assert!(padded.len() == bytes.len() + 1 && Event::decode(&padded).is_err());
+    }
+}
+
+#[test]
+fn prop_journal_log_roundtrips_random_sequences() {
+    let mut rng = Rng::new(3002);
+    for trial in 0..20 {
+        let dir = journal_dir(&format!("log-{trial}"));
+        let fp = rng.next_u64();
+        let mut j = Journal::create(&dir, fp).unwrap();
+        let evs: Vec<Event> = (0..rng.below(40)).map(|_| gen_event(&mut rng)).collect();
+        for ev in &evs {
+            j.record(ev).unwrap();
+        }
+        drop(j);
+        let contents = read_log(&dir).unwrap();
+        assert_eq!(
+            contents.events[0],
+            Event::RunStarted {
+                version: JOURNAL_VERSION,
+                fingerprint: fp
+            },
+            "trial {trial}"
+        );
+        assert_eq!(&contents.events[1..], evs.as_slice(), "trial {trial}");
+        // The stored payloads (the replay oracle's comparands) are the
+        // exact encodings.
+        for (ev, p) in contents.events.iter().zip(&contents.payloads) {
+            assert_eq!(&ev.encode(), p, "trial {trial}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn prop_torn_tail_recovers_the_longest_valid_prefix() {
+    // Cutting the log at ANY byte offset must recover exactly the records
+    // whose full frame fits before the cut, and report `valid_len` at the
+    // last surviving frame's end — nothing before a tear is ever lost,
+    // nothing past it is ever trusted.
+    let mut rng = Rng::new(3003);
+    for trial in 0..15 {
+        let dir = journal_dir(&format!("torn-{trial}"));
+        let fp = rng.next_u64();
+        let mut j = Journal::create(&dir, fp).unwrap();
+        let evs: Vec<Event> = (0..1 + rng.below(12)).map(|_| gen_event(&mut rng)).collect();
+        for ev in &evs {
+            j.record(ev).unwrap();
+        }
+        drop(j);
+        let full = std::fs::read(journal::log_path(&dir)).unwrap();
+        // Frame end offsets, header record included.
+        let mut ends = Vec::new();
+        let mut pos = 0usize;
+        let header = Event::RunStarted {
+            version: JOURNAL_VERSION,
+            fingerprint: fp,
+        };
+        for ev in std::iter::once(&header).chain(evs.iter()) {
+            pos += 8 + ev.encode().len();
+            ends.push(pos);
+        }
+        assert_eq!(pos, full.len(), "trial {trial}: frame accounting is off");
+        for _ in 0..12 {
+            let cut = rng.below(full.len() + 1);
+            std::fs::write(journal::log_path(&dir), &full[..cut]).unwrap();
+            let got = read_log(&dir).unwrap();
+            let survive = ends.iter().filter(|&&e| e <= cut).count();
+            assert_eq!(got.events.len(), survive, "trial {trial} cut {cut}");
+            let expect_len = if survive == 0 { 0 } else { ends[survive - 1] };
+            assert_eq!(got.valid_len, expect_len as u64, "trial {trial} cut {cut}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn prop_global_state_snapshot_is_bit_exact() {
+    // The snapshot codec must round-trip every f32 bit pattern the
+    // optimizer can produce: -0.0, subnormals, infinities included.
+    let mut rng = Rng::new(3004);
+    for trial in 0..40 {
+        let d = 1 + rng.below(300);
+        let mut gs = GlobalState::new(gen_vec(&mut rng, d));
+        gs.m = gen_vec(&mut rng, d);
+        gs.v = gen_vec(&mut rng, d);
+        gs.w[rng.below(d)] = -0.0;
+        gs.m[rng.below(d)] = f32::from_bits(1); // smallest subnormal
+        gs.v[rng.below(d)] = f32::INFINITY;
+        let mut w = ByteWriter::new();
+        gs.save_state(&mut w);
+        let bytes = w.into_inner();
+        let mut back = GlobalState::new(vec![0.0; d]);
+        let mut r = ByteReader::new(&bytes);
+        back.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&gs.w), bits(&back.w), "trial {trial}: w");
+        assert_eq!(bits(&gs.m), bits(&back.m), "trial {trial}: m");
+        assert_eq!(bits(&gs.v), bits(&back.v), "trial {trial}: v");
+    }
+}
+
+fn recon_dense(r: &Recon) -> Vec<f32> {
+    match r {
+        Recon::Dense(v) => v.clone(),
+        Recon::Sparse(sv) => sv.to_dense(),
+    }
+}
+
+#[test]
+fn prop_algorithm_state_roundtrip_preserves_future_uploads() {
+    // For every stateful algorithm (per-device EF memories, server-side
+    // EF): warm the state up with a few compress rounds, snapshot it, load
+    // into a freshly built twin, and check the NEXT round's uploads (and
+    // the next broadcast postprocess) are bit-identical — the property the
+    // resume path depends on.
+    let mut rng = Rng::new(3005);
+    for algo in ["fedadam-ssm-ef", "fedadam-ssm-qef", "onebit-adam", "efficient-adam"] {
+        let d = 64;
+        let devices = 3;
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = algo.into();
+        cfg.devices = devices;
+        cfg.sparsity = 0.1;
+        cfg.quant_levels = 4;
+        cfg.warmup_rounds = 1;
+        let mut a = algorithms::build(&cfg, d).unwrap();
+        for t in 0..3 {
+            for dev in 0..devices {
+                let delta = LocalDelta {
+                    dw: gen_vec(&mut rng, d),
+                    dm: gen_vec(&mut rng, d),
+                    dv: gen_vec(&mut rng, d),
+                    weight: 1.0,
+                };
+                let _ = a.compress(t, dev, delta);
+            }
+        }
+        let mut w = ByteWriter::new();
+        a.save_state(&mut w);
+        let bytes = w.into_inner();
+        let mut b = algorithms::build(&cfg, d).unwrap();
+        let mut r = ByteReader::new(&bytes);
+        b.load_state(&mut r).unwrap();
+        r.finish().unwrap_or_else(|e| panic!("{algo}: snapshot has trailing bytes: {e}"));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for dev in 0..devices {
+            let delta = LocalDelta {
+                dw: gen_vec(&mut rng, d),
+                dm: gen_vec(&mut rng, d),
+                dv: gen_vec(&mut rng, d),
+                weight: 1.0,
+            };
+            let ua = a.compress(3, dev, delta.clone());
+            let ub = b.compress(3, dev, delta);
+            assert_eq!(ua.bits, ub.bits, "{algo} device {dev}: wire bits");
+            assert_eq!(
+                bits(&recon_dense(&ua.dw)),
+                bits(&recon_dense(&ub.dw)),
+                "{algo} device {dev}: dw after state restore"
+            );
+        }
+        // Server-side state (efficient-adam's downlink EF) must survive too.
+        let mk_agg = |dw: Vec<f32>| Aggregate {
+            dw,
+            dm: None,
+            dv: None,
+            dw_support: d,
+            dm_support: 0,
+            dv_support: 0,
+        };
+        let broadcast = gen_vec(&mut rng, d);
+        let mut agg_a = mk_agg(broadcast.clone());
+        let mut agg_b = mk_agg(broadcast);
+        a.postprocess(&mut agg_a);
+        b.postprocess(&mut agg_b);
+        assert_eq!(bits(&agg_a.dw), bits(&agg_b.dw), "{algo}: postprocess after restore");
     }
 }

@@ -1,0 +1,202 @@
+//! Kill-at-round-k / resume conformance on the pure-Rust reference
+//! backend (no PJRT artifacts needed).
+//!
+//! The contract under test, across `pipeline_depth ∈ {0, 1, 2}` ×
+//! `{fedadam-ssm, fedadam-ssm-qef}` × `{uniform, importance}`:
+//!
+//! - a journaled run killed mid-experiment and resumed from its journal
+//!   finishes with a final global model and per-round CSV **byte-identical**
+//!   to the same run never interrupted (host-time `wall_secs` excluded —
+//!   it is the one column outside the determinism contract);
+//! - journaling is pure observation: a journaled run is bit-identical to
+//!   an unjournaled one;
+//! - a journal with no durable snapshot yet resumes by re-executing from
+//!   round 0 under the replay oracle.
+//!
+//! The kill point (3 completed rounds, `snapshot_every = 2`) lands one
+//! round past the newest snapshot, so every resume exercises both the
+//! snapshot restore and tail replay; at `pipeline_depth = 2` the snapshot
+//! carries an in-flight overlapped eval, exercising the re-launch path.
+
+use std::path::PathBuf;
+
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+use fedadam_ssm::coordinator::{Coordinator, RunState};
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool, EnginePool};
+
+const INPUT: [usize; 3] = [4, 4, 1]; // row 16, dim = 4 * 17 = 68
+const CLASSES: usize = 4;
+
+fn grid_cfg(depth: usize, algo: &str, mode: ParticipationMode) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "resume-conformance".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = algo.into();
+    cfg.rounds = 6;
+    cfg.devices = 3;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.train_samples = 192;
+    cfg.test_samples = 64;
+    cfg.eval_every = 2; // mixes EvalSkipped rounds into the event stream
+    cfg.seed = 11;
+    cfg.participation = 0.75; // exercise the sampler cursor snapshot
+    cfg.participation_mode = mode;
+    cfg.simtime = true; // the clock state must survive the snapshot too
+    cfg.pipeline_depth = depth;
+    cfg.snapshot_every = 2;
+    cfg.num_workers = 2;
+    // CI lane pinning: FEDADAM_PIPELINE_DEPTH / FEDADAM_NUM_WORKERS etc.
+    // collapse the in-test grid onto the lane's point (same idiom as the
+    // conformance and e2e base configs).
+    cfg.apply_env_overrides();
+    cfg
+}
+
+fn pool_for(cfg: &ExperimentConfig) -> EnginePool {
+    let meta = reference_meta(&INPUT, CLASSES, 8, 16, 1);
+    reference_pool(meta, cfg.num_workers).expect("reference pool")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedadam-resume-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The CSV with host time zeroed: `wall_secs` is real elapsed time and is
+/// deliberately outside the replay/determinism contract (it is likewise
+/// excluded from every journal event).
+fn csv_no_wall(log: &ExperimentLog) -> String {
+    let mut log = log.clone();
+    for r in &mut log.rounds {
+        r.wall_secs = 0.0;
+    }
+    log.to_csv()
+}
+
+fn run_uninterrupted(cfg: ExperimentConfig) -> (ExperimentLog, Vec<f32>) {
+    let pool = pool_for(&cfg);
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("run");
+    let w = coord.global().w.clone();
+    (log, w)
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_across_the_grid() {
+    for depth in [0usize, 1, 2] {
+        for algo in ["fedadam-ssm", "fedadam-ssm-qef"] {
+            for mode in [ParticipationMode::Uniform, ParticipationMode::Importance] {
+                let tag = format!("{depth}-{algo}-{mode:?}");
+
+                // Ground truth: the same experiment, never interrupted,
+                // journaling off.
+                let (base_log, base_w) = run_uninterrupted(grid_cfg(depth, algo, mode));
+
+                // Journaled run, "killed" after 3 completed rounds (the
+                // drop abandons any in-flight overlapped eval, exactly
+                // like a crash would — its result must not be needed).
+                let dir = tmp_dir(&tag);
+                let mut cfg = grid_cfg(depth, algo, mode);
+                cfg.journal = dir.to_string_lossy().into_owned();
+                let pool = pool_for(&cfg);
+                let mut coord = Coordinator::with_pool(cfg, pool).expect("journaled coordinator");
+                for _ in 0..3 {
+                    coord.step_round().expect("pre-kill round");
+                }
+                assert_eq!(coord.run_state(), RunState::WaitingForCohort);
+                assert_eq!(coord.round(), 3);
+                drop(coord);
+                assert!(dir.join("journal.log").is_file(), "{tag}: no event log");
+                assert!(dir.join("snapshot_2.bin").is_file(), "{tag}: no snapshot");
+
+                // Resume from the journal and finish the experiment.
+                let mut cfg = grid_cfg(depth, algo, mode);
+                cfg.resume = dir.to_string_lossy().into_owned();
+                let pool = pool_for(&cfg);
+                let mut resumed = Coordinator::with_pool(cfg, pool).expect("resumed coordinator");
+                assert!(resumed.round() >= 3, "{tag}: resume lost completed rounds");
+                let resumed_log = resumed.run().expect("resumed run");
+                let resumed_w = resumed.global().w.clone();
+
+                assert_eq!(base_w, resumed_w, "{tag}: final weights diverged");
+                assert_eq!(
+                    csv_no_wall(&base_log),
+                    csv_no_wall(&resumed_log),
+                    "{tag}: per-round CSV diverged"
+                );
+                std::fs::remove_dir_all(&dir).ok();
+            }
+        }
+    }
+}
+
+#[test]
+fn journaling_is_pure_observation() {
+    for depth in [0usize, 2] {
+        let tag = format!("pure-{depth}");
+        let (off_log, off_w) =
+            run_uninterrupted(grid_cfg(depth, "fedadam-ssm", ParticipationMode::Uniform));
+
+        let dir = tmp_dir(&tag);
+        let mut cfg = grid_cfg(depth, "fedadam-ssm", ParticipationMode::Uniform);
+        cfg.journal = dir.to_string_lossy().into_owned();
+        let (on_log, on_w) = run_uninterrupted(cfg);
+
+        assert_eq!(off_w, on_w, "depth {depth}: journaling changed the model");
+        assert_eq!(
+            csv_no_wall(&off_log),
+            csv_no_wall(&on_log),
+            "depth {depth}: journaling changed the log"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn resume_before_any_snapshot_replays_from_round_zero() {
+    let (base_log, base_w) =
+        run_uninterrupted(grid_cfg(1, "fedadam-ssm", ParticipationMode::Uniform));
+
+    let dir = tmp_dir("nosnap");
+    let mut cfg = grid_cfg(1, "fedadam-ssm", ParticipationMode::Uniform);
+    cfg.snapshot_every = 100; // never due within 6 rounds
+    cfg.journal = dir.to_string_lossy().into_owned();
+    let pool = pool_for(&cfg);
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("journaled coordinator");
+    coord.step_round().expect("pre-kill round");
+    drop(coord);
+
+    let mut cfg = grid_cfg(1, "fedadam-ssm", ParticipationMode::Uniform);
+    cfg.snapshot_every = 100;
+    cfg.resume = dir.to_string_lossy().into_owned();
+    let pool = pool_for(&cfg);
+    let mut resumed = Coordinator::with_pool(cfg, pool).expect("resumed coordinator");
+    let resumed_log = resumed.run().expect("resumed run");
+    let resumed_w = resumed.global().w.clone();
+
+    assert_eq!(base_w, resumed_w, "weights diverged");
+    assert_eq!(csv_no_wall(&base_log), csv_no_wall(&resumed_log), "CSV diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resuming_a_finished_run_is_a_noop_with_the_same_results() {
+    let dir = tmp_dir("finished");
+    let mut cfg = grid_cfg(2, "fedadam-ssm", ParticipationMode::Uniform);
+    cfg.journal = dir.to_string_lossy().into_owned();
+    let (full_log, full_w) = run_uninterrupted(cfg);
+
+    let mut cfg = grid_cfg(2, "fedadam-ssm", ParticipationMode::Uniform);
+    cfg.resume = dir.to_string_lossy().into_owned();
+    let pool = pool_for(&cfg);
+    let mut resumed = Coordinator::with_pool(cfg, pool).expect("resumed coordinator");
+    let resumed_log = resumed.run().expect("resumed run");
+    let resumed_w = resumed.global().w.clone();
+
+    assert_eq!(full_w, resumed_w, "weights diverged");
+    assert_eq!(csv_no_wall(&full_log), csv_no_wall(&resumed_log), "CSV diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,14 +10,19 @@
 #   3. quantized-SSM conformance lanes: FEDADAM_ALGORITHM in
 #      {fedadam-ssm-q, fedadam-ssm-qef} x FEDADAM_PIPELINE_DEPTH in {0, 2}
 #      pins the conformance suite to one quantized id per lane
-#   4. clippy -D warnings + rustfmt --check (skipped with a note when the
+#   4. resume lanes: the kill/resume + journal-purity suite pinned at
+#      FEDADAM_PIPELINE_DEPTH in {0, 2}
+#   5. clippy -D warnings + rustfmt --check (skipped with a note when the
 #      components aren't installed)
-#   5. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
-#   6. benches stay buildable (cargo bench --no-run)
+#   6. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
+#   7. benches stay buildable (cargo bench --no-run)
+#   8. perf pin: e2e_round --json vs the checked-in BENCH_e2e_round.json
+#      (prints WARN on >10% wall-clock regression; never fails — absolute
+#      numbers are host-dependent)
 #
 # Usage: scripts/ci_local.sh [--quick]
-#   --quick  skip the determinism + conformance grids
-#            (tier-1 + lint + docs + benches only)
+#   --quick  skip the determinism + conformance + resume grids
+#            (tier-1 + lint + docs + benches + perf pin only)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -57,6 +62,12 @@ if [[ "$QUICK" == 0 ]]; then
         cargo test -q --test algorithm_conformance
     done
   done
+
+  for pipeline in 0 2; do
+    step "resume: pipeline_depth=$pipeline kill/resume + journal purity"
+    FEDADAM_PIPELINE_DEPTH=$pipeline \
+      cargo test -q --test resume_conformance
+  done
 fi
 
 step "lint: clippy + rustfmt"
@@ -77,5 +88,11 @@ cargo test --doc -q
 
 step "benches: cargo bench --no-run"
 cargo bench --no-run
+
+step "perf pin: e2e_round --json vs BENCH_e2e_round.json (warn-only)"
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench e2e_round -- --json \
+    --json-out target/BENCH_e2e_round.json \
+    --baseline BENCH_e2e_round.json
 
 step "ci_local: all gates green"
