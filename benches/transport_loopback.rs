@@ -1,0 +1,345 @@
+//! Transport loopback bench: how fast the wire layer moves one round's
+//! uplinks through a real localhost socket.
+//!
+//! Per case, a [`TransportServer`] (1 agent slot) is paired with an echo
+//! client thread that answers every `RoundStart` with one pre-encoded
+//! uplink per assignment slot — so the timed region is exactly the
+//! transport stack: framing + CRC, socket writes, the server's
+//! non-blocking pump, and the full untrusted-byte validation path
+//! (`Msg::decode` → echo checks → framed-byte accounting →
+//! `WireBody::try_decode` → `try_into_upload`).  Three wire formats are
+//! measured — dense f32 triples, the shared-sparse-mask body, and the
+//! quantized SSM packet — plus an in-memory frame-codec case that
+//! isolates the CPU cost from the socket.
+//!
+//! Run: `cargo bench --bench transport_loopback`.
+//!
+//! **JSON mode** (`-- --json`) — the CI perf pin: emits median
+//! round-trip wall-clock, messages/sec and bytes-on-wire per message as
+//! `BENCH_transport_loopback.json` (`--json-out PATH` to redirect).
+//! With `--baseline PATH` fresh medians are compared against a
+//! checked-in file; a >10% regression prints a `WARN:` line
+//! (informational — absolute numbers are host-dependent, so the
+//! comparison never fails the build).
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+
+use fedadam_ssm::algorithms::{self, LocalDelta};
+use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::transport::frame::{read_frame, write_frame, FrameBuffer};
+use fedadam_ssm::transport::msg::{Assignment, Msg, Uplink, PROTOCOL_VERSION};
+use fedadam_ssm::transport::net::Stream;
+use fedadam_ssm::transport::TransportServer;
+use fedadam_ssm::util::json::{self, Value};
+
+const DIM: usize = 4096;
+const SLOTS: usize = 8;
+const FINGERPRINT: u64 = 0xBEEF;
+const WEIGHT: f64 = 64.0;
+
+/// One pre-encoded uplink body the echo client replays for every slot.
+#[derive(Clone)]
+struct Template {
+    kind: u8,
+    k: u64,
+    levels: u32,
+    bits: u64,
+    body: Vec<u8>,
+}
+
+/// Deterministic pseudo-random delta (no rand crate in the offline build).
+fn synth_delta(seed: &mut u64, dim: usize) -> LocalDelta {
+    let mut next = || {
+        *seed = seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((*seed >> 40) as u32) as f32 / (1u32 << 24) as f32 - 0.5
+    };
+    LocalDelta {
+        dw: (0..dim).map(|_| next()).collect(),
+        dm: (0..dim).map(|_| next() * 0.1).collect(),
+        dv: (0..dim).map(|_| (next() * 0.01).abs()).collect(),
+        weight: WEIGHT,
+    }
+}
+
+/// Build a valid wire message for `algo` by running its real compressor
+/// once — the body bytes are exactly what a device agent would frame.
+fn template_for(algo: &str) -> Template {
+    let mut cfg = ExperimentConfig::default();
+    cfg.algorithm = algo.into();
+    cfg.devices = 1;
+    cfg.sparsity = 0.05;
+    cfg.quant_levels = 16;
+    let mut a = algorithms::build(&cfg, DIM).expect("algorithm");
+    let mut seed = 0x10AD_BA5E_u64;
+    let wire = a
+        .compress_wire(0, 0, synth_delta(&mut seed, DIM))
+        .expect("compress_wire");
+    let body = wire.encode_body().expect("encode_body");
+    Template {
+        kind: wire.body.kind(),
+        k: wire.body.k() as u64,
+        levels: wire.body.levels(),
+        bits: wire.bits,
+        body,
+    }
+}
+
+fn uplink_msg(t: &Template, round: u64, a: &Assignment) -> Msg {
+    Msg::Uplink(Uplink {
+        round,
+        slot: a.slot,
+        device: a.device,
+        mean_loss: 1.0,
+        weight: a.weight,
+        kind: t.kind,
+        k: t.k,
+        levels: t.levels,
+        bits: t.bits,
+        body: t.body.clone(),
+    })
+}
+
+/// Echo client: register as agent 0, answer each RoundStart with one
+/// templated uplink per slot, exit on Shutdown (or a dead socket).
+fn spawn_echo(addr: String, t: Template) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut s = Stream::connect(&addr).expect("echo connect");
+        write_frame(
+            &mut s,
+            &Msg::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: FINGERPRINT,
+                agent: 0,
+            }
+            .encode(),
+        )
+        .expect("echo hello");
+        let _ack = read_frame(&mut s).expect("echo ack");
+        loop {
+            let payload = match read_frame(&mut s) {
+                Ok(p) => p,
+                Err(_) => return,
+            };
+            match Msg::decode(&payload) {
+                Ok(Msg::RoundStart { round, assignments, .. }) => {
+                    let mut out = Vec::new();
+                    for a in &assignments {
+                        write_frame(&mut out, &uplink_msg(&t, round, a).encode())
+                            .expect("Vec<u8> writes cannot fail");
+                    }
+                    s.write_all(&out).expect("echo uplinks");
+                    s.flush().expect("echo flush");
+                }
+                Ok(Msg::Shutdown) | Err(_) => return,
+                Ok(_) => return,
+            }
+        }
+    })
+}
+
+fn assignments() -> Vec<Assignment> {
+    (0..SLOTS as u32)
+        .map(|i| Assignment { slot: i, device: i, weight: WEIGHT })
+        .collect()
+}
+
+/// One benched case: (case name, algorithm id whose wire format it uses).
+const CASES: [(&str, &str); 3] = [
+    ("dense3", "fedadam"),
+    ("shared-mask", "fedadam-ssm"),
+    ("ssm-q", "fedadam-ssm-q"),
+];
+
+struct CaseResult {
+    name: String,
+    median_round_ns: f64,
+    bits_per_msg: u64,
+    body_bytes: usize,
+}
+
+fn run_cases(bench: &mut fedadam_ssm::benchlib::Bench) -> Vec<CaseResult> {
+    let mut out = Vec::new();
+    for (name, algo) in CASES {
+        let t = template_for(algo);
+        let bits_per_msg = t.bits;
+        let body_bytes = t.body.len();
+        let mut server =
+            TransportServer::bind("127.0.0.1:0", 1, 10.0, FINGERPRINT, DIM).expect("bind");
+        let echo = spawn_echo(server.addr().to_string(), t);
+        let asn = assignments();
+        let w = vec![0.5f32; DIM];
+        let mut round = 0u64;
+        let result = bench.run(
+            format!("loopback: {name} ({SLOTS} msgs of {body_bytes} B, dim {DIM})"),
+            || {
+                let mut got = 0usize;
+                server
+                    .run_round(round, &w, None, None, &asn, |_, _, _, upload| {
+                        got += black_box(1);
+                        black_box(upload.bits);
+                        Ok(())
+                    })
+                    .expect("run_round");
+                assert_eq!(got, SLOTS);
+                round += 1;
+            },
+        );
+        server.shutdown();
+        drop(server);
+        echo.join().expect("echo thread");
+        out.push(CaseResult {
+            name: name.into(),
+            median_round_ns: result.p50_ns,
+            bits_per_msg,
+            body_bytes,
+        });
+    }
+    out
+}
+
+/// In-memory frame-codec case: frame + CRC + reassembly + decode, no
+/// socket — the pure CPU floor of the loopback numbers.
+fn run_codec_case(bench: &mut fedadam_ssm::benchlib::Bench) -> f64 {
+    let t = template_for("fedadam-ssm");
+    let asn = assignments();
+    let msgs: Vec<Vec<u8>> = asn.iter().map(|a| uplink_msg(&t, 0, a).encode()).collect();
+    let result = bench.run(
+        format!("frame codec: {SLOTS} msgs in memory (no socket)"),
+        || {
+            let mut wire = Vec::new();
+            for m in &msgs {
+                write_frame(&mut wire, m).expect("Vec<u8> writes cannot fail");
+            }
+            let mut buf = FrameBuffer::new();
+            buf.extend(&wire);
+            let mut n = 0usize;
+            while let Some(payload) = buf.pop().expect("clean frames") {
+                black_box(Msg::decode(&payload).expect("clean decode"));
+                n += 1;
+            }
+            assert_eq!(n, SLOTS);
+        },
+    );
+    result.p50_ns
+}
+
+/// `--json` mode: the machine-readable perf pin (see the module docs).
+fn json_mode(args: &[String]) {
+    let opt = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+    let out_path = opt("--json-out").unwrap_or_else(|| "BENCH_transport_loopback.json".into());
+    let baseline = opt("--baseline");
+
+    let mut bench = from_env();
+    bench.max_iters = 30;
+    let results = run_cases(&mut bench);
+
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+    let mut cases: Vec<Value> = Vec::new();
+    for r in &results {
+        medians.insert(r.name.clone(), r.median_round_ns);
+        let msgs_per_sec = SLOTS as f64 / (r.median_round_ns / 1e9).max(1e-12);
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Value::Str(r.name.clone()));
+        obj.insert("median_round_ns".into(), Value::Num(r.median_round_ns));
+        obj.insert("msgs_per_round".into(), Value::Num(SLOTS as f64));
+        obj.insert("msgs_per_sec".into(), Value::Num(msgs_per_sec));
+        obj.insert("bits_per_msg".into(), Value::Num(r.bits_per_msg as f64));
+        obj.insert("framed_bytes_per_msg".into(), Value::Num(r.body_bytes as f64));
+        cases.push(Value::Obj(obj));
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".into(), Value::Str("transport_loopback".into()));
+    root.insert("dim".into(), Value::Num(DIM as f64));
+    root.insert("agents".into(), Value::Num(1.0));
+    root.insert("cases".into(), Value::Arr(cases));
+    let doc = Value::Obj(root);
+    std::fs::write(&out_path, doc.render() + "\n").expect("writing bench json");
+    println!("wrote {out_path}");
+
+    if let Some(bp) = baseline {
+        compare_with_baseline(&bp, &medians);
+    }
+}
+
+/// Warn (never fail) when a fresh median regresses >10% vs `path`.
+fn compare_with_baseline(path: &str, medians: &BTreeMap<String, f64>) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("no baseline at {path}: {e}");
+            return;
+        }
+    };
+    let base = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("unparseable baseline {path}: {e}");
+            return;
+        }
+    };
+    let Some(base_cases) = base.get("cases").and_then(|c| c.as_arr()) else {
+        eprintln!("baseline {path} has no cases array");
+        return;
+    };
+    let mut warned = false;
+    for c in base_cases {
+        let name = c.get("name").and_then(|v| v.as_str());
+        let old = c.get("median_round_ns").and_then(|v| v.as_f64());
+        let (Some(name), Some(old)) = (name, old) else {
+            continue;
+        };
+        let Some(&new) = medians.get(name) else {
+            continue;
+        };
+        let ratio = new / old.max(1.0);
+        if ratio > 1.10 {
+            warned = true;
+            println!(
+                "WARN: {name}: median loopback round {:.2} ms vs baseline {:.2} ms (+{:.0}%)",
+                new / 1e6,
+                old / 1e6,
+                (ratio - 1.0) * 100.0
+            );
+        } else {
+            println!("ok: {name}: {ratio:.2}x baseline");
+        }
+    }
+    if !warned {
+        println!("no >10% wall-clock regressions vs {path}");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        json_mode(&args);
+        return;
+    }
+    let mut bench = from_env();
+    bench.max_iters = 50;
+    let codec_ns = run_codec_case(&mut bench);
+    let results = run_cases(&mut bench);
+    bench.report("transport loopback");
+    println!("\n-- socket overhead over the in-memory codec --");
+    for r in &results {
+        println!(
+            "{:>12}: {:.2} ms/round, {:.0} msgs/s, {:.1}x the codec-only cost, {} B framed/msg",
+            r.name,
+            r.median_round_ns / 1e6,
+            SLOTS as f64 / (r.median_round_ns / 1e9).max(1e-12),
+            r.median_round_ns / codec_ns.max(1.0),
+            r.body_bytes
+        );
+    }
+    println!("\n{}", bench.to_csv());
+}

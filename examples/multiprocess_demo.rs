@@ -1,0 +1,158 @@
+//! Multi-process federated run: one coordinator + N device-agent
+//! processes over a localhost TCP socket, checked bit-for-bit against
+//! the in-process run of the same experiment.
+//!
+//! ```text
+//! cargo run --release --example multiprocess_demo
+//! ```
+//!
+//! The demo runs on the pure-Rust reference backend so it works without
+//! AOT artifacts (CI runs it headless).  To get real OS process
+//! boundaries without artifacts, the example re-execs *itself* as each
+//! agent: the parent spawns `multiprocess_demo --agent-worker <i>
+//! --connect <addr>` children, which connect back over TCP and run the
+//! exact [`fedadam_ssm::transport::run_agent`] loop the `device-agent`
+//! binary runs.  (With artifacts present, the standalone binary does the
+//! same against `fedadam-ssm run --set transport_listen=...` — see the
+//! README quickstart.)
+//!
+//! Exit status is the verdict: non-zero if any byte differs.
+
+use std::process::{Child, Command};
+
+use anyhow::{bail, Context, Result};
+
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
+use fedadam_ssm::transport::run_agent;
+
+const AGENTS: usize = 2;
+
+fn meta() -> ModelMeta {
+    // A small linear model: dim = 10 * (8*8*1 + 1) = 650.
+    reference_meta(&[8, 8, 1], 10, 8, 32, 1)
+}
+
+/// The one experiment both runs (and every agent process) must agree on.
+fn demo_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "multiprocess-demo".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = "fedadam-ssm-qef".into(); // quantized + error feedback:
+                                              // the most state to get wrong
+    cfg.rounds = 3;
+    cfg.devices = 4;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.train_samples = 128;
+    cfg.test_samples = 64;
+    cfg.seed = 11;
+    cfg.quant_levels = 16;
+    cfg.num_workers = 2;
+    cfg
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--agent-worker") {
+        return agent_child(&args);
+    }
+    parent()
+}
+
+/// Child mode: `multiprocess_demo --agent-worker <i> --connect <addr>`.
+fn agent_child(args: &[String]) -> Result<()> {
+    let arg_after = |flag: &str| -> Result<&str> {
+        let at = args.iter().position(|a| a == flag).context(flag)?;
+        args.get(at + 1).map(|s| s.as_str()).context(flag)
+    };
+    let index: usize = arg_after("--agent-worker")?.parse()?;
+    let addr = arg_after("--connect")?;
+    let mut cfg = demo_cfg();
+    cfg.transport_listen = addr.into();
+    cfg.transport_agents = AGENTS;
+    let pool = reference_pool(meta(), 1)?;
+    run_agent(&cfg, &pool, addr, index)
+}
+
+fn parent() -> Result<()> {
+    println!(
+        "multiprocess demo: {} — {} devices, {} rounds, 1 coordinator + {AGENTS} agent processes",
+        demo_cfg().algorithm,
+        demo_cfg().devices,
+        demo_cfg().rounds
+    );
+
+    // Reference run: the ordinary in-process coordinator.
+    let cfg = demo_cfg();
+    let pool = reference_pool(meta(), cfg.num_workers)?;
+    let mut coord = Coordinator::with_pool(cfg, pool)?;
+    let log_local = coord.run()?;
+    let w_local = coord.global().w.clone();
+    println!("in-process run done ({} rounds)", log_local.rounds.len());
+
+    // Remote run: same experiment, but every device trains inside one of
+    // the agent processes; only framed bytes cross the process boundary.
+    let mut cfg = demo_cfg();
+    cfg.transport_listen = "127.0.0.1:0".into();
+    cfg.transport_agents = AGENTS;
+    cfg.transport_timeout_secs = 30.0;
+    let pool = reference_pool(meta(), cfg.num_workers)?;
+    let mut coord = Coordinator::with_pool(cfg, pool)?;
+    let addr = coord.transport_addr().context("transport not bound")?;
+    println!("coordinator listening on {addr}");
+
+    let exe = std::env::current_exe()?;
+    let mut children: Vec<Child> = (0..AGENTS)
+        .map(|i| {
+            Command::new(&exe)
+                .args(["--agent-worker", &i.to_string(), "--connect", &addr])
+                .spawn()
+                .with_context(|| format!("spawning agent process {i}"))
+        })
+        .collect::<Result<_>>()?;
+    let log_remote = coord.run()?;
+    for (i, child) in children.iter_mut().enumerate() {
+        let status = child.wait()?;
+        if !status.success() {
+            bail!("agent process {i} exited with {status}");
+        }
+        println!("agent process {i} exited cleanly");
+    }
+    let w_remote = coord.global().w.clone();
+
+    // The verdict: every logged number and the final model, bit for bit.
+    println!(
+        "\n{:>5} {:>14} {:>14} {:>12} {:>14}",
+        "round", "train loss", "test acc", "uplink bits", "byte-identical"
+    );
+    let mut identical = w_local == w_remote;
+    for (a, b) in log_local.rounds.iter().zip(&log_remote.rounds) {
+        let same = a.train_loss.to_bits() == b.train_loss.to_bits()
+            && a.test_accuracy.to_bits() == b.test_accuracy.to_bits()
+            && a.uplink_bits == b.uplink_bits
+            && a.downlink_bits == b.downlink_bits
+            && a.update_norm.to_bits() == b.update_norm.to_bits();
+        identical &= same;
+        println!(
+            "{:>5} {:>14.6} {:>14.4} {:>12} {:>14}",
+            a.round,
+            b.train_loss,
+            b.test_accuracy,
+            b.uplink_bits,
+            if same { "yes" } else { "NO" }
+        );
+    }
+    let uplink = log_remote.rounds.last().map(|r| r.uplink_bits).unwrap_or(0);
+    println!(
+        "\ntotal uplink priced at {uplink} bits = {} framed bytes on the wire",
+        uplink.div_ceil(8)
+    );
+    if identical {
+        println!("PASS: multi-process run is byte-identical to the in-process run");
+        Ok(())
+    } else {
+        bail!("FAIL: multi-process run diverged from the in-process run");
+    }
+}

@@ -8,8 +8,9 @@
 
 use anyhow::{ensure, Result};
 
+use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
-use crate::quant::{uniform_compress, uniform_decompress, ErrorFeedback};
+use crate::quant::{uniform_compress, uniform_decompress, ErrorFeedback, UniformPacket};
 use crate::sparse::codec::cost;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
@@ -32,6 +33,27 @@ impl EfficientAdam {
             ef_down: ErrorFeedback::new(dim),
         }
     }
+
+    /// Shared core of [`Algorithm::compress`] and
+    /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
+    /// exactly once per call.
+    fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (UniformPacket, Upload) {
+        let ef = &mut self.ef_up[device];
+        let compensated = ef.compensate(&delta.dw);
+        let packet = uniform_compress(&compensated, self.levels);
+        let deq = uniform_decompress(&packet);
+        ef.update(&compensated, &deq);
+        let bits = packet.wire_bits();
+        debug_assert_eq!(bits, cost::uniform(self.dim, self.levels as usize));
+        let up = Upload {
+            dw: Recon::Dense(deq),
+            dm: None,
+            dv: None,
+            weight: delta.weight,
+            bits,
+        };
+        (packet, up)
+    }
 }
 
 impl Algorithm for EfficientAdam {
@@ -44,20 +66,21 @@ impl Algorithm for EfficientAdam {
     }
 
     fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
-        let ef = &mut self.ef_up[device];
-        let compensated = ef.compensate(&delta.dw);
-        let packet = uniform_compress(&compensated, self.levels);
-        let deq = uniform_decompress(&packet);
-        ef.update(&compensated, &deq);
-        let bits = packet.wire_bits();
-        debug_assert_eq!(bits, cost::uniform(self.dim, self.levels as usize));
-        Upload {
-            dw: Recon::Dense(deq),
-            dm: None,
-            dv: None,
-            weight: delta.weight,
-            bits,
-        }
+        self.compress_inner(device, &delta).1
+    }
+
+    fn compress_wire(
+        &mut self,
+        _round: usize,
+        device: usize,
+        delta: LocalDelta,
+    ) -> Result<WireUpload> {
+        let (packet, up) = self.compress_inner(device, &delta);
+        Ok(WireUpload {
+            body: WireBody::UniformQ(packet),
+            weight: up.weight,
+            bits: up.bits,
+        })
     }
 
     fn downlink_bits(&self, _agg: &Aggregate) -> u64 {

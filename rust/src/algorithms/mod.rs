@@ -41,6 +41,7 @@ pub mod ssm;
 pub mod ssm_ef;
 pub mod ssm_q;
 pub mod topk;
+pub mod wire;
 
 use anyhow::{bail, Result};
 
@@ -155,6 +156,25 @@ pub trait Algorithm: Send {
     /// Takes the delta by value so dense algorithms can move the vectors
     /// straight onto the wire without copying (§Perf L3).
     fn compress(&mut self, round: usize, device: usize, delta: LocalDelta) -> Upload;
+
+    /// Compress one device's delta into its **transport** form — the
+    /// actual bytes-on-the-wire message a remote device agent sends.
+    ///
+    /// Must be observationally identical to [`Algorithm::compress`]: the
+    /// decoded [`wire::WireBody`] reconstructs the same [`Upload`]
+    /// bit-for-bit, mutates any per-device state (EF memory) exactly
+    /// once, and prices the same ledger bits.  The default derives the
+    /// body from the upload payloads, which is correct for the dense and
+    /// sparse-f32 families; quantized algorithms override it to ship
+    /// their raw code packets instead of f32 re-encodings.
+    fn compress_wire(
+        &mut self,
+        round: usize,
+        device: usize,
+        delta: LocalDelta,
+    ) -> Result<wire::WireUpload> {
+        wire::WireUpload::from_upload(self.compress(round, device, delta))
+    }
 
     /// Downlink bits for broadcasting `agg` to ONE device.
     fn downlink_bits(&self, agg: &Aggregate) -> u64;

@@ -18,8 +18,9 @@
 
 use anyhow::{ensure, Result};
 
+use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
-use crate::quant::{onebit_compress, onebit_decompress, ErrorFeedback};
+use crate::quant::{onebit_compress, onebit_decompress, ErrorFeedback, OneBitPacket};
 use crate::sparse::codec::cost;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
@@ -41,6 +42,23 @@ impl OneBitAdam {
 
     fn warm(&self, round: usize) -> bool {
         round < self.warmup_rounds
+    }
+
+    /// Compression-phase core shared by [`Algorithm::compress`] and
+    /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
+    /// exactly once per call.
+    fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (OneBitPacket, Upload) {
+        let packet = onebit_compress(&delta.dw, &mut self.ef[device]);
+        let bits = packet.wire_bits();
+        debug_assert_eq!(bits, cost::onebit(self.dim));
+        let up = Upload {
+            dw: Recon::Dense(onebit_decompress(&packet)),
+            dm: None,
+            dv: None,
+            weight: delta.weight,
+            bits,
+        };
+        (packet, up)
     }
 }
 
@@ -67,16 +85,27 @@ impl Algorithm for OneBitAdam {
                 bits: cost::fedadam_dense(self.dim),
             }
         } else {
-            let packet = onebit_compress(&delta.dw, &mut self.ef[device]);
-            let bits = packet.wire_bits();
-            debug_assert_eq!(bits, cost::onebit(self.dim));
-            Upload {
-                dw: Recon::Dense(onebit_decompress(&packet)),
-                dm: None,
-                dv: None,
-                weight: delta.weight,
-                bits,
-            }
+            self.compress_inner(device, &delta).1
+        }
+    }
+
+    fn compress_wire(
+        &mut self,
+        round: usize,
+        device: usize,
+        delta: LocalDelta,
+    ) -> Result<WireUpload> {
+        if self.warm(round) {
+            // Warmup uploads are plain dense f32 — the default derivation
+            // is already the wire form.
+            WireUpload::from_upload(self.compress(round, device, delta))
+        } else {
+            let (packet, up) = self.compress_inner(device, &delta);
+            Ok(WireUpload {
+                body: WireBody::OneBit(packet),
+                weight: up.weight,
+                bits: up.bits,
+            })
         }
     }
 

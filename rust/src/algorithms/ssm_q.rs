@@ -24,8 +24,10 @@
 
 use anyhow::{ensure, Result};
 
+use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
 use crate::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
+use crate::quant::SsmQUplink;
 use crate::sparse::codec::cost;
 use crate::sparse::{top_k_indices, SparseVec};
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -36,7 +38,9 @@ fn gather_vals(src: &[f32], indices: &[u32]) -> Vec<f32> {
 }
 
 /// Compress one `(ΔW, ΔM, ΔV)` triple under a shared mask through the
-/// quantized wire format, returning the exact dequantized reconstructions.
+/// quantized wire format, returning the wire message itself alongside the
+/// exact dequantized reconstructions (the transport path ships the
+/// former; the in-process aggregation path consumes the latter).
 fn compress_triple(
     dim: usize,
     idx: &[u32],
@@ -44,7 +48,7 @@ fn compress_triple(
     dm: &[f32],
     dv: &[f32],
     s_levels: u32,
-) -> (SparseVec, SparseVec, SparseVec, u64) {
+) -> (SsmQUplink, SparseVec, SparseVec, SparseVec, u64) {
     let msg = ssm_q_encode(
         dim,
         idx,
@@ -56,7 +60,7 @@ fn compress_triple(
     let bits = cost::fedadam_ssm_q(dim, idx.len(), s_levels as usize);
     debug_assert_eq!(bits, msg.wire_bits());
     let (sw, sm, sv) = ssm_q_decode(&msg);
-    (sw, sm, sv, bits)
+    (msg, sw, sm, sv, bits)
 }
 
 pub struct FedAdamSsmQ {
@@ -71,6 +75,22 @@ impl FedAdamSsmQ {
         assert!(levels >= 2, "need at least 2 quantization levels");
         FedAdamSsmQ { dim, k, levels }
     }
+
+    /// Shared core of [`Algorithm::compress`] and
+    /// [`Algorithm::compress_wire`] — one encode, both views.
+    fn compress_inner(&mut self, delta: &LocalDelta) -> (SsmQUplink, Upload) {
+        let idx = top_k_indices(&delta.dw, self.k);
+        let (msg, sw, sm, sv, bits) =
+            compress_triple(self.dim, &idx, &delta.dw, &delta.dm, &delta.dv, self.levels);
+        let up = Upload {
+            dw: Recon::Sparse(sw),
+            dm: Some(Recon::Sparse(sm)),
+            dv: Some(Recon::Sparse(sv)),
+            weight: delta.weight,
+            bits,
+        };
+        (msg, up)
+    }
 }
 
 impl Algorithm for FedAdamSsmQ {
@@ -79,16 +99,21 @@ impl Algorithm for FedAdamSsmQ {
     }
 
     fn compress(&mut self, _round: usize, _device: usize, delta: LocalDelta) -> Upload {
-        let idx = top_k_indices(&delta.dw, self.k);
-        let (sw, sm, sv, bits) =
-            compress_triple(self.dim, &idx, &delta.dw, &delta.dm, &delta.dv, self.levels);
-        Upload {
-            dw: Recon::Sparse(sw),
-            dm: Some(Recon::Sparse(sm)),
-            dv: Some(Recon::Sparse(sv)),
-            weight: delta.weight,
-            bits,
-        }
+        self.compress_inner(&delta).1
+    }
+
+    fn compress_wire(
+        &mut self,
+        _round: usize,
+        _device: usize,
+        delta: LocalDelta,
+    ) -> Result<WireUpload> {
+        let (msg, up) = self.compress_inner(&delta);
+        Ok(WireUpload {
+            body: WireBody::SsmQ(msg),
+            weight: up.weight,
+            bits: up.bits,
+        })
     }
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {
@@ -132,14 +157,11 @@ impl FedAdamSsmQEf {
                 .collect(),
         }
     }
-}
 
-impl Algorithm for FedAdamSsmQEf {
-    fn name(&self) -> &'static str {
-        "fedadam-ssm-qef"
-    }
-
-    fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
+    /// Shared core of [`Algorithm::compress`] and
+    /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
+    /// exactly once per call regardless of which view the caller takes.
+    fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (SsmQUplink, Upload) {
         let mem = &mut self.memory[device];
         // Compensate: c = delta + residual (pre-mask, all d lanes).
         let cw: Vec<f32> = delta.dw.iter().zip(&mem.w).map(|(a, b)| a + b).collect();
@@ -147,7 +169,7 @@ impl Algorithm for FedAdamSsmQEf {
         let cv: Vec<f32> = delta.dv.iter().zip(&mem.v).map(|(a, b)| a + b).collect();
         // SSM from the compensated ΔW (eq. 28 on c_w), then quantize.
         let idx = top_k_indices(&cw, self.k);
-        let (sw, sm, sv, bits) = compress_triple(self.dim, &idx, &cw, &cm, &cv, self.levels);
+        let (msg, sw, sm, sv, bits) = compress_triple(self.dim, &idx, &cw, &cm, &cv, self.levels);
         // Residual = compensated − transmitted: subtracting the
         // *dequantized* kept values folds the quantization error into the
         // memory alongside the masked-out mass.
@@ -162,13 +184,38 @@ impl Algorithm for FedAdamSsmQEf {
             mem.m[i as usize] -= vm;
             mem.v[i as usize] -= vv;
         }
-        Upload {
+        let up = Upload {
             dw: Recon::Sparse(sw),
             dm: Some(Recon::Sparse(sm)),
             dv: Some(Recon::Sparse(sv)),
             weight: delta.weight,
             bits,
-        }
+        };
+        (msg, up)
+    }
+}
+
+impl Algorithm for FedAdamSsmQEf {
+    fn name(&self) -> &'static str {
+        "fedadam-ssm-qef"
+    }
+
+    fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
+        self.compress_inner(device, &delta).1
+    }
+
+    fn compress_wire(
+        &mut self,
+        _round: usize,
+        device: usize,
+        delta: LocalDelta,
+    ) -> Result<WireUpload> {
+        let (msg, up) = self.compress_inner(device, &delta);
+        Ok(WireUpload {
+            body: WireBody::SsmQ(msg),
+            weight: up.weight,
+            bits: up.bits,
+        })
     }
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {

@@ -1,0 +1,760 @@
+//! The transport form of one device's compressed uplink.
+//!
+//! In-process, [`Algorithm::compress`] hands the coordinator an [`Upload`]
+//! whose payloads are already *decoded* (the dequantized / gathered values
+//! the server aggregates).  On a real socket the compressed message itself
+//! must cross the wire, and the cost ledger's claim — `bits` per message —
+//! must be the literal framed size.  [`WireBody`] is that message: every
+//! variant encodes to **one contiguous LSB-first bitstream** whose byte
+//! length is exactly `ceil(wire_bits / 8)`, so the priced ledger formula
+//! and the bytes on the wire cannot drift apart.  (Concatenating
+//! separately-padded sections would not be honest: three index-list masks
+//! each waste up to 7 padding bits, but the ledger prices the contiguous
+//! sum.)
+//!
+//! Decoding is strictly **untrusted**: [`WireBody::try_decode`] accepts
+//! only the canonical encoder output — exact byte length, exactly-`k`
+//! strictly-increasing positions `< dim`, on-grid quantizer codes, finite
+//! scales, zero padding bits — and never panics on malformed or truncated
+//! bytes ([`DecodeError`] otherwise).  [`WireBody::try_into_upload`] then
+//! reconstructs the *identical* [`Upload`] the in-process path produces,
+//! which is what makes the multi-process run bit-identical to the
+//! in-process one.
+//!
+//! [`Algorithm::compress`]: super::Algorithm::compress
+
+use anyhow::{bail, ensure, Result};
+
+use super::{Recon, Upload};
+use crate::quant::sparse_uniform::try_ssm_q_decode;
+use crate::quant::{
+    try_onebit_decompress, try_uniform_decompress, OneBitPacket, SparseUniformPacket, SsmQUplink,
+    UniformPacket,
+};
+use crate::sparse::codec::{
+    cost, decode_positions, encode_positions, index_bits, mask_bits, BitPacker, BitUnpacker,
+    DecodeError, MaskEncoding, Q,
+};
+use crate::sparse::SparseVec;
+
+/// One compressed uplink message in transport form: the body plus the
+/// FedAvg weight and the priced bit cost the ledger will be charged.
+#[derive(Clone, Debug)]
+pub struct WireUpload {
+    pub body: WireBody,
+    /// FedAvg weight (`|D̃_n|`).
+    pub weight: f64,
+    /// The algorithm's priced uplink cost for this message — enforced
+    /// against the framed size at send time by [`WireUpload::encode_body`].
+    pub bits: u64,
+}
+
+impl WireUpload {
+    /// Derive the transport form from an in-process [`Upload`] — the
+    /// default for algorithms whose upload payloads *are* their wire
+    /// payloads (dense f32 and sparse f32 families).  Quantized
+    /// algorithms override [`Algorithm::compress_wire`] instead, because
+    /// their uploads carry dequantized values whose f32 re-encoding would
+    /// be neither the priced size nor the original codes.
+    ///
+    /// [`Algorithm::compress_wire`]: super::Algorithm::compress_wire
+    pub fn from_upload(up: Upload) -> Result<WireUpload> {
+        let body = match (up.dw, up.dm, up.dv) {
+            (Recon::Dense(dw), Some(Recon::Dense(dm)), Some(Recon::Dense(dv))) => {
+                WireBody::Dense3 { dw, dm, dv }
+            }
+            (Recon::Dense(dw), None, None) => WireBody::Dense1 { dw },
+            (Recon::Sparse(w), Some(Recon::Sparse(m)), Some(Recon::Sparse(v))) => {
+                ensure!(
+                    w.dim == m.dim && w.dim == v.dim,
+                    "sparse triple with mismatched dims"
+                );
+                if w.indices == m.indices && w.indices == v.indices {
+                    WireBody::SharedMask {
+                        dim: w.dim,
+                        indices: w.indices,
+                        w: w.values,
+                        m: m.values,
+                        v: v.values,
+                    }
+                } else {
+                    ensure!(
+                        w.nnz() == m.nnz() && w.nnz() == v.nnz(),
+                        "sparse triple with unequal supports has no single-k wire form"
+                    );
+                    WireBody::SparseTriple { w, m, v }
+                }
+            }
+            _ => bail!("upload shape has no derivable wire form; override compress_wire"),
+        };
+        Ok(WireUpload {
+            body,
+            weight: up.weight,
+            bits: up.bits,
+        })
+    }
+
+    /// Serialize the body, enforcing — in **all** build profiles, not just
+    /// debug — that the priced ledger cost equals the framed size:
+    /// `body.wire_bits() == self.bits` and the byte length is exactly
+    /// `ceil(bits / 8)`.  A mispriced message is refused at send time
+    /// instead of silently corrupting the cost ledger.
+    pub fn encode_body(&self) -> Result<Vec<u8>> {
+        let wire = self.body.wire_bits();
+        ensure!(
+            wire == self.bits,
+            "mispriced uplink: ledger prices {} bits but the wire body is {} bits",
+            self.bits,
+            wire
+        );
+        let bytes = self.body.encode();
+        ensure!(
+            bytes.len() as u64 == self.bits.div_ceil(8),
+            "framed-byte accounting violated: {} bytes on the wire for {} priced bits",
+            bytes.len(),
+            self.bits
+        );
+        Ok(bytes)
+    }
+}
+
+/// The compressed payload of one uplink, by algorithm family.
+#[derive(Clone, Debug)]
+pub enum WireBody {
+    /// Dense `(ΔW, ΔM, ΔV)` — `fedadam`, `onebit-adam` warmup.  `3dq` bits.
+    Dense3 {
+        dw: Vec<f32>,
+        dm: Vec<f32>,
+        dv: Vec<f32>,
+    },
+    /// Dense `ΔW` only — `fedsgd`.  `dq` bits.
+    Dense1 { dw: Vec<f32> },
+    /// One shared mask + three kept-value f32 lists — the SSM family
+    /// (`fedadam-ssm`/`-m`/`-v`/`-ef`, `fairness-top`).
+    /// `min{3kq+d, k(3q+log₂d)}` bits.
+    SharedMask {
+        dim: usize,
+        indices: Vec<u32>,
+        w: Vec<f32>,
+        m: Vec<f32>,
+        v: Vec<f32>,
+    },
+    /// Three independently-masked sparse f32 vectors, equal `k` —
+    /// `fedadam-top`.  `min{3(kq+d), 3k(q+log₂d)}` bits.
+    SparseTriple {
+        w: SparseVec,
+        m: SparseVec,
+        v: SparseVec,
+    },
+    /// Quantized shared mask — `fedadam-ssm-q`/`-qef`.
+    SsmQ(SsmQUplink),
+    /// Error-compensated sign quantization — `onebit-adam` post-warmup.
+    OneBit(OneBitPacket),
+    /// Dense s-level uniform quantization — `efficient-adam`.
+    UniformQ(UniformPacket),
+}
+
+/// Wire kind tags (the transport header's `kind` byte).
+pub const KIND_DENSE3: u8 = 1;
+pub const KIND_DENSE1: u8 = 2;
+pub const KIND_SHARED_MASK: u8 = 3;
+pub const KIND_SPARSE_TRIPLE: u8 = 4;
+pub const KIND_SSM_Q: u8 = 5;
+pub const KIND_ONEBIT: u8 = 6;
+pub const KIND_UNIFORM_Q: u8 = 7;
+
+impl WireBody {
+    /// Header tag identifying the variant on the wire.
+    pub fn kind(&self) -> u8 {
+        match self {
+            WireBody::Dense3 { .. } => KIND_DENSE3,
+            WireBody::Dense1 { .. } => KIND_DENSE1,
+            WireBody::SharedMask { .. } => KIND_SHARED_MASK,
+            WireBody::SparseTriple { .. } => KIND_SPARSE_TRIPLE,
+            WireBody::SsmQ(_) => KIND_SSM_Q,
+            WireBody::OneBit(_) => KIND_ONEBIT,
+            WireBody::UniformQ(_) => KIND_UNIFORM_Q,
+        }
+    }
+
+    /// Support size `k` for masked variants (0 where not applicable —
+    /// dense and whole-`d` quantized bodies derive their lane count from
+    /// the model dim).
+    pub fn k(&self) -> usize {
+        match self {
+            WireBody::SharedMask { indices, .. } => indices.len(),
+            WireBody::SparseTriple { w, .. } => w.nnz(),
+            WireBody::SsmQ(msg) => msg.k,
+            _ => 0,
+        }
+    }
+
+    /// Quantizer bin count `s − 1` for quantized variants (0 otherwise).
+    pub fn levels(&self) -> u32 {
+        match self {
+            WireBody::SsmQ(msg) => msg.w.levels,
+            WireBody::UniformQ(p) => p.levels,
+            _ => 0,
+        }
+    }
+
+    /// Exact size of the encoded body in bits — the value the ledger
+    /// formulae in [`cost`] price.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            WireBody::Dense3 { dw, .. } => 3 * dw.len() as u64 * Q,
+            WireBody::Dense1 { dw } => dw.len() as u64 * Q,
+            WireBody::SharedMask { dim, indices, .. } => {
+                mask_bits(*dim, indices.len()).0 + 3 * indices.len() as u64 * Q
+            }
+            WireBody::SparseTriple { w, .. } => 3 * (mask_bits(w.dim, w.nnz()).0 + w.nnz() as u64 * Q),
+            WireBody::SsmQ(msg) => msg.wire_bits(),
+            WireBody::OneBit(p) => p.wire_bits(),
+            WireBody::UniformQ(p) => p.wire_bits(),
+        }
+    }
+
+    /// Pack the body into one contiguous LSB-first bitstream; the result
+    /// is exactly `ceil(wire_bits / 8)` bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut p = BitPacker::with_capacity(self.wire_bits() as usize);
+        match self {
+            WireBody::Dense3 { dw, dm, dv } => {
+                push_f32s(&mut p, dw);
+                push_f32s(&mut p, dm);
+                push_f32s(&mut p, dv);
+            }
+            WireBody::Dense1 { dw } => push_f32s(&mut p, dw),
+            WireBody::SharedMask {
+                dim,
+                indices,
+                w,
+                m,
+                v,
+            } => {
+                push_positions(&mut p, *dim, indices);
+                push_f32s(&mut p, w);
+                push_f32s(&mut p, m);
+                push_f32s(&mut p, v);
+            }
+            WireBody::SparseTriple { w, m, v } => {
+                for sv in [w, m, v] {
+                    push_positions(&mut p, sv.dim, &sv.indices);
+                    push_f32s(&mut p, &sv.values);
+                }
+            }
+            WireBody::SsmQ(msg) => {
+                // Trusted in-process struct: recover the indices, then
+                // repack everything contiguously (the struct's own
+                // sections each carry up to 7 padding bits the ledger
+                // does not price).
+                let indices = decode_positions(msg.encoding, msg.dim, msg.k, &msg.positions);
+                push_positions(&mut p, msg.dim, &indices);
+                for packet in [&msg.w, &msg.m, &msg.v] {
+                    push_codes(&mut p, packet);
+                    p.push(packet.scale.to_bits() as u64, Q);
+                }
+            }
+            WireBody::OneBit(packet) => {
+                let mut u = BitUnpacker::new(&packet.signs);
+                for _ in 0..packet.dim {
+                    p.push(u.pull(1), 1);
+                }
+                p.push(packet.scale.to_bits() as u64, Q);
+            }
+            WireBody::UniformQ(packet) => {
+                let bits = index_bits(packet.levels as usize + 1);
+                let mut u = BitUnpacker::new(&packet.codes);
+                for _ in 0..packet.dim {
+                    p.push(u.pull(bits), bits);
+                }
+                p.push(packet.scale.to_bits() as u64, Q);
+            }
+        }
+        p.finish()
+    }
+
+    /// The priced size implied by the header `(kind, dim, k, levels)` —
+    /// what an honest body of this shape must cost.
+    pub fn expected_bits(kind: u8, dim: usize, k: usize, levels: u32) -> Result<u64, DecodeError> {
+        if k > dim {
+            return Err(DecodeError::CountMismatch {
+                expected: k,
+                got: dim,
+            });
+        }
+        Ok(match kind {
+            KIND_DENSE3 => cost::fedadam_dense(dim),
+            KIND_DENSE1 => cost::fedsgd_dense(dim),
+            KIND_SHARED_MASK => cost::fedadam_ssm(dim, k),
+            KIND_SPARSE_TRIPLE => cost::fedadam_top(dim, k),
+            KIND_SSM_Q => {
+                if levels == 0 {
+                    return Err(DecodeError::BadValue("quantizer with zero levels"));
+                }
+                cost::fedadam_ssm_q(dim, k, levels as usize + 1)
+            }
+            KIND_ONEBIT => cost::onebit(dim),
+            KIND_UNIFORM_Q => {
+                if levels == 0 {
+                    return Err(DecodeError::BadValue("quantizer with zero levels"));
+                }
+                cost::uniform(dim, levels as usize + 1)
+            }
+            _ => return Err(DecodeError::BadValue("unknown wire body kind")),
+        })
+    }
+
+    /// Decode an **untrusted** body against its header.  Never panics;
+    /// accepts only the canonical [`WireBody::encode`] output: the
+    /// declared `bits` must match the header-implied size, the byte
+    /// length must be exactly `ceil(bits / 8)`, every mask must hold
+    /// exactly `k` strictly-increasing positions `< dim`, quantizer codes
+    /// must be on-grid, scales finite and non-negative, padding zero.
+    pub fn try_decode(
+        kind: u8,
+        dim: usize,
+        k: usize,
+        levels: u32,
+        bits: u64,
+        bytes: &[u8],
+    ) -> Result<WireBody, DecodeError> {
+        let expected = WireBody::expected_bits(kind, dim, k, levels)?;
+        if bits != expected {
+            return Err(DecodeError::BadValue("declared bits disagree with header shape"));
+        }
+        let expected_len = expected.div_ceil(8) as usize;
+        if bytes.len() != expected_len {
+            return Err(DecodeError::PayloadSize {
+                expected: expected_len,
+                got: bytes.len(),
+            });
+        }
+        let mut u = BitUnpacker::new(bytes);
+        let body = match kind {
+            KIND_DENSE3 => WireBody::Dense3 {
+                dw: pull_f32s(&mut u, dim)?,
+                dm: pull_f32s(&mut u, dim)?,
+                dv: pull_f32s(&mut u, dim)?,
+            },
+            KIND_DENSE1 => WireBody::Dense1 {
+                dw: pull_f32s(&mut u, dim)?,
+            },
+            KIND_SHARED_MASK => {
+                let indices = pull_positions(&mut u, dim, k)?;
+                WireBody::SharedMask {
+                    dim,
+                    indices,
+                    w: pull_f32s(&mut u, k)?,
+                    m: pull_f32s(&mut u, k)?,
+                    v: pull_f32s(&mut u, k)?,
+                }
+            }
+            KIND_SPARSE_TRIPLE => {
+                let mut svs = Vec::with_capacity(3);
+                for _ in 0..3 {
+                    let indices = pull_positions(&mut u, dim, k)?;
+                    let values = pull_f32s(&mut u, k)?;
+                    svs.push(SparseVec {
+                        dim,
+                        indices,
+                        values,
+                    });
+                }
+                let v = svs.pop().expect("three vectors");
+                let m = svs.pop().expect("three vectors");
+                let w = svs.pop().expect("three vectors");
+                WireBody::SparseTriple { w, m, v }
+            }
+            KIND_SSM_Q => {
+                let indices = pull_positions(&mut u, dim, k)?;
+                let (encoding, positions) = encode_positions(dim, &indices);
+                let mut packets = Vec::with_capacity(3);
+                for _ in 0..3 {
+                    packets.push(pull_packet(&mut u, k, levels)?);
+                }
+                let v = packets.pop().expect("three packets");
+                let m = packets.pop().expect("three packets");
+                let w = packets.pop().expect("three packets");
+                WireBody::SsmQ(SsmQUplink {
+                    dim,
+                    k,
+                    encoding,
+                    positions,
+                    w,
+                    m,
+                    v,
+                })
+            }
+            KIND_ONEBIT => {
+                let mut p = BitPacker::with_capacity(dim);
+                for _ in 0..dim {
+                    p.push(u.try_pull(1)?, 1);
+                }
+                let scale = pull_scale(&mut u)?;
+                WireBody::OneBit(OneBitPacket {
+                    dim,
+                    scale,
+                    signs: p.finish(),
+                })
+            }
+            KIND_UNIFORM_Q => {
+                let bits_per = index_bits(levels as usize + 1);
+                let mut p = BitPacker::with_capacity(dim * bits_per as usize);
+                for _ in 0..dim {
+                    let q = u.try_pull(bits_per)?;
+                    if q > levels as u64 {
+                        return Err(DecodeError::BadValue("quantizer code above top level"));
+                    }
+                    p.push(q, bits_per);
+                }
+                let scale = pull_scale(&mut u)?;
+                WireBody::UniformQ(UniformPacket {
+                    dim,
+                    scale,
+                    levels,
+                    codes: p.finish(),
+                })
+            }
+            _ => unreachable!("expected_bits rejected unknown kinds"),
+        };
+        let pad = u.remaining_bits() as u64;
+        if pad > 0 && u.try_pull(pad)? != 0 {
+            return Err(DecodeError::BadValue("nonzero body padding bits"));
+        }
+        Ok(body)
+    }
+
+    /// Reconstruct the exact [`Upload`] the in-process
+    /// [`Algorithm::compress`] would have produced for this message —
+    /// dequantization and sparse reconstruction run through the fallible
+    /// decoders, so a malformed message errors instead of panicking.
+    ///
+    /// [`Algorithm::compress`]: super::Algorithm::compress
+    pub fn try_into_upload(self, weight: f64) -> Result<Upload, DecodeError> {
+        let bits = self.wire_bits();
+        let (dw, dm, dv) = match self {
+            WireBody::Dense3 { dw, dm, dv } => (
+                Recon::Dense(dw),
+                Some(Recon::Dense(dm)),
+                Some(Recon::Dense(dv)),
+            ),
+            WireBody::Dense1 { dw } => (Recon::Dense(dw), None, None),
+            WireBody::SharedMask {
+                dim,
+                indices,
+                w,
+                m,
+                v,
+            } => {
+                let sv = |values: Vec<f32>, indices: Vec<u32>| {
+                    Recon::Sparse(SparseVec {
+                        dim,
+                        indices,
+                        values,
+                    })
+                };
+                (
+                    sv(w, indices.clone()),
+                    Some(sv(m, indices.clone())),
+                    Some(sv(v, indices)),
+                )
+            }
+            WireBody::SparseTriple { w, m, v } => (
+                Recon::Sparse(w),
+                Some(Recon::Sparse(m)),
+                Some(Recon::Sparse(v)),
+            ),
+            WireBody::SsmQ(msg) => {
+                let (w, m, v) = try_ssm_q_decode(&msg)?;
+                (
+                    Recon::Sparse(w),
+                    Some(Recon::Sparse(m)),
+                    Some(Recon::Sparse(v)),
+                )
+            }
+            WireBody::OneBit(packet) => (Recon::Dense(try_onebit_decompress(&packet)?), None, None),
+            WireBody::UniformQ(packet) => {
+                (Recon::Dense(try_uniform_decompress(&packet)?), None, None)
+            }
+        };
+        Ok(Upload {
+            dw,
+            dm,
+            dv,
+            weight,
+            bits,
+        })
+    }
+}
+
+/// Push the canonical `min{bitmap, index-list}` position coding for
+/// `indices` (sorted unique, `< dim`) into the contiguous stream —
+/// bit-for-bit the coding [`encode_positions`] produces, minus its byte
+/// padding.
+fn push_positions(p: &mut BitPacker, dim: usize, indices: &[u32]) {
+    let (_, enc) = mask_bits(dim, indices.len());
+    match enc {
+        MaskEncoding::Bitmap => {
+            let mut next = indices.iter().peekable();
+            for i in 0..dim as u32 {
+                let bit = if next.peek() == Some(&&i) {
+                    next.next();
+                    1
+                } else {
+                    0
+                };
+                p.push(bit, 1);
+            }
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(dim);
+            for &i in indices {
+                p.push(i as u64, bits);
+            }
+        }
+    }
+}
+
+/// Pull the canonical position coding back out, validating exactly `k`
+/// strictly-increasing indices `< dim`.
+fn pull_positions(u: &mut BitUnpacker, dim: usize, k: usize) -> Result<Vec<u32>, DecodeError> {
+    let (_, enc) = mask_bits(dim, k);
+    match enc {
+        MaskEncoding::Bitmap => {
+            let mut out = Vec::with_capacity(k.min(dim));
+            for i in 0..dim {
+                if u.try_pull(1)? == 1 {
+                    out.push(i as u32);
+                }
+            }
+            if out.len() != k {
+                return Err(DecodeError::CountMismatch {
+                    expected: k,
+                    got: out.len(),
+                });
+            }
+            Ok(out)
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(dim);
+            let mut out = Vec::with_capacity(k);
+            let mut prev: Option<u32> = None;
+            for _ in 0..k {
+                let i = u.try_pull(bits)? as u32;
+                if i as usize >= dim {
+                    return Err(DecodeError::BadIndex { index: i, dim });
+                }
+                if let Some(pv) = prev {
+                    if i <= pv {
+                        return Err(DecodeError::NonIncreasing { prev: pv, next: i });
+                    }
+                }
+                prev = Some(i);
+                out.push(i);
+            }
+            Ok(out)
+        }
+    }
+}
+
+fn push_f32s(p: &mut BitPacker, vals: &[f32]) {
+    for &v in vals {
+        p.push(v.to_bits() as u64, Q);
+    }
+}
+
+fn pull_f32s(u: &mut BitUnpacker, n: usize) -> Result<Vec<f32>, DecodeError> {
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_bits(u.try_pull(Q)? as u32));
+    }
+    Ok(out)
+}
+
+/// Re-emit a value packet's `k` codes into the contiguous stream
+/// (in-process packets pad each code buffer to a byte; the ledger does
+/// not price that padding).
+fn push_codes(p: &mut BitPacker, packet: &SparseUniformPacket) {
+    let bits = index_bits(packet.s_levels() as usize);
+    let mut u = BitUnpacker::new(&packet.codes);
+    for _ in 0..packet.k {
+        p.push(u.pull(bits), bits);
+    }
+}
+
+/// Pull one value packet (`k` on-grid codes + a finite scale) back out.
+fn pull_packet(
+    u: &mut BitUnpacker,
+    k: usize,
+    levels: u32,
+) -> Result<SparseUniformPacket, DecodeError> {
+    let bits = index_bits(levels as usize + 1);
+    let mut p = BitPacker::with_capacity(k * bits as usize);
+    for _ in 0..k {
+        let q = u.try_pull(bits)?;
+        if q > levels as u64 {
+            return Err(DecodeError::BadValue("quantizer code above top level"));
+        }
+        p.push(q, bits);
+    }
+    let scale = pull_scale(u)?;
+    Ok(SparseUniformPacket {
+        k,
+        scale,
+        levels,
+        codes: p.finish(),
+    })
+}
+
+fn pull_scale(u: &mut BitUnpacker) -> Result<f32, DecodeError> {
+    let scale = f32::from_bits(u.try_pull(Q)? as u32);
+    if !scale.is_finite() || scale < 0.0 {
+        return Err(DecodeError::BadValue("non-finite or negative quantizer scale"));
+    }
+    Ok(scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::sparse_uniform::ssm_q_encode;
+    use crate::quant::{onebit_compress, uniform_compress, ErrorFeedback};
+    use crate::rng::Rng;
+
+    fn roundtrip(body: WireBody) {
+        let bits = body.wire_bits();
+        let bytes = body.encode();
+        assert_eq!(
+            bytes.len() as u64,
+            bits.div_ceil(8),
+            "framed-byte honesty: {:?}",
+            body.kind()
+        );
+        let dim = match &body {
+            WireBody::Dense3 { dw, .. } | WireBody::Dense1 { dw } => dw.len(),
+            WireBody::SharedMask { dim, .. } => *dim,
+            WireBody::SparseTriple { w, .. } => w.dim,
+            WireBody::SsmQ(msg) => msg.dim,
+            WireBody::OneBit(p) => p.dim,
+            WireBody::UniformQ(p) => p.dim,
+        };
+        let back =
+            WireBody::try_decode(body.kind(), dim, body.k(), body.levels(), bits, &bytes).unwrap();
+        // Canonicality: decoding then re-encoding reproduces the bytes.
+        assert_eq!(back.encode(), bytes);
+        // And the reconstructed uploads agree bit-exactly.
+        let a = body.try_into_upload(1.0).unwrap();
+        let b = back.try_into_upload(1.0).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn all_kinds_roundtrip_with_exact_byte_honesty() {
+        let mut rng = Rng::new(77);
+        let d = 100;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<u32> = vec![0, 7, 13, 42, 99];
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        roundtrip(WireBody::Dense3 {
+            dw: x.clone(),
+            dm: x.clone(),
+            dv: x.clone(),
+        });
+        roundtrip(WireBody::Dense1 { dw: x.clone() });
+        roundtrip(WireBody::SharedMask {
+            dim: d,
+            indices: idx.clone(),
+            w: vals.clone(),
+            m: vals.clone(),
+            v: vals.clone(),
+        });
+        roundtrip(WireBody::SparseTriple {
+            w: SparseVec {
+                dim: d,
+                indices: vec![1, 5, 9, 50, 98],
+                values: vals.clone(),
+            },
+            m: SparseVec {
+                dim: d,
+                indices: idx.clone(),
+                values: vals.clone(),
+            },
+            v: SparseVec {
+                dim: d,
+                indices: vec![0, 1, 2, 3, 4],
+                values: vals.clone(),
+            },
+        });
+        for s in [2u32, 3, 16] {
+            roundtrip(WireBody::SsmQ(ssm_q_encode(d, &idx, &vals, &vals, &vals, s)));
+            roundtrip(WireBody::UniformQ(uniform_compress(&x, s)));
+        }
+        let mut ef = ErrorFeedback::new(d);
+        roundtrip(WireBody::OneBit(onebit_compress(&x, &mut ef)));
+    }
+
+    #[test]
+    fn bitmap_masks_also_roundtrip() {
+        // Dense-enough support flips the coding to Bitmap (d <= k log d).
+        let d = 64usize;
+        let indices: Vec<u32> = (0..32).map(|i| i * 2).collect();
+        let (_, enc) = mask_bits(d, indices.len());
+        assert_eq!(enc, MaskEncoding::Bitmap);
+        let vals = vec![1.5f32; 32];
+        roundtrip(WireBody::SharedMask {
+            dim: d,
+            indices,
+            w: vals.clone(),
+            m: vals.clone(),
+            v: vals,
+        });
+    }
+
+    #[test]
+    fn mispriced_send_is_refused_in_every_profile() {
+        // The satellite-3 contract: priced-size == framed-size is a hard
+        // `Result` at send time, not a debug_assert — this test must pass
+        // under `cargo test --release` too.
+        let up = WireUpload {
+            body: WireBody::Dense1 {
+                dw: vec![1.0, 2.0, 3.0],
+            },
+            weight: 1.0,
+            bits: 3 * 32 + 1, // off by one bit vs the honest 3·q
+        };
+        let err = up.encode_body().unwrap_err();
+        assert!(err.to_string().contains("mispriced"), "{err}");
+        let honest = WireUpload {
+            bits: 3 * 32,
+            ..up
+        };
+        assert_eq!(honest.encode_body().unwrap().len(), 12);
+    }
+
+    #[test]
+    fn try_decode_rejects_mutations_and_truncations() {
+        let body = WireBody::SharedMask {
+            dim: 1 << 14,
+            indices: vec![5, 100, 9000],
+            w: vec![1.0, 2.0, 3.0],
+            m: vec![4.0, 5.0, 6.0],
+            v: vec![7.0, 8.0, 9.0],
+        };
+        let bits = body.wire_bits();
+        let bytes = body.encode();
+        // Truncation at every byte boundary errors.
+        for cut in 0..bytes.len() {
+            assert!(
+                WireBody::try_decode(KIND_SHARED_MASK, 1 << 14, 3, 0, bits, &bytes[..cut]).is_err(),
+                "cut={cut}"
+            );
+        }
+        // Dishonest declared bits error.
+        assert!(WireBody::try_decode(KIND_SHARED_MASK, 1 << 14, 3, 0, bits + 8, &bytes).is_err());
+        // Unknown kind errors.
+        assert!(WireBody::try_decode(99, 1 << 14, 3, 0, bits, &bytes).is_err());
+        // k > dim errors.
+        assert!(WireBody::try_decode(KIND_SHARED_MASK, 2, 3, 0, bits, &bytes).is_err());
+    }
+}

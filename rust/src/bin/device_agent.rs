@@ -1,0 +1,101 @@
+//! `device-agent` — the remote device-shard process of a transport run.
+//!
+//! One coordinator (`fedadam-ssm run --set transport_listen=...`) plus
+//! `transport_agents` copies of this binary make a multi-process
+//! federated run; agent `i` owns every device with
+//! `device % transport_agents == i`.  The agent must resolve the **same
+//! experiment config** as the server (same file / same `--set`s) — the
+//! registration handshake refuses a mismatched config fingerprint.
+//!
+//! Example (two agents against a server on port 7000):
+//! ```text
+//! device-agent --connect 127.0.0.1:7000 --agent 0 --config exp.toml &
+//! device-agent --connect 127.0.0.1:7000 --agent 1 --config exp.toml &
+//! ```
+
+use std::io::Write as _;
+
+use anyhow::{Context, Result};
+
+use fedadam_ssm::cli::Cli;
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::transport::agent::run_agent_from_artifacts;
+
+/// Minimal stderr logger (offline build: no tracing-subscriber).
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+    }
+
+    fn flush(&self) {
+        let _ = std::io::stderr().flush();
+    }
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+const USAGE: &str = "\
+device-agent — remote device shard for a fedadam-ssm transport run
+
+USAGE:
+    device-agent --connect <addr> --agent <index> [OPTIONS]
+
+OPTIONS:
+    --connect <addr>      server address: host:port or unix:/path [required]
+    --agent <index>       this agent's index in 0..transport_agents [required]
+    --artifacts <dir>     AOT artifacts directory [default: artifacts]
+    --config <file>       TOML experiment config — must resolve to the same
+                          config fingerprint as the server's, or the
+                          registration handshake is refused
+    --set key=value       override one config key (repeatable)
+    --verbose             debug logging
+";
+
+fn main() {
+    let cli = match Cli::parse(std::env::args().skip(1)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if cli.flag("help") {
+        println!("{USAGE}");
+        return;
+    }
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if cli.flag("verbose") {
+        log::LevelFilter::Debug
+    } else {
+        log::LevelFilter::Info
+    });
+    if let Err(e) = dispatch(&cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cli: &Cli) -> Result<()> {
+    let mut cfg = match cli.opt("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    for (k, v) in &cli.sets {
+        cfg.set(k, v)?;
+    }
+    cfg.validate()?;
+    let addr = cli.opt("connect").context("--connect <addr> is required")?;
+    let index: usize = cli
+        .opt_parse("agent")?
+        .context("--agent <index> is required")?;
+    let artifacts = cli.opt_or("artifacts", "artifacts");
+    run_agent_from_artifacts(&cfg, artifacts, addr, index)
+}

@@ -178,6 +178,22 @@ pub struct ExperimentConfig {
     /// Snapshot cadence in rounds when journaling (must be >= 1; a crash
     /// re-executes at most this many rounds on resume).
     pub snapshot_every: usize,
+    /// Wire-transport listen address (see [`crate::transport`]).
+    /// Non-empty = the coordinator binds here (`host:port` for TCP, port
+    /// `0` picks a free one; `unix:/path` for a Unix domain socket) and
+    /// farms each round's local training out to remote device-agent
+    /// processes instead of its in-process thread pool.  Empty (default)
+    /// = fully in-process.  Results are bitwise identical either way —
+    /// only the process topology changes.
+    pub transport_listen: String,
+    /// Number of device-agent processes the transport server waits for.
+    /// Agent `i` owns every device with `device % transport_agents == i`.
+    /// Must be >= 1 when `transport_listen` is set.
+    pub transport_agents: usize,
+    /// Transport I/O deadline in (real) seconds: how long the server
+    /// waits for agents to register, and for each in-flight uplink before
+    /// declaring the connection dead and re-admitting a reconnect.
+    pub transport_timeout_secs: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -216,6 +232,9 @@ impl Default for ExperimentConfig {
             journal: String::new(),
             resume: String::new(),
             snapshot_every: 8,
+            transport_listen: String::new(),
+            transport_agents: 0,
+            transport_timeout_secs: 30.0,
         }
     }
 }
@@ -297,6 +316,9 @@ impl ExperimentConfig {
             "journal" => self.journal = value.into(),
             "resume" => self.resume = value.into(),
             "snapshot_every" => self.snapshot_every = p(key, value)?,
+            "transport_listen" => self.transport_listen = value.into(),
+            "transport_agents" => self.transport_agents = p(key, value)?,
+            "transport_timeout_secs" => self.transport_timeout_secs = p(key, value)?,
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -357,6 +379,23 @@ impl ExperimentConfig {
         if self.snapshot_every == 0 {
             bail!("snapshot_every must be >= 1 (0 would journal without ever snapshotting)");
         }
+        if !self.transport_listen.is_empty() {
+            if self.transport_agents == 0 {
+                bail!("transport_agents must be >= 1 when transport_listen is set");
+            }
+            if !(self.transport_timeout_secs > 0.0 && self.transport_timeout_secs.is_finite()) {
+                bail!(
+                    "transport_timeout_secs must be > 0, got {}",
+                    self.transport_timeout_secs
+                );
+            }
+            // The journal's replay oracle assumes the round loop owns
+            // training in-process; crash-safe journaling of a distributed
+            // round is a different (two-phase) protocol.
+            if !self.journal.is_empty() || !self.resume.is_empty() {
+                bail!("transport_listen cannot be combined with journal/resume");
+            }
+        }
         if !self.resume.is_empty() {
             // The knob must point at a journal written by an equivalent
             // config; `verify_resumable` checks existence, format version
@@ -379,8 +418,13 @@ impl ExperimentConfig {
     /// overlapped sim-clock schedule, so it is determinism-bearing here).
     /// Excluded: pure perf knobs (`num_workers`, `agg_shards`) — the
     /// determinism contract makes resuming under a different worker or
-    /// shard count bit-neutral — and the journal plumbing itself
-    /// (`name`, `journal`, `resume`, `snapshot_every`).
+    /// shard count bit-neutral — the journal plumbing itself
+    /// (`name`, `journal`, `resume`, `snapshot_every`), and the transport
+    /// topology (`transport_listen`, `transport_agents`,
+    /// `transport_timeout_secs`): a remote run is bit-identical to the
+    /// in-process run, and the device agents' Hello handshake compares
+    /// this fingerprint against the server's, which must not depend on
+    /// which side of the socket a process sits.
     pub fn fingerprint(&self) -> u64 {
         let canon = format!(
             "{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{}|{:?}|{:016x}|{}|{:016x}|{:016x}|{}|{:016x}|{:016x}|{:016x}|{}",
@@ -662,6 +706,9 @@ mod tests {
         cfg.name = "other-name".into();
         cfg.journal = "/tmp/j".into();
         cfg.snapshot_every = 2;
+        cfg.transport_listen = "127.0.0.1:0".into();
+        cfg.transport_agents = 2;
+        cfg.transport_timeout_secs = 5.0;
         assert_eq!(cfg.fingerprint(), base);
         // Determinism-bearing knobs must.
         for (key, value) in [
@@ -676,6 +723,38 @@ mod tests {
             cfg.set(key, value).unwrap();
             assert_ne!(cfg.fingerprint(), base, "{key}={value} must move the fingerprint");
         }
+    }
+
+    #[test]
+    fn transport_knobs_ride_through_set_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.transport_listen.is_empty());
+        cfg.set("transport_listen", "127.0.0.1:7000").unwrap();
+        cfg.set("transport_agents", "3").unwrap();
+        cfg.set("transport_timeout_secs", "2.5").unwrap();
+        assert_eq!(cfg.transport_listen, "127.0.0.1:7000");
+        assert_eq!(cfg.transport_agents, 3);
+        assert_eq!(cfg.transport_timeout_secs, 2.5);
+        cfg.validate().unwrap();
+        assert!(cfg.set("transport_agents", "several").is_err());
+
+        // Listening with zero agents is a stall, not a run.
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("transport_listen", "unix:/tmp/fedadam.sock").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("transport_agents"), "{err}");
+
+        // Non-positive timeout rejected by name.
+        cfg.set("transport_agents", "1").unwrap();
+        cfg.set("transport_timeout_secs", "0").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("transport_timeout_secs"), "{err}");
+
+        // Transport excludes the journal/resume machinery.
+        cfg.set("transport_timeout_secs", "30").unwrap();
+        cfg.set("journal", "/tmp/j").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("journal"), "{err}");
     }
 
     #[test]

@@ -24,6 +24,17 @@
 //!   snapshotted right after round `t`'s apply — exactly the state round
 //!   `t+1` trains from.
 //!
+//! ## Remote mode (`transport_listen`)
+//!
+//! When `transport_listen` names an address, step (2) runs on remote
+//! **device-agent processes** instead of in-process scoped threads: the
+//! coordinator broadcasts each round over [`crate::transport`] and
+//! collects validated, compressed uplinks from `transport_agents` agent
+//! processes (each owning the devices with `device % agents == index`).
+//! Everything else — aggregation, apply, eval, ledger, simulated time —
+//! is unchanged, and the run is byte-identical to the in-process run of
+//! the same config.
+//!
 //! ## Participation and simulated time
 //!
 //! Each round's cohort comes from a pluggable [`sampler`]
@@ -92,6 +103,8 @@ use crate::metrics::{ExperimentLog, RoundRecord};
 use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
 use crate::simtime::{LatencyModel, SimClock};
 use crate::tensor;
+use crate::transport::msg::Assignment;
+use crate::transport::TransportServer;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub use device::{Device, LocalRunConfig};
@@ -170,6 +183,10 @@ pub struct Coordinator {
     /// The event journal — `Some` when the `journal` knob (or a resume)
     /// names a directory.
     journal: Option<journal::Journal>,
+    /// The wire transport — `Some` when `transport_listen` names an
+    /// address; rounds then train on remote device agents instead of
+    /// in-process scoped threads.
+    transport: Option<TransportServer>,
 }
 
 /// One overlapped eval: joins to `(test_loss, test_accuracy)` for `round`.
@@ -236,22 +253,8 @@ impl Coordinator {
     fn fresh(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
         let meta = pool.meta().clone();
 
-        // Synthetic stand-in corpus shaped for this model.
-        let spec = synthetic::SyntheticSpec::for_input_shape(
-            &meta.input_shape,
-            cfg.train_samples,
-            cfg.test_samples,
-        );
-        let task = synthetic::generate(&spec, cfg.seed);
-        let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
-        let shards = partition(&task.train, cfg.devices, how, cfg.seed);
-
+        let (task, devices) = build_task_and_devices(&cfg, &pool);
         let handle = pool.handle();
-        let devices: Vec<Device> = shards
-            .into_iter()
-            .enumerate()
-            .map(|(i, data)| Device::new(i, Shard { data }, handle.clone()))
-            .collect();
 
         let algorithm = algorithms::build(&cfg, meta.dim)?;
         let w0 = handle.init(cfg.seed as i32)?;
@@ -280,6 +283,21 @@ impl Coordinator {
         let sampler = sampler::build(&cfg, &data_weights, latency.device_compute_secs());
         let sim = cfg.simtime.then(|| SimClock::new(cfg.pipeline_depth));
 
+        // Remote mode: bind the accept socket up front so the resolved
+        // address (port 0 → real port) is available to launch agents
+        // against before the first round blocks on registration.
+        let transport = if cfg.transport_listen.is_empty() {
+            None
+        } else {
+            Some(TransportServer::bind(
+                &cfg.transport_listen,
+                cfg.transport_agents,
+                cfg.transport_timeout_secs,
+                cfg.fingerprint(),
+                meta.dim,
+            )?)
+        };
+
         let log = ExperimentLog {
             name: cfg.name.clone(),
             algorithm: cfg.algorithm.clone(),
@@ -305,6 +323,7 @@ impl Coordinator {
             pending_evals: VecDeque::new(),
             state: RunState::WaitingForCohort,
             journal: None,
+            transport,
         })
     }
 
@@ -374,6 +393,23 @@ impl Coordinator {
         &self.global
     }
 
+    /// The wire transport's resolved listen address (`transport_listen`
+    /// with port 0 replaced by the real port), or `None` in-process.
+    /// Launch device agents against this before the first `step_round`
+    /// — registration blocks until `transport_agents` have connected.
+    pub fn transport_addr(&self) -> Option<String> {
+        self.transport.as_ref().map(|t| t.addr().to_string())
+    }
+
+    /// Broadcast a best-effort `Shutdown` to every connected device
+    /// agent so their processes exit cleanly.  Idempotent; called by
+    /// [`Self::run`] and on drop.
+    pub fn shutdown_transport(&mut self) {
+        if let Some(transport) = self.transport.as_mut() {
+            transport.shutdown();
+        }
+    }
+
     pub fn handle(&self) -> EngineHandle {
         self.pool.handle()
     }
@@ -418,12 +454,21 @@ impl Coordinator {
         // upload → aggregate).
         let (loss_sum, mut agg, round_secs, folded, expected) = if self.cfg.pipeline_depth == 0 {
             // Legacy barrier: hold every upload, reduce once at the end.
-            let mut uploads: Vec<Upload> = Vec::with_capacity(cohort.len());
-            let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |_slot, upload| {
-                uploads.push(upload);
+            // Slot-placed, not pushed: the in-process sink fires in
+            // ascending slot order, but the wire transport delivers in
+            // arrival order, and the reduce must see cohort order either
+            // way.
+            let mut uploads: Vec<Option<Upload>> = (0..cohort.len()).map(|_| None).collect();
+            let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |slot, upload| {
+                debug_assert!(uploads[slot].is_none(), "slot {slot} uploaded twice");
+                uploads[slot] = Some(upload);
                 Ok(())
             })?;
             self.transition(RunState::Aggregating);
+            let uploads: Vec<Upload> = uploads
+                .into_iter()
+                .map(|u| u.expect("train_and_upload returned Ok with a slot missing"))
+                .collect();
             let n = uploads.len();
             (loss_sum, aggregate_sharded(&uploads, dim, shards), round_secs, n, n)
         } else {
@@ -723,6 +768,9 @@ impl Coordinator {
         cohort: &Cohort,
         mut sink: impl FnMut(usize, Upload) -> Result<()>,
     ) -> Result<(f64, f64)> {
+        if self.transport.is_some() {
+            return self.train_and_upload_remote(t, cohort, sink);
+        }
         let participants = &cohort.devices;
         let run_cfg = local_run_cfg(&self.cfg);
         let mode = self.algorithm.local_mode(t);
@@ -816,37 +864,80 @@ impl Coordinator {
     /// Compress via the configured backend (native quickselect, or the
     /// AOT Pallas sparsifier for the plain SSM algorithm).
     fn compress_upload(&mut self, t: usize, di: usize, delta: LocalDelta) -> Result<Upload> {
-        if self.cfg.sparsify_backend == SparsifyBackend::Xla
-            && self.cfg.algorithm == "fedadam-ssm"
-        {
-            // Cross-layer path: run eq. 10-12 + 28 inside XLA, then encode.
-            use crate::algorithms::Recon;
-            use crate::sparse::{codec::cost, top_k_indices, SparseVec};
-            let dim = delta.dw.len();
-            let k = self.cfg.k_for(dim);
-            // The shared mask's support comes from the threshold indices,
-            // NOT from the kernel output's non-zeros: a kept lane whose
-            // value is exactly 0.0 is still transmitted (and priced), and
-            // `SparseVec::from_dense` would silently drop it, making
-            // `nnz < k` while `bits` charges for k.  Gathering the masked
-            // kernel outputs at the top-k indices keeps the encoded wire
-            // format bit-for-bit consistent with `cost::fedadam_ssm(d, k)`.
-            // (The kernel keeps ties at the threshold, so its support is a
-            // superset of these exactly-k indices; values at them agree.)
-            let idx = top_k_indices(&delta.dw, k);
-            let (sw, sm, sv) = self
-                .pool
-                .handle()
-                .sparsify(delta.dw, delta.dm, delta.dv, k as i32)?;
-            return Ok(Upload {
-                dw: Recon::Sparse(SparseVec::gather(&sw, &idx)),
-                dm: Some(Recon::Sparse(SparseVec::gather(&sm, &idx))),
-                dv: Some(Recon::Sparse(SparseVec::gather(&sv, &idx))),
-                weight: delta.weight,
-                bits: cost::fedadam_ssm(dim, k),
-            });
-        }
-        Ok(self.algorithm.compress(t, di, delta))
+        let handle = self.pool.handle();
+        compress_upload_with(&self.cfg, &handle, self.algorithm.as_mut(), t, di, delta)
+    }
+
+    /// One round over the wire transport instead of in-process scoped
+    /// threads.  Takes the transport out of `self` for the duration so
+    /// the sink closure can borrow the coordinator's other fields.
+    fn train_and_upload_remote(
+        &mut self,
+        t: usize,
+        cohort: &Cohort,
+        sink: impl FnMut(usize, Upload) -> Result<()>,
+    ) -> Result<(f64, f64)> {
+        let mut transport = self
+            .transport
+            .take()
+            .expect("remote dispatch without a transport");
+        let out = self.remote_round(&mut transport, t, cohort, sink);
+        self.transport = Some(transport);
+        out
+    }
+
+    /// Broadcast the round, collect every slot's validated upload, and
+    /// account losses / latency / ledger exactly as the in-process loop
+    /// does.  Uplinks land in arbitrary arrival order; everything folded
+    /// here is arrival-order-independent (per-slot loss cells summed
+    /// ascending at the end, an f64 `max` and a u64 ledger add), and the
+    /// sink receives the slot index so downstream accumulation stays
+    /// slot-fixed.
+    fn remote_round(
+        &mut self,
+        transport: &mut TransportServer,
+        t: usize,
+        cohort: &Cohort,
+        mut sink: impl FnMut(usize, Upload) -> Result<()>,
+    ) -> Result<(f64, f64)> {
+        let policy = self.algorithm.momentum_policy(t);
+        let assignments: Vec<Assignment> = cohort
+            .devices
+            .iter()
+            .zip(&cohort.weights)
+            .enumerate()
+            .map(|(slot, (&device, &weight))| Assignment {
+                slot: slot as u32,
+                device: device as u32,
+                weight,
+            })
+            .collect();
+        let (m, v) = match policy {
+            MomentumPolicy::Aggregated => {
+                (Some(self.global.m.as_slice()), Some(self.global.v.as_slice()))
+            }
+            // Device-local moments live with the owning agent.
+            MomentumPolicy::DeviceLocal => (None, None),
+        };
+        let mut losses = vec![0.0f64; cohort.len()];
+        let mut round_secs = 0.0f64;
+        let ledger = &mut self.ledger;
+        let latency = &self.latency;
+        transport.run_round(
+            t as u64,
+            &self.global.w,
+            m,
+            v,
+            &assignments,
+            |slot, device, mean_loss, upload| {
+                losses[slot] = mean_loss;
+                round_secs = round_secs
+                    .max(latency.compute_secs(device) + latency.upload_secs(upload.bits));
+                ledger.up(upload.bits);
+                sink(slot, upload)
+            },
+        )?;
+        Ok((losses.iter().sum(), round_secs))
     }
 
     /// Launch round `t`'s eval on a background thread: it snapshots the
@@ -967,6 +1058,7 @@ impl Coordinator {
             );
         }
         self.drain_pending_evals()?;
+        self.shutdown_transport();
         Ok(self.log.clone())
     }
 
@@ -989,15 +1081,102 @@ impl Coordinator {
 
 /// The one place a [`LocalRunConfig`] is derived from the experiment
 /// config — both the training loop and the latency-model sizing go
-/// through here, so the simulated compute cost cannot drift from the
-/// batches a device actually trains on.
-fn local_run_cfg(cfg: &ExperimentConfig) -> LocalRunConfig {
+/// through here (and the remote device agent, via
+/// [`crate::transport::agent`]), so the simulated compute cost cannot
+/// drift from the batches a device actually trains on.
+pub(crate) fn local_run_cfg(cfg: &ExperimentConfig) -> LocalRunConfig {
     LocalRunConfig {
         local_epochs: cfg.local_epochs,
         max_batches_per_epoch: cfg.max_batches_per_epoch,
         lr: cfg.lr as f32,
         use_epoch_program: cfg.use_epoch_program,
     }
+}
+
+/// The one recipe for turning `(config, pool)` into the synthetic task
+/// and the device fleet — shared by [`Coordinator::fresh`] and the
+/// remote device agent, so both processes derive the byte-identical
+/// shards from the same seeds.
+pub(crate) fn build_task_and_devices(
+    cfg: &ExperimentConfig,
+    pool: &EnginePool,
+) -> (synthetic::SyntheticTask, Vec<Device>) {
+    let meta = pool.meta();
+    // Synthetic stand-in corpus shaped for this model.
+    let spec = synthetic::SyntheticSpec::for_input_shape(
+        &meta.input_shape,
+        cfg.train_samples,
+        cfg.test_samples,
+    );
+    let task = synthetic::generate(&spec, cfg.seed);
+    let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
+    let shards = partition(&task.train, cfg.devices, how, cfg.seed);
+    let handle = pool.handle();
+    let devices: Vec<Device> = shards
+        .into_iter()
+        .enumerate()
+        .map(|(i, data)| Device::new(i, Shard { data }, handle.clone()))
+        .collect();
+    (task, devices)
+}
+
+/// Compress one delta via the configured backend — the native algorithm
+/// implementation, or the AOT Pallas sparsifier for the plain SSM
+/// algorithm.  Free-standing (rather than a `Coordinator` method) so the
+/// remote device agent compresses through the exact same path.
+pub(crate) fn compress_upload_with(
+    cfg: &ExperimentConfig,
+    handle: &EngineHandle,
+    algorithm: &mut dyn Algorithm,
+    t: usize,
+    di: usize,
+    delta: LocalDelta,
+) -> Result<Upload> {
+    if cfg.sparsify_backend == SparsifyBackend::Xla && cfg.algorithm == "fedadam-ssm" {
+        // Cross-layer path: run eq. 10-12 + 28 inside XLA, then encode.
+        use crate::algorithms::Recon;
+        use crate::sparse::{codec::cost, top_k_indices, SparseVec};
+        let dim = delta.dw.len();
+        let k = cfg.k_for(dim);
+        // The shared mask's support comes from the threshold indices,
+        // NOT from the kernel output's non-zeros: a kept lane whose
+        // value is exactly 0.0 is still transmitted (and priced), and
+        // `SparseVec::from_dense` would silently drop it, making
+        // `nnz < k` while `bits` charges for k.  Gathering the masked
+        // kernel outputs at the top-k indices keeps the encoded wire
+        // format bit-for-bit consistent with `cost::fedadam_ssm(d, k)`.
+        // (The kernel keeps ties at the threshold, so its support is a
+        // superset of these exactly-k indices; values at them agree.)
+        let idx = top_k_indices(&delta.dw, k);
+        let (sw, sm, sv) = handle.sparsify(delta.dw, delta.dm, delta.dv, k as i32)?;
+        return Ok(Upload {
+            dw: Recon::Sparse(SparseVec::gather(&sw, &idx)),
+            dm: Some(Recon::Sparse(SparseVec::gather(&sm, &idx))),
+            dv: Some(Recon::Sparse(SparseVec::gather(&sv, &idx))),
+            weight: delta.weight,
+            bits: cost::fedadam_ssm(dim, k),
+        });
+    }
+    Ok(algorithm.compress(t, di, delta))
+}
+
+/// [`compress_upload_with`], but producing the transport's typed wire
+/// message.  Algorithms with a native wire encoding go straight to
+/// [`Algorithm::compress_wire`]; the XLA sparsify path converts its
+/// upload after the fact (same bits either way).
+pub(crate) fn compress_wire_with(
+    cfg: &ExperimentConfig,
+    handle: &EngineHandle,
+    algorithm: &mut dyn Algorithm,
+    t: usize,
+    di: usize,
+    delta: LocalDelta,
+) -> Result<crate::algorithms::wire::WireUpload> {
+    if cfg.sparsify_backend == SparsifyBackend::Xla && cfg.algorithm == "fedadam-ssm" {
+        let upload = compress_upload_with(cfg, handle, algorithm, t, di, delta)?;
+        return crate::algorithms::wire::WireUpload::from_upload(upload);
+    }
+    algorithm.compress_wire(t, di, delta)
 }
 
 impl Drop for Coordinator {
@@ -1008,6 +1187,9 @@ impl Drop for Coordinator {
         for pending in self.pending_evals.drain(..) {
             let _ = pending.join.join();
         }
+        // Agents block reading the socket; tell them the run is over so
+        // their processes exit instead of erroring on a dropped stream.
+        self.shutdown_transport();
     }
 }
 

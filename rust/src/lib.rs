@@ -50,6 +50,7 @@ pub mod simtime;
 pub mod sparse;
 pub mod tensor;
 pub mod theory;
+pub mod transport;
 pub mod util;
 
 

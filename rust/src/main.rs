@@ -103,6 +103,21 @@ OPTIONS:
                           come from the same config fingerprint)
                           --set snapshot_every=8 (snapshot cadence in
                           rounds; must be >= 1)
+                          --set transport_listen=127.0.0.1:7070 (serve the
+                          round loop over a socket: the coordinator binds
+                          here — `host:port` TCP or `unix:/path` — and
+                          waits for transport_agents `device-agent`
+                          processes to register; devices train in the
+                          agents, uplinks arrive as CRC-framed wire
+                          messages, and the result is bit-identical to
+                          the in-process run.  Port 0 picks a free port
+                          (printed at startup).  Incompatible with
+                          journal/resume)
+                          --set transport_agents=2 (device-agent process
+                          count; device d is owned by agent d mod N)
+                          --set transport_timeout_secs=30 (per-connection
+                          silence budget in seconds; agents reconnect
+                          within it, and a round gives up after ~3x)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

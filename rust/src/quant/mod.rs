@@ -14,12 +14,12 @@ pub mod onebit;
 pub mod sparse_uniform;
 pub mod uniform;
 
-pub use onebit::{onebit_compress, onebit_decompress, OneBitPacket};
+pub use onebit::{onebit_compress, onebit_decompress, try_onebit_decompress, OneBitPacket};
 pub use sparse_uniform::{
     sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
-    SparseUniformPacket, SsmQUplink,
+    try_sparse_uniform_decompress, try_ssm_q_decode, SparseUniformPacket, SsmQUplink,
 };
-pub use uniform::{uniform_compress, uniform_decompress, UniformPacket};
+pub use uniform::{try_uniform_decompress, uniform_compress, uniform_decompress, UniformPacket};
 
 /// Per-device error-feedback memory `e_t` (residual accumulator).
 #[derive(Clone, Debug, Default)]

@@ -6,7 +6,7 @@
 //! (sign(0) := +1).
 
 use super::ErrorFeedback;
-use crate::sparse::codec::{BitPacker, BitUnpacker};
+use crate::sparse::codec::{BitPacker, BitUnpacker, DecodeError};
 
 /// Packed 1-bit payload.
 #[derive(Clone, Debug)]
@@ -47,11 +47,42 @@ pub fn onebit_compress(x: &[f32], ef: &mut ErrorFeedback) -> OneBitPacket {
 }
 
 /// Reconstruct the dequantized vector the server sees.
+///
+/// Trusted in-process path (the packet came from [`onebit_compress`] in
+/// this address space); transport-facing callers must use
+/// [`try_onebit_decompress`].
 pub fn onebit_decompress(p: &OneBitPacket) -> Vec<f32> {
     let mut u = BitUnpacker::new(&p.signs);
     (0..p.dim)
         .map(|_| if u.pull(1) == 1 { p.scale } else { -p.scale })
         .collect()
+}
+
+/// Fallible [`onebit_decompress`] for untrusted bytes: never panics, and
+/// only accepts the canonical output of [`onebit_compress`] — exactly
+/// `ceil(d/8)` sign bytes, zero padding bits, and a finite non-negative
+/// scale.
+pub fn try_onebit_decompress(p: &OneBitPacket) -> Result<Vec<f32>, DecodeError> {
+    if !p.scale.is_finite() || p.scale < 0.0 {
+        return Err(DecodeError::BadValue("non-finite or negative sign scale"));
+    }
+    let expected = p.dim.div_ceil(8);
+    if p.signs.len() != expected {
+        return Err(DecodeError::PayloadSize {
+            expected,
+            got: p.signs.len(),
+        });
+    }
+    let mut u = BitUnpacker::new(&p.signs);
+    let mut out = Vec::with_capacity(p.dim);
+    for _ in 0..p.dim {
+        out.push(if u.try_pull(1)? == 1 { p.scale } else { -p.scale });
+    }
+    let pad = (expected * 8 - p.dim) as u64;
+    if pad > 0 && u.try_pull(pad)? != 0 {
+        return Err(DecodeError::BadValue("nonzero sign padding bits"));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]

@@ -14,7 +14,10 @@
 //! support on the wire is the priced support (see
 //! `SparseVec::from_dense`'s warning about exact-zero kept lanes).
 
-use crate::sparse::codec::{cost, decode_positions, encode_positions, index_bits, MaskEncoding, Q};
+use crate::sparse::codec::{
+    cost, decode_positions, encode_positions, index_bits, mask_bits, try_decode_positions,
+    DecodeError, MaskEncoding, Q,
+};
 use crate::sparse::SparseVec;
 
 /// One vector's kept-lane values, s-level quantized and bit-packed.
@@ -61,8 +64,18 @@ pub fn sparse_uniform_compress(values: &[f32], s_levels: u32) -> SparseUniformPa
 
 /// Dequantize back to `k` values on the s-level grid (exactly `0.0`
 /// everywhere when the scale is zero).
+///
+/// Trusted in-process path; transport-facing callers must use
+/// [`try_sparse_uniform_decompress`].
 pub fn sparse_uniform_decompress(p: &SparseUniformPacket) -> Vec<f32> {
     super::uniform::dequantize_codes(&p.codes, p.k, p.scale, p.levels)
+}
+
+/// Fallible [`sparse_uniform_decompress`] for untrusted bytes: same
+/// structural checks as [`super::uniform::try_uniform_decompress`]
+/// (exact code length, on-grid codes, zero padding, finite scale).
+pub fn try_sparse_uniform_decompress(p: &SparseUniformPacket) -> Result<Vec<f32>, DecodeError> {
+    super::uniform::try_dequantize_codes(&p.codes, p.k, p.scale, p.levels)
 }
 
 /// Exact dequantized reconstruction at the mask's `indices`: the support
@@ -160,12 +173,47 @@ pub fn ssm_q_encode(
 }
 
 /// Decode to the three exact dequantized [`SparseVec`]s the server sees.
+///
+/// Trusted in-process path (the message came from [`ssm_q_encode`] in
+/// this address space); transport-facing callers must use
+/// [`try_ssm_q_decode`].
 pub fn ssm_q_decode(msg: &SsmQUplink) -> (SparseVec, SparseVec, SparseVec) {
     let indices = decode_positions(msg.encoding, msg.dim, msg.k, &msg.positions);
     let w = reconstruct(msg.dim, &indices, &msg.w);
     let m = reconstruct(msg.dim, &indices, &msg.m);
     let v = reconstruct(msg.dim, &indices, &msg.v);
     (w, m, v)
+}
+
+/// Fallible [`ssm_q_decode`] for untrusted bytes: never panics, and only
+/// accepts the canonical output of [`ssm_q_encode`] — the
+/// `min{}`-cheaper mask coding for `(dim, k)`, exactly `k`
+/// strictly-increasing positions `< dim`, and three value packets whose
+/// `k`, code length, code range, padding, and scale all validate.
+pub fn try_ssm_q_decode(msg: &SsmQUplink) -> Result<(SparseVec, SparseVec, SparseVec), DecodeError> {
+    let (_, canonical) = mask_bits(msg.dim, msg.k);
+    if msg.encoding != canonical {
+        return Err(DecodeError::BadValue("non-canonical position encoding"));
+    }
+    let indices = try_decode_positions(msg.encoding, msg.dim, msg.k, &msg.positions)?;
+    let mut vecs = Vec::with_capacity(3);
+    for packet in [&msg.w, &msg.m, &msg.v] {
+        if packet.k != msg.k {
+            return Err(DecodeError::CountMismatch {
+                expected: msg.k,
+                got: packet.k,
+            });
+        }
+        vecs.push(SparseVec {
+            dim: msg.dim,
+            indices: indices.clone(),
+            values: try_sparse_uniform_decompress(packet)?,
+        });
+    }
+    let v = vecs.pop().expect("three packets");
+    let m = vecs.pop().expect("three packets");
+    let w = vecs.pop().expect("three packets");
+    Ok((w, m, v))
 }
 
 #[cfg(test)]
@@ -238,6 +286,36 @@ mod tests {
                 assert_eq!(sw.nnz(), k);
             }
         }
+    }
+
+    #[test]
+    fn try_decode_accepts_canonical_and_rejects_malformed() {
+        let d = 4096;
+        let idx = [3u32, 77, 512, 4095];
+        let vals = [0.5f32, -1.0, 0.25, 2.0];
+        let msg = ssm_q_encode(d, &idx, &vals, &vals, &vals, 16);
+        let (w, m, v) = try_ssm_q_decode(&msg).unwrap();
+        let (tw, tm, tv) = ssm_q_decode(&msg);
+        assert_eq!((w, m, v), (tw, tm, tv));
+
+        let mut torn = msg.clone();
+        torn.positions.truncate(torn.positions.len() - 1);
+        assert!(try_ssm_q_decode(&torn).is_err());
+
+        let mut short_codes = msg.clone();
+        short_codes.m.codes.truncate(1);
+        assert!(try_ssm_q_decode(&short_codes).is_err());
+
+        let mut wrong_k = msg.clone();
+        wrong_k.v.k = 3;
+        assert!(matches!(
+            try_ssm_q_decode(&wrong_k),
+            Err(DecodeError::CountMismatch { expected: 4, got: 3 })
+        ));
+
+        let mut wrong_enc = msg;
+        wrong_enc.encoding = MaskEncoding::Bitmap;
+        assert!(try_ssm_q_decode(&wrong_enc).is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! levels; wire format is `ceil(log2 s)` bits per lane + one f32 scale.
 //! Matches `compile/kernels/quantize.py::uniform_quantize`.
 
-use crate::sparse::codec::{index_bits, BitPacker, BitUnpacker};
+use crate::sparse::codec::{index_bits, BitPacker, BitUnpacker, DecodeError};
 
 /// Packed s-level payload.
 #[derive(Clone, Debug)]
@@ -44,8 +44,20 @@ pub fn uniform_compress(x: &[f32], s_levels: u32) -> UniformPacket {
 }
 
 /// Dequantize.
+///
+/// Trusted in-process path (the packet came from [`uniform_compress`] in
+/// this address space); transport-facing callers must use
+/// [`try_uniform_decompress`].
 pub fn uniform_decompress(p: &UniformPacket) -> Vec<f32> {
     dequantize_codes(&p.codes, p.dim, p.scale, p.levels)
+}
+
+/// Fallible [`uniform_decompress`] for untrusted bytes: never panics, and
+/// only accepts the canonical output of [`uniform_compress`] — exact code
+/// length, every code on the `s`-level grid, zero padding bits, and a
+/// finite non-negative scale.
+pub fn try_uniform_decompress(p: &UniformPacket) -> Result<Vec<f32>, DecodeError> {
+    try_dequantize_codes(&p.codes, p.dim, p.scale, p.levels)
 }
 
 /// Unpack `n` codes and map them back onto the s-level grid — the shared
@@ -66,10 +78,85 @@ pub(crate) fn dequantize_codes(codes: &[u8], n: usize, scale: f32, levels: u32) 
         .collect()
 }
 
+/// Fallible twin of [`dequantize_codes`] — the shared validation core of
+/// the dense and sparse untrusted decompressors.  Checks the structural
+/// invariants the trusted path assumes: `codes` holds exactly
+/// `ceil(n·ceil(log₂ s) / 8)` bytes, every code is `<= levels`, padding
+/// bits are zero, and the scale is a finite non-negative f32.
+pub(crate) fn try_dequantize_codes(
+    codes: &[u8],
+    n: usize,
+    scale: f32,
+    levels: u32,
+) -> Result<Vec<f32>, DecodeError> {
+    if levels == 0 {
+        return Err(DecodeError::BadValue("quantizer with zero levels"));
+    }
+    if !scale.is_finite() || scale < 0.0 {
+        return Err(DecodeError::BadValue("non-finite or negative quantizer scale"));
+    }
+    let bits = index_bits(levels as usize + 1);
+    let total_bits = n * bits as usize;
+    let expected = total_bits.div_ceil(8);
+    if codes.len() != expected {
+        return Err(DecodeError::PayloadSize {
+            expected,
+            got: codes.len(),
+        });
+    }
+    let mut u = BitUnpacker::new(codes);
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let q = u.try_pull(bits)?;
+        if q > levels as u64 {
+            return Err(DecodeError::BadValue("quantizer code above top level"));
+        }
+        out.push(if scale == 0.0 {
+            0.0
+        } else {
+            (q as f32 / levels as f32 * 2.0 - 1.0) * scale
+        });
+    }
+    let pad = (expected * 8 - total_bits) as u64;
+    if pad > 0 && u.try_pull(pad)? != 0 {
+        return Err(DecodeError::BadValue("nonzero code padding bits"));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::rng::Rng;
+
+    #[test]
+    fn try_decompress_accepts_canonical_and_rejects_malformed() {
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        for &s in &[2u32, 3, 16] {
+            let p = uniform_compress(&x, s);
+            assert_eq!(try_uniform_decompress(&p).unwrap(), uniform_decompress(&p));
+
+            let mut short = p.clone();
+            short.codes.truncate(short.codes.len() - 1);
+            assert!(matches!(
+                try_uniform_decompress(&short),
+                Err(DecodeError::PayloadSize { .. })
+            ));
+
+            let mut bad_scale = p.clone();
+            bad_scale.scale = f32::NAN;
+            assert!(try_uniform_decompress(&bad_scale).is_err());
+        }
+        // Non-power-of-two s leaves unused code points: reject them.
+        let p = uniform_compress(&x, 3); // 2 bits/lane, code 3 invalid
+        let mut evil = p.clone();
+        evil.codes[0] |= 0b11; // first lane -> code 3 > levels (2)
+        assert!(matches!(
+            try_uniform_decompress(&evil),
+            Err(DecodeError::BadValue("quantizer code above top level"))
+        ));
+    }
 
     #[test]
     fn roundtrip_error_bounded_by_bin_width() {

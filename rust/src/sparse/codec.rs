@@ -30,6 +30,58 @@ pub enum MaskEncoding {
     IndexList,
 }
 
+/// Why an untrusted buffer failed to decode.
+///
+/// The `try_` decode paths ([`BitUnpacker::try_pull`],
+/// [`try_decode_positions`], [`try_decode`], and the quantizer/transport
+/// decoders built on them) return this instead of panicking — bytes that
+/// crossed a socket are attacker-controlled, so every structural invariant
+/// the infallible in-process paths assume is checked and rejected with a
+/// typed reason here.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The buffer ran out before the declared content did.
+    Truncated { needed_bits: usize, have_bits: usize },
+    /// A section's byte length disagrees with what its header implies.
+    PayloadSize { expected: usize, got: usize },
+    /// A decoded position is out of range for the declared dimension.
+    BadIndex { index: u32, dim: usize },
+    /// Index-list positions must be strictly increasing (sorted, unique).
+    NonIncreasing { prev: u32, next: u32 },
+    /// The decoded support size disagrees with the header `k`.
+    CountMismatch { expected: usize, got: usize },
+    /// A field holds a value outside its domain (nonzero padding bits, a
+    /// quantizer code above `levels`, a non-finite scale, a non-canonical
+    /// encoding choice, ...).
+    BadValue(&'static str),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated {
+                needed_bits,
+                have_bits,
+            } => write!(f, "truncated buffer: need {needed_bits} bits, have {have_bits}"),
+            DecodeError::PayloadSize { expected, got } => {
+                write!(f, "payload size mismatch: expected {expected} bytes, got {got}")
+            }
+            DecodeError::BadIndex { index, dim } => {
+                write!(f, "position {index} out of range for dim {dim}")
+            }
+            DecodeError::NonIncreasing { prev, next } => {
+                write!(f, "positions not strictly increasing: {prev} then {next}")
+            }
+            DecodeError::CountMismatch { expected, got } => {
+                write!(f, "support size mismatch: header says {expected}, decoded {got}")
+            }
+            DecodeError::BadValue(what) => write!(f, "bad field value: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
 /// Cost in bits of transmitting the positions of `k` non-zeros out of `d`.
 pub fn mask_bits(dim: usize, k: usize) -> (u64, MaskEncoding) {
     let bitmap = dim as u64;
@@ -151,21 +203,83 @@ pub fn encode_positions(dim: usize, indices: &[u32]) -> (MaskEncoding, Vec<u8>) 
 }
 
 /// Recover the `k` sorted indices packed by [`encode_positions`].
+///
+/// Trusted in-process path: the bytes came from [`encode_positions`] in
+/// this address space, so validation failures are programming errors and
+/// panic.  Transport-facing callers must use [`try_decode_positions`].
 pub fn decode_positions(enc: MaskEncoding, dim: usize, k: usize, bytes: &[u8]) -> Vec<u32> {
+    try_decode_positions(enc, dim, k, bytes).expect("trusted in-process positions must decode")
+}
+
+/// Fallible [`decode_positions`] for untrusted bytes: never panics, and
+/// only accepts the canonical output of [`encode_positions`] — exactly
+/// `k` strictly-increasing indices `< dim`, an exact byte length, and
+/// zero padding bits.
+pub fn try_decode_positions(
+    enc: MaskEncoding,
+    dim: usize,
+    k: usize,
+    bytes: &[u8],
+) -> Result<Vec<u32>, DecodeError> {
     match enc {
         MaskEncoding::Bitmap => {
-            let mut out = Vec::with_capacity(k);
+            let expected = dim.div_ceil(8);
+            if bytes.len() != expected {
+                return Err(DecodeError::PayloadSize {
+                    expected,
+                    got: bytes.len(),
+                });
+            }
+            let mut out = Vec::with_capacity(k.min(dim));
             for i in 0..dim {
                 if bytes[i / 8] & (1 << (i % 8)) != 0 {
                     out.push(i as u32);
                 }
             }
-            out
+            for i in dim..expected * 8 {
+                if bytes[i / 8] & (1 << (i % 8)) != 0 {
+                    return Err(DecodeError::BadValue("nonzero bitmap padding bits"));
+                }
+            }
+            if out.len() != k {
+                return Err(DecodeError::CountMismatch {
+                    expected: k,
+                    got: out.len(),
+                });
+            }
+            Ok(out)
         }
         MaskEncoding::IndexList => {
             let bits = index_bits(dim);
+            let total_bits = k * bits as usize;
+            let expected = total_bits.div_ceil(8);
+            if bytes.len() != expected {
+                return Err(DecodeError::PayloadSize {
+                    expected,
+                    got: bytes.len(),
+                });
+            }
             let mut unpacker = BitUnpacker::new(bytes);
-            (0..k).map(|_| unpacker.pull(bits) as u32).collect()
+            let mut out = Vec::with_capacity(k);
+            let mut prev: Option<u32> = None;
+            for _ in 0..k {
+                let i = unpacker.try_pull(bits)? as u32;
+                if i as usize >= dim {
+                    return Err(DecodeError::BadIndex { index: i, dim });
+                }
+                if let Some(p) = prev {
+                    if i <= p {
+                        return Err(DecodeError::NonIncreasing { prev: p, next: i });
+                    }
+                }
+                prev = Some(i);
+                out.push(i);
+            }
+            let pad = (expected * 8 - total_bits) as u64;
+            if pad > 0 && unpacker.try_pull(pad)? != 0 {
+                return Err(DecodeError::BadValue("nonzero index-list padding bits"));
+            }
+            Ok(out)
         }
     }
 }
@@ -187,18 +301,40 @@ pub fn encode(sv: &SparseVec) -> EncodedSparse {
 }
 
 /// Decode back to a [`SparseVec`].
+///
+/// Trusted in-process path (the message came from [`encode`] in this
+/// address space); transport-facing callers must use [`try_decode`].
 pub fn decode(es: &EncodedSparse) -> SparseVec {
-    let indices = decode_positions(es.encoding, es.dim, es.k, &es.positions);
+    try_decode(es).expect("trusted in-process sparse message must decode")
+}
+
+/// Fallible [`decode`] for untrusted bytes: never panics, and only
+/// accepts the canonical output of [`encode`] — the `min{}`-cheaper
+/// position encoding for `(dim, k)`, a valid support, and exactly
+/// `k` f32 payloads.
+pub fn try_decode(es: &EncodedSparse) -> Result<SparseVec, DecodeError> {
+    let (_, canonical) = mask_bits(es.dim, es.k);
+    if es.encoding != canonical {
+        return Err(DecodeError::BadValue("non-canonical position encoding"));
+    }
+    let indices = try_decode_positions(es.encoding, es.dim, es.k, &es.positions)?;
+    let expected = es.k * 4;
+    if es.payload.len() != expected {
+        return Err(DecodeError::PayloadSize {
+            expected,
+            got: es.payload.len(),
+        });
+    }
     let values = es
         .payload
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    SparseVec {
+    Ok(SparseVec {
         dim: es.dim,
         indices,
         values,
-    }
+    })
 }
 
 /// LSB-first bit packer used by the index-list encoding and quantizers.
@@ -251,7 +387,29 @@ impl<'a> BitUnpacker<'a> {
         BitUnpacker { bytes, bitpos: 0 }
     }
 
+    /// Bits left in the buffer past the read cursor.
+    pub fn remaining_bits(&self) -> usize {
+        self.bytes.len() * 8 - self.bitpos
+    }
+
+    /// Fallible [`BitUnpacker::pull`] for untrusted bytes: checks the
+    /// buffer holds `n` more bits before reading, instead of panicking
+    /// on a short buffer.
+    pub fn try_pull(&mut self, n: u64) -> Result<u64, DecodeError> {
+        debug_assert!(n <= 64);
+        if n as usize > self.remaining_bits() {
+            return Err(DecodeError::Truncated {
+                needed_bits: self.bitpos + n as usize,
+                have_bits: self.bytes.len() * 8,
+            });
+        }
+        Ok(self.pull(n))
+    }
+
     /// Read the next `n` bits (byte-at-a-time, mirroring `push`).
+    ///
+    /// Trusted in-process path: panics if the buffer is too short.
+    /// Transport-facing callers must use [`BitUnpacker::try_pull`].
     pub fn pull(&mut self, n: u64) -> u64 {
         debug_assert!(n <= 64);
         let mut out = 0u64;
@@ -413,6 +571,110 @@ mod tests {
         }
         // More levels never cost fewer bits.
         assert!(cost::fedadam_ssm_q(1000, 50, 16) >= cost::fedadam_ssm_q(1000, 50, 4));
+    }
+
+    #[test]
+    fn try_pull_rejects_short_buffers() {
+        let bytes = [0xABu8, 0xCD];
+        let mut u = BitUnpacker::new(&bytes);
+        assert_eq!(u.try_pull(12).unwrap(), 0xDAB);
+        assert_eq!(u.remaining_bits(), 4);
+        assert!(matches!(
+            u.try_pull(5),
+            Err(DecodeError::Truncated {
+                needed_bits: 17,
+                have_bits: 16
+            })
+        ));
+        // The failed pull must not move the cursor.
+        assert_eq!(u.try_pull(4).unwrap(), 0xC);
+    }
+
+    #[test]
+    fn try_decode_positions_rejects_malformed_supports() {
+        // Bitmap: popcount must equal k, padding must be zero, length exact.
+        let d = 10usize;
+        let (enc, bytes) = encode_positions(d, &[1, 3, 9]);
+        assert_eq!(enc, MaskEncoding::Bitmap);
+        assert_eq!(try_decode_positions(enc, d, 3, &bytes).unwrap(), vec![1, 3, 9]);
+        assert!(matches!(
+            try_decode_positions(enc, d, 2, &bytes),
+            Err(DecodeError::CountMismatch { expected: 2, got: 3 })
+        ));
+        let mut padded = bytes.clone();
+        padded[1] |= 1 << 7; // bit 15 >= dim
+        assert!(matches!(
+            try_decode_positions(enc, d, 3, &padded),
+            Err(DecodeError::BadValue(_))
+        ));
+        assert!(matches!(
+            try_decode_positions(enc, d, 3, &bytes[..1]),
+            Err(DecodeError::PayloadSize { expected: 2, got: 1 })
+        ));
+
+        // Index list: in-range, strictly increasing, exact length, zero pad.
+        let d = 1 << 16;
+        let (enc, bytes) = encode_positions(d, &[7, 9, 4096]);
+        assert_eq!(enc, MaskEncoding::IndexList);
+        assert_eq!(
+            try_decode_positions(enc, d, 3, &bytes).unwrap(),
+            vec![7, 9, 4096]
+        );
+        assert!(matches!(
+            try_decode_positions(enc, d, 3, &bytes[..5]),
+            Err(DecodeError::PayloadSize { .. })
+        ));
+        let (_, dup) = encode_positions(d, &[7, 9, 9]);
+        assert!(matches!(
+            try_decode_positions(enc, d, 3, &dup),
+            Err(DecodeError::NonIncreasing { prev: 9, next: 9 })
+        ));
+        let (_, unsorted) = encode_positions(d, &[9, 7, 4096]);
+        assert!(matches!(
+            try_decode_positions(enc, d, 3, &unsorted),
+            Err(DecodeError::NonIncreasing { .. })
+        ));
+        // Out-of-range: hand-pack an index >= dim at a smaller declared dim.
+        let small = 100usize;
+        let bits = index_bits(small);
+        let mut p = BitPacker::with_capacity(bits as usize);
+        p.push(100, bits);
+        assert!(matches!(
+            try_decode_positions(MaskEncoding::IndexList, small, 1, &p.finish()),
+            Err(DecodeError::BadIndex { index: 100, dim: 100 })
+        ));
+    }
+
+    #[test]
+    fn try_decode_rejects_truncated_payload_and_wrong_encoding() {
+        let sv = SparseVec {
+            dim: 1 << 16,
+            indices: vec![3, 70, 4099],
+            values: vec![1.0, -2.5, 0.25],
+        };
+        let es = encode(&sv);
+        assert_eq!(try_decode(&es).unwrap(), sv);
+
+        let mut short = es.clone();
+        short.payload.truncate(short.payload.len() - 1);
+        assert!(matches!(
+            try_decode(&short),
+            Err(DecodeError::PayloadSize { .. })
+        ));
+
+        let mut wrong_enc = es.clone();
+        wrong_enc.encoding = MaskEncoding::Bitmap;
+        assert!(matches!(
+            try_decode(&wrong_enc),
+            Err(DecodeError::BadValue("non-canonical position encoding"))
+        ));
+
+        let mut short_pos = es;
+        short_pos.positions.truncate(1);
+        assert!(matches!(
+            try_decode(&short_pos),
+            Err(DecodeError::PayloadSize { .. })
+        ));
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! The device-agent side of the wire: connect, register, train the
+//! devices this agent owns, upload compressed deltas.
+//!
+//! One agent process hosts a *shard* of the device population: agent
+//! `i` of `n` owns every device with `device % n == i`.  Each round the
+//! server broadcasts the full cohort ([`Msg::RoundStart`]); the agent
+//! filters down to its own slots, runs local training through the same
+//! executor seam the in-process coordinator uses, compresses through
+//! the same algorithm implementations, and uploads one
+//! [`Msg::Uplink`] per slot.
+//!
+//! ## Bit-identity
+//!
+//! A remote run reproduces the in-process run byte for byte because
+//! every input to a device's round is identical:
+//!
+//! - the data shards come from [`crate::coordinator::build_task_and_devices`] —
+//!   the *same* synthetic generation + partition the coordinator runs,
+//!   seeded by the shared config (the fingerprint handshake refuses a
+//!   drifted config before any training happens);
+//! - local training is a pure function of `(w, m₀, v₀, run_cfg, shard)`;
+//! - all per-device compression state (error-feedback memories, moment
+//!   residuals) lives with the device's *owning agent*, and ownership is
+//!   static — so each device sees exactly the state history it would
+//!   have seen in process, regardless of how agents interleave.
+//!
+//! ## Duplicate rounds
+//!
+//! After a connection drop the server replays the current round's
+//! `RoundStart` on reconnect.  Retraining would mutate error-feedback
+//! state twice and break bit-identity, so the agent caches the encoded
+//! uplink frames of its latest round and replays them verbatim for a
+//! duplicate round number.  (A *fresh process* reconnecting mid-run is
+//! only bit-identical for stateless algorithms with `Aggregated`
+//! moments — stateful compressors live and die with their process.)
+
+use std::io::Write;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algorithms::{self, LocalDelta, MomentumPolicy};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{build_task_and_devices, compress_wire_with, local_run_cfg};
+use crate::runtime::{EnginePool, Manifest};
+use crate::tensor;
+
+use super::frame::{read_frame, write_frame, FrameError};
+use super::msg::{Msg, Uplink, PROTOCOL_VERSION};
+use super::net::Stream;
+
+/// [`run_agent`] with the engine pool built from AOT artifacts — the
+/// `device-agent` binary's entry point.  Worker resolution mirrors
+/// [`crate::coordinator::Coordinator::new`]; the worker count has no
+/// bearing on the bits produced (each device's round is a pure function
+/// of its inputs).
+pub fn run_agent_from_artifacts(
+    cfg: &ExperimentConfig,
+    artifacts: impl AsRef<std::path::Path>,
+    addr: &str,
+    index: usize,
+) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let workers = crate::runtime::pool::resolve_workers(cfg.num_workers).min(cfg.devices);
+    let pool = EnginePool::load(&manifest, &cfg.model, workers)
+        .with_context(|| format!("loading model {:?}", cfg.model))?;
+    run_agent(cfg, &pool, addr, index)
+}
+
+/// Connect to the server at `addr`, register as agent `index`, and
+/// serve rounds until the server sends [`Msg::Shutdown`].
+pub fn run_agent(
+    cfg: &ExperimentConfig,
+    pool: &EnginePool,
+    addr: &str,
+    index: usize,
+) -> Result<()> {
+    cfg.validate()?;
+    let meta = pool.meta().clone();
+    let mut stream = Stream::connect(addr)?;
+    write_frame(
+        &mut stream,
+        &Msg::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint: cfg.fingerprint(),
+            agent: index as u32,
+        }
+        .encode(),
+    )
+    .map_err(|e| anyhow::anyhow!("sending Hello: {e}"))?;
+    let ack = read_frame(&mut stream).map_err(|e| anyhow::anyhow!("reading HelloAck: {e}"))?;
+    let Msg::HelloAck { agents, dim } = Msg::decode(&ack)? else {
+        bail!("expected HelloAck");
+    };
+    let agents = agents as usize;
+    ensure!(index < agents, "agent index {index} out of range ({agents} agents)");
+    ensure!(
+        dim as usize == meta.dim,
+        "model dimension mismatch: server says {dim}, local model has {}",
+        meta.dim
+    );
+    log::info!("agent {index}/{agents} registered with {addr} (dim {dim})");
+
+    // The agent's world: the same devices, algorithm state and run
+    // config the in-process coordinator would build from this config.
+    let (_task, mut devices) = build_task_and_devices(cfg, pool);
+    let mut algorithm = algorithms::build(cfg, meta.dim)?;
+    let mut device_moments: Vec<(Vec<f32>, Vec<f32>)> = (0..cfg.devices)
+        .map(|_| (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]))
+        .collect();
+    let run_cfg = local_run_cfg(cfg);
+    let handle = pool.handle();
+
+    // The latest round's encoded uplink frames, replayed verbatim if the
+    // server re-sends that round (see the module docs).
+    let mut cached: Option<(u64, Vec<Vec<u8>>)> = None;
+
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(p) => p,
+            Err(FrameError::Closed) => bail!("server closed the connection without Shutdown"),
+            Err(e) => bail!("reading from server: {e}"),
+        };
+        match Msg::decode(&payload).context("decoding server message")? {
+            Msg::RoundStart { round, w, m, v, assignments } => {
+                if let Some((r, frames)) = &cached {
+                    if *r == round {
+                        log::info!("agent {index}: replaying cached uplinks for round {round}");
+                        for frame in frames {
+                            stream.write_all(frame)?;
+                        }
+                        stream.flush()?;
+                        continue;
+                    }
+                }
+                let t = round as usize;
+                let mode = algorithm.local_mode(t);
+                let policy = algorithm.momentum_policy(t);
+                let mut frames: Vec<Vec<u8>> = Vec::new();
+                for a in assignments.iter().filter(|a| a.device as usize % agents == index) {
+                    let di = a.device as usize;
+                    ensure!(
+                        di < devices.len(),
+                        "assignment names device {di} but only {} exist",
+                        devices.len()
+                    );
+                    let (m0, v0) = match policy {
+                        MomentumPolicy::Aggregated => {
+                            let m = m
+                                .as_ref()
+                                .context("Aggregated moments missing from RoundStart")?;
+                            let v = v
+                                .as_ref()
+                                .context("Aggregated moments missing from RoundStart")?;
+                            (m.clone(), v.clone())
+                        }
+                        MomentumPolicy::DeviceLocal => device_moments[di].clone(),
+                    };
+                    let result =
+                        devices[di].train_round(mode, w.clone(), m0.clone(), v0.clone(), &run_cfg)?;
+                    let delta = LocalDelta {
+                        dw: tensor::sub(&result.w, &w),
+                        dm: tensor::sub(&result.m, &m0),
+                        dv: tensor::sub(&result.v, &v0),
+                        weight: a.weight,
+                    };
+                    let mean_loss = result.mean_loss;
+                    if policy == MomentumPolicy::DeviceLocal {
+                        device_moments[di] = (result.m, result.v);
+                    }
+                    let wire = compress_wire_with(cfg, &handle, algorithm.as_mut(), t, di, delta)?;
+                    let body = wire.encode_body()?;
+                    let msg = Msg::Uplink(Uplink {
+                        round,
+                        slot: a.slot,
+                        device: a.device,
+                        mean_loss,
+                        weight: wire.weight,
+                        kind: wire.body.kind(),
+                        k: wire.body.k() as u64,
+                        levels: wire.body.levels(),
+                        bits: wire.bits,
+                        body,
+                    });
+                    let mut frame = Vec::new();
+                    write_frame(&mut frame, &msg.encode())
+                        .expect("Vec<u8> writes cannot fail");
+                    stream.write_all(&frame)?;
+                    frames.push(frame);
+                }
+                stream.flush()?;
+                cached = Some((round, frames));
+            }
+            Msg::Shutdown => {
+                log::info!("agent {index}: server sent Shutdown, exiting");
+                return Ok(());
+            }
+            other => bail!("unexpected message from server: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Length-prefixed, CRC-framed message boundaries over a byte stream.
+//!
+//! Every transport message travels as one frame:
+//!
+//! ```text
+//! [len: u32 le][crc32: u32 le][payload: len bytes]
+//! ```
+//!
+//! — the same layout the coordinator's event journal uses on disk
+//! ([`crate::coordinator::journal`]), with the same table-driven CRC-32
+//! ([`crate::util::bytes::crc32`], IEEE 802.3).  The checksum makes a
+//! torn or bit-flipped frame a typed [`FrameError`] instead of a
+//! desynchronized stream: any mutation of the length, checksum or payload
+//! bytes is caught before a single payload byte reaches [`super::msg`]'s
+//! decoder (the CRC detects *all* burst errors up to 32 bits, so a
+//! single-byte corruption can never slip through).
+//!
+//! Reading never panics and never allocates more than [`MAX_FRAME_LEN`]
+//! from untrusted bytes: an oversized length prefix is rejected before
+//! the allocation it would have driven.
+//!
+//! Two read paths share the format:
+//! - [`read_frame`] — blocking, for the device agent's command loop;
+//! - [`FrameBuffer`] — incremental, for the server's non-blocking poll
+//!   loop, where a read may surface half a frame (the tail arrives on a
+//!   later poll, and a mid-frame timeout must not lose stream sync).
+
+use std::io::{Read, Write};
+
+use crate::util::bytes::crc32;
+
+/// Upper bound on one frame's payload (256 MiB — a dense `Dense3` round
+/// start for a 20M-parameter model is ~240 MB; anything larger is a
+/// corrupt or hostile length prefix, refused before allocation).
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+/// Bytes of the `[len][crc]` preamble.
+pub const FRAME_HEADER_LEN: usize = 8;
+
+/// Why a frame could not be read.  `Closed` is the one benign variant —
+/// the peer shut the stream down cleanly *between* frames.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Clean end-of-stream at a frame boundary.
+    Closed,
+    /// Length prefix exceeds [`MAX_FRAME_LEN`] — corrupt or hostile.
+    TooLong { len: usize },
+    /// Payload checksum mismatch — the bytes were damaged in flight.
+    Corrupt { expected: u32, got: u32 },
+    /// Underlying socket error (including EOF mid-frame).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Closed => write!(f, "stream closed at a frame boundary"),
+            FrameError::TooLong { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap")
+            }
+            FrameError::Corrupt { expected, got } => write!(
+                f,
+                "frame checksum mismatch: header says {expected:#010x}, payload hashes to {got:#010x}"
+            ),
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        FrameError::Io(e)
+    }
+}
+
+/// Write one frame: preamble + payload, then flush.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<(), FrameError> {
+    assert!(
+        payload.len() <= MAX_FRAME_LEN,
+        "refusing to send a {}-byte frame (cap {MAX_FRAME_LEN})",
+        payload.len()
+    );
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Blocking read of one frame.  Distinguishes a clean close before any
+/// header byte ([`FrameError::Closed`]) from a mid-frame EOF (an
+/// [`FrameError::Io`] — the peer died with a frame in flight).
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0usize;
+    while got < FRAME_HEADER_LEN {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Err(FrameError::Closed),
+            Ok(0) => {
+                return Err(FrameError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "stream closed mid-frame-header",
+                )))
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    let (len, expected) = parse_header(&header)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    check_crc(expected, &payload)?;
+    Ok(payload)
+}
+
+fn parse_header(header: &[u8; FRAME_HEADER_LEN]) -> Result<(usize, u32), FrameError> {
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::TooLong { len });
+    }
+    let expected = u32::from_le_bytes(header[4..8].try_into().unwrap());
+    Ok((len, expected))
+}
+
+fn check_crc(expected: u32, payload: &[u8]) -> Result<(), FrameError> {
+    let got = crc32(payload);
+    if got != expected {
+        return Err(FrameError::Corrupt { expected, got });
+    }
+    Ok(())
+}
+
+/// Incremental frame reassembly for a non-blocking stream: bytes go in
+/// as they arrive, complete frames come out.  A partial frame simply
+/// waits in the buffer for its tail — stream sync is never lost to a
+/// short read.
+#[derive(Default)]
+pub struct FrameBuffer {
+    buf: Vec<u8>,
+}
+
+impl FrameBuffer {
+    pub fn new() -> FrameBuffer {
+        FrameBuffer::default()
+    }
+
+    /// Append freshly-read bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, if one has fully arrived.
+    /// `Ok(None)` means "keep reading"; an error means the stream is
+    /// unrecoverable (hostile length or damaged payload) and the
+    /// connection should be dropped.
+    pub fn pop(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        if self.buf.len() < FRAME_HEADER_LEN {
+            return Ok(None);
+        }
+        let header: [u8; FRAME_HEADER_LEN] = self.buf[..FRAME_HEADER_LEN].try_into().unwrap();
+        let (len, expected) = parse_header(&header)?;
+        if self.buf.len() < FRAME_HEADER_LEN + len {
+            return Ok(None);
+        }
+        check_crc(expected, &self.buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len])?;
+        let payload = self.buf[FRAME_HEADER_LEN..FRAME_HEADER_LEN + len].to_vec();
+        self.buf.drain(..FRAME_HEADER_LEN + len);
+        Ok(Some(payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn framed(payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_and_layout() {
+        let bytes = framed(b"hello");
+        assert_eq!(bytes.len(), FRAME_HEADER_LEN + 5);
+        assert_eq!(&bytes[0..4], &5u32.to_le_bytes());
+        assert_eq!(&bytes[4..8], &crc32(b"hello").to_le_bytes());
+        let back = read_frame(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(back, b"hello");
+        // Two frames back to back parse independently.
+        let mut two = framed(b"a");
+        two.extend(framed(b""));
+        let mut cur = Cursor::new(&two);
+        assert_eq!(read_frame(&mut cur).unwrap(), b"a");
+        assert_eq!(read_frame(&mut cur).unwrap(), b"");
+        assert!(matches!(read_frame(&mut cur), Err(FrameError::Closed)));
+    }
+
+    #[test]
+    fn any_single_byte_mutation_is_caught() {
+        let bytes = framed(b"payload under test");
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            let err = read_frame(&mut Cursor::new(&bad));
+            assert!(err.is_err(), "mutation at byte {i} slipped through");
+        }
+    }
+
+    #[test]
+    fn truncation_at_every_boundary_errors() {
+        let bytes = framed(b"abcdef");
+        for cut in 0..bytes.len() {
+            assert!(
+                read_frame(&mut Cursor::new(&bytes[..cut])).is_err(),
+                "truncation to {cut} bytes slipped through"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_refused_before_allocation() {
+        let mut bytes = vec![0u8; FRAME_HEADER_LEN];
+        bytes[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(&bytes)),
+            Err(FrameError::TooLong { .. })
+        ));
+        let mut fb = FrameBuffer::new();
+        fb.extend(&bytes);
+        assert!(matches!(fb.pop(), Err(FrameError::TooLong { .. })));
+    }
+
+    #[test]
+    fn frame_buffer_reassembles_byte_by_byte() {
+        let mut stream = framed(b"first");
+        stream.extend(framed(b"second frame"));
+        let mut fb = FrameBuffer::new();
+        let mut out = Vec::new();
+        for &b in &stream {
+            fb.extend(&[b]);
+            while let Some(p) = fb.pop().unwrap() {
+                out.push(p);
+            }
+        }
+        assert_eq!(out, vec![b"first".to_vec(), b"second frame".to_vec()]);
+        assert!(fb.pop().unwrap().is_none());
+    }
+}

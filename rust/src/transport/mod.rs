@@ -1,0 +1,38 @@
+//! A real wire under the federated round loop: server and device-agent
+//! processes exchanging the compressed uplink codec over TCP or Unix
+//! sockets.
+//!
+//! Layers, bottom up:
+//!
+//! - [`net`] — one [`net::Stream`]/[`net::Listener`] pair over TCP and
+//!   Unix-domain sockets (`transport_listen` prefix convention).
+//! - [`frame`] — `[len u32 le][crc32 u32 le][payload]` message framing,
+//!   the journal's on-disk record layout put on a socket.  Any torn or
+//!   bit-flipped frame is a typed error, never a desynchronized stream.
+//! - [`msg`] — the protocol vocabulary: `Hello`/`HelloAck` registration
+//!   (protocol version + config-fingerprint check), `RoundStart`
+//!   downlink, `Uplink` (the wire-codec header + body bytes), and
+//!   `Shutdown`.  Decoding is hardened against untrusted bytes.
+//! - [`server`] — the coordinator's single-threaded poll loop:
+//!   registration, downlink broadcast, out-of-order uplink collection
+//!   with full validation (echo fields, framed-byte accounting,
+//!   [`crate::algorithms::wire::WireBody::try_decode`]), reconnect
+//!   repair, and deadline enforcement.
+//! - [`agent`] — the device-agent round loop: own a static shard of the
+//!   device population (`device % agents == index`), train through the
+//!   executor seam, compress through the same algorithms, upload.
+//!
+//! The whole stack preserves the repo's determinism contract: a run
+//! over this transport produces the byte-identical final model, log
+//! rows and comm ledger as the in-process run of the same config —
+//! `examples/multiprocess_demo.rs` asserts exactly that across OS
+//! processes, and `rust/tests/transport.rs` across threads.
+
+pub mod agent;
+pub mod frame;
+pub mod msg;
+pub mod net;
+pub mod server;
+
+pub use agent::run_agent;
+pub use server::TransportServer;

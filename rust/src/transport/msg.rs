@@ -1,0 +1,321 @@
+//! The transport protocol's message vocabulary.
+//!
+//! Four messages run a federated round over a socket:
+//!
+//! - [`Msg::Hello`] / [`Msg::HelloAck`] — registration handshake.  The
+//!   agent declares the protocol version, its **config fingerprint** and
+//!   its agent index; the server refuses a fingerprint that differs from
+//!   its own (a remote run is only bit-identical to the in-process run if
+//!   every process resolved the *same* determinism-bearing knobs — the
+//!   fingerprint is exactly that set, see
+//!   [`crate::config::ExperimentConfig::fingerprint`]).  The ack pins the
+//!   agent count and model dimension the agent must agree on.
+//! - [`Msg::RoundStart`] — one round's downlink: the global model (and
+//!   the aggregated moments when the algorithm's policy is
+//!   `Aggregated`), plus the full cohort assignment list.  Every agent
+//!   receives the whole cohort and trains the slice it owns
+//!   (`device % agents == agent_index`).
+//! - [`Msg::Uplink`] — one device's compressed update: the wire-codec
+//!   header `(kind, k, levels, bits)` plus the body bytes that
+//!   [`crate::algorithms::wire::WireBody::try_decode`] validates.  The
+//!   body length is *separately* checked against `ceil(bits / 8)` by the
+//!   server — the framed-byte accounting invariant.
+//! - [`Msg::Shutdown`] — the run is over; agents exit cleanly.
+//!
+//! Encoding is the journal's [`ByteWriter`]/[`ByteReader`] little-endian
+//! codec with a leading tag byte; floats travel as raw bits so the
+//! handshake and payloads are bit-exact.  [`Msg::decode`] is untrusted:
+//! truncated, oversized or trailing-garbage payloads error (never panic),
+//! and length prefixes are allocation-guarded by the reader.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Bumped on any wire-incompatible change; the handshake refuses a
+/// mismatch before anything else is parsed.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+const TAG_HELLO: u8 = 1;
+const TAG_HELLO_ACK: u8 = 2;
+const TAG_ROUND_START: u8 = 3;
+const TAG_UPLINK: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+
+/// One cohort slot: which device trains it and the FedAvg weight the
+/// sampler assigned (bit-exact f64 — the server verifies the uplink
+/// echoes it unchanged).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub slot: u32,
+    pub device: u32,
+    pub weight: f64,
+}
+
+/// One device's compressed uplink message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Uplink {
+    pub round: u64,
+    pub slot: u32,
+    pub device: u32,
+    /// Mean local training loss (bit-exact f64; folded server-side in
+    /// ascending slot order).
+    pub mean_loss: f64,
+    /// FedAvg weight — must echo the assignment bit-for-bit.
+    pub weight: f64,
+    /// Wire-codec header: body variant tag ([`crate::algorithms::wire`]).
+    pub kind: u8,
+    /// Mask support size (0 for dense/whole-`d` bodies).
+    pub k: u64,
+    /// Quantizer bin count `s - 1` (0 for unquantized bodies).
+    pub levels: u32,
+    /// Priced ledger bits; `body.len()` must equal `ceil(bits / 8)`.
+    pub bits: u64,
+    /// The contiguous bitstream [`crate::algorithms::wire::WireBody::encode`] produced.
+    pub body: Vec<u8>,
+}
+
+/// Everything that crosses the transport, agent ⇄ server.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Agent → server registration.
+    Hello {
+        version: u32,
+        fingerprint: u64,
+        agent: u32,
+    },
+    /// Server → agent registration accept.
+    HelloAck { agents: u32, dim: u64 },
+    /// Server → every agent: one round's downlink.
+    RoundStart {
+        round: u64,
+        w: Vec<f32>,
+        /// Aggregated global moments — present iff the algorithm's
+        /// momentum policy for this round is `Aggregated`.
+        m: Option<Vec<f32>>,
+        v: Option<Vec<f32>>,
+        assignments: Vec<Assignment>,
+    },
+    /// Agent → server: one finished device slot.
+    Uplink(Uplink),
+    /// Server → agents: the run is complete.
+    Shutdown,
+}
+
+impl Msg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            Msg::Hello {
+                version,
+                fingerprint,
+                agent,
+            } => {
+                w.put_u8(TAG_HELLO);
+                w.put_u32(*version);
+                w.put_u64(*fingerprint);
+                w.put_u32(*agent);
+            }
+            Msg::HelloAck { agents, dim } => {
+                w.put_u8(TAG_HELLO_ACK);
+                w.put_u32(*agents);
+                w.put_u64(*dim);
+            }
+            Msg::RoundStart {
+                round,
+                w: model,
+                m,
+                v,
+                assignments,
+            } => {
+                w.put_u8(TAG_ROUND_START);
+                w.put_u64(*round);
+                w.put_f32s(model);
+                put_opt_f32s(&mut w, m);
+                put_opt_f32s(&mut w, v);
+                w.put_usize(assignments.len());
+                for a in assignments {
+                    w.put_u32(a.slot);
+                    w.put_u32(a.device);
+                    w.put_f64(a.weight);
+                }
+            }
+            Msg::Uplink(u) => {
+                w.put_u8(TAG_UPLINK);
+                w.put_u64(u.round);
+                w.put_u32(u.slot);
+                w.put_u32(u.device);
+                w.put_f64(u.mean_loss);
+                w.put_f64(u.weight);
+                w.put_u8(u.kind);
+                w.put_u64(u.k);
+                w.put_u32(u.levels);
+                w.put_u64(u.bits);
+                w.put_bytes(&u.body);
+            }
+            Msg::Shutdown => w.put_u8(TAG_SHUTDOWN),
+        }
+        w.into_inner()
+    }
+
+    /// Decode an untrusted frame payload.  Errors (never panics) on a
+    /// bad tag, truncation, or trailing bytes.
+    pub fn decode(bytes: &[u8]) -> Result<Msg> {
+        let mut r = ByteReader::new(bytes);
+        let msg = match r.take_u8()? {
+            TAG_HELLO => Msg::Hello {
+                version: r.take_u32()?,
+                fingerprint: r.take_u64()?,
+                agent: r.take_u32()?,
+            },
+            TAG_HELLO_ACK => Msg::HelloAck {
+                agents: r.take_u32()?,
+                dim: r.take_u64()?,
+            },
+            TAG_ROUND_START => {
+                let round = r.take_u64()?;
+                let w = r.take_f32s()?;
+                let m = take_opt_f32s(&mut r)?;
+                let v = take_opt_f32s(&mut r)?;
+                let n = r.take_usize()?;
+                ensure!(
+                    n <= r.remaining(),
+                    "assignment count {n} exceeds the remaining payload"
+                );
+                let mut assignments = Vec::with_capacity(n);
+                for _ in 0..n {
+                    assignments.push(Assignment {
+                        slot: r.take_u32()?,
+                        device: r.take_u32()?,
+                        weight: r.take_f64()?,
+                    });
+                }
+                Msg::RoundStart {
+                    round,
+                    w,
+                    m,
+                    v,
+                    assignments,
+                }
+            }
+            TAG_UPLINK => Msg::Uplink(Uplink {
+                round: r.take_u64()?,
+                slot: r.take_u32()?,
+                device: r.take_u32()?,
+                mean_loss: r.take_f64()?,
+                weight: r.take_f64()?,
+                kind: r.take_u8()?,
+                k: r.take_u64()?,
+                levels: r.take_u32()?,
+                bits: r.take_u64()?,
+                body: r.take_bytes()?,
+            }),
+            TAG_SHUTDOWN => Msg::Shutdown,
+            tag => bail!("unknown transport message tag {tag}"),
+        };
+        r.finish()?;
+        Ok(msg)
+    }
+}
+
+fn put_opt_f32s(w: &mut ByteWriter, v: &Option<Vec<f32>>) {
+    match v {
+        Some(v) => {
+            w.put_bool(true);
+            w.put_f32s(v);
+        }
+        None => w.put_bool(false),
+    }
+}
+
+fn take_opt_f32s(r: &mut ByteReader) -> Result<Option<Vec<f32>>> {
+    Ok(if r.take_bool()? {
+        Some(r.take_f32s()?)
+    } else {
+        None
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_msgs() -> Vec<Msg> {
+        vec![
+            Msg::Hello {
+                version: PROTOCOL_VERSION,
+                fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+                agent: 3,
+            },
+            Msg::HelloAck { agents: 4, dim: 577 },
+            Msg::RoundStart {
+                round: 9,
+                w: vec![1.5, -0.0, f32::NEG_INFINITY],
+                m: Some(vec![0.25]),
+                v: None,
+                assignments: vec![
+                    Assignment {
+                        slot: 0,
+                        device: 2,
+                        weight: 125.0,
+                    },
+                    Assignment {
+                        slot: 1,
+                        device: 3,
+                        weight: 130.5,
+                    },
+                ],
+            },
+            Msg::Uplink(Uplink {
+                round: 9,
+                slot: 1,
+                device: 3,
+                mean_loss: 2.302,
+                weight: 130.5,
+                kind: 3,
+                k: 5,
+                levels: 0,
+                bits: 41,
+                body: vec![0xFF, 0x01, 0x00, 0x7A, 0x10, 0x02],
+            }),
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for msg in all_msgs() {
+            let bytes = msg.encode();
+            assert_eq!(Msg::decode(&bytes).unwrap(), msg, "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn truncations_and_trailing_bytes_error() {
+        for msg in all_msgs() {
+            let bytes = msg.encode();
+            for cut in 0..bytes.len() {
+                assert!(
+                    Msg::decode(&bytes[..cut]).is_err(),
+                    "{msg:?} truncated to {cut} decoded"
+                );
+            }
+            let mut long = bytes.clone();
+            long.push(0);
+            assert!(Msg::decode(&long).is_err(), "{msg:?} + trailing byte decoded");
+        }
+        assert!(Msg::decode(&[99]).is_err(), "unknown tag decoded");
+    }
+
+    #[test]
+    fn hostile_lengths_cannot_drive_allocations() {
+        // A RoundStart whose model-length prefix claims 2^61 floats must
+        // error on the reader's allocation guard, not OOM.
+        let mut w = ByteWriter::new();
+        w.put_u8(3); // TAG_ROUND_START
+        w.put_u64(0);
+        w.put_u64(u64::MAX / 4); // hostile f32 count
+        let err = Msg::decode(&w.into_inner());
+        assert!(err.is_err());
+    }
+}

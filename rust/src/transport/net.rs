@@ -1,0 +1,241 @@
+//! One socket abstraction over TCP and Unix-domain transports.
+//!
+//! The `transport_listen` knob selects the family by prefix:
+//! `"host:port"` binds TCP (port `0` picks a free port — the
+//! multi-process demo uses this), `"unix:/path"` binds a Unix-domain
+//! socket.  [`Stream`] and [`Listener`] erase the difference for the
+//! server's poll loop and the agent's command loop; everything above
+//! this module is family-agnostic.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+/// Address prefix selecting the Unix-domain family.
+pub const UNIX_PREFIX: &str = "unix:";
+
+/// A connected byte stream of either family.
+pub enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to `addr` (with the [`UNIX_PREFIX`] convention).
+    pub fn connect(addr: &str) -> Result<Stream> {
+        if let Some(path) = addr.strip_prefix(UNIX_PREFIX) {
+            Ok(Stream::Unix(
+                UnixStream::connect(path).with_context(|| format!("connecting to {addr}"))?,
+            ))
+        } else {
+            Ok(Stream::Tcp(
+                TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?,
+            ))
+        }
+    }
+
+    pub fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nb),
+            Stream::Unix(s) => s.set_nonblocking(nb),
+        }
+    }
+
+    pub fn set_read_timeout(&self, t: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(t),
+            Stream::Unix(s) => s.set_read_timeout(t),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound accept socket of either family.  Non-blocking: [`Listener::poll_accept`]
+/// returns `Ok(None)` when nothing is waiting.
+pub enum Listener {
+    Tcp(TcpListener),
+    Unix {
+        listener: UnixListener,
+        /// Socket file, unlinked on drop.
+        path: std::path::PathBuf,
+    },
+}
+
+impl Listener {
+    /// Bind `listen` and put the listener in non-blocking mode.  A stale
+    /// Unix socket file from a dead earlier server is unlinked first.
+    pub fn bind(listen: &str) -> Result<Listener> {
+        if let Some(path) = listen.strip_prefix(UNIX_PREFIX) {
+            let path = std::path::PathBuf::from(path);
+            // Stale socket files persist after a crash; binding over one
+            // fails, so clear it.  A live server would still hold the
+            // listener — two servers on one path is a config error the
+            // second bind reports.
+            let _ = std::fs::remove_file(&path);
+            let listener =
+                UnixListener::bind(&path).with_context(|| format!("binding {listen}"))?;
+            listener.set_nonblocking(true)?;
+            Ok(Listener::Unix { listener, path })
+        } else {
+            let listener = TcpListener::bind(listen).with_context(|| format!("binding {listen}"))?;
+            listener.set_nonblocking(true)?;
+            Ok(Listener::Tcp(listener))
+        }
+    }
+
+    /// The connectable address — for TCP the *resolved* one, so binding
+    /// port `0` yields the real port the OS picked.
+    pub fn local_addr(&self) -> Result<String> {
+        match self {
+            Listener::Tcp(l) => Ok(l.local_addr()?.to_string()),
+            Listener::Unix { path, .. } => Ok(format!("{UNIX_PREFIX}{}", path.display())),
+        }
+    }
+
+    /// Accept one pending connection, if any.  The accepted stream is in
+    /// blocking mode regardless of the listener (Linux does not inherit
+    /// the non-blocking flag through `accept`; set it explicitly either
+    /// way so both families behave identically).
+    pub fn poll_accept(&self) -> Result<Option<Stream>> {
+        let stream = match self {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => Stream::Tcp(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) => return Err(e.into()),
+            },
+            Listener::Unix { listener, .. } => match listener.accept() {
+                Ok((s, _)) => Stream::Unix(s),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                Err(e) => return Err(e.into()),
+            },
+        };
+        stream.set_nonblocking(false)?;
+        Ok(Some(stream))
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        if let Listener::Unix { path, .. } = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// `write_all` against a non-blocking stream: spin-with-sleep through
+/// `WouldBlock` until `deadline`.  Keeps the server's poll loop single-
+/// threaded — a slow reader stalls only its own connection's send, and a
+/// peer that never drains its receive buffer errors out instead of
+/// wedging the round forever.
+pub fn write_all_deadline(
+    stream: &mut Stream,
+    mut bytes: &[u8],
+    deadline: Instant,
+) -> Result<()> {
+    while !bytes.is_empty() {
+        match stream.write(bytes) {
+            Ok(0) => bail!("connection closed mid-write"),
+            Ok(n) => bytes = &bytes[n..],
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::Interrupted =>
+            {
+                if Instant::now() >= deadline {
+                    bail!("write stalled past the transport deadline");
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_port_zero_resolves_and_accepts() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        assert!(!addr.ends_with(":0"), "port 0 must resolve, got {addr}");
+        assert!(listener.poll_accept().unwrap().is_none(), "nothing pending");
+        let mut client = Stream::connect(&addr).unwrap();
+        // Accept may need a beat on a loaded machine.
+        let mut server = None;
+        for _ in 0..500 {
+            if let Some(s) = listener.poll_accept().unwrap() {
+                server = Some(s);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut server = server.expect("pending connection accepted");
+        client.write_all(b"ping").unwrap();
+        let mut buf = [0u8; 4];
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn unix_socket_binds_cleans_up_and_rebinds() {
+        let dir = std::env::temp_dir().join(format!("fedadam-uds-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sock = dir.join("t.sock");
+        let addr = format!("{UNIX_PREFIX}{}", sock.display());
+        {
+            let listener = Listener::bind(&addr).unwrap();
+            assert_eq!(listener.local_addr().unwrap(), addr);
+            assert!(sock.exists());
+        }
+        assert!(!sock.exists(), "drop unlinks the socket file");
+        // A stale file (crash leftover) must not block a rebind.
+        std::fs::write(&sock, b"").unwrap();
+        let listener = Listener::bind(&addr).unwrap();
+        let mut client = Stream::connect(&addr).unwrap();
+        let mut server = None;
+        for _ in 0..500 {
+            if let Some(s) = listener.poll_accept().unwrap() {
+                server = Some(s);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let mut server = server.expect("uds connection accepted");
+        client.write_all(b"hi").unwrap();
+        let mut buf = [0u8; 2];
+        server.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+        drop(listener);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

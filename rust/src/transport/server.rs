@@ -1,0 +1,548 @@
+//! The coordinator's side of the wire: accept agents, drive rounds,
+//! validate every uplink byte before it touches the aggregator.
+//!
+//! [`TransportServer`] runs a single-threaded non-blocking poll loop —
+//! no thread per connection, no async runtime.  Each round is one call
+//! to [`TransportServer::run_round`]: broadcast the `RoundStart` frame
+//! to every registered agent, then pump sockets until every cohort slot
+//! has produced a valid uplink.  Uplinks may arrive in **any order**
+//! across agents; the caller's sink is invoked with the slot index so
+//! slot-fixed accumulation (`ShardedAccumulator::push`) stays
+//! bit-identical to the in-process ascending order.
+//!
+//! Trust boundary: everything read from a socket is hostile until
+//! proven otherwise.  A frame must pass, in order: CRC framing
+//! ([`super::frame`]), message decode ([`super::msg`]), round/slot/
+//! device/weight echo checks against the server's own assignment table,
+//! the framed-byte accounting invariant `body.len() == ceil(bits/8)`,
+//! and the full wire-codec validation
+//! ([`crate::algorithms::wire::WireBody::try_decode`]).  Any failure
+//! drops that connection (the agent may reconnect and repair the round);
+//! only the round deadline is fatal, and it reports the last violation
+//! seen so a systematically-misbehaving agent is diagnosable.
+
+use std::io::Read;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algorithms::wire::WireBody;
+use crate::algorithms::Upload;
+
+use super::frame::{read_frame, write_frame, FrameBuffer};
+use super::msg::{Assignment, Msg, Uplink, PROTOCOL_VERSION};
+use super::net::{write_all_deadline, Listener, Stream};
+
+/// Poll-loop tick while waiting for bytes.
+const POLL_SLEEP: Duration = Duration::from_millis(2);
+
+/// One registered agent connection.
+struct AgentConn {
+    stream: Stream,
+    frames: FrameBuffer,
+    last_activity: Instant,
+}
+
+/// Accept loop + round driver for remote device agents.
+pub struct TransportServer {
+    listener: Listener,
+    /// Slot `i` holds agent `i`'s connection; `None` between a drop and
+    /// its reconnect.
+    conns: Vec<Option<AgentConn>>,
+    num_agents: usize,
+    dim: usize,
+    timeout: Duration,
+    fingerprint: u64,
+    addr: String,
+}
+
+impl TransportServer {
+    /// Bind `listen` (TCP `host:port`, port 0 allowed, or `unix:/path`)
+    /// and wait for nothing — agents register lazily, on the first
+    /// round or whenever they (re)connect.
+    pub fn bind(
+        listen: &str,
+        num_agents: usize,
+        timeout_secs: f64,
+        fingerprint: u64,
+        dim: usize,
+    ) -> Result<TransportServer> {
+        ensure!(num_agents >= 1, "transport server needs at least one agent");
+        let listener = Listener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        Ok(TransportServer {
+            listener,
+            conns: (0..num_agents).map(|_| None).collect(),
+            num_agents,
+            dim,
+            timeout: Duration::from_secs_f64(timeout_secs),
+            fingerprint,
+            addr,
+        })
+    }
+
+    /// The resolved address agents should connect to (port 0 → real port).
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Registration handshake on a freshly-accepted (blocking) stream.
+    /// Static so callers holding `&mut self.conns` borrows can use it.
+    fn handshake(
+        mut stream: Stream,
+        fingerprint: u64,
+        num_agents: usize,
+        dim: usize,
+        timeout: Duration,
+    ) -> Result<(usize, Stream)> {
+        stream.set_read_timeout(Some(timeout))?;
+        let payload = read_frame(&mut stream)
+            .map_err(|e| anyhow::anyhow!("reading Hello: {e}"))?;
+        let msg = Msg::decode(&payload).context("decoding Hello")?;
+        let Msg::Hello { version, fingerprint: theirs, agent } = msg else {
+            bail!("expected Hello, got {msg:?}");
+        };
+        ensure!(
+            version == PROTOCOL_VERSION,
+            "protocol version mismatch: agent speaks {version}, server speaks {PROTOCOL_VERSION}"
+        );
+        ensure!(
+            theirs == fingerprint,
+            "config fingerprint mismatch: agent {theirs:#018x}, server {fingerprint:#018x} — \
+             the processes resolved different determinism-bearing knobs"
+        );
+        ensure!(
+            (agent as usize) < num_agents,
+            "agent index {agent} out of range (transport_agents = {num_agents})"
+        );
+        write_frame(
+            &mut stream,
+            &Msg::HelloAck { agents: num_agents as u32, dim: dim as u64 }.encode(),
+        )
+        .map_err(|e| anyhow::anyhow!("writing HelloAck: {e}"))?;
+        stream.set_read_timeout(None)?;
+        stream.set_nonblocking(true)?;
+        Ok((agent as usize, stream))
+    }
+
+    fn install(&mut self, agent: usize, stream: Stream) {
+        if self.conns[agent].is_some() {
+            log::info!("transport: agent {agent} reconnected, replacing its connection");
+        } else {
+            log::info!("transport: agent {agent} registered");
+        }
+        self.conns[agent] = Some(AgentConn {
+            stream,
+            frames: FrameBuffer::new(),
+            last_activity: Instant::now(),
+        });
+    }
+
+    /// Accept one pending connection and run its handshake, if any.
+    /// Handshake failures are logged and swallowed — a bad client must
+    /// not take the server down.
+    fn poll_register(&mut self) -> Result<Option<usize>> {
+        let Some(stream) = self.listener.poll_accept()? else {
+            return Ok(None);
+        };
+        match Self::handshake(stream, self.fingerprint, self.num_agents, self.dim, self.timeout) {
+            Ok((agent, stream)) => {
+                self.install(agent, stream);
+                Ok(Some(agent))
+            }
+            Err(e) => {
+                log::warn!("transport: rejected connection: {e:#}");
+                Ok(None)
+            }
+        }
+    }
+
+    /// Block (polling) until every agent slot has a live connection.
+    fn ensure_registered(&mut self) -> Result<()> {
+        if self.conns.iter().all(|c| c.is_some()) {
+            return Ok(());
+        }
+        let deadline = Instant::now() + self.timeout;
+        while self.conns.iter().any(|c| c.is_none()) {
+            if self.poll_register()?.is_none() {
+                if Instant::now() >= deadline {
+                    let missing: Vec<usize> = self
+                        .conns
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, c)| c.is_none())
+                        .map(|(i, _)| i)
+                        .collect();
+                    bail!(
+                        "transport: agents {missing:?} did not register within {:.1}s",
+                        self.timeout.as_secs_f64()
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive one round: broadcast the downlink, collect one valid uplink
+    /// per assignment slot, feed each to `on_uplink(slot, device,
+    /// mean_loss, upload)` in arrival order.  Returns once every slot is
+    /// filled; errors if the round deadline (3 × `transport_timeout_secs`)
+    /// passes with slots missing, or if the sink itself errors.
+    pub fn run_round(
+        &mut self,
+        round: u64,
+        w: &[f32],
+        m: Option<&[f32]>,
+        v: Option<&[f32]>,
+        assignments: &[Assignment],
+        mut on_uplink: impl FnMut(usize, usize, f64, Upload) -> Result<()>,
+    ) -> Result<()> {
+        self.ensure_registered()?;
+        let downlink = round_start_frame(round, w, m, v, assignments);
+        for agent in 0..self.num_agents {
+            self.send_frame(agent, &downlink)
+                .with_context(|| format!("sending RoundStart to agent {agent}"))?;
+        }
+
+        let mut filled = vec![false; assignments.len()];
+        let mut done = 0usize;
+        let round_deadline = Instant::now() + 3 * self.timeout;
+        let mut last_violation: Option<String> = None;
+        let mut buf = vec![0u8; 64 * 1024];
+
+        while done < assignments.len() {
+            // Late (re)connects: finish the handshake, replay the downlink.
+            if let Some(agent) = self.poll_register()? {
+                if let Err(e) = self.send_frame(agent, &downlink) {
+                    log::warn!("transport: replaying RoundStart to agent {agent} failed: {e:#}");
+                    self.conns[agent] = None;
+                }
+            }
+
+            let mut progressed = false;
+            for agent in 0..self.num_agents {
+                match self.pump(agent, &mut buf) {
+                    Ok(pumped) => progressed |= pumped,
+                    Err(e) => {
+                        log::warn!("transport: dropping agent {agent}: {e}");
+                        last_violation = Some(format!("agent {agent}: {e}"));
+                        self.conns[agent] = None;
+                        continue;
+                    }
+                }
+                // Drain every complete frame this agent has buffered.
+                loop {
+                    let popped = match self.conns[agent].as_mut() {
+                        Some(conn) => conn.frames.pop(),
+                        None => break,
+                    };
+                    let payload = match popped {
+                        Ok(Some(p)) => p,
+                        Ok(None) => break,
+                        Err(e) => {
+                            log::warn!("transport: dropping agent {agent}: bad frame: {e}");
+                            last_violation = Some(format!("agent {agent}: {e}"));
+                            self.conns[agent] = None;
+                            break;
+                        }
+                    };
+                    progressed = true;
+                    match accept_uplink(
+                        &payload,
+                        round,
+                        agent,
+                        self.num_agents,
+                        self.dim,
+                        assignments,
+                        &filled,
+                    ) {
+                        Ok(Some((slot, device, mean_loss, upload))) => {
+                            // Sink errors are the coordinator's own —
+                            // propagate, don't blame the agent.
+                            on_uplink(slot, device, mean_loss, upload)?;
+                            filled[slot] = true;
+                            done += 1;
+                        }
+                        Ok(None) => {} // benign duplicate after a replay
+                        Err(viol) => {
+                            log::warn!("transport: dropping agent {agent}: {viol}");
+                            last_violation = Some(format!("agent {agent}: {viol}"));
+                            self.conns[agent] = None;
+                            break;
+                        }
+                    }
+                }
+            }
+
+            if done == assignments.len() {
+                break;
+            }
+            if Instant::now() >= round_deadline {
+                let missing: Vec<u32> = assignments
+                    .iter()
+                    .filter(|a| !filled[a.slot as usize])
+                    .map(|a| a.slot)
+                    .collect();
+                bail!(
+                    "transport: round {round} timed out with slots {missing:?} missing{}",
+                    match &last_violation {
+                        Some(v) => format!(" (last violation: {v})"),
+                        None => String::new(),
+                    }
+                );
+            }
+            // An agent that owes slots but has gone silent past the
+            // timeout gets its connection dropped so a reconnect (with a
+            // downlink replay) can repair the round.
+            for agent in 0..self.num_agents {
+                let owes = assignments
+                    .iter()
+                    .any(|a| !filled[a.slot as usize] && a.device as usize % self.num_agents == agent);
+                if !owes {
+                    continue;
+                }
+                if let Some(conn) = &self.conns[agent] {
+                    if conn.last_activity.elapsed() > self.timeout {
+                        log::warn!(
+                            "transport: agent {agent} silent for {:.1}s with slots outstanding, dropping for reconnect",
+                            self.timeout.as_secs_f64()
+                        );
+                        self.conns[agent] = None;
+                    }
+                }
+            }
+            if !progressed {
+                std::thread::sleep(POLL_SLEEP);
+            }
+        }
+        Ok(())
+    }
+
+    /// Non-blocking drain of agent `agent`'s socket into its frame
+    /// buffer.  Returns whether any bytes arrived; errors mean the
+    /// connection is dead.
+    fn pump(&mut self, agent: usize, buf: &mut [u8]) -> Result<bool> {
+        let Some(conn) = self.conns[agent].as_mut() else {
+            return Ok(false);
+        };
+        let mut any = false;
+        loop {
+            match conn.stream.read(buf) {
+                Ok(0) => {
+                    if any {
+                        // Keep what we read; the close surfaces next poll.
+                        break;
+                    }
+                    bail!("connection closed");
+                }
+                Ok(n) => {
+                    conn.frames.extend(&buf[..n]);
+                    conn.last_activity = Instant::now();
+                    any = true;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(any)
+    }
+
+    fn send_frame(&mut self, agent: usize, frame: &[u8]) -> Result<()> {
+        let deadline = Instant::now() + self.timeout;
+        let Some(conn) = self.conns[agent].as_mut() else {
+            bail!("agent {agent} is not connected");
+        };
+        write_all_deadline(&mut conn.stream, frame, deadline)
+    }
+
+    /// Best-effort `Shutdown` broadcast; send errors are ignored (an
+    /// agent that already died doesn't need telling).
+    pub fn shutdown(&mut self) {
+        let mut frame = Vec::new();
+        if write_frame(&mut frame, &Msg::Shutdown.encode()).is_err() {
+            return;
+        }
+        for agent in 0..self.num_agents {
+            let _ = self.send_frame(agent, &frame);
+        }
+    }
+}
+
+/// Encode one round's downlink as a ready-to-send frame (broadcast to
+/// every agent, and replayed to reconnects).
+fn round_start_frame(
+    round: u64,
+    w: &[f32],
+    m: Option<&[f32]>,
+    v: Option<&[f32]>,
+    assignments: &[Assignment],
+) -> Vec<u8> {
+    let msg = Msg::RoundStart {
+        round,
+        w: w.to_vec(),
+        m: m.map(|x| x.to_vec()),
+        v: v.map(|x| x.to_vec()),
+        assignments: assignments.to_vec(),
+    };
+    let payload = msg.encode();
+    let mut frame = Vec::with_capacity(payload.len() + super::frame::FRAME_HEADER_LEN);
+    write_frame(&mut frame, &payload).expect("Vec<u8> writes cannot fail");
+    frame
+}
+
+/// Validate one uplink payload end to end.  `Ok(Some(..))` is a fresh,
+/// fully-validated slot; `Ok(None)` a benign duplicate (the agent
+/// replayed a cached uplink after a downlink replay); `Err` a protocol
+/// violation that costs the sender its connection.
+fn accept_uplink(
+    payload: &[u8],
+    round: u64,
+    agent: usize,
+    num_agents: usize,
+    dim: usize,
+    assignments: &[Assignment],
+    filled: &[bool],
+) -> Result<Option<(usize, usize, f64, Upload)>, String> {
+    let msg = Msg::decode(payload).map_err(|e| format!("undecodable message: {e:#}"))?;
+    let Msg::Uplink(u) = msg else {
+        return Err(format!("expected Uplink, got {msg:?}"));
+    };
+    let Uplink { round: r, slot, device, mean_loss, weight, kind, k, levels, bits, body } = u;
+    if r != round {
+        return Err(format!("uplink for round {r} during round {round}"));
+    }
+    let slot = slot as usize;
+    if slot >= assignments.len() {
+        return Err(format!("slot {slot} out of range ({} assignments)", assignments.len()));
+    }
+    let a = &assignments[slot];
+    if device != a.device {
+        return Err(format!("slot {slot} belongs to device {}, uplink claims {device}", a.device));
+    }
+    if device as usize % num_agents != agent {
+        return Err(format!("device {device} is not owned by agent {agent}"));
+    }
+    if weight.to_bits() != a.weight.to_bits() {
+        return Err(format!(
+            "weight echo mismatch on slot {slot}: assigned {}, got {weight}",
+            a.weight
+        ));
+    }
+    if filled[slot] {
+        return Ok(None);
+    }
+    // Framed-byte accounting: the bytes on the wire must be exactly the
+    // priced ledger bits, rounded up to whole bytes.
+    if body.len() as u64 != bits.div_ceil(8) {
+        return Err(format!(
+            "framed-byte accounting violation on slot {slot}: {} body bytes for {bits} priced bits",
+            body.len()
+        ));
+    }
+    let k = usize::try_from(k).map_err(|_| format!("mask size {k} overflows"))?;
+    let wire = WireBody::try_decode(kind, dim, k, levels, bits, &body)
+        .map_err(|e| format!("wire body rejected on slot {slot}: {e}"))?;
+    let upload = wire
+        .try_into_upload(weight)
+        .map_err(|e| format!("wire body inconsistent on slot {slot}: {e}"))?;
+    Ok(Some((slot, device as usize, mean_loss, upload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assignments() -> Vec<Assignment> {
+        vec![
+            Assignment { slot: 0, device: 0, weight: 10.0 },
+            Assignment { slot: 1, device: 1, weight: 12.0 },
+        ]
+    }
+
+    fn dense_uplink(dim: usize) -> Uplink {
+        let body = WireBody::Dense3 {
+            dw: vec![0.5; dim],
+            dm: vec![0.25; dim],
+            dv: vec![0.125; dim],
+        };
+        Uplink {
+            round: 4,
+            slot: 1,
+            device: 1,
+            mean_loss: 2.0,
+            weight: 12.0,
+            kind: body.kind(),
+            k: body.k() as u64,
+            levels: body.levels(),
+            bits: body.wire_bits(),
+            body: body.encode(),
+        }
+    }
+
+    #[test]
+    fn accept_uplink_validates_every_echo_field() {
+        let dim = 3;
+        let asn = assignments();
+        let filled = vec![false; 2];
+        let good = dense_uplink(dim);
+        let ok = accept_uplink(
+            &Msg::Uplink(good.clone()).encode(),
+            4,
+            1,
+            2,
+            dim,
+            &asn,
+            &filled,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(ok.0, 1);
+        assert_eq!(ok.1, 1);
+        assert_eq!(ok.2, 2.0);
+
+        // Each corrupted echo field is a violation.
+        let mut bad = good.clone();
+        bad.round = 5;
+        assert!(accept_uplink(&Msg::Uplink(bad).encode(), 4, 1, 2, dim, &asn, &filled).is_err());
+        let mut bad = good.clone();
+        bad.slot = 7;
+        assert!(accept_uplink(&Msg::Uplink(bad).encode(), 4, 1, 2, dim, &asn, &filled).is_err());
+        let mut bad = good.clone();
+        bad.device = 0; // right slot, wrong device
+        assert!(accept_uplink(&Msg::Uplink(bad).encode(), 4, 1, 2, dim, &asn, &filled).is_err());
+        let mut bad = good.clone();
+        bad.weight = 12.0000001;
+        assert!(accept_uplink(&Msg::Uplink(bad).encode(), 4, 1, 2, dim, &asn, &filled).is_err());
+        // Wrong owner: device 1 belongs to agent 1 of 2, not agent 0.
+        assert!(accept_uplink(&Msg::Uplink(good.clone()).encode(), 4, 0, 2, dim, &asn, &filled)
+            .is_err());
+    }
+
+    #[test]
+    fn accept_uplink_enforces_framed_byte_accounting() {
+        let dim = 3;
+        let asn = assignments();
+        let filled = vec![false; 2];
+        let mut padded = dense_uplink(dim);
+        padded.body.push(0); // one smuggled unpriced byte
+        assert!(
+            accept_uplink(&Msg::Uplink(padded).encode(), 4, 1, 2, dim, &asn, &filled).is_err()
+        );
+        let mut lying = dense_uplink(dim);
+        lying.bits += 8; // priced more than framed
+        assert!(accept_uplink(&Msg::Uplink(lying).encode(), 4, 1, 2, dim, &asn, &filled).is_err());
+    }
+
+    #[test]
+    fn duplicate_filled_slot_is_benign() {
+        let dim = 3;
+        let asn = assignments();
+        let filled = vec![false, true];
+        let dup = dense_uplink(dim);
+        assert!(accept_uplink(&Msg::Uplink(dup).encode(), 4, 1, 2, dim, &asn, &filled)
+            .unwrap()
+            .is_none());
+    }
+}

@@ -93,6 +93,12 @@ impl ByteWriter {
         self.buf.extend_from_slice(s.as_bytes());
     }
 
+    /// Length-prefixed raw byte slice.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
     /// Length-prefixed f32 slice (bit-exact).
     pub fn put_f32s(&mut self, v: &[f32]) {
         self.put_u64(v.len() as u64);
@@ -190,10 +196,19 @@ impl<'a> ByteReader<'a> {
     }
 
     fn take_len(&mut self) -> Result<usize> {
+        self.take_count(1)
+    }
+
+    /// Read an element count whose payload is `elem_size` bytes each.
+    /// A count can never exceed the bytes actually present — reject
+    /// early so a corrupt (or hostile) prefix cannot drive a huge
+    /// allocation before the per-element reads hit end-of-input.
+    fn take_count(&mut self, elem_size: usize) -> Result<usize> {
         let n = self.take_u64()?;
-        // A length can never exceed the bytes actually present — reject
-        // early so a corrupt prefix cannot drive a huge allocation.
-        if n > self.remaining() as u64 {
+        let fits = n
+            .checked_mul(elem_size as u64)
+            .is_some_and(|total| total <= self.remaining() as u64);
+        if !fits {
             bail!("corrupt length prefix {n} with {} bytes left", self.remaining());
         }
         Ok(n as usize)
@@ -204,18 +219,23 @@ impl<'a> ByteReader<'a> {
         Ok(std::str::from_utf8(self.take(n)?)?.to_string())
     }
 
+    pub fn take_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.take_len()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
     pub fn take_f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.take_u64()? as usize;
+        let n = self.take_count(4)?;
         (0..n).map(|_| self.take_f32()).collect()
     }
 
     pub fn take_f64s(&mut self) -> Result<Vec<f64>> {
-        let n = self.take_u64()? as usize;
+        let n = self.take_count(8)?;
         (0..n).map(|_| self.take_f64()).collect()
     }
 
     pub fn take_u64s(&mut self) -> Result<Vec<u64>> {
-        let n = self.take_u64()? as usize;
+        let n = self.take_count(8)?;
         (0..n).map(|_| self.take_u64()).collect()
     }
 }
@@ -242,6 +262,7 @@ mod tests {
         w.put_f32(-0.0);
         w.put_f64(f64::NAN);
         w.put_str("journal");
+        w.put_bytes(&[0xAB, 0x00, 0xCD]);
         w.put_f32s(&[1.5, f32::NEG_INFINITY]);
         w.put_f64s(&[0.1]);
         w.put_u64s(&[3, 4]);
@@ -254,6 +275,7 @@ mod tests {
         assert_eq!(r.take_f32().unwrap().to_bits(), (-0.0f32).to_bits());
         assert_eq!(r.take_f64().unwrap().to_bits(), f64::NAN.to_bits());
         assert_eq!(r.take_str().unwrap(), "journal");
+        assert_eq!(r.take_bytes().unwrap(), vec![0xAB, 0x00, 0xCD]);
         let f32s = r.take_f32s().unwrap();
         assert_eq!(f32s.len(), 2);
         assert_eq!(f32s[1], f32::NEG_INFINITY);
@@ -274,6 +296,13 @@ mod tests {
         w.put_u64(u64::MAX);
         let bytes = w.into_inner();
         assert!(ByteReader::new(&bytes).take_str().is_err());
+        // The same guard covers typed slices (4-/8-byte elements) —
+        // element count × size is checked against the bytes present,
+        // with overflow-safe multiplication.
+        assert!(ByteReader::new(&bytes).take_bytes().is_err());
+        assert!(ByteReader::new(&bytes).take_f32s().is_err());
+        assert!(ByteReader::new(&bytes).take_f64s().is_err());
+        assert!(ByteReader::new(&bytes).take_u64s().is_err());
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! generator loops — the offline build has no proptest crate; seeds are
 //! fixed so failures reproduce exactly).
 
+use fedadam_ssm::algorithms::wire::WireBody;
 use fedadam_ssm::algorithms::{self, Aggregate, LocalDelta, Recon, Upload};
 use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
 use fedadam_ssm::coordinator::journal::{self, read_log, Event, Journal, JOURNAL_VERSION};
@@ -15,6 +16,8 @@ use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::codec::{self, cost, index_bits};
 use fedadam_ssm::sparse::{top_k_indices, top_k_threshold, SparseVec};
 use fedadam_ssm::tensor;
+use fedadam_ssm::transport::frame::{read_frame, write_frame, FrameBuffer, FRAME_HEADER_LEN};
+use fedadam_ssm::transport::msg::{Assignment, Msg, Uplink};
 use fedadam_ssm::util::bytes::{ByteReader, ByteWriter};
 
 /// Random vector with occasional exact duplicates and zeros (tie stress).
@@ -933,5 +936,227 @@ fn prop_algorithm_state_roundtrip_preserves_future_uploads() {
         a.postprocess(&mut agg_a);
         b.postprocess(&mut agg_b);
         assert_eq!(bits(&agg_a.dw), bits(&agg_b.dw), "{algo}: postprocess after restore");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wire transport under hostile bytes: frames, messages and codec bodies
+// damaged at arbitrary offsets must error (or wait for more bytes) — they
+// may NEVER panic and NEVER silently decode to something different.
+// ---------------------------------------------------------------------------
+
+/// Random frame payload, including the empty one.
+fn gen_payload(rng: &mut Rng) -> Vec<u8> {
+    let n = rng.below(200);
+    (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+}
+
+#[test]
+fn prop_frame_mutation_never_panics_or_silently_misdecodes() {
+    // The CRC-32 detects every burst error up to 32 bits, so a single
+    // flipped bit anywhere in the header or payload is always caught; a
+    // flipped length prefix either under-reads (checksum mismatch),
+    // over-reads (EOF mid-frame) or trips the allocation cap.  The only
+    // acceptable `Ok` from damaged bytes is the EXACT original payload.
+    let mut rng = Rng::new(4001);
+    for trial in 0..200 {
+        let payload = gen_payload(&mut rng);
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).unwrap();
+        assert_eq!(framed.len(), FRAME_HEADER_LEN + payload.len(), "trial {trial}");
+
+        // Clean bytes roundtrip through both read paths.
+        let back = read_frame(&mut &framed[..])
+            .unwrap_or_else(|e| panic!("trial {trial}: clean frame failed: {e}"));
+        assert_eq!(back, payload, "trial {trial}: blocking read");
+        let mut fb = FrameBuffer::new();
+        fb.extend(&framed);
+        assert_eq!(fb.pop().unwrap(), Some(payload.clone()), "trial {trial}: buffered read");
+        assert!(fb.pop().unwrap().is_none(), "trial {trial}: phantom second frame");
+
+        // Truncation at a random offset: the blocking read errors, the
+        // incremental buffer errors or keeps waiting — neither may ever
+        // surface a payload from a partial frame.
+        let cut = rng.below(framed.len());
+        assert!(
+            read_frame(&mut &framed[..cut]).is_err(),
+            "trial {trial}: truncation to {cut} bytes decoded"
+        );
+        let mut fb = FrameBuffer::new();
+        fb.extend(&framed[..cut]);
+        if let Ok(Some(p)) = fb.pop() {
+            panic!(
+                "trial {trial}: truncated frame ({cut} of {} bytes) popped a {}-byte payload",
+                framed.len(),
+                p.len()
+            );
+        }
+
+        // One flipped bit at a random offset: Err, or the exact original.
+        let at = rng.below(framed.len());
+        let mut evil = framed.clone();
+        evil[at] ^= 1u8 << rng.below(8);
+        if let Ok(p) = read_frame(&mut &evil[..]) {
+            assert_eq!(p, payload, "trial {trial}: flip at byte {at} misdecoded");
+        }
+        let mut fb = FrameBuffer::new();
+        fb.extend(&evil);
+        if let Ok(Some(p)) = fb.pop() {
+            assert_eq!(p, payload, "trial {trial}: flip at byte {at} misdecoded (buffered)");
+        }
+    }
+}
+
+/// Random transport message, weighted toward the structurally rich ones.
+fn gen_msg(rng: &mut Rng) -> Msg {
+    fn f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+    match rng.below(6) {
+        0 => Msg::Hello {
+            version: rng.next_u64() as u32,
+            fingerprint: rng.next_u64(),
+            agent: rng.below(8) as u32,
+        },
+        1 => Msg::HelloAck {
+            agents: 1 + rng.below(8) as u32,
+            dim: rng.next_u64() % 1000,
+        },
+        2 => Msg::Shutdown,
+        3 | 4 => {
+            let d = 1 + rng.below(40);
+            Msg::RoundStart {
+                round: rng.next_u64() % 100,
+                w: f32s(rng, d),
+                m: if rng.below(2) == 0 { Some(f32s(rng, d)) } else { None },
+                v: if rng.below(2) == 0 { Some(f32s(rng, d)) } else { None },
+                assignments: (0..rng.below(6))
+                    .map(|s| Assignment {
+                        slot: s as u32,
+                        device: rng.below(32) as u32,
+                        weight: rng.uniform() * 200.0,
+                    })
+                    .collect(),
+            }
+        }
+        _ => Msg::Uplink(Uplink {
+            round: rng.next_u64() % 100,
+            slot: rng.below(16) as u32,
+            device: rng.below(64) as u32,
+            mean_loss: rng.normal(),
+            weight: rng.uniform() * 200.0,
+            kind: rng.below(9) as u8,
+            k: rng.next_u64() % 500,
+            levels: rng.below(32) as u32,
+            bits: rng.next_u64() % 10_000,
+            body: (0..rng.below(64)).map(|_| (rng.next_u64() & 0xFF) as u8).collect(),
+        }),
+    }
+}
+
+#[test]
+fn prop_msg_mutation_decodes_to_error_or_a_byte_faithful_message() {
+    // The message codec has no checksum of its own (the frame layer owns
+    // integrity), but it IS canonical: fixed-width little-endian fields,
+    // raw-bit floats, strict bools, allocation-guarded length prefixes and
+    // a no-trailing-bytes check mean every byte string `Msg::decode`
+    // accepts re-encodes to exactly itself.  So a mutated payload either
+    // errors or decodes to a message that re-serializes to the mutated
+    // bytes verbatim — a silent misparse is impossible, and a truncated
+    // payload never decodes at all.
+    let mut rng = Rng::new(4002);
+    for trial in 0..300 {
+        let msg = gen_msg(&mut rng);
+        let bytes = msg.encode();
+        let back = Msg::decode(&bytes)
+            .unwrap_or_else(|e| panic!("trial {trial}: clean decode failed: {e}\n{msg:?}"));
+        assert_eq!(back, msg, "trial {trial}: roundtrip");
+
+        let cut = rng.below(bytes.len());
+        assert!(
+            Msg::decode(&bytes[..cut]).is_err(),
+            "trial {trial}: truncation to {cut} of {} bytes decoded",
+            bytes.len()
+        );
+
+        let at = rng.below(bytes.len());
+        let mut evil = bytes.clone();
+        evil[at] ^= 1u8 << rng.below(8);
+        if let Ok(m) = Msg::decode(&evil) {
+            assert_eq!(
+                m.encode(),
+                evil,
+                "trial {trial}: flip at byte {at} decoded non-canonically to {m:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_wire_body_mutation_preserves_support_or_errors() {
+    // Codec bodies from every real compressor: truncate or bit-flip the
+    // encoded bitstream and `try_decode` against the ORIGINAL header.
+    // Truncation must always error (the byte length is pinned to
+    // ceil(bits/8)).  A bit flip must either error or decode to a body
+    // that is structurally sound — exact support size `k`, identical
+    // header fields — and canonical (re-encodes to the mutated bytes;
+    // padding bits are verified zero, so even a padding flip cannot
+    // smuggle in an unfaithful decode).
+    let mut rng = Rng::new(4003);
+    let d = 300;
+    for algo in algorithms::ALL_WITH_EXTENSIONS {
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = algo.into();
+        cfg.devices = 2;
+        cfg.sparsity = 0.1;
+        cfg.quant_levels = 8;
+        cfg.warmup_rounds = 1;
+        let mut a = algorithms::build(&cfg, d).unwrap();
+        for round in 0..3 {
+            let delta = LocalDelta {
+                dw: gen_vec(&mut rng, d),
+                dm: gen_vec(&mut rng, d),
+                dv: gen_vec(&mut rng, d),
+                weight: 1.0,
+            };
+            let wire = a.compress_wire(round, 0, delta).unwrap();
+            let (kind, k, levels, bits) =
+                (wire.body.kind(), wire.body.k(), wire.body.levels(), wire.bits);
+            let bytes = wire.encode_body().unwrap();
+            assert_eq!(bytes.len() as u64, bits.div_ceil(8), "{algo} round {round}: framed bytes");
+
+            // Clean decode is canonical and support-exact.
+            let body = WireBody::try_decode(kind, d, k, levels, bits, &bytes)
+                .unwrap_or_else(|e| panic!("{algo} round {round}: clean decode failed: {e}"));
+            assert_eq!(body.k(), k, "{algo} round {round}: clean support");
+            assert_eq!(body.encode(), bytes, "{algo} round {round}: clean canonicality");
+
+            // Truncation always errors.
+            let cut = rng.below(bytes.len());
+            assert!(
+                WireBody::try_decode(kind, d, k, levels, bits, &bytes[..cut]).is_err(),
+                "{algo} round {round}: truncation to {cut} of {} bytes decoded",
+                bytes.len()
+            );
+
+            // Bit flips, several per body: error or faithful-and-sound.
+            for _ in 0..8 {
+                let at = rng.below(bytes.len());
+                let mut evil = bytes.clone();
+                evil[at] ^= 1u8 << rng.below(8);
+                match WireBody::try_decode(kind, d, k, levels, bits, &evil) {
+                    Err(_) => {}
+                    Ok(b) => {
+                        assert_eq!(b.kind(), kind, "{algo} round {round}: flip at {at} changed kind");
+                        assert_eq!(b.k(), k, "{algo} round {round}: flip at {at} changed support size");
+                        assert_eq!(
+                            b.encode(),
+                            evil,
+                            "{algo} round {round}: flip at byte {at} decoded non-canonically"
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -1,0 +1,492 @@
+//! Wire-transport integration suite.
+//!
+//! Pins the transport tentpole's two contracts end to end, on the
+//! pure-Rust reference backend (no PJRT artifacts needed):
+//!
+//! - **Bit-identity**: a remote run — one coordinator with
+//!   `transport_listen` set, device-agent shards connected over real
+//!   sockets (TCP and Unix-domain) — reproduces the in-process run byte
+//!   for byte: every logged number and the final `(W, M, V)`, at
+//!   pipeline depth 0 and with the overlapped loop, across agent counts,
+//!   with stateful (error-feedback, device-local-moment) algorithms.
+//! - **Hostile bytes**: the server's trust boundary.  `compress` and
+//!   `compress_wire → encode → try_decode → try_into_upload` are
+//!   observationally identical twins for every algorithm id; a
+//!   mid-round connection drop is repaired by reconnect + downlink
+//!   replay without double-counting; a protocol violation costs the
+//!   sender its connection and surfaces in the round-timeout report; a
+//!   mispriced message is refused at *send* time in every build profile.
+
+use std::io::Write as _;
+use std::time::Duration;
+
+use fedadam_ssm::algorithms::wire::{WireBody, WireUpload};
+use fedadam_ssm::algorithms::{self, LocalDelta, Recon, Upload, ALL_WITH_EXTENSIONS};
+use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
+use fedadam_ssm::transport::frame::{read_frame, write_frame};
+use fedadam_ssm::transport::msg::{Assignment, Msg, Uplink, PROTOCOL_VERSION};
+use fedadam_ssm::transport::net::Stream;
+use fedadam_ssm::transport::{run_agent, TransportServer};
+
+const INPUT_SHAPE: [usize; 3] = [4, 4, 1]; // row 16
+const CLASSES: usize = 10;
+
+fn meta() -> ModelMeta {
+    // dim = 10 * (16 + 1) = 170
+    reference_meta(&INPUT_SHAPE, CLASSES, 4, 8, 2)
+}
+
+fn base_cfg(algo: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "transport".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = algo.into();
+    cfg.rounds = 4;
+    cfg.devices = 3;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.lr = 0.02;
+    cfg.train_samples = 96;
+    cfg.test_samples = 50;
+    cfg.seed = 7;
+    cfg.eval_every = 1;
+    cfg.quant_levels = 16;
+    cfg.warmup_rounds = 2;
+    cfg.num_workers = 2;
+    cfg
+}
+
+type RunOut = (ExperimentLog, Vec<f32>, Vec<f32>, Vec<f32>);
+
+fn run_in_process(cfg: ExperimentConfig) -> RunOut {
+    let pool = reference_pool(meta(), cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("in-process run");
+    let gs = coord.global();
+    (log, gs.w.clone(), gs.m.clone(), gs.v.clone())
+}
+
+/// Run `cfg` remotely: bind the coordinator's transport at `listen`,
+/// spawn `agents` device-agent threads against the resolved address —
+/// the same code path the `device-agent` binary runs, minus the process
+/// boundary — and drive the round loop over real sockets.
+fn run_remote(mut cfg: ExperimentConfig, listen: &str, agents: usize) -> RunOut {
+    cfg.transport_listen = listen.into();
+    cfg.transport_agents = agents;
+    cfg.transport_timeout_secs = 30.0;
+    let pool = reference_pool(meta(), cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg.clone(), pool).expect("coordinator");
+    let addr = coord.transport_addr().expect("transport bound");
+    let handles: Vec<_> = (0..agents)
+        .map(|i| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let pool = reference_pool(meta(), 1)?;
+                run_agent(&cfg, &pool, &addr, i)
+            })
+        })
+        .collect();
+    let log = coord.run().expect("remote run");
+    for (i, h) in handles.into_iter().enumerate() {
+        h.join()
+            .expect("agent thread panicked")
+            .unwrap_or_else(|e| panic!("agent {i} failed: {e:#}"));
+    }
+    let gs = coord.global();
+    (log, gs.w.clone(), gs.m.clone(), gs.v.clone())
+}
+
+fn assert_identical(a: &RunOut, b: &RunOut, compare_sim: bool, tag: &str) {
+    assert_eq!(a.1, b.1, "{tag}: global W diverged");
+    assert_eq!(a.2, b.2, "{tag}: global M diverged");
+    assert_eq!(a.3, b.3, "{tag}: global V diverged");
+    assert_eq!(a.0.rounds.len(), b.0.rounds.len(), "{tag}: round count");
+    for (x, y) in a.0.rounds.iter().zip(&b.0.rounds) {
+        let t = format!("{tag} round {}", x.round);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{t}: train loss");
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits(), "{t}: test loss");
+        assert_eq!(
+            x.test_accuracy.to_bits(),
+            y.test_accuracy.to_bits(),
+            "{t}: accuracy"
+        );
+        assert_eq!(x.uplink_bits, y.uplink_bits, "{t}: uplink ledger");
+        assert_eq!(x.downlink_bits, y.downlink_bits, "{t}: downlink ledger");
+        assert_eq!(x.update_norm.to_bits(), y.update_norm.to_bits(), "{t}: norm");
+        if compare_sim {
+            assert_eq!(x.sim_secs.to_bits(), y.sim_secs.to_bits(), "{t}: sim clock");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// compress / compress_wire twin conformance
+// ---------------------------------------------------------------------------
+
+fn recon_eq(a: &Recon, b: &Recon) -> bool {
+    match (a, b) {
+        (Recon::Dense(x), Recon::Dense(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Recon::Sparse(x), Recon::Sparse(y)) => {
+            x.indices == y.indices
+                && x.values.len() == y.values.len()
+                && x.values
+                    .iter()
+                    .zip(&y.values)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        _ => false,
+    }
+}
+
+fn upload_eq(a: &Upload, b: &Upload) -> bool {
+    let opt_eq = |x: &Option<Recon>, y: &Option<Recon>| match (x, y) {
+        (Some(x), Some(y)) => recon_eq(x, y),
+        (None, None) => true,
+        _ => false,
+    };
+    recon_eq(&a.dw, &b.dw)
+        && opt_eq(&a.dm, &b.dm)
+        && opt_eq(&a.dv, &b.dv)
+        && a.weight.to_bits() == b.weight.to_bits()
+        && a.bits == b.bits
+}
+
+/// Deterministic pseudo-random delta (no rand crate in the offline build).
+fn synth_delta(seed: &mut u64, dim: usize, weight: f64) -> LocalDelta {
+    let mut next = || {
+        *seed = seed
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        ((*seed >> 40) as u32) as f32 / (1u32 << 24) as f32 - 0.5
+    };
+    LocalDelta {
+        dw: (0..dim).map(|_| next()).collect(),
+        dm: (0..dim).map(|_| next() * 0.1).collect(),
+        dv: (0..dim).map(|_| (next() * 0.01).abs()).collect(),
+        weight,
+    }
+}
+
+#[test]
+fn compress_wire_is_an_observational_twin_of_compress() {
+    // For EVERY buildable algorithm id: two independently-built instances
+    // fed identical deltas — one through the in-process `compress` path,
+    // one through the full transport path (compress_wire → encode_body →
+    // try_decode → try_into_upload) — must produce bit-identical uploads
+    // with identical priced bits, and the framed body must honor the
+    // byte-accounting invariant the server enforces.
+    let dim = 64;
+    for algo in ALL_WITH_EXTENSIONS {
+        let cfg = base_cfg(algo);
+        let mut local = algorithms::build(&cfg, dim).unwrap();
+        let mut remote = algorithms::build(&cfg, dim).unwrap();
+        let mut seed = 0x5EED_0001u64;
+        for round in 0..4 {
+            for device in 0..cfg.devices {
+                let delta = synth_delta(&mut seed, dim, 30.0 + device as f64);
+                let want = local.compress(round, device, delta.clone());
+                let wire = remote
+                    .compress_wire(round, device, delta)
+                    .unwrap_or_else(|e| panic!("{algo}: compress_wire: {e:#}"));
+                assert_eq!(wire.bits, want.bits, "{algo} r{round} d{device}: priced bits");
+                let body = wire
+                    .encode_body()
+                    .unwrap_or_else(|e| panic!("{algo}: encode_body: {e:#}"));
+                assert_eq!(
+                    body.len() as u64,
+                    wire.bits.div_ceil(8),
+                    "{algo} r{round} d{device}: framed bytes != ceil(bits/8)"
+                );
+                let decoded = WireBody::try_decode(
+                    wire.body.kind(),
+                    dim,
+                    wire.body.k(),
+                    wire.body.levels(),
+                    wire.bits,
+                    &body,
+                )
+                .unwrap_or_else(|e| panic!("{algo} r{round} d{device}: try_decode: {e}"));
+                let got = decoded
+                    .try_into_upload(wire.weight)
+                    .unwrap_or_else(|e| panic!("{algo} r{round} d{device}: try_into_upload: {e}"));
+                assert!(
+                    upload_eq(&want, &got),
+                    "{algo} r{round} d{device}: decoded upload diverged from compress()"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// socket bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_remote_run_is_bit_identical_to_in_process() {
+    // The stateful extremes: fedadam-ssm-qef carries per-device
+    // error-feedback memory through the quantizer, efficient-adam keeps
+    // device-local moments — both live agent-side in a remote run, and
+    // both must still reproduce the in-process bytes.  simtime on: the
+    // simulated clock must survive the transport too.
+    for algo in ["fedadam-ssm-qef", "efficient-adam"] {
+        let mut cfg = base_cfg(algo);
+        cfg.simtime = true;
+        let local = run_in_process(cfg.clone());
+        let remote = run_remote(cfg, "127.0.0.1:0", 2);
+        assert_identical(&local, &remote, true, &format!("{algo} tcp x2"));
+    }
+}
+
+#[test]
+fn remote_identity_holds_across_agent_counts() {
+    // Device ownership is static (device % agents) but the *sharding*
+    // must not matter: 1 agent and 3 agents (devices == agents: one
+    // device each) produce the same bytes.
+    let cfg = base_cfg("fedadam-ssm-q");
+    let local = run_in_process(cfg.clone());
+    for agents in [1usize, 3] {
+        let remote = run_remote(cfg.clone(), "127.0.0.1:0", agents);
+        assert_identical(&local, &remote, false, &format!("ssm-q tcp x{agents}"));
+    }
+}
+
+#[test]
+fn remote_identity_holds_under_the_overlapped_loop() {
+    // pipeline_depth >= 2 overlaps eval with the next round's training;
+    // the remote round driver slots uploads out of arrival order.  The
+    // two reorderings composed must still be a no-op on the bytes.
+    let mut cfg = base_cfg("fedadam-ssm");
+    cfg.rounds = 5;
+    cfg.eval_every = 2;
+    cfg.pipeline_depth = 2;
+    let local = run_in_process(cfg.clone());
+    let remote = run_remote(cfg, "127.0.0.1:0", 2);
+    assert_identical(&local, &remote, false, "ssm tcp depth2");
+}
+
+#[test]
+fn uds_remote_run_is_bit_identical_to_in_process() {
+    let sock = std::env::temp_dir().join(format!("fedadam-transport-{}.sock", std::process::id()));
+    let listen = format!("unix:{}", sock.display());
+    let cfg = base_cfg("fedadam-ssm");
+    let local = run_in_process(cfg.clone());
+    let remote = run_remote(cfg, &listen, 2);
+    assert_identical(&local, &remote, false, "ssm uds x2");
+    assert!(!sock.exists(), "socket file not cleaned up on shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// trust boundary: reconnects, violations, send-side pricing
+// ---------------------------------------------------------------------------
+
+fn client_hello(stream: &mut Stream, fingerprint: u64, agent: u32) {
+    write_frame(
+        stream,
+        &Msg::Hello {
+            version: PROTOCOL_VERSION,
+            fingerprint,
+            agent,
+        }
+        .encode(),
+    )
+    .unwrap();
+    let ack = read_frame(stream).unwrap();
+    let Msg::HelloAck { .. } = Msg::decode(&ack).unwrap() else {
+        panic!("expected HelloAck");
+    };
+}
+
+fn read_round_start(stream: &mut Stream) -> u64 {
+    let payload = read_frame(stream).unwrap();
+    let Msg::RoundStart { round, .. } = Msg::decode(&payload).unwrap() else {
+        panic!("expected RoundStart");
+    };
+    round
+}
+
+fn dense_uplink_frame(round: u64, a: &Assignment, dim: usize, fill: f32) -> Vec<u8> {
+    let body = WireBody::Dense3 {
+        dw: vec![fill; dim],
+        dm: vec![fill * 0.5; dim],
+        dv: vec![fill.abs() * 0.25; dim],
+    };
+    let msg = Msg::Uplink(Uplink {
+        round,
+        slot: a.slot,
+        device: a.device,
+        mean_loss: 1.5 + f64::from(a.slot),
+        weight: a.weight,
+        kind: body.kind(),
+        k: body.k() as u64,
+        levels: body.levels(),
+        bits: body.wire_bits(),
+        body: body.encode(),
+    });
+    let mut frame = Vec::new();
+    write_frame(&mut frame, &msg.encode()).unwrap();
+    frame
+}
+
+#[test]
+fn reconnect_mid_round_is_repaired_by_replay_without_double_count() {
+    // Agent 0 uploads slot 0, drops its connection mid-round, reconnects,
+    // receives the replayed RoundStart, re-sends slot 0 (a benign
+    // duplicate) and finishes slot 1.  The sink must see each slot
+    // exactly once.
+    let dim = 6;
+    let fp = 0xFEED_u64;
+    let mut server = TransportServer::bind("127.0.0.1:0", 1, 2.0, fp, dim).unwrap();
+    let addr = server.addr().to_string();
+    let asn = vec![
+        Assignment { slot: 0, device: 0, weight: 10.0 },
+        Assignment { slot: 1, device: 1, weight: 11.0 },
+    ];
+    let asn_client = asn.clone();
+    let client = std::thread::spawn(move || {
+        let mut s = Stream::connect(&addr).unwrap();
+        client_hello(&mut s, fp, 0);
+        assert_eq!(read_round_start(&mut s), 3);
+        s.write_all(&dense_uplink_frame(3, &asn_client[0], dim, 0.5)).unwrap();
+        s.flush().unwrap();
+        // Let the server ingest slot 0 before the connection dies.
+        std::thread::sleep(Duration::from_millis(100));
+        drop(s);
+
+        let mut s = Stream::connect(&addr).unwrap();
+        client_hello(&mut s, fp, 0);
+        assert_eq!(read_round_start(&mut s), 3, "reconnect must replay the round");
+        s.write_all(&dense_uplink_frame(3, &asn_client[0], dim, 0.5)).unwrap();
+        s.write_all(&dense_uplink_frame(3, &asn_client[1], dim, -0.25)).unwrap();
+        s.flush().unwrap();
+        // Wait for Shutdown so the server owns the teardown order.
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        loop {
+            match read_frame(&mut s) {
+                Ok(p) => {
+                    if matches!(Msg::decode(&p), Ok(Msg::Shutdown)) {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+
+    let mut got: Vec<(usize, usize, u64)> = Vec::new();
+    let w = vec![0.0f32; dim];
+    server
+        .run_round(3, &w, None, None, &asn, |slot, device, mean_loss, upload| {
+            assert!(mean_loss.is_finite());
+            got.push((slot, device, upload.bits));
+            Ok(())
+        })
+        .unwrap();
+    server.shutdown();
+    client.join().unwrap();
+
+    got.sort_unstable();
+    let dense3_bits = 3 * dim as u64 * 32;
+    assert_eq!(
+        got,
+        vec![(0, 0, dense3_bits), (1, 1, dense3_bits)],
+        "each slot must land exactly once despite the replay"
+    );
+}
+
+#[test]
+fn protocol_violation_drops_the_connection_and_surfaces_in_the_timeout() {
+    // A tampered weight echo is a violation: the server drops the
+    // connection, and with no reconnect the round deadline reports both
+    // the missing slots and the violation that caused them.
+    let dim = 4;
+    let fp = 7u64;
+    let mut server = TransportServer::bind("127.0.0.1:0", 1, 0.3, fp, dim).unwrap();
+    let addr = server.addr().to_string();
+    let asn = vec![Assignment { slot: 0, device: 0, weight: 10.0 }];
+    let mut tampered = asn[0].clone();
+    tampered.weight = 10.5;
+    let client = std::thread::spawn(move || {
+        let mut s = Stream::connect(&addr).unwrap();
+        client_hello(&mut s, fp, 0);
+        let round = read_round_start(&mut s);
+        s.write_all(&dense_uplink_frame(round, &tampered, dim, 1.0)).unwrap();
+        s.flush().unwrap();
+        // The server hangs up on us; observe it rather than racing it.
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = read_frame(&mut s);
+    });
+
+    let w = vec![0.0f32; dim];
+    let err = server
+        .run_round(0, &w, None, None, &asn, |_, _, _, _| Ok(()))
+        .expect_err("tampered uplink must not complete the round");
+    let text = format!("{err:#}");
+    assert!(text.contains("timed out"), "unexpected error: {text}");
+    assert!(
+        text.contains("weight echo mismatch"),
+        "timeout must carry the violation: {text}"
+    );
+    client.join().unwrap();
+}
+
+#[test]
+fn fingerprint_mismatch_is_refused_at_registration() {
+    let dim = 4;
+    let mut server = TransportServer::bind("127.0.0.1:0", 1, 0.3, 42, dim).unwrap();
+    let addr = server.addr().to_string();
+    let asn = vec![Assignment { slot: 0, device: 0, weight: 1.0 }];
+    let client = std::thread::spawn(move || {
+        let mut s = Stream::connect(&addr).unwrap();
+        write_frame(
+            &mut s,
+            &Msg::Hello { version: PROTOCOL_VERSION, fingerprint: 43, agent: 0 }.encode(),
+        )
+        .unwrap();
+        // The server refuses the handshake: no ack, connection dropped.
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        assert!(read_frame(&mut s).is_err(), "mismatched fingerprint got an ack");
+    });
+    let w = vec![0.0f32; dim];
+    let err = server
+        .run_round(0, &w, None, None, &asn, |_, _, _, _| Ok(()))
+        .expect_err("no registered agent: the round cannot run");
+    assert!(
+        format!("{err:#}").contains("did not register"),
+        "unexpected error: {err:#}"
+    );
+    client.join().unwrap();
+}
+
+#[test]
+fn mispriced_message_is_refused_at_send_in_every_profile() {
+    // Satellite 3: the priced-bits == framed-bytes invariant is an
+    // `ensure!`, not a debug_assert — it must hold under `--release` too.
+    // Lying about the price in either direction fails encode_body().
+    let body = WireBody::Dense3 {
+        dw: vec![1.0; 5],
+        dm: vec![0.5; 5],
+        dv: vec![0.25; 5],
+    };
+    let honest = body.wire_bits();
+    for lie in [honest + 1, honest + 8, honest.saturating_sub(1), 0] {
+        if lie == honest {
+            continue;
+        }
+        let wire = WireUpload { body: body.clone(), weight: 1.0, bits: lie };
+        assert!(
+            wire.encode_body().is_err(),
+            "encode_body accepted priced bits {lie} for a {honest}-bit body"
+        );
+    }
+    let wire = WireUpload { body, weight: 1.0, bits: honest };
+    let bytes = wire.encode_body().expect("honest pricing must encode");
+    assert_eq!(bytes.len() as u64, honest.div_ceil(8));
+}

@@ -12,17 +12,20 @@
 #      pins the conformance suite to one quantized id per lane
 #   4. resume lanes: the kill/resume + journal-purity suite pinned at
 #      FEDADAM_PIPELINE_DEPTH in {0, 2}
-#   5. clippy -D warnings + rustfmt --check (skipped with a note when the
+#   5. transport lane: the socket bit-identity + hostile-bytes suites,
+#      then the multi-process demo (1 coordinator + 2 agent processes;
+#      its exit status is the byte-identity assert)
+#   6. clippy -D warnings + rustfmt --check (skipped with a note when the
 #      components aren't installed)
-#   6. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
-#   7. benches stay buildable (cargo bench --no-run)
-#   8. perf pin: e2e_round --json vs the checked-in BENCH_e2e_round.json
-#      (prints WARN on >10% wall-clock regression; never fails — absolute
-#      numbers are host-dependent)
+#   7. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
+#   8. benches stay buildable (cargo bench --no-run)
+#   9. perf pins: e2e_round and transport_loopback --json vs the
+#      checked-in BENCH_*.json (prints WARN on >10% wall-clock
+#      regression; never fails — absolute numbers are host-dependent)
 #
 # Usage: scripts/ci_local.sh [--quick]
 #   --quick  skip the determinism + conformance + resume grids
-#            (tier-1 + lint + docs + benches + perf pin only)
+#            (tier-1 + transport + lint + docs + benches + perf pins only)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -70,6 +73,14 @@ if [[ "$QUICK" == 0 ]]; then
   done
 fi
 
+step "transport: socket suite + hostile-bytes properties"
+cargo test -q --test transport
+cargo test -q --test proptests -- \
+  prop_frame_mutation prop_msg_mutation prop_wire_body_mutation
+
+step "transport: multi-process demo (exit status = byte-identity)"
+cargo run --release --example multiprocess_demo
+
 step "lint: clippy + rustfmt"
 if cargo clippy --version >/dev/null 2>&1; then
   cargo clippy --all-targets -- -D warnings
@@ -94,5 +105,11 @@ FEDADAM_BENCH_QUICK=1 \
   cargo bench --bench e2e_round -- --json \
     --json-out target/BENCH_e2e_round.json \
     --baseline BENCH_e2e_round.json
+
+step "perf pin: transport_loopback --json vs BENCH_transport_loopback.json (warn-only)"
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench transport_loopback -- --json \
+    --json-out target/BENCH_transport_loopback.json \
+    --baseline BENCH_transport_loopback.json
 
 step "ci_local: all gates green"
