@@ -1,0 +1,362 @@
+//! Fleet-scaling bench: per-round cost must be O(cohort), not O(fleet).
+//!
+//! A registered fleet of 10⁶ devices is allowed to cost O(fleet) exactly
+//! once — at registration (corpus synthesis, [`ShardPlan`] build, alias
+//! table, latency model).  Every *round* after that may only touch the
+//! sampled cohort: lazy device synthesis from the shard plan, lazily
+//! materialized residual/moment entries, O(1) alias draws.  This bench
+//! pins that contract on the pure-Rust reference backend:
+//!
+//! 1. **Scaling sweep** — identical per-round workload (importance
+//!    sampling, ~8-device cohort, 1 sample per device, simtime on) at
+//!    fleet sizes 10³ / 10⁵ (and 10⁶ unless `FEDADAM_BENCH_QUICK=1`),
+//!    timing `step_round` only (construction is untimed registration).
+//!    Asserts the median per-round wall-clock at every larger fleet stays
+//!    under 1.25× the 10³ figure (both sides floored at 200 µs so timer
+//!    noise on a sub-100 µs round cannot fake a regression), and that
+//!    resident-memory growth across the timed rounds stays flat (8 MB
+//!    allocator-noise floor — an O(fleet) dense-state regression at 10⁶
+//!    devices allocates hundreds of MB and cannot hide under it).
+//!
+//! 2. **Conformance leg** — at fleet 10³, every `CONFORMANCE_ZOO` id
+//!    (plus `fedadam-ssm-ef`) runs the full round loop twice: residuals
+//!    dense in RAM (`residual_resident_cap = 0`) vs a 2-entry cap
+//!    spilling to disk.  Final weights and every logged metric outside
+//!    `wall_secs` must be bit-identical — spilling is a memory placement,
+//!    never a semantics change.
+//!
+//! Run: `cargo bench --bench fleet_scaling`.
+//!
+//! **JSON mode** (`-- --json`) — the CI pin: emits the per-fleet medians,
+//! RSS readings and flatness ratios as `BENCH_fleet_scaling.json`
+//! (`--json-out PATH` to redirect).  With `--baseline PATH` fresh medians
+//! are compared against a checked-in file and any >10% regression prints
+//! a `WARN:` line (informational — absolute numbers are host-dependent,
+//! so the comparison never fails the build).
+
+use std::collections::BTreeMap;
+
+use fedadam_ssm::algorithms::CONFORMANCE_ZOO;
+use fedadam_ssm::benchlib::{black_box, from_env, Bench};
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool};
+use fedadam_ssm::util::json::{self, Value};
+
+const INPUT: [usize; 3] = [4, 4, 1]; // row 16; dim = 10 * (16 + 1) = 170
+const CLASSES: usize = 10; // matches SyntheticSpec::for_input_shape
+/// Target cohort size at every fleet size — the per-round workload.
+const COHORT: usize = 8;
+/// Wall-clock flatness bound between 10³ and the largest fleet.
+const FLAT_RATIO: f64 = 1.25;
+/// Median floor (ns): below this, timer noise dominates signal.
+const FLOOR_NS: f64 = 200_000.0;
+/// RSS-growth allocator-noise floor (KiB).
+const RSS_FLOOR_KB: f64 = 8_192.0;
+
+/// One sample per device, IID, ~8-device cohorts regardless of fleet
+/// size: the per-round *work* is constant, so any wall-clock growth in
+/// `fleet` is an O(fleet) term leaking into the round path.
+fn fleet_cfg(fleet: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("fleet-{fleet}");
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = "fedadam-ssm-ef".into(); // per-device EF residuals
+    cfg.rounds = usize::MAX; // stepped manually
+    cfg.devices = fleet;
+    cfg.train_samples = fleet;
+    cfg.test_samples = 64;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 1;
+    cfg.eval_every = usize::MAX - 1; // exclude eval from the round cost
+    cfg.participation = COHORT as f64 / fleet as f64;
+    cfg.participation_mode = ParticipationMode::Importance; // O(1) draws
+    cfg.simtime = true;
+    cfg.seed = 97;
+    cfg.num_workers = 2;
+    cfg
+}
+
+fn build_coord(cfg: ExperimentConfig) -> Coordinator {
+    let meta = reference_meta(&INPUT, CLASSES, 8, 32, 1);
+    let pool = reference_pool(meta, cfg.num_workers).expect("reference pool");
+    Coordinator::with_pool(cfg, pool).expect("coordinator")
+}
+
+/// Resident set size in KiB (`None` off Linux / unreadable procfs).
+fn rss_kb() -> Option<f64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse::<f64>().ok()
+}
+
+struct FleetCase {
+    fleet: usize,
+    median_round_ns: f64,
+    rss_after_build_kb: Option<f64>,
+    rss_round_growth_kb: Option<f64>,
+    cohort_devices: u64,
+}
+
+/// Build (untimed — registration is allowed O(fleet)), then time
+/// `step_round` and meter RSS growth across the timed rounds.
+fn measure_fleet(bench: &mut Bench, fleet: usize) -> FleetCase {
+    let mut coord = build_coord(fleet_cfg(fleet));
+    let rss_after_build = rss_kb();
+    let result = bench.run(format!("per-round @ fleet={fleet}"), || {
+        black_box(coord.step_round().expect("round"));
+    });
+    let median_round_ns = result.p50_ns;
+    let rss_after_rounds = rss_kb();
+    let growth = match (rss_after_build, rss_after_rounds) {
+        (Some(a), Some(b)) => Some((b - a).max(0.0)),
+        _ => None,
+    };
+    let cohort_devices = coord
+        .log()
+        .rounds
+        .last()
+        .map(|r| r.cohort_devices)
+        .unwrap_or(0);
+    FleetCase {
+        fleet,
+        median_round_ns,
+        rss_after_build_kb: rss_after_build,
+        rss_round_growth_kb: growth,
+        cohort_devices,
+    }
+}
+
+/// Full run of `algorithm` at fleet 10³ with the given residual tiering.
+fn conformance_run(algorithm: &str, cap: usize, spill: &str) -> (ExperimentLog, Vec<f32>) {
+    let mut cfg = fleet_cfg(1_000);
+    cfg.name = format!("zoo-{algorithm}-cap{cap}");
+    cfg.algorithm = algorithm.into();
+    cfg.rounds = 3;
+    cfg.eval_every = 2;
+    cfg.participation_mode = ParticipationMode::Uniform; // legacy stream
+    cfg.warmup_rounds = 1; // onebit reaches its DeviceLocal phase
+    cfg.residual_resident_cap = cap;
+    cfg.residual_spill_dir = spill.into();
+    let mut coord = build_coord(cfg);
+    let log = coord.run().expect("run");
+    let w = coord.global().w.clone();
+    (log, w)
+}
+
+/// Every logged field outside `wall_secs` must match to the bit.
+fn assert_logs_bit_identical(id: &str, dense: &ExperimentLog, spilled: &ExperimentLog) {
+    assert_eq!(dense.rounds.len(), spilled.rounds.len(), "{id}: row count");
+    for (a, b) in dense.rounds.iter().zip(&spilled.rounds) {
+        let r = a.round;
+        assert_eq!(a.round, b.round, "{id}");
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{id} r{r}");
+        assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{id} r{r}");
+        assert_eq!(
+            a.test_accuracy.to_bits(),
+            b.test_accuracy.to_bits(),
+            "{id} r{r}"
+        );
+        assert_eq!(a.uplink_bits, b.uplink_bits, "{id} r{r}");
+        assert_eq!(a.downlink_bits, b.downlink_bits, "{id} r{r}");
+        assert_eq!(a.sim_secs.to_bits(), b.sim_secs.to_bits(), "{id} r{r}");
+        assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{id} r{r}");
+        assert_eq!(a.fleet_devices, b.fleet_devices, "{id} r{r}");
+        assert_eq!(a.cohort_devices, b.cohort_devices, "{id} r{r}");
+    }
+}
+
+/// The spill-tiering conformance leg; returns the ids exercised.
+fn run_conformance() -> usize {
+    let spill = std::env::temp_dir().join(format!("fedadam-fleet-spill-{}", std::process::id()));
+    std::fs::create_dir_all(&spill).expect("spill dir");
+    let spill_s = spill.to_string_lossy().into_owned();
+    let mut ids: Vec<&str> = CONFORMANCE_ZOO.to_vec();
+    if !ids.contains(&"fedadam-ssm-ef") {
+        ids.push("fedadam-ssm-ef");
+    }
+    for id in &ids {
+        let (dense_log, dense_w) = conformance_run(id, 0, "");
+        let (spill_log, spill_w) = conformance_run(id, 2, &spill_s);
+        assert_eq!(
+            dense_w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            spill_w.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "{id}: final weights diverged under residual spilling"
+        );
+        assert_logs_bit_identical(id, &dense_log, &spill_log);
+    }
+    let _ = std::fs::remove_dir_all(&spill);
+    ids.len()
+}
+
+fn flatness_asserts(cases: &[FleetCase]) -> BTreeMap<String, f64> {
+    let base = &cases[0];
+    let mut ratios = BTreeMap::new();
+    for c in &cases[1..] {
+        let ratio =
+            c.median_round_ns.max(FLOOR_NS) / base.median_round_ns.max(FLOOR_NS);
+        ratios.insert(format!("wall_{}_over_{}", c.fleet, base.fleet), ratio);
+        assert!(
+            ratio < FLAT_RATIO,
+            "per-round wall-clock is not flat in fleet size: {} at fleet {} vs {} at fleet {} ({ratio:.2}x >= {FLAT_RATIO}x)",
+            c.median_round_ns,
+            c.fleet,
+            base.median_round_ns,
+            base.fleet,
+        );
+        if let (Some(g), Some(g0)) = (c.rss_round_growth_kb, base.rss_round_growth_kb) {
+            let bound = (g0 * FLAT_RATIO).max(RSS_FLOOR_KB);
+            assert!(
+                g <= bound,
+                "resident memory grew {g:.0} KiB across rounds at fleet {} (bound {bound:.0} KiB) — O(fleet) state is leaking into the round path",
+                c.fleet,
+            );
+        }
+    }
+    ratios
+}
+
+/// Warn (never fail) when a fresh median regresses >10% vs `path`.
+fn compare_with_baseline(path: &str, medians: &BTreeMap<String, f64>) {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("no baseline at {path}: {e}");
+            return;
+        }
+    };
+    let base = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("unparseable baseline {path}: {e}");
+            return;
+        }
+    };
+    let Some(base_cases) = base.get("cases").and_then(|c| c.as_arr()) else {
+        eprintln!("baseline {path} has no cases array");
+        return;
+    };
+    let mut warned = false;
+    for c in base_cases {
+        let name = c.get("name").and_then(|v| v.as_str());
+        let old = c.get("median_round_ns").and_then(|v| v.as_f64());
+        let (Some(name), Some(old)) = (name, old) else {
+            continue;
+        };
+        let Some(&new) = medians.get(name) else {
+            continue;
+        };
+        let ratio = new / old.max(1.0);
+        if ratio > 1.10 {
+            warned = true;
+            println!(
+                "WARN: {name}: median round {:.2} ms vs baseline {:.2} ms (+{:.0}%)",
+                new / 1e6,
+                old / 1e6,
+                (ratio - 1.0) * 100.0
+            );
+        } else {
+            println!("ok: {name}: {ratio:.2}x baseline");
+        }
+    }
+    if !warned {
+        println!("no >10% wall-clock regressions vs {path}");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_on = args.iter().any(|a| a == "--json");
+    let opt = |flag: &str| {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+
+    let quick = std::env::var("FEDADAM_BENCH_QUICK").is_ok();
+    let mut bench = from_env();
+    bench.max_iters = 300;
+
+    // ---- Scaling sweep (10⁶ is local-only: ~100 MB corpus + O(fleet)
+    // registration make it too heavy for the CI lane) ----
+    let mut fleets = vec![1_000usize, 100_000];
+    if !quick {
+        fleets.push(1_000_000);
+    }
+    let cases: Vec<FleetCase> = fleets
+        .iter()
+        .map(|&fleet| measure_fleet(&mut bench, fleet))
+        .collect();
+    for c in &cases {
+        assert_eq!(
+            c.cohort_devices, COHORT as u64,
+            "fleet {}: cohort drifted from the constant workload",
+            c.fleet
+        );
+    }
+    let ratios = flatness_asserts(&cases);
+
+    // ---- Spill-tiering conformance at fleet 10³ ----
+    let zoo_ids = run_conformance();
+    println!(
+        "conformance: {zoo_ids} algorithm ids bit-identical dense vs spilled residuals"
+    );
+
+    bench.report("fleet scaling (reference backend)");
+    for (name, r) in &ratios {
+        println!("{name}: {r:.3}x");
+    }
+
+    if json_on {
+        let out_path = opt("--json-out").unwrap_or_else(|| "BENCH_fleet_scaling.json".into());
+        let baseline = opt("--baseline");
+        let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+        let mut case_vals: Vec<Value> = Vec::new();
+        for c in &cases {
+            let name = format!("fleet-{}", c.fleet);
+            medians.insert(name.clone(), c.median_round_ns);
+            let mut obj = BTreeMap::new();
+            obj.insert("name".into(), Value::Str(name));
+            obj.insert("fleet".into(), Value::Num(c.fleet as f64));
+            obj.insert("cohort".into(), Value::Num(c.cohort_devices as f64));
+            obj.insert("median_round_ns".into(), Value::Num(c.median_round_ns));
+            obj.insert(
+                "rss_after_build_kb".into(),
+                c.rss_after_build_kb.map(Value::Num).unwrap_or(Value::Null),
+            );
+            obj.insert(
+                "rss_round_growth_kb".into(),
+                c.rss_round_growth_kb.map(Value::Num).unwrap_or(Value::Null),
+            );
+            case_vals.push(Value::Obj(obj));
+        }
+        let mut flat = BTreeMap::new();
+        for (name, r) in &ratios {
+            flat.insert(name.clone(), Value::Num(*r));
+        }
+        let mut conf = BTreeMap::new();
+        conf.insert("fleet".into(), Value::Num(1_000.0));
+        conf.insert("ids".into(), Value::Num(zoo_ids as f64));
+        conf.insert("bit_identical".into(), Value::Bool(true));
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Value::Str("fleet_scaling".into()));
+        root.insert("backend".into(), Value::Str("reference-linear".into()));
+        root.insert("algorithm".into(), Value::Str("fedadam-ssm-ef".into()));
+        root.insert(
+            "participation_mode".into(),
+            Value::Str("importance".into()),
+        );
+        root.insert("flat_ratio_bound".into(), Value::Num(FLAT_RATIO));
+        root.insert("cases".into(), Value::Arr(case_vals));
+        root.insert("flatness".into(), Value::Obj(flat));
+        root.insert("conformance".into(), Value::Obj(conf));
+        let doc = Value::Obj(root);
+        std::fs::write(&out_path, doc.render() + "\n").expect("writing bench json");
+        println!("wrote {out_path}");
+        if let Some(bp) = baseline {
+            compare_with_baseline(&bp, &medians);
+        }
+    }
+}

@@ -8,6 +8,7 @@
 
 use anyhow::{ensure, Result};
 
+use super::residual_store::ResidualStore;
 use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
 use crate::quant::{uniform_compress, uniform_decompress, ErrorFeedback, UniformPacket};
@@ -17,19 +18,21 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 pub struct EfficientAdam {
     dim: usize,
     levels: u32,
-    /// Device-side EF memories.
-    ef_up: Vec<ErrorFeedback>,
-    /// Server-side EF memory for the broadcast direction.
+    /// Device-side EF residuals, one `dim`-wide entry per *touched*
+    /// device (see [`ResidualStore`]).
+    ef_up: ResidualStore,
+    /// Server-side EF memory for the broadcast direction (a single dense
+    /// vector — the server always participates, no point spilling it).
     ef_down: ErrorFeedback,
 }
 
 impl EfficientAdam {
-    pub fn new(dim: usize, devices: usize, levels: u32) -> Self {
+    pub fn new(dim: usize, levels: u32, resident_cap: usize, spill_dir: &str) -> Self {
         assert!(levels >= 2);
         EfficientAdam {
             dim,
             levels,
-            ef_up: (0..devices).map(|_| ErrorFeedback::new(dim)).collect(),
+            ef_up: ResidualStore::new(dim, resident_cap, spill_dir),
             ef_down: ErrorFeedback::new(dim),
         }
     }
@@ -38,11 +41,16 @@ impl EfficientAdam {
     /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
     /// exactly once per call.
     fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (UniformPacket, Upload) {
-        let ef = &mut self.ef_up[device];
+        // Round-trip the store entry through a scratch `ErrorFeedback`
+        // (plain f32 copies — bit-exact) to reuse the quantizer's EF ops.
+        let entry = self.ef_up.get_mut(device as u64);
+        let mut ef = ErrorFeedback::new(entry.len());
+        ef.residual.copy_from_slice(entry);
         let compensated = ef.compensate(&delta.dw);
         let packet = uniform_compress(&compensated, self.levels);
         let deq = uniform_decompress(&packet);
         ef.update(&compensated, &deq);
+        entry.copy_from_slice(&ef.residual);
         let bits = packet.wire_bits();
         debug_assert_eq!(bits, cost::uniform(self.dim, self.levels as usize));
         let up = Upload {
@@ -98,20 +106,12 @@ impl Algorithm for EfficientAdam {
     }
 
     fn save_state(&self, out: &mut ByteWriter) {
-        out.put_usize(self.ef_up.len());
-        for e in &self.ef_up {
-            out.put_f32s(&e.residual);
-        }
+        self.ef_up.save_state(out);
         out.put_f32s(&self.ef_down.residual);
     }
 
     fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
-        let n = input.take_usize()?;
-        ensure!(n == self.ef_up.len(), "snapshot has {n} EF residuals, config builds {}", self.ef_up.len());
-        for e in &mut self.ef_up {
-            e.residual = input.take_f32s()?;
-            ensure!(e.residual.len() == self.dim, "EF residual dim mismatch");
-        }
+        self.ef_up.load_state(input)?;
         self.ef_down.residual = input.take_f32s()?;
         ensure!(self.ef_down.residual.len() == self.dim, "EF residual dim mismatch");
         Ok(())
@@ -133,8 +133,8 @@ mod tests {
 
     #[test]
     fn wire_cost_scales_with_levels() {
-        let mut a4 = EfficientAdam::new(64, 1, 4); // 2 bits/lane
-        let mut a16 = EfficientAdam::new(64, 1, 16); // 4 bits/lane
+        let mut a4 = EfficientAdam::new(64, 4, 0, ""); // 2 bits/lane
+        let mut a16 = EfficientAdam::new(64, 16, 0, ""); // 4 bits/lane
         let b4 = a4.compress(0, 0, delta(64)).bits;
         let b16 = a16.compress(0, 0, delta(64)).bits;
         assert_eq!(b4, 64 * 2 + 32);
@@ -143,7 +143,7 @@ mod tests {
 
     #[test]
     fn moments_never_uploaded() {
-        let mut a = EfficientAdam::new(16, 1, 16);
+        let mut a = EfficientAdam::new(16, 16, 0, "");
         let up = a.compress(0, 0, delta(16));
         assert!(up.dm.is_none() && up.dv.is_none());
         assert_eq!(a.momentum_policy(0), MomentumPolicy::DeviceLocal);
@@ -153,7 +153,7 @@ mod tests {
     fn two_way_ef_converges_on_repeat() {
         // Sending the same aggregate repeatedly: cumulative broadcast
         // should converge to the true value thanks to server EF.
-        let mut a = EfficientAdam::new(32, 1, 4);
+        let mut a = EfficientAdam::new(32, 4, 0, "");
         let truth: Vec<f32> = (0..32).map(|i| (i as f32) * 0.01).collect();
         let mut sent = vec![0.0f32; 32];
         let rounds = 100;

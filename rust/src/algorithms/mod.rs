@@ -37,6 +37,7 @@ pub mod fairness;
 pub mod fedadam;
 pub mod fedsgd;
 pub mod onebit;
+pub mod residual_store;
 pub mod ssm;
 pub mod ssm_ef;
 pub mod ssm_q;
@@ -211,19 +212,31 @@ pub fn build(cfg: &ExperimentConfig, dim: usize) -> Result<Box<dyn Algorithm>> {
         "fedadam-ssm-m" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::M)),
         "fedadam-ssm-v" => Box::new(ssm::FedAdamSsm::new(dim, k, ssm::MaskSource::V)),
         "fairness-top" => Box::new(fairness::FairnessTop::new(dim, k)),
-        "fedadam-ssm-ef" => Box::new(ssm_ef::FedAdamSsmEf::new(dim, k, cfg.devices)),
+        "fedadam-ssm-ef" => Box::new(ssm_ef::FedAdamSsmEf::new(
+            dim,
+            k,
+            cfg.residual_resident_cap,
+            &cfg.residual_spill_dir,
+        )),
         "fedadam-ssm-q" => Box::new(ssm_q::FedAdamSsmQ::new(dim, k, cfg.quant_levels as u32)),
         "fedadam-ssm-qef" => Box::new(ssm_q::FedAdamSsmQEf::new(
             dim,
             k,
-            cfg.devices,
             cfg.quant_levels as u32,
+            cfg.residual_resident_cap,
+            &cfg.residual_spill_dir,
         )),
-        "onebit-adam" => Box::new(onebit::OneBitAdam::new(dim, cfg.devices, cfg.warmup_rounds)),
+        "onebit-adam" => Box::new(onebit::OneBitAdam::new(
+            dim,
+            cfg.warmup_rounds,
+            cfg.residual_resident_cap,
+            &cfg.residual_spill_dir,
+        )),
         "efficient-adam" => Box::new(efficient::EfficientAdam::new(
             dim,
-            cfg.devices,
             cfg.quant_levels as u32,
+            cfg.residual_resident_cap,
+            &cfg.residual_spill_dir,
         )),
         "fedsgd" => Box::new(fedsgd::FedSgd::new(dim)),
         other => bail!(

@@ -16,8 +16,9 @@
 //! cost match [29]; Table I's "∞" behaviour reproduces because the frozen,
 //! never-aggregated moments degrade exactly as the paper argues.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
+use super::residual_store::ResidualStore;
 use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, MomentumPolicy, Recon, Upload};
 use crate::quant::{onebit_compress, onebit_decompress, ErrorFeedback, OneBitPacket};
@@ -27,16 +28,17 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 pub struct OneBitAdam {
     dim: usize,
     warmup_rounds: usize,
-    /// Per-device error-feedback memories (compression phase).
-    ef: Vec<ErrorFeedback>,
+    /// Per-device error-feedback residuals (compression phase), one
+    /// `dim`-wide entry per *touched* device (see [`ResidualStore`]).
+    ef: ResidualStore,
 }
 
 impl OneBitAdam {
-    pub fn new(dim: usize, devices: usize, warmup_rounds: usize) -> Self {
+    pub fn new(dim: usize, warmup_rounds: usize, resident_cap: usize, spill_dir: &str) -> Self {
         OneBitAdam {
             dim,
             warmup_rounds,
-            ef: (0..devices).map(|_| ErrorFeedback::new(dim)).collect(),
+            ef: ResidualStore::new(dim, resident_cap, spill_dir),
         }
     }
 
@@ -48,7 +50,13 @@ impl OneBitAdam {
     /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
     /// exactly once per call.
     fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (OneBitPacket, Upload) {
-        let packet = onebit_compress(&delta.dw, &mut self.ef[device]);
+        // The quantizer works on an `ErrorFeedback`; round-trip the store
+        // entry through a scratch one (plain f32 copies — bit-exact).
+        let entry = self.ef.get_mut(device as u64);
+        let mut scratch = ErrorFeedback::new(entry.len());
+        scratch.residual.copy_from_slice(entry);
+        let packet = onebit_compress(&delta.dw, &mut scratch);
+        entry.copy_from_slice(&scratch.residual);
         let bits = packet.wire_bits();
         debug_assert_eq!(bits, cost::onebit(self.dim));
         let up = Upload {
@@ -133,20 +141,11 @@ impl Algorithm for OneBitAdam {
     }
 
     fn save_state(&self, out: &mut ByteWriter) {
-        out.put_usize(self.ef.len());
-        for e in &self.ef {
-            out.put_f32s(&e.residual);
-        }
+        self.ef.save_state(out);
     }
 
     fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
-        let n = input.take_usize()?;
-        ensure!(n == self.ef.len(), "snapshot has {n} EF residuals, config builds {}", self.ef.len());
-        for e in &mut self.ef {
-            e.residual = input.take_f32s()?;
-            ensure!(e.residual.len() == self.dim, "EF residual dim mismatch");
-        }
-        Ok(())
+        self.ef.load_state(input)
     }
 }
 
@@ -165,7 +164,7 @@ mod tests {
 
     #[test]
     fn warmup_is_dense_then_onebit() {
-        let mut a = OneBitAdam::new(8, 2, 2);
+        let mut a = OneBitAdam::new(8, 2, 0, "");
         let up0 = a.compress(0, 0, delta(8));
         assert_eq!(up0.bits, cost::fedadam_dense(8));
         assert!(up0.dm.is_some());
@@ -187,18 +186,18 @@ mod tests {
 
     #[test]
     fn per_device_error_feedback_is_independent() {
-        let mut a = OneBitAdam::new(4, 2, 0);
+        let mut a = OneBitAdam::new(4, 0, 0, "");
         let d0 = delta(4);
         a.compress(0, 0, d0.clone());
-        let r0 = a.ef[0].residual.clone();
-        assert_eq!(a.ef[1].residual, vec![0.0; 4]);
+        let r0 = a.ef.peek(0).unwrap();
+        assert_eq!(a.ef.peek(1), None, "device 1 untouched so far");
         a.compress(0, 1, d0);
-        assert_eq!(a.ef[1].residual, r0);
+        assert_eq!(a.ef.peek(1).unwrap(), r0);
     }
 
     #[test]
     fn postprocess_requantizes_broadcast() {
-        let mut a = OneBitAdam::new(4, 1, 0);
+        let mut a = OneBitAdam::new(4, 0, 0, "");
         let mut agg = Aggregate {
             dw: vec![0.4, -0.2, 0.1, -0.5],
             dm: None,

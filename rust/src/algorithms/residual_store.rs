@@ -1,0 +1,436 @@
+//! Lazily materialized, disk-spilling per-device residual store.
+//!
+//! The `-ef` / `-qef` / `onebit` / `efficient` algorithm ids and the
+//! coordinator's device-local Adam moments all keep **per-device** state:
+//! fixed-width `f32` vectors indexed by device id.  Holding them dense
+//! (`Vec<Memory>` sized to the fleet) costs O(num_devices) RAM even though
+//! a round only touches O(cohort) devices — a non-starter at the 10⁶+
+//! registered devices cross-device FL is motivated by.
+//!
+//! [`ResidualStore`] replaces the dense vectors with three tiers:
+//!
+//! 1. **untouched** — a device the run never sampled owns *no* state at
+//!    all; its entry is defined to be all-zeros and materializes on first
+//!    [`ResidualStore::get_mut`];
+//! 2. **resident** — up to `resident_cap` recently-touched entries live in
+//!    RAM (`resident_cap = 0` means unbounded, i.e. dense-equivalent);
+//! 3. **spilled** — beyond the cap, the least-recently-used entry is
+//!    evicted to a fixed-slot spill file under `spill_dir` and reloaded on
+//!    the next touch.
+//!
+//! ## Exact-rehydration contract
+//!
+//! Spilling is invisible to the numbers: entries round-trip through disk
+//! as **raw little-endian `f32` bits**, so `-0.0`, subnormals and even NaN
+//! payloads survive evict→reload bit-identically, and a capped store is
+//! bit-identical to an unbounded one for every read sequence.  Snapshots
+//! ([`ResidualStore::save_state`]) serialize only *touched* entries (in
+//! ascending id order), so journal snapshots stay O(touched), and
+//! [`ResidualStore::load_state`] restores them regardless of which tier
+//! each entry happened to occupy when saved.
+//!
+//! ```
+//! use fedadam_ssm::algorithms::residual_store::ResidualStore;
+//!
+//! let dir = std::env::temp_dir().join(format!("fedadam-doc-rs-{}", std::process::id()));
+//! std::fs::create_dir_all(&dir).unwrap();
+//!
+//! // Cap of 1 resident entry: touching a second device evicts the first.
+//! let mut store = ResidualStore::new(3, 1, dir.to_str().unwrap());
+//! store.get_mut(7).copy_from_slice(&[-0.0, 1.0e-42, f32::MIN_POSITIVE]);
+//! store.get_mut(999_983); // device id far above the cap — evicts 7 to disk
+//! assert!(!store.is_resident(7));
+//!
+//! // Evict → reload is bit-identical, signed zero and subnormal included.
+//! let back = store.peek(7).unwrap();
+//! assert_eq!(back[0].to_bits(), (-0.0f32).to_bits());
+//! assert_eq!(back[1].to_bits(), 1.0e-42f32.to_bits());
+//! assert_eq!(back[2].to_bits(), f32::MIN_POSITIVE.to_bits());
+//!
+//! drop(store); // removes its spill file
+//! std::fs::remove_dir_all(&dir).ok();
+//! ```
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{ensure, Result};
+
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Monotonic suffix so several stores (coordinator moments + algorithm
+/// residuals) can share one `spill_dir` without filename collisions.
+static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// One resident entry: the vector plus its LRU tick.
+#[derive(Clone, Debug)]
+struct Resident {
+    data: Vec<f32>,
+    tick: u64,
+}
+
+/// A sparse, LRU-spilling map from device id to a fixed-width `f32`
+/// vector (see the [module docs](self) for the tiering and the
+/// exact-rehydration contract).
+///
+/// All disk I/O goes through [`std::os::unix::fs::FileExt`] positioned
+/// reads/writes on one spill file, so reads need only `&self` — which is
+/// what lets [`ResidualStore::save_state`] match the `&self` signature of
+/// `Algorithm::save_state`.  I/O errors on the spill path panic with
+/// context: the store cannot return a partial entry without silently
+/// breaking bit-identity.
+#[derive(Debug)]
+pub struct ResidualStore {
+    entry_dim: usize,
+    resident_cap: usize,
+    spill_dir: String,
+    store_id: u64,
+    resident: BTreeMap<u64, Resident>,
+    /// Spilled entries: device id → fixed slot index in the spill file.
+    /// A slot is assigned on first spill and owned for the store's life.
+    slots: BTreeMap<u64, u64>,
+    next_slot: u64,
+    spill: Option<(File, PathBuf)>,
+    tick: u64,
+}
+
+impl ResidualStore {
+    /// A store of `entry_dim`-wide entries keeping at most `resident_cap`
+    /// of them in RAM (`0` = unbounded, never touches disk).  `spill_dir`
+    /// may be empty iff the cap is `0`; the spill file itself is created
+    /// lazily on the first eviction and removed on drop.
+    pub fn new(entry_dim: usize, resident_cap: usize, spill_dir: &str) -> ResidualStore {
+        assert!(entry_dim > 0, "residual store entries must be non-empty");
+        assert!(
+            resident_cap == 0 || !spill_dir.is_empty(),
+            "residual_resident_cap > 0 requires residual_spill_dir"
+        );
+        ResidualStore {
+            entry_dim,
+            resident_cap,
+            spill_dir: spill_dir.to_string(),
+            store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            resident: BTreeMap::new(),
+            slots: BTreeMap::new(),
+            next_slot: 0,
+            spill: None,
+            tick: 0,
+        }
+    }
+
+    /// Width of every entry.
+    pub fn entry_dim(&self) -> usize {
+        self.entry_dim
+    }
+
+    /// Number of entries ever touched.  A resident entry may *also* own a
+    /// spill slot from an earlier eviction, so this is a union count.
+    pub fn touched(&self) -> usize {
+        let resident_only = self
+            .resident
+            .keys()
+            .filter(|id| !self.slots.contains_key(id))
+            .count();
+        resident_only + self.slots.len()
+    }
+
+    /// Whether `id`'s entry currently lives in RAM (diagnostics / tests;
+    /// the answer never affects values, only where they are stored).
+    pub fn is_resident(&self, id: u64) -> bool {
+        self.resident.contains_key(&id)
+    }
+
+    /// Mutable access to `id`'s entry, materializing zeros on first touch
+    /// and rehydrating from the spill file if it was evicted.  May evict
+    /// the least-recently-used *other* entry to disk.
+    pub fn get_mut(&mut self, id: u64) -> &mut [f32] {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.resident.contains_key(&id) {
+            // A previously-spilled entry keeps its slot for the next
+            // eviction; the resident copy shadows the disk copy meanwhile.
+            let data = match self.slots.get(&id).copied() {
+                Some(slot) => self.read_slot(slot),
+                None => vec![0.0f32; self.entry_dim],
+            };
+            self.evict_down_to(self.resident_cap.saturating_sub(1), id);
+            self.resident.insert(id, Resident { data, tick });
+        }
+        let entry = self.resident.get_mut(&id).expect("entry just ensured resident");
+        entry.tick = tick;
+        &mut entry.data
+    }
+
+    /// Non-promoting read of `id`'s entry from whichever tier holds it;
+    /// `None` if the device was never touched.  Does not move the entry
+    /// or advance the LRU clock — safe for tests and snapshots.
+    pub fn peek(&self, id: u64) -> Option<Vec<f32>> {
+        if let Some(entry) = self.resident.get(&id) {
+            return Some(entry.data.clone());
+        }
+        self.slots.get(&id).map(|&slot| self.read_slot(slot))
+    }
+
+    /// Serialize every touched entry (ascending id, raw `f32` bits) —
+    /// O(touched), not O(fleet).  Read-only: tiering is unchanged.
+    pub fn save_state(&self, out: &mut ByteWriter) {
+        let mut ids: Vec<u64> = self.resident.keys().chain(self.slots.keys()).copied().collect();
+        ids.sort_unstable();
+        ids.dedup();
+        out.put_usize(ids.len());
+        for id in ids {
+            out.put_u64(id);
+            let data = self.peek(id).expect("touched id must have an entry");
+            out.put_f32s(&data);
+        }
+    }
+
+    /// Restore an exact [`ResidualStore::save_state`] image: all prior
+    /// entries (and the spill file) are discarded, then the snapshot's
+    /// entries are re-inserted in ascending id order under the same cap,
+    /// re-spilling as needed.
+    pub fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
+        self.resident.clear();
+        self.slots.clear();
+        self.next_slot = 0;
+        self.tick = 0;
+        if let Some((file, _)) = &self.spill {
+            file.set_len(0)
+                .unwrap_or_else(|e| panic!("residual store: truncating spill file: {e}"));
+        }
+        let n = input.take_usize()?;
+        let mut prev: Option<u64> = None;
+        for _ in 0..n {
+            let id = input.take_u64()?;
+            ensure!(
+                prev.map_or(true, |p| p < id),
+                "residual store snapshot ids must be strictly ascending"
+            );
+            prev = Some(id);
+            let data = input.take_f32s()?;
+            ensure!(
+                data.len() == self.entry_dim,
+                "residual store snapshot entry has dim {}, store expects {}",
+                data.len(),
+                self.entry_dim
+            );
+            self.tick += 1;
+            let tick = self.tick;
+            self.evict_down_to(self.resident_cap.saturating_sub(1), id);
+            self.resident.insert(id, Resident { data, tick });
+        }
+        Ok(())
+    }
+
+    /// Evict least-recently-used residents until at most `keep` remain
+    /// (no-op when the cap is `0` = unbounded).  `incoming` is the id
+    /// about to be inserted — never evicted, and exempt from the count.
+    fn evict_down_to(&mut self, keep: usize, incoming: u64) {
+        if self.resident_cap == 0 {
+            return;
+        }
+        while self.resident.len() > keep {
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(&id, _)| id != incoming)
+                .min_by_key(|(&id, e)| (e.tick, id))
+                .map(|(&id, _)| id);
+            let Some(victim) = victim else { break };
+            let entry = self.resident.remove(&victim).expect("victim is resident");
+            let slot = *self.slots.entry(victim).or_insert_with(|| {
+                let s = self.next_slot;
+                self.next_slot += 1;
+                s
+            });
+            self.write_slot(slot, &entry.data);
+        }
+    }
+
+    fn read_slot(&self, slot: u64) -> Vec<f32> {
+        let (file, path) = self.spill.as_ref().expect("spilled entry without a spill file");
+        let mut buf = vec![0u8; self.entry_dim * 4];
+        file.read_exact_at(&mut buf, slot * (self.entry_dim as u64) * 4)
+            .unwrap_or_else(|e| {
+                panic!("residual store: reading slot {slot} of {}: {e}", path.display())
+            });
+        buf.chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect()
+    }
+
+    fn write_slot(&mut self, slot: u64, data: &[f32]) {
+        if self.spill.is_none() {
+            let path = PathBuf::from(&self.spill_dir).join(format!(
+                "residuals-{}-{}.bin",
+                std::process::id(),
+                self.store_id
+            ));
+            std::fs::create_dir_all(&self.spill_dir).unwrap_or_else(|e| {
+                panic!("residual store: creating spill dir {}: {e}", self.spill_dir)
+            });
+            let file = OpenOptions::new()
+                .read(true)
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&path)
+                .unwrap_or_else(|e| panic!("residual store: opening {}: {e}", path.display()));
+            self.spill = Some((file, path));
+        }
+        let mut buf = Vec::with_capacity(data.len() * 4);
+        for x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        let (file, path) = self.spill.as_ref().expect("spill file just ensured");
+        file.write_all_at(&buf, slot * (self.entry_dim as u64) * 4)
+            .unwrap_or_else(|e| {
+                panic!("residual store: writing slot {slot} of {}: {e}", path.display())
+            });
+    }
+}
+
+impl Drop for ResidualStore {
+    fn drop(&mut self) {
+        if let Some((_, path)) = self.spill.take() {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("fedadam-rstore-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn first_touch_is_zeros_and_unbounded_never_spills() {
+        let mut s = ResidualStore::new(4, 0, "");
+        assert_eq!(s.peek(3), None);
+        assert_eq!(s.get_mut(3), &[0.0; 4]);
+        s.get_mut(3)[1] = 2.5;
+        assert_eq!(s.peek(3), Some(vec![0.0, 2.5, 0.0, 0.0]));
+        assert_eq!(s.touched(), 1);
+        for id in 0..64 {
+            s.get_mut(id);
+        }
+        assert!(s.spill.is_none(), "cap 0 must never create a spill file");
+        assert!(s.is_resident(3));
+    }
+
+    #[test]
+    fn evict_reload_is_bit_identical() {
+        let dir = tmp("bits");
+        let mut s = ResidualStore::new(3, 2, &dir);
+        let nasty = [-0.0f32, 1.0e-42, f32::NAN];
+        s.get_mut(0).copy_from_slice(&nasty);
+        s.get_mut(1_000_003); // fills the cap
+        s.get_mut(7); // evicts id 0 (LRU)
+        assert!(!s.is_resident(0));
+        let back = s.peek(0).unwrap();
+        for (a, b) in back.iter().zip(&nasty) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // get_mut rehydrates the same bits.
+        let again = s.get_mut(0).to_vec();
+        for (a, b) in again.iter().zip(&nasty) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn capped_matches_unbounded_for_any_access_sequence() {
+        let dir = tmp("oracle");
+        let mut capped = ResidualStore::new(2, 2, &dir);
+        let mut dense = ResidualStore::new(2, 0, "");
+        let sequence = [5u64, 900_001, 5, 17, 42, 900_001, 5, 3, 17];
+        for (step, &id) in sequence.iter().enumerate() {
+            let x = (step as f32 + 1.0) * if step % 2 == 0 { -1.0 } else { 1.0 };
+            capped.get_mut(id)[step % 2] += x;
+            dense.get_mut(id)[step % 2] += x;
+        }
+        for &id in &sequence {
+            let a = capped.peek(id).unwrap();
+            let b = dense.peek(id).unwrap();
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "id {id}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrips_across_tiers() {
+        let dir = tmp("snap");
+        let mut s = ResidualStore::new(2, 1, &dir);
+        s.get_mut(9).copy_from_slice(&[1.5, -0.0]);
+        s.get_mut(2).copy_from_slice(&[f32::MIN_POSITIVE, 4.0]); // spills 9
+        let mut w = ByteWriter::new();
+        s.save_state(&mut w);
+        let bytes = w.into_inner();
+
+        let mut restored = ResidualStore::new(2, 1, &dir);
+        restored.get_mut(77); // pre-existing state must be discarded
+        let mut r = ByteReader::new(&bytes);
+        restored.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(restored.peek(77), None);
+        assert_eq!(restored.touched(), 2);
+        for id in [9u64, 2] {
+            let a = s.peek(id).unwrap();
+            let b = restored.peek(id).unwrap();
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "id {id}"
+            );
+        }
+        // And the restored store keeps working under its cap.
+        restored.get_mut(9)[0] += 1.0;
+        assert_eq!(restored.peek(9).unwrap()[0], 2.5);
+    }
+
+    #[test]
+    fn load_rejects_unsorted_and_misshapen_snapshots() {
+        let mut w = ByteWriter::new();
+        w.put_usize(2);
+        w.put_u64(5);
+        w.put_f32s(&[1.0, 2.0]);
+        w.put_u64(3); // out of order
+        w.put_f32s(&[1.0, 2.0]);
+        let bytes = w.into_inner();
+        let mut s = ResidualStore::new(2, 0, "");
+        assert!(s.load_state(&mut ByteReader::new(&bytes)).is_err());
+
+        let mut w = ByteWriter::new();
+        w.put_usize(1);
+        w.put_u64(0);
+        w.put_f32s(&[1.0, 2.0, 3.0]); // wrong entry_dim
+        let bytes = w.into_inner();
+        let mut s = ResidualStore::new(2, 0, "");
+        assert!(s.load_state(&mut ByteReader::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn drop_removes_the_spill_file() {
+        let dir = tmp("drop");
+        let path;
+        {
+            let mut s = ResidualStore::new(1, 1, &dir);
+            s.get_mut(0);
+            s.get_mut(1); // forces a spill
+            path = s.spill.as_ref().map(|(_, p)| p.clone()).expect("spill file");
+            assert!(path.is_file());
+        }
+        assert!(!path.exists(), "spill file must be removed on drop");
+    }
+}

@@ -9,41 +9,36 @@
 //! credits for sparse-SGD convergence; the ablation bench
 //! (`examples/ablation_ef.rs`) measures what it buys on top of eq. 28.
 //!
+//! The residuals live in a [`ResidualStore`] (one `[w | m | v]` entry of
+//! `3 × dim` floats per *touched* device), so a million-device fleet costs
+//! O(cohort) RAM and O(touched) snapshot bytes, not O(fleet) — see the
+//! store's exact-rehydration contract.
+//!
 //! Wire cost is identical to FedAdam-SSM: `min{3kq + d, k(3q + log₂ d)}`.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
+use super::residual_store::ResidualStore;
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
 use crate::sparse::codec::cost;
 use crate::sparse::{top_k_indices, SparseVec};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
-/// Per-device residual memories for the three vectors.
-struct Memory {
-    w: Vec<f32>,
-    m: Vec<f32>,
-    v: Vec<f32>,
-}
-
 pub struct FedAdamSsmEf {
     dim: usize,
     k: usize,
-    memory: Vec<Memory>,
+    /// Per-device `[w | m | v]` residual entries, materialized on first
+    /// touch and spilled past `resident_cap` (see [`ResidualStore`]).
+    memory: ResidualStore,
 }
 
 impl FedAdamSsmEf {
-    pub fn new(dim: usize, k: usize, devices: usize) -> Self {
+    pub fn new(dim: usize, k: usize, resident_cap: usize, spill_dir: &str) -> Self {
         assert!(k >= 1 && k <= dim);
         FedAdamSsmEf {
             dim,
             k,
-            memory: (0..devices)
-                .map(|_| Memory {
-                    w: vec![0.0; dim],
-                    m: vec![0.0; dim],
-                    v: vec![0.0; dim],
-                })
-                .collect(),
+            memory: ResidualStore::new(3 * dim, resident_cap, spill_dir),
         }
     }
 }
@@ -54,27 +49,30 @@ impl Algorithm for FedAdamSsmEf {
     }
 
     fn compress(&mut self, _round: usize, device: usize, delta: LocalDelta) -> Upload {
-        let mem = &mut self.memory[device];
+        let dim = self.dim;
+        let entry = self.memory.get_mut(device as u64);
+        let (mem_w, rest) = entry.split_at_mut(dim);
+        let (mem_m, mem_v) = rest.split_at_mut(dim);
         // Compensate: c = delta + residual.
-        let cw: Vec<f32> = delta.dw.iter().zip(&mem.w).map(|(a, b)| a + b).collect();
-        let cm: Vec<f32> = delta.dm.iter().zip(&mem.m).map(|(a, b)| a + b).collect();
-        let cv: Vec<f32> = delta.dv.iter().zip(&mem.v).map(|(a, b)| a + b).collect();
+        let cw: Vec<f32> = delta.dw.iter().zip(mem_w.iter()).map(|(a, b)| a + b).collect();
+        let cm: Vec<f32> = delta.dm.iter().zip(mem_m.iter()).map(|(a, b)| a + b).collect();
+        let cv: Vec<f32> = delta.dv.iter().zip(mem_v.iter()).map(|(a, b)| a + b).collect();
         // SSM from the compensated ΔW (eq. 28 on c_w).
         let idx = top_k_indices(&cw, self.k);
         let sw = SparseVec::gather(&cw, &idx);
         let sm = SparseVec::gather(&cm, &idx);
         let sv = SparseVec::gather(&cv, &idx);
         // Residual = compensated − transmitted.
-        mem.w.copy_from_slice(&cw);
-        mem.m.copy_from_slice(&cm);
-        mem.v.copy_from_slice(&cv);
+        mem_w.copy_from_slice(&cw);
+        mem_m.copy_from_slice(&cm);
+        mem_v.copy_from_slice(&cv);
         for (&i, (&vw, (&vm, &vv))) in idx
             .iter()
             .zip(sw.values.iter().zip(sm.values.iter().zip(sv.values.iter())))
         {
-            mem.w[i as usize] -= vw;
-            mem.m[i as usize] -= vm;
-            mem.v[i as usize] -= vv;
+            mem_w[i as usize] -= vw;
+            mem_m[i as usize] -= vm;
+            mem_v[i as usize] -= vv;
         }
         Upload {
             dw: Recon::Sparse(sw),
@@ -92,24 +90,11 @@ impl Algorithm for FedAdamSsmEf {
     }
 
     fn save_state(&self, out: &mut ByteWriter) {
-        out.put_usize(self.memory.len());
-        for mem in &self.memory {
-            out.put_f32s(&mem.w);
-            out.put_f32s(&mem.m);
-            out.put_f32s(&mem.v);
-        }
+        self.memory.save_state(out);
     }
 
     fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
-        let n = input.take_usize()?;
-        ensure!(n == self.memory.len(), "snapshot has {n} EF memories, config builds {}", self.memory.len());
-        for mem in &mut self.memory {
-            mem.w = input.take_f32s()?;
-            mem.m = input.take_f32s()?;
-            mem.v = input.take_f32s()?;
-            ensure!(mem.w.len() == self.dim, "EF memory dim mismatch");
-        }
-        Ok(())
+        self.memory.load_state(input)
     }
 }
 
@@ -127,9 +112,20 @@ mod tests {
         }
     }
 
+    /// `device`'s residual `(w, m, v)` — zeros if never touched.
+    fn mem(a: &FedAdamSsmEf, device: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let entry = a
+            .memory
+            .peek(device)
+            .unwrap_or_else(|| vec![0.0; 3 * a.dim]);
+        let (w, rest) = entry.split_at(a.dim);
+        let (m, v) = rest.split_at(a.dim);
+        (w.to_vec(), m.to_vec(), v.to_vec())
+    }
+
     #[test]
     fn residual_accumulates_and_releases() {
-        let mut a = FedAdamSsmEf::new(4, 1, 1);
+        let mut a = FedAdamSsmEf::new(4, 1, 0, "");
         // Round 0: [4, 3, 0, 0] -> keep idx 0; residual w = [0, 3, 0, 0].
         let up0 = a.compress(0, 0, delta(vec![4.0, 3.0, 0.0, 0.0]));
         match &up0.dw {
@@ -139,7 +135,7 @@ mod tests {
             }
             _ => panic!(),
         }
-        assert_eq!(a.memory[0].w, vec![0.0, 3.0, 0.0, 0.0]);
+        assert_eq!(mem(&a, 0).0, vec![0.0, 3.0, 0.0, 0.0]);
         // Round 1: delta [2, 2, 0, 0]; compensated = [2, 5, 0, 0] -> keep 1.
         let up1 = a.compress(1, 0, delta(vec![2.0, 2.0, 0.0, 0.0]));
         match &up1.dw {
@@ -149,30 +145,62 @@ mod tests {
             }
             _ => panic!(),
         }
-        assert_eq!(a.memory[0].w, vec![2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mem(&a, 0).0, vec![2.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn memories_are_per_device() {
-        let mut a = FedAdamSsmEf::new(3, 1, 2);
+        let mut a = FedAdamSsmEf::new(3, 1, 0, "");
         a.compress(0, 0, delta(vec![1.0, 2.0, 3.0]));
-        assert_eq!(a.memory[0].w, vec![1.0, 2.0, 0.0]);
-        assert_eq!(a.memory[1].w, vec![0.0, 0.0, 0.0]);
+        assert_eq!(mem(&a, 0).0, vec![1.0, 2.0, 0.0]);
+        assert_eq!(mem(&a, 1).0, vec![0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn same_wire_cost_as_plain_ssm() {
-        let mut a = FedAdamSsmEf::new(1000, 50, 1);
+        let mut a = FedAdamSsmEf::new(1000, 50, 0, "");
         let up = a.compress(0, 0, delta(vec![1.0; 1000]));
         assert_eq!(up.bits, cost::fedadam_ssm(1000, 50));
     }
 
     #[test]
     fn moment_residuals_tracked_too() {
-        let mut a = FedAdamSsmEf::new(2, 1, 1);
+        let mut a = FedAdamSsmEf::new(2, 1, 0, "");
         a.compress(0, 0, delta(vec![5.0, 1.0]));
         // dm = [0.1, 0.1]; kept lane 0 -> residual m = [0, 0.1].
-        assert!((a.memory[0].m[0]).abs() < 1e-6);
-        assert!((a.memory[0].m[1] - 0.1).abs() < 1e-6);
+        let m = mem(&a, 0).1;
+        assert!((m[0]).abs() < 1e-6);
+        assert!((m[1] - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capped_store_matches_unbounded_bit_for_bit() {
+        let dir = std::env::temp_dir().join(format!("fedadam-ssmef-cap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut dense = FedAdamSsmEf::new(4, 2, 0, "");
+        let mut capped = FedAdamSsmEf::new(4, 2, 1, dir.to_str().unwrap());
+        for round in 0..4 {
+            for device in [0usize, 3, 1] {
+                let d = delta(vec![
+                    round as f32 + 0.5,
+                    -(device as f32),
+                    0.25 * round as f32,
+                    1.0,
+                ]);
+                let a = dense.compress(round, device, d.clone());
+                let b = capped.compress(round, device, d);
+                assert_eq!(a.bits, b.bits);
+                match (&a.dw, &b.dw) {
+                    (Recon::Sparse(x), Recon::Sparse(y)) => {
+                        assert_eq!(x.indices, y.indices, "round {round} device {device}");
+                        let xb: Vec<u32> = x.values.iter().map(|v| v.to_bits()).collect();
+                        let yb: Vec<u32> = y.values.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(xb, yb, "round {round} device {device}");
+                    }
+                    _ => panic!(),
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -22,8 +22,9 @@
 //! FedAMS-style compensation Wang et al. argue compressed FedAdam needs
 //! for convergence.  Same wire cost as the plain variant.
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
+use super::residual_store::ResidualStore;
 use super::wire::{WireBody, WireUpload};
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
 use crate::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
@@ -126,35 +127,24 @@ impl Algorithm for FedAdamSsmQ {
     }
 }
 
-/// Per-device pre-mask residual memories for the three vectors.
-struct Memory {
-    w: Vec<f32>,
-    m: Vec<f32>,
-    v: Vec<f32>,
-}
-
 pub struct FedAdamSsmQEf {
     dim: usize,
     k: usize,
     levels: u32,
-    memory: Vec<Memory>,
+    /// Per-device `[w | m | v]` pre-mask residual entries, materialized on
+    /// first touch and spilled past `resident_cap` (see [`ResidualStore`]).
+    memory: ResidualStore,
 }
 
 impl FedAdamSsmQEf {
-    pub fn new(dim: usize, k: usize, devices: usize, levels: u32) -> Self {
+    pub fn new(dim: usize, k: usize, levels: u32, resident_cap: usize, spill_dir: &str) -> Self {
         assert!(k >= 1 && k <= dim);
         assert!(levels >= 2, "need at least 2 quantization levels");
         FedAdamSsmQEf {
             dim,
             k,
             levels,
-            memory: (0..devices)
-                .map(|_| Memory {
-                    w: vec![0.0; dim],
-                    m: vec![0.0; dim],
-                    v: vec![0.0; dim],
-                })
-                .collect(),
+            memory: ResidualStore::new(3 * dim, resident_cap, spill_dir),
         }
     }
 
@@ -162,27 +152,30 @@ impl FedAdamSsmQEf {
     /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
     /// exactly once per call regardless of which view the caller takes.
     fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (SsmQUplink, Upload) {
-        let mem = &mut self.memory[device];
+        let dim = self.dim;
+        let entry = self.memory.get_mut(device as u64);
+        let (mem_w, rest) = entry.split_at_mut(dim);
+        let (mem_m, mem_v) = rest.split_at_mut(dim);
         // Compensate: c = delta + residual (pre-mask, all d lanes).
-        let cw: Vec<f32> = delta.dw.iter().zip(&mem.w).map(|(a, b)| a + b).collect();
-        let cm: Vec<f32> = delta.dm.iter().zip(&mem.m).map(|(a, b)| a + b).collect();
-        let cv: Vec<f32> = delta.dv.iter().zip(&mem.v).map(|(a, b)| a + b).collect();
+        let cw: Vec<f32> = delta.dw.iter().zip(mem_w.iter()).map(|(a, b)| a + b).collect();
+        let cm: Vec<f32> = delta.dm.iter().zip(mem_m.iter()).map(|(a, b)| a + b).collect();
+        let cv: Vec<f32> = delta.dv.iter().zip(mem_v.iter()).map(|(a, b)| a + b).collect();
         // SSM from the compensated ΔW (eq. 28 on c_w), then quantize.
         let idx = top_k_indices(&cw, self.k);
-        let (msg, sw, sm, sv, bits) = compress_triple(self.dim, &idx, &cw, &cm, &cv, self.levels);
+        let (msg, sw, sm, sv, bits) = compress_triple(dim, &idx, &cw, &cm, &cv, self.levels);
         // Residual = compensated − transmitted: subtracting the
         // *dequantized* kept values folds the quantization error into the
         // memory alongside the masked-out mass.
-        mem.w.copy_from_slice(&cw);
-        mem.m.copy_from_slice(&cm);
-        mem.v.copy_from_slice(&cv);
+        mem_w.copy_from_slice(&cw);
+        mem_m.copy_from_slice(&cm);
+        mem_v.copy_from_slice(&cv);
         for (&i, (&vw, (&vm, &vv))) in idx
             .iter()
             .zip(sw.values.iter().zip(sm.values.iter().zip(sv.values.iter())))
         {
-            mem.w[i as usize] -= vw;
-            mem.m[i as usize] -= vm;
-            mem.v[i as usize] -= vv;
+            mem_w[i as usize] -= vw;
+            mem_m[i as usize] -= vm;
+            mem_v[i as usize] -= vv;
         }
         let up = Upload {
             dw: Recon::Sparse(sw),
@@ -223,24 +216,11 @@ impl Algorithm for FedAdamSsmQEf {
     }
 
     fn save_state(&self, out: &mut ByteWriter) {
-        out.put_usize(self.memory.len());
-        for mem in &self.memory {
-            out.put_f32s(&mem.w);
-            out.put_f32s(&mem.m);
-            out.put_f32s(&mem.v);
-        }
+        self.memory.save_state(out);
     }
 
     fn load_state(&mut self, input: &mut ByteReader) -> Result<()> {
-        let n = input.take_usize()?;
-        ensure!(n == self.memory.len(), "snapshot has {n} EF memories, config builds {}", self.memory.len());
-        for mem in &mut self.memory {
-            mem.w = input.take_f32s()?;
-            mem.m = input.take_f32s()?;
-            mem.v = input.take_f32s()?;
-            ensure!(mem.w.len() == self.dim, "EF memory dim mismatch");
-        }
-        Ok(())
+        self.memory.load_state(input)
     }
 }
 
@@ -308,9 +288,17 @@ mod tests {
         }
     }
 
+    /// `device`'s residual `w` slice — zeros if never touched.
+    fn mem_w(a: &FedAdamSsmQEf, device: u64) -> Vec<f32> {
+        a.memory
+            .peek(device)
+            .map(|e| e[..a.dim].to_vec())
+            .unwrap_or_else(|| vec![0.0; a.dim])
+    }
+
     #[test]
     fn ef_residual_carries_mask_and_quantization_error() {
-        let mut a = FedAdamSsmQEf::new(4, 1, 1, 2);
+        let mut a = FedAdamSsmQEf::new(4, 1, 2, 0, "");
         // Round 0: dw = [4, 3, 0, 0], s = 2 -> grid {-4, 4}; keep lane 0,
         // transmit exactly 4.0 -> residual w = [0, 3, 0, 0].
         let up0 = a.compress(0, 0, delta(vec![4.0, 3.0, 0.0, 0.0]));
@@ -321,7 +309,7 @@ mod tests {
             }
             _ => panic!(),
         }
-        assert_eq!(a.memory[0].w, vec![0.0, 3.0, 0.0, 0.0]);
+        assert_eq!(mem_w(&a, 0), vec![0.0, 3.0, 0.0, 0.0]);
         // Round 1: delta [2, 2, 0, 0]; compensated [2, 5, 0, 0] -> keep
         // lane 1, transmit 5.0; residual releases lane 1, keeps lane 0.
         let up1 = a.compress(1, 0, delta(vec![2.0, 2.0, 0.0, 0.0]));
@@ -332,7 +320,7 @@ mod tests {
             }
             _ => panic!(),
         }
-        assert_eq!(a.memory[0].w, vec![2.0, 0.0, 0.0, 0.0]);
+        assert_eq!(mem_w(&a, 0), vec![2.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -341,24 +329,24 @@ mod tests {
         // exactly; lane 1's 3.0 rounds up to 4.0, so its residual must be
         // the rounding error −1.0 — a KEPT lane with non-zero memory, which
         // the un-quantized ssm_ef can never produce.
-        let mut a = FedAdamSsmQEf::new(4, 2, 1, 2);
+        let mut a = FedAdamSsmQEf::new(4, 2, 2, 0, "");
         a.compress(0, 0, delta(vec![4.0, 3.0, 0.0, 0.0]));
-        assert_eq!(a.memory[0].w[0], 0.0);
-        assert_eq!(a.memory[0].w[1], -1.0, "quantization error must accumulate");
+        assert_eq!(mem_w(&a, 0)[0], 0.0);
+        assert_eq!(mem_w(&a, 0)[1], -1.0, "quantization error must accumulate");
     }
 
     #[test]
     fn ef_memories_are_per_device() {
-        let mut a = FedAdamSsmQEf::new(3, 1, 2, 16);
+        let mut a = FedAdamSsmQEf::new(3, 1, 16, 0, "");
         a.compress(0, 0, delta(vec![1.0, 2.0, 3.0]));
-        assert!(a.memory[0].w.iter().any(|&x| x != 0.0));
-        assert_eq!(a.memory[1].w, vec![0.0, 0.0, 0.0]);
+        assert!(mem_w(&a, 0).iter().any(|&x| x != 0.0));
+        assert_eq!(mem_w(&a, 1), vec![0.0, 0.0, 0.0]);
     }
 
     #[test]
     fn ef_same_wire_cost_as_plain_variant() {
         let mut q = FedAdamSsmQ::new(1000, 50, 16);
-        let mut qef = FedAdamSsmQEf::new(1000, 50, 1, 16);
+        let mut qef = FedAdamSsmQEf::new(1000, 50, 16, 0, "");
         let b1 = q.compress(0, 0, delta(vec![1.0; 1000])).bits;
         let b2 = qef.compress(0, 0, delta(vec![1.0; 1000])).bits;
         assert_eq!(b1, b2);

@@ -194,6 +194,19 @@ pub struct ExperimentConfig {
     /// waits for agents to register, and for each in-flight uplink before
     /// declaring the connection dead and re-admitting a reconnect.
     pub transport_timeout_secs: f64,
+    /// Resident cap of the per-device residual store (the `-ef`/`-qef`/
+    /// `onebit`/`efficient` error-feedback residuals and the coordinator's
+    /// device-local Adam moments): at most this many per-device entries
+    /// stay in RAM; least-recently-used entries beyond it spill to
+    /// `residual_spill_dir` and rehydrate bit-identically on the next
+    /// touch.  `0` (default) = unbounded, i.e. the classic dense-in-RAM
+    /// behavior.  Pure memory-placement knob — results are bit-identical
+    /// at any cap, so it is excluded from the fingerprint.
+    pub residual_resident_cap: usize,
+    /// Directory for the residual store's spill files (created on first
+    /// eviction, removed with the run).  Required non-empty when
+    /// `residual_resident_cap > 0`.
+    pub residual_spill_dir: String,
 }
 
 impl Default for ExperimentConfig {
@@ -235,6 +248,8 @@ impl Default for ExperimentConfig {
             transport_listen: String::new(),
             transport_agents: 0,
             transport_timeout_secs: 30.0,
+            residual_resident_cap: 0,
+            residual_spill_dir: String::new(),
         }
     }
 }
@@ -319,6 +334,8 @@ impl ExperimentConfig {
             "transport_listen" => self.transport_listen = value.into(),
             "transport_agents" => self.transport_agents = p(key, value)?,
             "transport_timeout_secs" => self.transport_timeout_secs = p(key, value)?,
+            "residual_resident_cap" => self.residual_resident_cap = p(key, value)?,
+            "residual_spill_dir" => self.residual_spill_dir = value.into(),
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -395,6 +412,14 @@ impl ExperimentConfig {
             if !self.journal.is_empty() || !self.resume.is_empty() {
                 bail!("transport_listen cannot be combined with journal/resume");
             }
+        }
+        if self.residual_resident_cap > 0 && self.residual_spill_dir.is_empty() {
+            bail!(
+                "residual_resident_cap = {} needs somewhere to spill evicted entries: \
+                 set residual_spill_dir to a writable directory (or 0 to keep all \
+                 residuals in RAM)",
+                self.residual_resident_cap
+            );
         }
         if !self.resume.is_empty() {
             // The knob must point at a journal written by an equivalent
@@ -709,6 +734,8 @@ mod tests {
         cfg.transport_listen = "127.0.0.1:0".into();
         cfg.transport_agents = 2;
         cfg.transport_timeout_secs = 5.0;
+        cfg.residual_resident_cap = 4; // memory placement, not semantics
+        cfg.residual_spill_dir = "/tmp/r".into();
         assert_eq!(cfg.fingerprint(), base);
         // Determinism-bearing knobs must.
         for (key, value) in [
@@ -723,6 +750,25 @@ mod tests {
             cfg.set(key, value).unwrap();
             assert_ne!(cfg.fingerprint(), base, "{key}={value} must move the fingerprint");
         }
+    }
+
+    #[test]
+    fn residual_knobs_ride_through_set_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.residual_resident_cap, 0);
+        assert!(cfg.residual_spill_dir.is_empty());
+        cfg.set("residual_resident_cap", "64").unwrap();
+        cfg.set("residual_spill_dir", "/tmp/spill").unwrap();
+        assert_eq!(cfg.residual_resident_cap, 64);
+        assert_eq!(cfg.residual_spill_dir, "/tmp/spill");
+        cfg.validate().unwrap();
+        assert!(cfg.set("residual_resident_cap", "many").is_err());
+
+        // A cap with nowhere to spill is rejected, naming the knob.
+        let mut cfg = ExperimentConfig::default();
+        cfg.set("residual_resident_cap", "8").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("residual_spill_dir"), "error must name the knob: {err}");
     }
 
     #[test]

@@ -33,6 +33,23 @@ pub struct LocalResult {
     pub mean_loss: f64,
 }
 
+/// Batches one local epoch walks through for a `shard_len`-sample shard —
+/// the one formula shared by [`Device::batches_per_epoch`] and the
+/// coordinator's latency-model sizing, so the simulated compute cost can
+/// never drift from the batches a materialized device actually runs.
+pub(crate) fn batches_per_epoch_for(
+    shard_len: usize,
+    batch: usize,
+    cfg: &LocalRunConfig,
+) -> usize {
+    let full = shard_len.max(1).div_ceil(batch);
+    if cfg.max_batches_per_epoch == 0 {
+        full
+    } else {
+        full.min(cfg.max_batches_per_epoch)
+    }
+}
+
 /// One federated device: a shard plus an engine handle.
 pub struct Device {
     pub id: usize,
@@ -61,12 +78,7 @@ impl Device {
 
     /// Batches one local epoch walks through.
     pub fn batches_per_epoch(&self, cfg: &LocalRunConfig) -> usize {
-        let full = self.shard.batches_per_epoch(self.engine.meta().batch);
-        if cfg.max_batches_per_epoch == 0 {
-            full
-        } else {
-            full.min(cfg.max_batches_per_epoch)
-        }
+        batches_per_epoch_for(self.shard.data.len(), self.engine.meta().batch, cfg)
     }
 
     /// Run `L` local epochs from `(w, m, v)`; Adam or SGD per `mode`.

@@ -50,7 +50,11 @@ use anyhow::{bail, Context, Result};
 use crate::util::bytes::{crc32, ByteReader, ByteWriter};
 
 /// Journal format version — bumped on any event/snapshot schema change.
-pub const JOURNAL_VERSION: u32 = 1;
+/// v2: snapshots serialize per-device residual/moment state as *touched
+/// entries only* (id-keyed, via `ResidualStore::save_state`) instead of a
+/// dense fleet-sized array, and log rows carry the
+/// `fleet_devices`/`cohort_devices` columns.
+pub const JOURNAL_VERSION: u32 = 2;
 /// Snapshot file magic (`"FJS1"`).
 pub const SNAPSHOT_MAGIC: u32 = 0x464A_5331;
 /// Event-log file name inside the journal directory.

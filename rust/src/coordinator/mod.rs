@@ -48,6 +48,19 @@
 //! participant's compute + uplink, eval inline or overlapped per the
 //! schedule), logged as the `sim_secs` column when `simtime` is on.
 //!
+//! ## Fleet scaling
+//!
+//! A *registered* fleet is cheap; only the *cohort* does work.  The
+//! coordinator holds one copy of the training corpus plus a
+//! [`ShardPlan`] index (O(fleet) at registration), synthesizes a sampled
+//! device's `Device` + shard data on demand each round (O(cohort)), and
+//! keeps per-device state — Adam moments here, error-feedback residuals
+//! inside the algorithms — in lazily-materialized, disk-spillable
+//! [`ResidualStore`]s (O(touched), bounded in RAM by
+//! `residual_resident_cap`).  See `docs/ARCHITECTURE.md`'s "Scaling to
+//! the fleet" chapter and `benches/fleet_scaling.rs` for the pinned
+//! flatness numbers.
+//!
 //! ## The round state machine and the event journal
 //!
 //! Each round is an explicit walk through [`RunState`]:
@@ -95,9 +108,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Context, Result};
 
+use crate::algorithms::residual_store::ResidualStore;
 use crate::algorithms::{self, Aggregate, Algorithm, LocalDelta, MomentumPolicy, Upload};
 use crate::config::{ExperimentConfig, SparsifyBackend};
-use crate::data::{partition, synthetic, Dataset, Partition, Shard};
+use crate::data::{synthetic, Dataset, Partition, Shard, ShardPlan};
 use crate::metrics::comm::CommLedger;
 use crate::metrics::{ExperimentLog, RoundRecord};
 use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
@@ -153,7 +167,13 @@ impl RunState {
 pub struct Coordinator {
     pub cfg: ExperimentConfig,
     pool: EnginePool,
-    devices: Vec<Device>,
+    /// The shared training corpus — ONE copy for the whole fleet.  No
+    /// per-device shard data is held between rounds; a sampled device's
+    /// dataset is synthesized from this corpus + `shard_plan` on demand.
+    train: Dataset,
+    /// Registration-time index of which samples belong to which device
+    /// (see [`ShardPlan`]) — O(corpus) index words, zero pixels.
+    shard_plan: ShardPlan,
     /// Test-set length, kept for the slice-boundary regression assert
     /// (the samples themselves live only in the padded [`EvalPlan`] —
     /// holding the raw `Dataset` too would double test-set memory).
@@ -163,8 +183,12 @@ pub struct Coordinator {
     eval_plan: Arc<EvalPlan>,
     algorithm: Box<dyn Algorithm>,
     global: GlobalState,
-    /// Per-device `(m, v)` for `MomentumPolicy::DeviceLocal` algorithms.
-    device_moments: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Per-device `[m | v]` Adam moments (one `2·dim` entry) for
+    /// `MomentumPolicy::DeviceLocal` algorithms — lazily materialized on
+    /// first touch and spillable past `residual_resident_cap`, so an
+    /// Aggregated-policy run pays nothing and a million-device DeviceLocal
+    /// fleet costs O(touched) (see [`ResidualStore`]).
+    device_moments: ResidualStore,
     ledger: CommLedger,
     log: ExperimentLog,
     round: usize,
@@ -253,15 +277,19 @@ impl Coordinator {
     fn fresh(cfg: ExperimentConfig, pool: EnginePool) -> Result<Self> {
         let meta = pool.meta().clone();
 
-        let (task, devices) = build_task_and_devices(&cfg, &pool);
+        let (task, shard_plan) = build_task_and_plan(&cfg, &pool);
         let handle = pool.handle();
 
         let algorithm = algorithms::build(&cfg, meta.dim)?;
         let w0 = handle.init(cfg.seed as i32)?;
         let global = GlobalState::new(w0);
-        let device_moments = (0..cfg.devices)
-            .map(|_| (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]))
-            .collect();
+        // DeviceLocal moments materialize lazily: first touch is zeros,
+        // exactly the old dense Vec's initialization.
+        let device_moments = ResidualStore::new(
+            2 * meta.dim,
+            cfg.residual_resident_cap,
+            &cfg.residual_spill_dir,
+        );
 
         // Hoisted out of the round loop: the eval slicing depends only on
         // `(test set, eval_batch)`, both fixed for the experiment's life.
@@ -272,14 +300,21 @@ impl Coordinator {
         // ranking exists even when the simulated clock is off.  The
         // per-device batch count comes from the SAME helper and the SAME
         // run config the training loop uses, so the priced compute can
-        // never drift from the samples a device actually walks through.
+        // never drift from the samples a device actually walks through —
+        // and it needs only the plan's shard *sizes*, no materialized
+        // shard data.
         let run_cfg = local_run_cfg(&cfg);
-        let samples_per_round: Vec<usize> = devices
-            .iter()
-            .map(|d| d.batches_per_epoch(&run_cfg) * meta.batch * cfg.local_epochs)
+        let samples_per_round: Vec<usize> = (0..cfg.devices)
+            .map(|d| {
+                device::batches_per_epoch_for(shard_plan.shard_len(d), meta.batch, &run_cfg)
+                    * meta.batch
+                    * cfg.local_epochs
+            })
             .collect();
         let latency = LatencyModel::new(&cfg, &samples_per_round, task.test.len());
-        let data_weights: Vec<f64> = devices.iter().map(|d| d.weight()).collect();
+        let data_weights: Vec<f64> = (0..cfg.devices)
+            .map(|d| shard_plan.shard_len(d) as f64)
+            .collect();
         let sampler = sampler::build(&cfg, &data_weights, latency.device_compute_secs());
         let sim = cfg.simtime.then(|| SimClock::new(cfg.pipeline_depth));
 
@@ -308,8 +343,9 @@ impl Coordinator {
         Ok(Coordinator {
             cfg,
             pool,
-            devices,
             test_len: task.test.len(),
+            train: task.train,
+            shard_plan,
             eval_plan,
             algorithm,
             global,
@@ -583,6 +619,8 @@ impl Coordinator {
             wall_secs: start.elapsed().as_secs_f64(),
             sim_secs,
             update_norm,
+            fleet_devices: self.cfg.devices as u64,
+            cohort_devices: cohort.len() as u64,
         };
         self.log.rounds.push(record.clone());
         self.round += 1;
@@ -644,11 +682,10 @@ impl Coordinator {
         let mut w = ByteWriter::new();
         w.put_u64(self.round as u64);
         self.global.save_state(&mut w);
-        w.put_usize(self.device_moments.len());
-        for (m, v) in &self.device_moments {
-            w.put_f32s(m);
-            w.put_f32s(v);
-        }
+        // Touched entries only — an Aggregated-policy run writes a bare
+        // count of zero here, and a million-device fleet pays O(touched),
+        // not O(fleet) (format change behind `JOURNAL_VERSION` 2).
+        self.device_moments.save_state(&mut w);
         self.algorithm.save_state(&mut w);
         self.sampler.save_state(&mut w);
         w.put_u64(self.ledger.uplink_bits);
@@ -673,6 +710,8 @@ impl Coordinator {
             w.put_f64(r.wall_secs);
             w.put_f64(r.sim_secs);
             w.put_f64(r.update_norm);
+            w.put_u64(r.fleet_devices);
+            w.put_u64(r.cohort_devices);
         }
         w.put_usize(self.pending_evals.len());
         for p in &self.pending_evals {
@@ -689,16 +728,9 @@ impl Coordinator {
         let mut r = ByteReader::new(bytes);
         self.round = r.take_u64()? as usize;
         self.global.load_state(&mut r)?;
-        let n = r.take_usize()?;
-        ensure!(
-            n == self.device_moments.len(),
-            "snapshot has {n} device moment pairs, config builds {}",
-            self.device_moments.len()
-        );
-        for (m, v) in &mut self.device_moments {
-            *m = r.take_f32s()?;
-            *v = r.take_f32s()?;
-        }
+        // Touched entries only; untouched devices rehydrate to zeros on
+        // first contact, bit-identical to the dense-state format.
+        self.device_moments.load_state(&mut r)?;
         self.algorithm.load_state(&mut r)?;
         self.sampler.load_state(&mut r)?;
         self.ledger.uplink_bits = r.take_u64()?;
@@ -726,6 +758,8 @@ impl Coordinator {
                 wall_secs: r.take_f64()?,
                 sim_secs: r.take_f64()?,
                 update_norm: r.take_f64()?,
+                fleet_devices: r.take_u64()?,
+                cohort_devices: r.take_u64()?,
             });
         }
         let pend = r.take_usize()?;
@@ -776,45 +810,49 @@ impl Coordinator {
         let mode = self.algorithm.local_mode(t);
         let policy = self.algorithm.momentum_policy(t);
         let keep_moments = policy == MomentumPolicy::DeviceLocal;
+        let dim = self.global.dim();
         let chunk_size = (self.pool.num_workers() * 2).max(8);
+        let handle = self.pool.handle();
         let mut loss_sum = 0.0f64;
         let mut round_secs = 0.0f64;
         let mut slot = 0usize;
         for chunk in participants.chunks(chunk_size) {
             // Download: snapshot starting moments before any training runs
             // (matches the sequential schedule — a device only ever
-            // observed its own pre-round state anyway).
-            let downloads: Vec<(Vec<f32>, Vec<f32>)> = chunk
-                .iter()
-                .map(|&di| match policy {
+            // observed its own pre-round state anyway).  DeviceLocal
+            // moments come out of the residual store; first touch is
+            // zeros, identical to the old dense Vec's initialization.
+            let mut downloads: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(chunk.len());
+            for &di in chunk {
+                downloads.push(match policy {
                     MomentumPolicy::Aggregated => (self.global.m.clone(), self.global.v.clone()),
-                    MomentumPolicy::DeviceLocal => self.device_moments[di].clone(),
-                })
-                .collect();
+                    MomentumPolicy::DeviceLocal => {
+                        let entry = self.device_moments.get_mut(di as u64);
+                        let (m, v) = entry.split_at(dim);
+                        (m.to_vec(), v.to_vec())
+                    }
+                });
+            }
+            // Synthesize this chunk's devices on demand from the shard
+            // plan — O(chunk · shard samples), independent of fleet size.
+            // (The old code held every device materialized for the run's
+            // life and rescanned that O(fleet) vector once per chunk.)
+            let mut chunk_devices: Vec<Device> = Vec::with_capacity(chunk.len());
+            for &di in chunk {
+                let data = self.shard_plan.materialize(&self.train, di);
+                chunk_devices.push(Device::new(di, Shard { data }, handle.clone()));
+            }
             let global_w = &self.global.w;
-            // Re-derived per chunk (not hoisted for the whole round): the
-            // compress stage below needs `&mut self`, which cannot coexist
-            // with `&mut Device` borrows held for later chunks.  The rescan
-            // is O(devices · log participants) per chunk — noise next to
-            // training.  Relies on the sampler contract that cohort device
-            // ids are sorted ascending (every `ParticipationSampler` does;
-            // binary_search would misassign otherwise).
-            let chunk_devices: Vec<(usize, &mut Device)> = self
-                .devices
-                .iter_mut()
-                .enumerate()
-                .filter(|(i, _)| chunk.binary_search(i).is_ok())
-                .collect();
             // The sampler's per-slot FedAvg weights for this chunk
             // (uniform mode: exactly the device data sizes the legacy
             // loop used, so the wire stays bit-identical).
             let chunk_weights = &cohort.weights[slot..slot + chunk.len()];
             let outputs: Vec<Result<TrainOutput>> = std::thread::scope(|scope| {
                 let handles: Vec<_> = chunk_devices
-                    .into_iter()
+                    .iter_mut()
                     .zip(downloads)
                     .zip(chunk_weights)
-                    .map(|(((_di, dev), (m0, v0)), &weight)| {
+                    .map(|((dev, (m0, v0)), &weight)| {
                         scope.spawn(move || -> Result<TrainOutput> {
                             let result = dev.train_round(
                                 mode,
@@ -845,8 +883,10 @@ impl Coordinator {
             for (&di, output) in chunk.iter().zip(outputs) {
                 let output = output.with_context(|| format!("device {di} local round"))?;
                 loss_sum += output.mean_loss;
-                if let Some(moments) = output.moments {
-                    self.device_moments[di] = moments;
+                if let Some((m, v)) = output.moments {
+                    let entry = self.device_moments.get_mut(di as u64);
+                    entry[..dim].copy_from_slice(&m);
+                    entry[dim..].copy_from_slice(&v);
                 }
                 let upload = self.compress_upload(t, di, output.delta)?;
                 // Simulated critical path: this device finishes when its
@@ -1094,13 +1134,15 @@ pub(crate) fn local_run_cfg(cfg: &ExperimentConfig) -> LocalRunConfig {
 }
 
 /// The one recipe for turning `(config, pool)` into the synthetic task
-/// and the device fleet — shared by [`Coordinator::fresh`] and the
-/// remote device agent, so both processes derive the byte-identical
-/// shards from the same seeds.
-pub(crate) fn build_task_and_devices(
+/// and the fleet's [`ShardPlan`] — shared by [`Coordinator::fresh`] and
+/// (via [`build_task_and_devices`]) the remote device agent, so every
+/// process derives the byte-identical shards from the same seeds.  The
+/// plan is the lazy form: which samples belong to which device, with no
+/// shard data materialized yet.
+pub(crate) fn build_task_and_plan(
     cfg: &ExperimentConfig,
     pool: &EnginePool,
-) -> (synthetic::SyntheticTask, Vec<Device>) {
+) -> (synthetic::SyntheticTask, ShardPlan) {
     let meta = pool.meta();
     // Synthetic stand-in corpus shaped for this model.
     let spec = synthetic::SyntheticSpec::for_input_shape(
@@ -1110,12 +1152,27 @@ pub(crate) fn build_task_and_devices(
     );
     let task = synthetic::generate(&spec, cfg.seed);
     let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
-    let shards = partition(&task.train, cfg.devices, how, cfg.seed);
+    let plan = ShardPlan::build(&task.train, cfg.devices, how, cfg.seed);
+    (task, plan)
+}
+
+/// [`build_task_and_plan`] with every device eagerly materialized — the
+/// remote device agent's entry point (an agent owns a fixed slice of the
+/// fleet for the whole run, so lazy synthesis buys it nothing).
+/// `ShardPlan::materialize` is pinned to equal the old eager
+/// `partition()` output, so agents stay byte-identical to the in-process
+/// path.
+pub(crate) fn build_task_and_devices(
+    cfg: &ExperimentConfig,
+    pool: &EnginePool,
+) -> (synthetic::SyntheticTask, Vec<Device>) {
+    let (task, plan) = build_task_and_plan(cfg, pool);
     let handle = pool.handle();
-    let devices: Vec<Device> = shards
-        .into_iter()
-        .enumerate()
-        .map(|(i, data)| Device::new(i, Shard { data }, handle.clone()))
+    let devices: Vec<Device> = (0..cfg.devices)
+        .map(|i| {
+            let data = plan.materialize(&task.train, i);
+            Device::new(i, Shard { data }, handle.clone())
+        })
         .collect();
     (task, devices)
 }

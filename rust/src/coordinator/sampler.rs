@@ -8,15 +8,25 @@
 //! - [`UniformSampler`] (`uniform`, default) — uniform without
 //!   replacement, **bit-identical to the original loop**: the same RNG
 //!   stream (`seed ^ 0x5a3c_91f7`), the same shuffle/truncate/sort, and
-//!   cohort weights equal to the devices' data sizes.
+//!   cohort weights equal to the devices' data sizes.  Internally the
+//!   full `Vec` shuffle is replaced by an epoch-stamped sparse window
+//!   (`ShuffleWindow`) that replays the identical Fisher–Yates draw
+//!   sequence while only ever *writing* O(fleet − cohort) positions and
+//!   allocating O(cohort) per round.  Note the pinned legacy stream
+//!   consumes `n − 1` RNG draws per partial round, so uniform is
+//!   inherently Θ(fleet) RNG *steps* per round — the O(cohort)-per-round
+//!   scaling story belongs to `importance` (and `availability`'s ranking);
+//!   uniform's win here is allocation- and write-traffic-flatness.
 //! - [`ImportanceSampler`] (`importance`) — `m` i.i.d. draws with
-//!   probability `p_i ∝ |D_i|` (local data size).  Each unique selected
-//!   device carries weight `mult_i · |D_i| / (m·p_i)`, the classical
-//!   unbiased importance re-weighting: the cohort's weighted FedAvg
-//!   aggregate has the full-participation aggregate as its expectation,
-//!   and the cohort weights always sum to the full corpus weight, so the
-//!   downstream `weight / Σweights` normalization *is* the `1/(m·p_i)`
-//!   estimator.
+//!   probability `p_i ∝ |D_i|` (local data size), drawn in O(1) each from
+//!   a Walker/Vose [`AliasTable`] built once at construction (the old
+//!   per-draw `categorical` linear scan made every round O(m·fleet)).
+//!   Each unique selected device carries weight `mult_i · |D_i| /
+//!   (m·p_i)`, the classical unbiased importance re-weighting: the
+//!   cohort's weighted FedAvg aggregate has the full-participation
+//!   aggregate as its expectation, and the cohort weights always sum to
+//!   the full corpus weight, so the downstream `weight / Σweights`
+//!   normalization *is* the `1/(m·p_i)` estimator.
 //! - [`AvailabilitySampler`] (`availability`) — each device follows a
 //!   deterministic per-round on/off duty-cycle trace (a pure function of
 //!   `(seed, device, round)`).  The sampler over-selects up to
@@ -46,6 +56,8 @@
 //! assert_eq!(cohort.devices, b.sample(0).devices);
 //! assert!(!cohort.devices.is_empty());
 //! ```
+
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
@@ -157,15 +169,71 @@ pub fn build(
     }
 }
 
-/// Uniform without replacement — the original loop, verbatim.
+/// Epoch-stamped sparse view of the virtual shuffle array `[0, 1, …, n)`.
+///
+/// The legacy cohort draw allocated and shuffled a dense `Vec` of the
+/// whole fleet every round.  This window replays the *identical* backward
+/// Fisher–Yates draw sequence against a virtual array whose untouched
+/// position `i` implicitly holds value `i`: a write stamps the position
+/// with the current epoch, a read returns the stamped value only when the
+/// stamp matches, and bumping the epoch "clears" the whole array in O(1).
+/// Two flat `Vec<u32>`s are paid once at construction (O(fleet) at
+/// registration); per round there is no allocation, no O(fleet) zeroing,
+/// and no dense swap traffic.
+struct ShuffleWindow {
+    /// Epoch stamp per position; a stale stamp means "identity value".
+    epochs: Vec<u32>,
+    /// Stamped value per position (valid only when the stamp is current).
+    values: Vec<u32>,
+    epoch: u32,
+}
+
+impl ShuffleWindow {
+    fn new(n: usize) -> ShuffleWindow {
+        assert!(n <= u32::MAX as usize, "fleet ids must fit in u32");
+        ShuffleWindow {
+            epochs: vec![0; n],
+            values: vec![0; n],
+            epoch: 0,
+        }
+    }
+
+    /// Start a fresh virtual array (all positions back to identity).
+    fn begin(&mut self) {
+        if self.epoch == u32::MAX {
+            // One full rewrite every 2³²−1 rounds keeps stamps unambiguous.
+            self.epochs.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+
+    fn get(&self, i: usize) -> usize {
+        if self.epochs[i] == self.epoch {
+            self.values[i] as usize
+        } else {
+            i
+        }
+    }
+
+    fn set(&mut self, i: usize, v: usize) {
+        self.epochs[i] = self.epoch;
+        self.values[i] = v as u32;
+    }
+}
+
+/// Uniform without replacement — the original loop's exact RNG stream and
+/// cohorts, replayed sparsely (see `ShuffleWindow`).
 pub struct UniformSampler {
     rng: Rng,
     participation: f64,
     data_weights: Vec<f64>,
+    window: ShuffleWindow,
 }
 
 impl UniformSampler {
     pub fn new(seed: u64, participation: f64, data_weights: Vec<f64>) -> UniformSampler {
+        let window = ShuffleWindow::new(data_weights.len());
         UniformSampler {
             // The legacy stream: MUST stay `seed ^ 0x5a3c_91f7` (and be
             // consumed only on m < n rounds) for bit-identity with the
@@ -173,6 +241,7 @@ impl UniformSampler {
             rng: Rng::new(seed ^ UNIFORM_STREAM),
             participation,
             data_weights,
+            window,
         }
     }
 }
@@ -189,9 +258,28 @@ impl ParticipationSampler for UniformSampler {
             // Full participation consumes no randomness (legacy contract).
             (0..n).collect()
         } else {
-            let mut idx: Vec<usize> = (0..n).collect();
-            self.rng.shuffle(&mut idx);
-            idx.truncate(m);
+            // Replay of `shuffle(0..n); truncate(m); sort()` without the
+            // dense Vec.  `Rng::shuffle` is backward Fisher–Yates
+            // (`for i in (1..n).rev() { swap(i, below(i+1)) }`).  While
+            // the cursor is still above the window, position `i` is read
+            // exactly once — at its own step — and then discarded by the
+            // truncation, so only the value *leaving* `i` needs a write.
+            self.window.begin();
+            for i in (m..n).rev() {
+                let vi = self.window.get(i);
+                let j = self.rng.below(i + 1);
+                if j != i {
+                    self.window.set(j, vi);
+                }
+            }
+            // Once inside the window the remaining swaps merely permute
+            // the surviving multiset, which the final sort erases —
+            // consume the draws (the stream cursor must advance by
+            // exactly `n − 1` per partial round) and skip the writes.
+            for i in (1..m).rev() {
+                let _ = self.rng.below(i + 1);
+            }
+            let mut idx: Vec<usize> = (0..m).map(|p| self.window.get(p)).collect();
             idx.sort_unstable();
             idx
         };
@@ -211,6 +299,102 @@ impl ParticipationSampler for UniformSampler {
     }
 }
 
+/// Walker/Vose alias table: O(fleet) build once, O(1) per draw.
+///
+/// A draw costs exactly two RNG values — one `below(n)` to pick a column
+/// and one `uniform()` against the column's acceptance threshold — so the
+/// stream cursor advances by a fixed `2m` per round regardless of fleet
+/// size, and the journal's 4-word cursor snapshot keeps working.
+/// Construction is the standard two-worklist method, fully deterministic
+/// (worklists fill in index order, drain LIFO): a table built twice from
+/// the same weights draws the same device stream.
+///
+/// ```
+/// use fedadam_ssm::coordinator::sampler::AliasTable;
+/// use fedadam_ssm::rng::Rng;
+///
+/// let table = AliasTable::new(&[60.0, 30.0, 10.0]);
+/// let mut a = Rng::new(7);
+/// let mut b = Rng::new(7);
+/// // Deterministic: identical RNG streams draw identical devices.
+/// let draws: Vec<usize> = (0..5).map(|_| table.draw(&mut a)).collect();
+/// let replay: Vec<usize> = (0..5).map(|_| table.draw(&mut b)).collect();
+/// assert_eq!(draws, replay);
+/// assert!(draws.iter().all(|&d| d < 3));
+/// ```
+pub struct AliasTable {
+    /// Acceptance threshold per column (`uniform() < prob[i]` keeps `i`).
+    prob: Vec<f64>,
+    /// Overflow target per column (self-alias when the column is full).
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized positive weights.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0 && n <= u32::MAX as usize);
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && weights.iter().all(|&w| w > 0.0),
+            "alias table needs strictly positive weights"
+        );
+        // Scale so the average column holds exactly 1.0 of probability
+        // mass, then move each under-full column's deficit onto one
+        // over-full donor.
+        let mut scaled: Vec<f64> = weights.iter().map(|&w| w * n as f64 / total).collect();
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        let mut prob = vec![1.0f64; n];
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            prob[s as usize] = scaled[s as usize];
+            alias[s as usize] = l;
+            // The donor loses what the small column was missing.
+            scaled[l as usize] = (scaled[l as usize] + scaled[s as usize]) - 1.0;
+            if scaled[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Leftovers (either list) are full columns up to FP rounding.
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of columns (= devices).
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// `true` for a zero-column table (never constructed — `new` asserts).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// One O(1) draw: column `i` with probability `prob[i]`, else its
+    /// alias.  Consumes exactly two RNG values.
+    pub fn draw(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
 /// Data-size-proportional sampling with unbiased re-weighting.
 pub struct ImportanceSampler {
     rng: Rng,
@@ -218,6 +402,8 @@ pub struct ImportanceSampler {
     data_weights: Vec<f64>,
     /// `Σ |D_i|` over the whole fleet.
     total: f64,
+    /// O(1)-draw index over `data_weights`, built once at construction.
+    table: AliasTable,
 }
 
 impl ImportanceSampler {
@@ -227,11 +413,13 @@ impl ImportanceSampler {
             total > 0.0 && data_weights.iter().all(|&w| w > 0.0),
             "importance sampling needs strictly positive data weights"
         );
+        let table = AliasTable::new(&data_weights);
         ImportanceSampler {
             rng: Rng::new(seed ^ IMPORTANCE_STREAM),
             participation,
             data_weights,
             total,
+            table,
         }
     }
 
@@ -249,25 +437,26 @@ impl ParticipationSampler for ImportanceSampler {
     fn sample(&mut self, _round: usize) -> Cohort {
         let n = self.data_weights.len();
         let m = target_cohort_size(n, self.participation);
-        // m i.i.d. draws with replacement, p_i ∝ |D_i|; a device drawn
-        // `mult` times trains once and its upload carries `mult` shares.
-        let mut mult = vec![0usize; n];
+        // m i.i.d. draws with replacement, p_i ∝ |D_i|, each O(1) via the
+        // alias table; a device drawn `mult` times trains once and its
+        // upload carries `mult` shares.  The whole round is O(m log m) —
+        // the old dense multiplicity vector and per-draw linear scan over
+        // the fleet are gone.
+        let mut mult: BTreeMap<usize, usize> = BTreeMap::new();
         for _ in 0..m {
-            mult[self.rng.categorical(&self.data_weights)] += 1;
+            *mult.entry(self.table.draw(&mut self.rng)).or_insert(0) += 1;
         }
-        let mut devices = Vec::new();
-        let mut weights = Vec::new();
-        for (i, &c) in mult.iter().enumerate() {
-            if c > 0 {
-                devices.push(i);
-                // Unbiased estimator share: mult · w_i / (m·p_i).  With
-                // p_i ∝ w_i each share is total/m, so the cohort weights
-                // sum to the FULL corpus weight and the aggregate's
-                // `weight/Σweights` normalization equals the 1/(m·p_i)
-                // re-weighted FedAvg estimator exactly.
-                let p = self.prob(i);
-                weights.push(c as f64 * self.data_weights[i] / (m as f64 * p));
-            }
+        let mut devices = Vec::with_capacity(mult.len());
+        let mut weights = Vec::with_capacity(mult.len());
+        for (i, c) in mult {
+            devices.push(i);
+            // Unbiased estimator share: mult · w_i / (m·p_i).  With
+            // p_i ∝ w_i each share is total/m, so the cohort weights
+            // sum to the FULL corpus weight and the aggregate's
+            // `weight/Σweights` normalization equals the 1/(m·p_i)
+            // re-weighted FedAvg estimator exactly.
+            let p = self.prob(i);
+            weights.push(c as f64 * self.data_weights[i] / (m as f64 * p));
         }
         Cohort { devices, weights }
     }
@@ -291,7 +480,12 @@ pub struct AvailabilitySampler {
     duty_cycle: f64,
     over_select: f64,
     data_weights: Vec<f64>,
-    compute_secs: Vec<f64>,
+    /// `speed_rank[d]` = position of device `d` in ascending
+    /// `(compute_secs, id)` order, precomputed once so the per-round
+    /// deadline cut is a plain integer-key sort of the O(cohort)
+    /// candidate list instead of a float-comparator sort (the latencies
+    /// themselves are not needed after ranking).
+    speed_rank: Vec<u32>,
 }
 
 impl AvailabilitySampler {
@@ -304,13 +498,29 @@ impl AvailabilitySampler {
         compute_secs: Vec<f64>,
     ) -> AvailabilitySampler {
         assert_eq!(data_weights.len(), compute_secs.len());
+        // Latencies come from `LatencyModel` and are finite, so the
+        // `(compute_secs, id)` comparator is a strict total order and the
+        // precomputed global ranking induces exactly the ordering the old
+        // per-round comparator sort produced on every candidate subset.
+        let n = compute_secs.len();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&a, &b| {
+            compute_secs[a]
+                .partial_cmp(&compute_secs[b])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut speed_rank = vec![0u32; n];
+        for (r, &d) in order.iter().enumerate() {
+            speed_rank[d] = r as u32;
+        }
         AvailabilitySampler {
             seed,
             participation,
             duty_cycle,
             over_select,
             data_weights,
-            compute_secs,
+            speed_rank,
         }
     }
 
@@ -357,13 +567,9 @@ impl ParticipationSampler for AvailabilitySampler {
         let mut candidates: Vec<usize> = avail.into_iter().take(contacted).collect();
         // Deadline: the round closes once `target` devices have finished —
         // keep the fastest by simulated compute latency (ties by id),
-        // dropping the over-selected stragglers.
-        candidates.sort_by(|&a, &b| {
-            self.compute_secs[a]
-                .partial_cmp(&self.compute_secs[b])
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
+        // dropping the over-selected stragglers.  The precomputed rank
+        // reproduces the old `(compute_secs, id)` comparator exactly.
+        candidates.sort_unstable_by_key(|&d| self.speed_rank[d]);
         candidates.truncate(target);
         candidates.sort_unstable();
         let weights = candidates.iter().map(|&i| self.data_weights[i]).collect();
@@ -517,6 +723,70 @@ mod tests {
                 assert_eq!(a.sample(round), b.sample(round), "{mode:?} round {round}");
             }
         }
+    }
+
+    #[test]
+    fn uniform_window_replay_matches_dense_shuffle_at_scale() {
+        // Larger fleet, including the m == 1 window edge, against the
+        // dense legacy replica — one shared stream, many rounds.
+        let n = 50;
+        let weights = vec![1.0; n];
+        let lat = vec![0.0; n];
+        for participation in [0.02, 0.1, 0.9] {
+            let c = cfg(ParticipationMode::Uniform, participation, 1234);
+            let mut s = build(&c, &weights, &lat);
+            let mut legacy = Rng::new(1234 ^ 0x5a3c_91f7);
+            for round in 0..20 {
+                let m = target_cohort_size(n, participation);
+                let mut idx: Vec<usize> = (0..n).collect();
+                legacy.shuffle(&mut idx);
+                idx.truncate(m);
+                idx.sort_unstable();
+                assert_eq!(s.sample(round).devices, idx, "p={participation} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn alias_table_holds_exactly_the_input_distribution() {
+        // Per-column mass check: prob[i] plus every (1 − prob[j]) donated
+        // to i must equal n · w_i / total, i.e. the table is not merely
+        // approximately right, it redistributes the exact scaled weights.
+        let weights = [60.0, 30.0, 10.0, 50.0, 2.0, 2.0, 46.0];
+        let n = weights.len();
+        let total: f64 = weights.iter().sum();
+        let t = AliasTable::new(&weights);
+        assert_eq!(t.len(), n);
+        assert!(!t.is_empty());
+        for i in 0..n {
+            let mut mass = t.prob[i];
+            for j in 0..n {
+                if t.alias[j] as usize == i && j != i {
+                    mass += 1.0 - t.prob[j];
+                }
+            }
+            let want = weights[i] * n as f64 / total;
+            assert!((mass - want).abs() < 1e-9, "column {i}: {mass} vs {want}");
+        }
+        // Every draw lands in range and the two-values-per-draw cursor
+        // contract holds (below + uniform).
+        let mut rng = Rng::new(99);
+        for _ in 0..1000 {
+            assert!(t.draw(&mut rng) < n);
+        }
+    }
+
+    #[test]
+    fn availability_rank_breaks_latency_ties_by_id() {
+        // Duplicate latencies: the (compute_secs, id) order must keep the
+        // lower id first, exactly like the old per-round comparator.
+        let n = 5;
+        let weights = vec![1.0; n];
+        let lat = vec![2.0, 1.0, 2.0, 1.0, 0.5];
+        let mut s = AvailabilitySampler::new(3, 0.6, 1.0, 10.0, weights, lat);
+        // target = round(5·0.6) = 3 fastest: 4 (0.5), then the 1.0 tie
+        // broken by id → 1 before 3.
+        assert_eq!(s.sample(0).devices, vec![1, 3, 4]);
     }
 
     #[test]

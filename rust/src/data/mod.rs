@@ -9,7 +9,7 @@
 pub mod partition;
 pub mod synthetic;
 
-pub use partition::{partition, Partition};
+pub use partition::{partition, Partition, ShardPlan};
 pub use synthetic::{SyntheticSpec, SyntheticTask};
 
 /// A dataset in memory: row-major images + labels.

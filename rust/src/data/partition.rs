@@ -25,9 +25,76 @@ impl Partition {
     }
 }
 
+/// The whole fleet's shard assignment in compressed (CSR-like) form —
+/// *which* sample indices belong to *which* device, without materializing
+/// a single pixel.  Built once at registration (O(corpus) index words);
+/// a device's actual [`Dataset`] is synthesized on demand with
+/// [`ShardPlan::materialize`] only when a round samples it, so holding a
+/// registered fleet of 10⁶ devices never costs a second copy of the
+/// corpus.
+///
+/// `materialize(data, d)` is pinned (by `plan_materializes_the_exact_partition`)
+/// to equal `partition(data, devices, how, seed)[d]` bit-for-bit — the
+/// plan is a memory layout, never a semantics change.
+pub struct ShardPlan {
+    /// `offsets[d] .. offsets[d+1]` delimits device `d`'s slice of `index`.
+    offsets: Vec<u64>,
+    /// Sample indices grouped by device (each group in assignment order).
+    index: Vec<u32>,
+}
+
+impl ShardPlan {
+    /// Run the partition assignment (same RNG stream as [`partition`])
+    /// and store only the index structure.
+    pub fn build(data: &Dataset, devices: usize, how: Partition, seed: u64) -> ShardPlan {
+        let assignment = assign(data, devices, how, seed);
+        assert!(data.len() <= u32::MAX as usize, "sample ids must fit in u32");
+        let mut offsets = Vec::with_capacity(devices + 1);
+        let mut index = Vec::with_capacity(data.len());
+        offsets.push(0u64);
+        for shard in &assignment {
+            index.extend(shard.iter().map(|&s| s as u32));
+            offsets.push(index.len() as u64);
+        }
+        ShardPlan { offsets, index }
+    }
+
+    /// Registered fleet size.
+    pub fn devices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Device `d`'s shard size in samples — O(1), no materialization.
+    pub fn shard_len(&self, d: usize) -> usize {
+        (self.offsets[d + 1] - self.offsets[d]) as usize
+    }
+
+    /// Device `d`'s sample indices (assignment order).
+    pub fn shard_indices(&self, d: usize) -> &[u32] {
+        &self.index[self.offsets[d] as usize..self.offsets[d + 1] as usize]
+    }
+
+    /// Synthesize device `d`'s dataset from the shared corpus — exactly
+    /// the shard [`partition`] would have built eagerly.
+    pub fn materialize(&self, data: &Dataset, d: usize) -> Dataset {
+        let idx: Vec<usize> = self.shard_indices(d).iter().map(|&s| s as usize).collect();
+        data.subset(&idx)
+    }
+}
+
 /// Split `data` into `devices` shards; every sample is assigned exactly once
 /// and every device receives at least one sample.
 pub fn partition(data: &Dataset, devices: usize, how: Partition, seed: u64) -> Vec<Dataset> {
+    assign(data, devices, how, seed)
+        .iter()
+        .map(|idx| data.subset(idx))
+        .collect()
+}
+
+/// The shared assignment core of [`partition`] and [`ShardPlan`]: one RNG
+/// stream (`seed ^ 0x9a11_0c0d`), one deal, one non-empty-shard repair —
+/// so the eager and lazy paths cannot drift.
+fn assign(data: &Dataset, devices: usize, how: Partition, seed: u64) -> Vec<Vec<usize>> {
     assert!(devices > 0);
     let mut rng = Rng::new(seed ^ 0x9a11_0c0d);
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); devices];
@@ -84,7 +151,7 @@ pub fn partition(data: &Dataset, devices: usize, how: Partition, seed: u64) -> V
         }
     }
 
-    assignment.iter().map(|idx| data.subset(idx)).collect()
+    assignment
 }
 
 /// Earth-mover-ish skew metric: mean total-variation distance between each
@@ -165,6 +232,26 @@ mod tests {
         let b = partition(&data, 5, Partition::Dirichlet(0.5), 9);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.labels, y.labels);
+        }
+    }
+
+    #[test]
+    fn plan_materializes_the_exact_partition() {
+        let data = task();
+        for how in [Partition::Iid, Partition::Dirichlet(0.1)] {
+            let eager = partition(&data, 7, how, 42);
+            let plan = ShardPlan::build(&data, 7, how, 42);
+            assert_eq!(plan.devices(), 7, "{how:?}");
+            let total: usize = (0..7).map(|d| plan.shard_len(d)).sum();
+            assert_eq!(total, data.len(), "{how:?}");
+            for (d, shard) in eager.iter().enumerate() {
+                assert_eq!(plan.shard_len(d), shard.len(), "{how:?} device {d}");
+                let lazy = plan.materialize(&data, d);
+                assert_eq!(lazy.labels, shard.labels, "{how:?} device {d}");
+                let lb: Vec<u32> = lazy.images.iter().map(|v| v.to_bits()).collect();
+                let eb: Vec<u32> = shard.images.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(lb, eb, "{how:?} device {d}");
+            }
         }
     }
 

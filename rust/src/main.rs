@@ -118,6 +118,18 @@ OPTIONS:
                           --set transport_timeout_secs=30 (per-connection
                           silence budget in seconds; agents reconnect
                           within it, and a round gives up after ~3x)
+                          --set residual_resident_cap=1024 (max per-device
+                          residual/moment entries held in RAM per store;
+                          0 = unbounded (default).  Past the cap the
+                          least-recently-used entry spills to disk and
+                          rehydrates bit-identically on the next touch —
+                          placement only, the run's bits never change.
+                          At 10^5-10^6 registered devices set this to a
+                          few x the cohort size so RAM stays O(cohort))
+                          --set residual_spill_dir=/tmp/spill (where
+                          evicted entries go; required when the cap is
+                          nonzero — validate rejects a capped store
+                          with nowhere to spill)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

@@ -30,6 +30,13 @@ pub struct RoundRecord {
     pub sim_secs: f64,
     /// L2 norm of the aggregated ΔW (convergence diagnostics).
     pub update_norm: f64,
+    /// Registered fleet size (`cfg.devices`) — constant across a run, but
+    /// recorded per row so a log is self-describing about the fleet it
+    /// came from.
+    pub fleet_devices: u64,
+    /// Realized cohort size this round (after participation sampling,
+    /// availability traces and the deadline cut).
+    pub cohort_devices: u64,
 }
 
 /// A full experiment's log plus identifying metadata.
@@ -98,12 +105,12 @@ impl ExperimentLog {
             }
         }
         let mut out = String::from(
-            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,sim_secs,update_norm\n",
+            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,sim_secs,update_norm,fleet_devices,cohort_devices\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{},{},{},{},{:.4},{},{:.6e}",
+                "{},{:.6},{},{},{},{},{:.4},{},{:.6e},{},{}",
                 r.round,
                 r.train_loss,
                 cell(r.test_loss),
@@ -112,7 +119,9 @@ impl ExperimentLog {
                 r.downlink_bits,
                 r.wall_secs,
                 cell(r.sim_secs),
-                r.update_norm
+                r.update_norm,
+                r.fleet_devices,
+                r.cohort_devices
             );
         }
         out
@@ -146,6 +155,8 @@ impl ExperimentLog {
                 m.insert("wall_secs".into(), Value::Num(r.wall_secs));
                 m.insert("sim_secs".into(), finite(r.sim_secs));
                 m.insert("update_norm".into(), Value::Num(r.update_norm));
+                m.insert("fleet_devices".into(), Value::Num(r.fleet_devices as f64));
+                m.insert("cohort_devices".into(), Value::Num(r.cohort_devices as f64));
                 Value::Obj(m)
             })
             .collect();
@@ -202,6 +213,8 @@ mod tests {
                     wall_secs: 0.5,
                     sim_secs: (i as f64 + 1.0) * 2.0,
                     update_norm: 1.0,
+                    fleet_devices: 100,
+                    cohort_devices: 10 + i as u64,
                 })
                 .collect(),
         }
@@ -238,11 +251,13 @@ mod tests {
 
         let lines: Vec<&str> = csv.lines().collect();
         let header: Vec<&str> = lines[0].split(',').collect();
-        assert_eq!(header.len(), 9);
+        assert_eq!(header.len(), 11);
         assert_eq!(header[7], "sim_secs");
+        assert_eq!(header[9], "fleet_devices");
+        assert_eq!(header[10], "cohort_devices");
         for (i, line) in lines[1..].iter().enumerate() {
             let cells: Vec<&str> = line.split(',').collect();
-            assert_eq!(cells.len(), 9, "row {i} lost a column: {line}");
+            assert_eq!(cells.len(), 11, "row {i} lost a column: {line}");
             // round + train_loss always parse.
             assert_eq!(cells[0].parse::<usize>().unwrap(), i);
             let train: f64 = cells[1].parse().unwrap();
@@ -266,6 +281,9 @@ mod tests {
             } else {
                 assert!(cells[7].is_empty(), "row {i}: want empty sim_secs");
             }
+            // Fleet/cohort sizes are plain integers, always present.
+            assert_eq!(cells[9].parse::<u64>().unwrap(), l.rounds[i].fleet_devices);
+            assert_eq!(cells[10].parse::<u64>().unwrap(), l.rounds[i].cohort_devices);
         }
     }
 

@@ -1160,3 +1160,129 @@ fn prop_wire_body_mutation_preserves_support_or_errors() {
         }
     }
 }
+
+// ---- residual store: spilling is placement, never semantics ----------------
+
+/// Values chosen to break any non-bit-exact round-trip: signed zero,
+/// subnormals, the smallest normal, and a payload-carrying NaN.
+fn nasty_f32(rng: &mut Rng) -> f32 {
+    match rng.below(6) {
+        0 => -0.0,
+        1 => 1.0e-42,            // subnormal
+        2 => -1.0e-45,           // smallest-magnitude subnormal, negative
+        3 => f32::MIN_POSITIVE,
+        4 => f32::from_bits(0x7fc0_1234), // NaN with a payload
+        _ => rng.normal() as f32,
+    }
+}
+
+#[test]
+fn prop_residual_store_any_interleaving_matches_the_dense_oracle() {
+    use fedadam_ssm::algorithms::residual_store::ResidualStore;
+    use std::collections::BTreeMap;
+
+    let dir = std::env::temp_dir().join(format!("fedadam-prop-rstore-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill_dir = dir.to_string_lossy().into_owned();
+
+    let mut rng = Rng::new(911);
+    for trial in 0..40u64 {
+        let dim = 1 + rng.below(9);
+        let cap = rng.below(4); // 0 = unbounded (dense-equivalent)
+        let spill = if cap == 0 { "" } else { spill_dir.as_str() };
+        let mut store = ResidualStore::new(dim, cap, spill);
+        // The dense oracle: what a Vec<Memory> keyed by id would hold.
+        let mut oracle: BTreeMap<u64, Vec<f32>> = BTreeMap::new();
+        // Ids far above any resident cap, clustered and colliding.
+        let ids = [
+            0u64,
+            1,
+            2,
+            3,
+            999_983,
+            u64::MAX - 7,
+            trial * 1_000_003,
+        ];
+
+        for step in 0..200 {
+            match rng.below(4) {
+                0 => {
+                    // Touch (materializing / rehydrating) then overwrite
+                    // some lanes with hostile values.  Touching past the
+                    // cap evicts the LRU entry to disk.
+                    let id = ids[rng.below(ids.len())];
+                    let expect = oracle.entry(id).or_insert_with(|| vec![0.0; dim]);
+                    let entry = store.get_mut(id);
+                    for (lane, (got, want)) in entry.iter().zip(expect.iter()).enumerate() {
+                        assert_eq!(
+                            got.to_bits(),
+                            want.to_bits(),
+                            "trial {trial} step {step}: id {id} lane {lane} diverged on touch"
+                        );
+                    }
+                    for lane in 0..dim {
+                        if rng.below(2) == 0 {
+                            let v = nasty_f32(&mut rng);
+                            entry[lane] = v;
+                            expect[lane] = v;
+                        }
+                    }
+                }
+                1 => {
+                    // Non-promoting read from whichever tier holds it.
+                    let id = ids[rng.below(ids.len())];
+                    let got = store.peek(id);
+                    let want = oracle.get(&id);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some(g), Some(w)) => {
+                            let gb: Vec<u32> = g.iter().map(|x| x.to_bits()).collect();
+                            let wb: Vec<u32> = w.iter().map(|x| x.to_bits()).collect();
+                            assert_eq!(gb, wb, "trial {trial} step {step}: peek({id})");
+                        }
+                        (g, w) => panic!(
+                            "trial {trial} step {step}: peek({id}) presence {} vs oracle {}",
+                            g.is_some(),
+                            w.is_some()
+                        ),
+                    }
+                }
+                2 => {
+                    // Snapshot → restore in place (what a journal resume
+                    // does mid-run).
+                    let mut w = ByteWriter::new();
+                    store.save_state(&mut w);
+                    let bytes = w.into_inner();
+                    let mut r = ByteReader::new(&bytes);
+                    store.load_state(&mut r).unwrap();
+                    r.finish().unwrap();
+                }
+                _ => {
+                    // Snapshot → restore into a store with a DIFFERENT
+                    // resident cap: tiering is placement, the snapshot
+                    // must be cap-agnostic.
+                    let mut w = ByteWriter::new();
+                    store.save_state(&mut w);
+                    let bytes = w.into_inner();
+                    let cap2 = rng.below(4);
+                    let spill2 = if cap2 == 0 { "" } else { spill_dir.as_str() };
+                    let mut fresh = ResidualStore::new(dim, cap2, spill2);
+                    let mut r = ByteReader::new(&bytes);
+                    fresh.load_state(&mut r).unwrap();
+                    r.finish().unwrap();
+                    store = fresh;
+                }
+            }
+        }
+
+        // Every touched id reads back bit-identical to the dense oracle.
+        assert_eq!(store.touched(), oracle.len(), "trial {trial}: touched-set size");
+        for (id, want) in &oracle {
+            let got = store.peek(*id).unwrap_or_else(|| panic!("trial {trial}: id {id} lost"));
+            let gb: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let wb: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(gb, wb, "trial {trial}: final read of id {id}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -200,3 +200,63 @@ fn resuming_a_finished_run_is_a_noop_with_the_same_results() {
     assert_eq!(csv_no_wall(&full_log), csv_no_wall(&resumed_log), "CSV diverged");
     std::fs::remove_dir_all(&dir).ok();
 }
+
+#[test]
+fn kill_with_spilled_residuals_on_disk_resumes_bit_identically() {
+    // The out-of-core tiering must survive a crash: cap the EF residual
+    // store below the device count so that, at the kill point, at least
+    // one device's residual lives ONLY in the spill file — then resume
+    // and require byte-identity with a never-interrupted, never-spilling
+    // (cap = 0) ground truth.  Snapshots serialize touched entries
+    // id-keyed regardless of tier, so placement cannot leak into them.
+    let tag = "spilled";
+    let spill = tmp_dir("spill-store");
+    std::fs::create_dir_all(&spill).expect("spill dir");
+
+    // Ground truth: dense residuals, no journal, never interrupted.
+    let (base_log, base_w) =
+        run_uninterrupted(grid_cfg(2, "fedadam-ssm-ef", ParticipationMode::Uniform));
+
+    // Journaled run with a 2-entry cap across 3 devices.
+    let dir = tmp_dir(tag);
+    let mut cfg = grid_cfg(2, "fedadam-ssm-ef", ParticipationMode::Uniform);
+    cfg.journal = dir.to_string_lossy().into_owned();
+    cfg.residual_resident_cap = 2;
+    cfg.residual_spill_dir = spill.to_string_lossy().into_owned();
+    let pool = pool_for(&cfg);
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("journaled coordinator");
+    for _ in 0..3 {
+        coord.step_round().expect("pre-kill round");
+    }
+    assert_eq!(coord.run_state(), RunState::WaitingForCohort);
+    assert_eq!(coord.round(), 3);
+    let spilled_files = std::fs::read_dir(&spill)
+        .expect("spill dir readable")
+        .count();
+    assert!(
+        spilled_files > 0,
+        "kill point must have residuals on disk for this test to mean anything"
+    );
+    drop(coord); // the "crash" — also removes the store's spill files
+    assert!(dir.join("snapshot_2.bin").is_file(), "no snapshot at the kill");
+
+    // Resume under the same cap and finish.
+    let mut cfg = grid_cfg(2, "fedadam-ssm-ef", ParticipationMode::Uniform);
+    cfg.resume = dir.to_string_lossy().into_owned();
+    cfg.residual_resident_cap = 2;
+    cfg.residual_spill_dir = spill.to_string_lossy().into_owned();
+    let pool = pool_for(&cfg);
+    let mut resumed = Coordinator::with_pool(cfg, pool).expect("resumed coordinator");
+    assert!(resumed.round() >= 3, "resume lost completed rounds");
+    let resumed_log = resumed.run().expect("resumed run");
+    let resumed_w = resumed.global().w.clone();
+
+    assert_eq!(base_w, resumed_w, "spilled-residual resume diverged from dense ground truth");
+    assert_eq!(
+        csv_no_wall(&base_log),
+        csv_no_wall(&resumed_log),
+        "spilled-residual resume CSV diverged"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&spill).ok();
+}

@@ -22,6 +22,10 @@
 #   9. perf pins: e2e_round and transport_loopback --json vs the
 #      checked-in BENCH_*.json (prints WARN on >10% wall-clock
 #      regression; never fails — absolute numbers are host-dependent)
+#  10. fleet lane: fleet_scaling in quick mode (fleets 1e3/1e5) — the
+#      per-round flatness assert and the dense-vs-spilled residual
+#      conformance leg are hard gates; the BENCH_fleet_scaling.json
+#      diff is warn-only (1e6 is local-only, without FEDADAM_BENCH_QUICK)
 #
 # Usage: scripts/ci_local.sh [--quick]
 #   --quick  skip the determinism + conformance + resume grids
@@ -111,5 +115,14 @@ FEDADAM_BENCH_QUICK=1 \
   cargo bench --bench transport_loopback -- --json \
     --json-out target/BENCH_transport_loopback.json \
     --baseline BENCH_transport_loopback.json
+
+step "fleet lane: fleet_scaling flatness + spill conformance (quick: 1e3/1e5)"
+# Hard gates (in-bench asserts): per-round wall-clock flat in fleet size,
+# dense-vs-spilled residuals bit-identical across the zoo.  The baseline
+# diff is warn-only.  The 1e6 sweep runs without FEDADAM_BENCH_QUICK.
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench fleet_scaling -- --json \
+    --json-out target/BENCH_fleet_scaling.json \
+    --baseline BENCH_fleet_scaling.json
 
 step "ci_local: all gates green"
