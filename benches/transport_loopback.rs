@@ -26,12 +26,13 @@ use std::collections::BTreeMap;
 use std::io::Write as _;
 
 use fedadam_ssm::algorithms::{self, LocalDelta};
-use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::benchlib::{black_box, from_env, Bench};
 use fedadam_ssm::config::ExperimentConfig;
+use fedadam_ssm::runtime::{reference_meta, reference_pool};
 use fedadam_ssm::transport::frame::{read_frame, write_frame, FrameBuffer};
 use fedadam_ssm::transport::msg::{Assignment, Msg, Uplink, PROTOCOL_VERSION};
 use fedadam_ssm::transport::net::Stream;
-use fedadam_ssm::transport::TransportServer;
+use fedadam_ssm::transport::{run_agent, TransportServer};
 use fedadam_ssm::util::json::{self, Value};
 
 const DIM: usize = 4096;
@@ -227,6 +228,159 @@ fn run_codec_case(bench: &mut fedadam_ssm::benchlib::Bench) -> f64 {
     result.p50_ns
 }
 
+// ---------------------------------------------------------------------------
+// agent fleet cases: a REAL device agent serving rounds, RSS flat in
+// fleet size (the durable-agent tentpole's memory contract)
+// ---------------------------------------------------------------------------
+
+/// Slots per agent round (same per-round workload at every fleet size).
+const AGENT_COHORT: usize = 8;
+/// Rotating device window — the touched set stays fleet-independent.
+const AGENT_TOUCHED: usize = 64;
+const AGENT_INPUT: [usize; 3] = [4, 4, 1]; // row 16; dim = 10 * 17 = 170
+const AGENT_CLASSES: usize = 10;
+/// RSS growth at 10^5 must stay within this ratio of growth at 10^3...
+const AGENT_FLAT_RATIO: f64 = 1.25;
+/// ...or under this floor (KiB).  The floor is sized to admit the
+/// agent's one *legitimate* O(fleet) allocation — the shared synthetic
+/// corpus (10^5 samples x 16 f32 ≈ 7 MiB) plus the shard-plan index —
+/// while still failing the old dense per-device state layout
+/// (2 · dim · fleet f32 ≈ 136 MiB at 10^5).
+const AGENT_RSS_FLOOR_KB: f64 = 32_768.0;
+
+/// One sample per device: registration is O(fleet), every round is
+/// O(cohort).  The agent steps rounds the loopback driver hands it.
+fn agent_fleet_cfg(fleet: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("loopback-agent-{fleet}");
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = "fedadam-ssm-ef".into(); // per-device EF residuals
+    cfg.rounds = 1; // the driver below broadcasts rounds manually
+    cfg.devices = fleet;
+    cfg.train_samples = fleet;
+    cfg.test_samples = 16;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 1;
+    cfg.lr = 0.02;
+    cfg.seed = 41;
+    cfg.num_workers = 1;
+    cfg
+}
+
+/// Resident set size in KiB (`None` off Linux / unreadable procfs).
+fn rss_kb() -> Option<f64> {
+    let text = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = text.lines().find(|l| l.starts_with("VmRSS:"))?;
+    line.split_whitespace().nth(1)?.parse::<f64>().ok()
+}
+
+struct AgentCase {
+    name: String,
+    fleet: usize,
+    median_round_ns: f64,
+    rss_growth_kb: Option<f64>,
+}
+
+/// Bench one fleet size against a REAL [`run_agent`] (reference
+/// backend, real socket, real training + EF compression), `state_dir`
+/// turning the per-round durable snapshot on.  RSS growth is metered
+/// from just before the agent builds its world to after the timed
+/// rounds — it contains everything the agent holds, corpus included.
+fn run_agent_fleet_case(
+    bench: &mut Bench,
+    fleet: usize,
+    state_dir: Option<&std::path::Path>,
+) -> AgentCase {
+    let mut cfg = agent_fleet_cfg(fleet);
+    let name = match state_dir {
+        Some(dir) => {
+            let _ = std::fs::remove_dir_all(dir);
+            cfg.agent_state_dir = dir.to_string_lossy().into_owned();
+            format!("agent-round-fleet-{fleet}-snap")
+        }
+        None => format!("agent-round-fleet-{fleet}"),
+    };
+    let meta = reference_meta(&AGENT_INPUT, AGENT_CLASSES, 4, 8, 1);
+    let dim = meta.dim;
+    let mut server = TransportServer::bind("127.0.0.1:0", 1, 30.0, cfg.fingerprint(), dim)
+        .expect("bind");
+    let addr = server.addr().to_string();
+    let rss_before = rss_kb();
+    let agent = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || {
+            let pool = reference_pool(meta, 1).expect("reference pool");
+            run_agent(&cfg, &pool, &addr, 0).expect("agent");
+        })
+    };
+    // fedadam-ssm-ef is Aggregated-policy: the downlink carries (m, v).
+    let w = vec![0.1f32; dim];
+    let m = vec![0.0f32; dim];
+    let v = vec![0.0f32; dim];
+    let window = AGENT_TOUCHED.min(fleet);
+    let mut round = 0u64;
+    let result = bench.run(name.clone(), || {
+        let asn: Vec<Assignment> = (0..AGENT_COHORT as u32)
+            .map(|i| Assignment {
+                slot: i,
+                device: ((round as usize * AGENT_COHORT + i as usize) % window) as u32,
+                weight: 1.0,
+            })
+            .collect();
+        let mut got = 0usize;
+        server
+            .run_round(round, &w, Some(&m), Some(&v), &asn, |_, _, _, upload| {
+                got += black_box(1);
+                black_box(upload.bits);
+                Ok(())
+            })
+            .expect("agent round");
+        assert_eq!(got, AGENT_COHORT);
+        round += 1;
+    });
+    let rss_after = rss_kb();
+    server.shutdown();
+    drop(server);
+    agent.join().expect("agent thread");
+    if let Some(dir) = state_dir {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+    let rss_growth_kb = match (rss_before, rss_after) {
+        (Some(a), Some(b)) => Some((b - a).max(0.0)),
+        _ => None,
+    };
+    AgentCase {
+        name,
+        fleet,
+        median_round_ns: result.p50_ns,
+        rss_growth_kb,
+    }
+}
+
+/// The three agent cases: RSS flatness pinned hard at {10^3, 10^5}, plus
+/// a snapshot-on case at 10^3 so the pin isolates durability overhead.
+fn run_agent_cases(bench: &mut Bench) -> Vec<AgentCase> {
+    let small = run_agent_fleet_case(bench, 1_000, None);
+    let large = run_agent_fleet_case(bench, 100_000, None);
+    if let (Some(g0), Some(g)) = (small.rss_growth_kb, large.rss_growth_kb) {
+        let bound = (g0 * AGENT_FLAT_RATIO).max(AGENT_RSS_FLOOR_KB);
+        assert!(
+            g <= bound,
+            "agent resident memory is not flat in fleet size: grew {g:.0} KiB at \
+             fleet {} vs {g0:.0} KiB at fleet {} (bound {bound:.0} KiB) — O(fleet) \
+             state is back on the agent",
+            large.fleet,
+            small.fleet,
+        );
+    }
+    let snap_dir = std::env::temp_dir().join(format!(
+        "fedadam-loopback-agentstate-{}",
+        std::process::id()
+    ));
+    let snap = run_agent_fleet_case(bench, 1_000, Some(&snap_dir));
+    vec![small, large, snap]
+}
+
 /// `--json` mode: the machine-readable perf pin (see the module docs).
 fn json_mode(args: &[String]) {
     let opt = |flag: &str| {
@@ -241,6 +395,7 @@ fn json_mode(args: &[String]) {
     let mut bench = from_env();
     bench.max_iters = 30;
     let results = run_cases(&mut bench);
+    let agent_cases = run_agent_cases(&mut bench);
 
     let mut medians: BTreeMap<String, f64> = BTreeMap::new();
     let mut cases: Vec<Value> = Vec::new();
@@ -254,6 +409,22 @@ fn json_mode(args: &[String]) {
         obj.insert("msgs_per_sec".into(), Value::Num(msgs_per_sec));
         obj.insert("bits_per_msg".into(), Value::Num(r.bits_per_msg as f64));
         obj.insert("framed_bytes_per_msg".into(), Value::Num(r.body_bytes as f64));
+        cases.push(Value::Obj(obj));
+    }
+    for c in &agent_cases {
+        medians.insert(c.name.clone(), c.median_round_ns);
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Value::Str(c.name.clone()));
+        obj.insert("median_round_ns".into(), Value::Num(c.median_round_ns));
+        obj.insert("msgs_per_round".into(), Value::Num(AGENT_COHORT as f64));
+        obj.insert("fleet_devices".into(), Value::Num(c.fleet as f64));
+        obj.insert(
+            "rss_growth_kb".into(),
+            match c.rss_growth_kb {
+                Some(g) => Value::Num(g),
+                None => Value::Null,
+            },
+        );
         cases.push(Value::Obj(obj));
     }
 
@@ -329,6 +500,7 @@ fn main() {
     bench.max_iters = 50;
     let codec_ns = run_codec_case(&mut bench);
     let results = run_cases(&mut bench);
+    let agent_cases = run_agent_cases(&mut bench);
     bench.report("transport loopback");
     println!("\n-- socket overhead over the in-memory codec --");
     for r in &results {
@@ -339,6 +511,26 @@ fn main() {
             SLOTS as f64 / (r.median_round_ns / 1e9).max(1e-12),
             r.median_round_ns / codec_ns.max(1.0),
             r.body_bytes
+        );
+    }
+    println!("\n-- device agent: real training rounds, RSS flat in fleet --");
+    for c in &agent_cases {
+        println!(
+            "{:>28}: {:.2} ms/round, RSS growth {}",
+            c.name,
+            c.median_round_ns / 1e6,
+            match c.rss_growth_kb {
+                Some(g) => format!("{g:.0} KiB"),
+                None => "n/a".into(),
+            }
+        );
+    }
+    if let [base, _, snap] = &agent_cases[..] {
+        println!(
+            "durable-snapshot overhead at fleet 1000: {:.2} ms vs {:.2} ms per round ({:+.0}%)",
+            snap.median_round_ns / 1e6,
+            base.median_round_ns / 1e6,
+            (snap.median_round_ns / base.median_round_ns.max(1.0) - 1.0) * 100.0
         );
     }
     println!("\n{}", bench.to_csv());

@@ -97,18 +97,7 @@ impl Bench {
             f();
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
-        let result = BenchResult {
-            name: name.into(),
-            iters,
-            mean_ns: mean,
-            p50_ns: pct(0.50),
-            p95_ns: pct(0.95),
-            min_ns: samples[0],
-        };
-        self.results.push(result);
+        self.results.push(summarize(name.into(), iters, samples));
         self.results.last().unwrap()
     }
 
@@ -134,6 +123,27 @@ impl Bench {
             ));
         }
         out
+    }
+}
+
+/// Summarize raw per-iteration samples (ns) into a [`BenchResult`].
+///
+/// Sorts with [`f64::total_cmp`] so a poisoned sample (NaN from a clock
+/// hiccup or a downstream subtraction) sorts above every finite sample
+/// instead of panicking the whole harness mid-sweep; the percentiles of
+/// a mostly-finite run stay finite, and the mean stays honest (NaN) so
+/// the poisoned case is visible in the table rather than fabricated.
+fn summarize(name: String, iters: usize, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(f64::total_cmp);
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name,
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+        min_ns: samples[0],
     }
 }
 
@@ -168,5 +178,17 @@ mod tests {
         assert!(r.p95_ns >= r.p50_ns);
         assert!(r.min_ns <= r.mean_ns * 1.5);
         assert!(b.to_csv().lines().count() == 2);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_the_summary() {
+        // `partial_cmp(..).unwrap()` would panic here; `total_cmp` sorts
+        // the NaN above every finite sample, keeping percentiles finite
+        // and leaving the mean NaN as an honest poisoned-run marker.
+        let r = summarize("nan".into(), 4, vec![3.0, f64::NAN, 1.0, 2.0]);
+        assert_eq!(r.min_ns, 1.0);
+        assert_eq!(r.p50_ns, 2.0);
+        assert_eq!(r.p95_ns, 3.0);
+        assert!(r.mean_ns.is_nan());
     }
 }

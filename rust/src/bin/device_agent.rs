@@ -55,7 +55,11 @@ OPTIONS:
     --config <file>       TOML experiment config — must resolve to the same
                           config fingerprint as the server's, or the
                           registration handshake is refused
-    --set key=value       override one config key (repeatable)
+    --set key=value       override one config key (repeatable; notably
+                          --set agent_state_dir=DIR journals this agent's
+                          per-device compressor state to DIR/agent_<i>.state
+                          each round, so a killed agent process restarted
+                          with the same flags resumes bit-identically)
     --verbose             debug logging
 ";
 

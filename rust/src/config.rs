@@ -207,6 +207,20 @@ pub struct ExperimentConfig {
     /// eviction, removed with the run).  Required non-empty when
     /// `residual_resident_cap > 0`.
     pub residual_spill_dir: String,
+    /// Directory where each device agent persists its per-device
+    /// compressor state (error-feedback residuals, 1-bit warmup,
+    /// device-local Adam moments, the last round's encoded uplink
+    /// frames) as a crash-safe `agent_<index>.state` append log — see
+    /// [`crate::transport::agent_state`].  Non-empty = every agent
+    /// appends one durable record per completed round *before* sending
+    /// that round's uplinks (compacted in place every `snapshot_every`
+    /// records and on clean shutdown), so a **fresh agent process**
+    /// pointed at the same directory resumes bit-identical to the
+    /// uninterrupted run for every stateful id.  Empty (default) =
+    /// agent state lives and dies with its process.  Pure durability
+    /// plumbing — results are bit-identical with it on or off — so it
+    /// is excluded from the fingerprint.
+    pub agent_state_dir: String,
 }
 
 impl Default for ExperimentConfig {
@@ -250,6 +264,7 @@ impl Default for ExperimentConfig {
             transport_timeout_secs: 30.0,
             residual_resident_cap: 0,
             residual_spill_dir: String::new(),
+            agent_state_dir: String::new(),
         }
     }
 }
@@ -336,6 +351,7 @@ impl ExperimentConfig {
             "transport_timeout_secs" => self.transport_timeout_secs = p(key, value)?,
             "residual_resident_cap" => self.residual_resident_cap = p(key, value)?,
             "residual_spill_dir" => self.residual_spill_dir = value.into(),
+            "agent_state_dir" => self.agent_state_dir = value.into(),
             _ => bail!("unknown config key {key:?}"),
         }
         Ok(())
@@ -449,7 +465,13 @@ impl ExperimentConfig {
     /// `transport_timeout_secs`): a remote run is bit-identical to the
     /// in-process run, and the device agents' Hello handshake compares
     /// this fingerprint against the server's, which must not depend on
-    /// which side of the socket a process sits.
+    /// which side of the socket a process sits.  Also excluded, for the
+    /// same bit-neutrality reason: the residual store's placement knobs
+    /// (`residual_resident_cap`, `residual_spill_dir`) and the agent
+    /// durability directory (`agent_state_dir`) — an agent resumed from
+    /// its state log replays exactly the run it would have produced
+    /// uninterrupted, and the state log's own header records this
+    /// fingerprint to reject a foreign directory.
     pub fn fingerprint(&self) -> u64 {
         let canon = format!(
             "{}|{}|{}|{}|{}|{}|{:016x}|{:016x}|{}|{:016x}|{}|{}|{}|{}|{}|{}|{}|{:?}|{:016x}|{}|{:016x}|{:016x}|{}|{:016x}|{:016x}|{:016x}|{}",
@@ -736,6 +758,7 @@ mod tests {
         cfg.transport_timeout_secs = 5.0;
         cfg.residual_resident_cap = 4; // memory placement, not semantics
         cfg.residual_spill_dir = "/tmp/r".into();
+        cfg.agent_state_dir = "/tmp/agent-state".into(); // durability, not semantics
         assert_eq!(cfg.fingerprint(), base);
         // Determinism-bearing knobs must.
         for (key, value) in [
@@ -769,6 +792,19 @@ mod tests {
         cfg.set("residual_resident_cap", "8").unwrap();
         let err = cfg.validate().unwrap_err().to_string();
         assert!(err.contains("residual_spill_dir"), "error must name the knob: {err}");
+    }
+
+    #[test]
+    fn agent_state_dir_rides_through_set_and_validate() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.agent_state_dir.is_empty());
+        cfg.set("agent_state_dir", "/tmp/agent-state").unwrap();
+        assert_eq!(cfg.agent_state_dir, "/tmp/agent-state");
+        cfg.validate().unwrap();
+        // Composes with the transport knobs (its whole point).
+        cfg.set("transport_listen", "127.0.0.1:0").unwrap();
+        cfg.set("transport_agents", "2").unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

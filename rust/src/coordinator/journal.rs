@@ -54,7 +54,10 @@ use crate::util::bytes::{crc32, ByteReader, ByteWriter};
 /// entries only* (id-keyed, via `ResidualStore::save_state`) instead of a
 /// dense fleet-sized array, and log rows carry the
 /// `fleet_devices`/`cohort_devices` columns.
-pub const JOURNAL_VERSION: u32 = 2;
+/// v3: snapshot log rows carry the two measured uplink-latency f64s
+/// (`meas_uplink_max_secs`/`meas_uplink_mean_secs`); pure observability,
+/// but the row layout changed, so old snapshots must not be trusted.
+pub const JOURNAL_VERSION: u32 = 3;
 /// Snapshot file magic (`"FJS1"`).
 pub const SNAPSHOT_MAGIC: u32 = 0x464A_5331;
 /// Event-log file name inside the journal directory.

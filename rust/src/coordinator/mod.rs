@@ -118,7 +118,7 @@ use crate::runtime::{EngineHandle, EnginePool, Manifest, ModelMeta};
 use crate::simtime::{LatencyModel, SimClock};
 use crate::tensor;
 use crate::transport::msg::Assignment;
-use crate::transport::TransportServer;
+use crate::transport::{RoundLatency, TransportServer};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 pub use device::{Device, LocalRunConfig};
@@ -488,25 +488,35 @@ impl Coordinator {
 
         // Training → Aggregating (1-4 (+5): train → delta → compress →
         // upload → aggregate).
-        let (loss_sum, mut agg, round_secs, folded, expected) = if self.cfg.pipeline_depth == 0 {
+        let (loss_sum, mut agg, round_secs, measured, folded, expected) = if self.cfg.pipeline_depth
+            == 0
+        {
             // Legacy barrier: hold every upload, reduce once at the end.
             // Slot-placed, not pushed: the in-process sink fires in
             // ascending slot order, but the wire transport delivers in
             // arrival order, and the reduce must see cohort order either
             // way.
             let mut uploads: Vec<Option<Upload>> = (0..cohort.len()).map(|_| None).collect();
-            let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |slot, upload| {
-                debug_assert!(uploads[slot].is_none(), "slot {slot} uploaded twice");
-                uploads[slot] = Some(upload);
-                Ok(())
-            })?;
+            let (loss_sum, round_secs, measured) =
+                self.train_and_upload(t, &cohort, |slot, upload| {
+                    debug_assert!(uploads[slot].is_none(), "slot {slot} uploaded twice");
+                    uploads[slot] = Some(upload);
+                    Ok(())
+                })?;
             self.transition(RunState::Aggregating);
             let uploads: Vec<Upload> = uploads
                 .into_iter()
                 .map(|u| u.expect("train_and_upload returned Ok with a slot missing"))
                 .collect();
             let n = uploads.len();
-            (loss_sum, aggregate_sharded(&uploads, dim, shards), round_secs, n, n)
+            (
+                loss_sum,
+                aggregate_sharded(&uploads, dim, shards),
+                round_secs,
+                measured,
+                n,
+                n,
+            )
         } else {
             // Streaming aggregation: a folder thread owns the
             // ShardedAccumulator and folds each upload as it lands, while
@@ -517,31 +527,34 @@ impl Coordinator {
             // training finishes.
             let weights: Vec<f64> = cohort.weights.clone();
             let (tx, rx) = mpsc::channel::<(usize, Upload)>();
-            std::thread::scope(|scope| -> Result<(f64, Aggregate, f64, usize, usize)> {
-                // The folder returns the accumulator rather than the
-                // finalized aggregate: if training errors mid-round, the
-                // early `?` below drops `tx`, the stream ends with slots
-                // missing, and finalizing here would (rightly) panic —
-                // the error path must stay an error.
-                let folder = scope.spawn(move || {
-                    let mut acc = ShardedAccumulator::new(dim, shards, &weights);
-                    for (slot, upload) in rx {
-                        acc.push(slot, upload);
-                    }
-                    acc
-                });
-                let (loss_sum, round_secs) = self.train_and_upload(t, &cohort, |slot, upload| {
-                    tx.send((slot, upload))
-                        .map_err(|_| anyhow!("upload folder thread hung up"))
-                })?;
-                drop(tx); // close the stream so the folder drains out
-                let acc = folder
-                    .join()
-                    .unwrap_or_else(|p| std::panic::resume_unwind(p));
-                self.transition(RunState::Aggregating);
-                let (folded, expected) = (acc.folded(), acc.expected());
-                Ok((loss_sum, acc.finalize(), round_secs, folded, expected))
-            })?
+            std::thread::scope(
+                |scope| -> Result<(f64, Aggregate, f64, RoundLatency, usize, usize)> {
+                    // The folder returns the accumulator rather than the
+                    // finalized aggregate: if training errors mid-round, the
+                    // early `?` below drops `tx`, the stream ends with slots
+                    // missing, and finalizing here would (rightly) panic —
+                    // the error path must stay an error.
+                    let folder = scope.spawn(move || {
+                        let mut acc = ShardedAccumulator::new(dim, shards, &weights);
+                        for (slot, upload) in rx {
+                            acc.push(slot, upload);
+                        }
+                        acc
+                    });
+                    let (loss_sum, round_secs, measured) =
+                        self.train_and_upload(t, &cohort, |slot, upload| {
+                            tx.send((slot, upload))
+                                .map_err(|_| anyhow!("upload folder thread hung up"))
+                        })?;
+                    drop(tx); // close the stream so the folder drains out
+                    let acc = folder
+                        .join()
+                        .unwrap_or_else(|p| std::panic::resume_unwind(p));
+                    self.transition(RunState::Aggregating);
+                    let (folded, expected) = (acc.folded(), acc.expected());
+                    Ok((loss_sum, acc.finalize(), round_secs, measured, folded, expected))
+                },
+            )?
         };
         self.emit(journal::Event::Aggregated {
             round: t as u64,
@@ -621,6 +634,8 @@ impl Coordinator {
             update_norm,
             fleet_devices: self.cfg.devices as u64,
             cohort_devices: cohort.len() as u64,
+            meas_uplink_max_secs: measured.max_secs,
+            meas_uplink_mean_secs: measured.mean_secs,
         };
         self.log.rounds.push(record.clone());
         self.round += 1;
@@ -712,6 +727,8 @@ impl Coordinator {
             w.put_f64(r.update_norm);
             w.put_u64(r.fleet_devices);
             w.put_u64(r.cohort_devices);
+            w.put_f64(r.meas_uplink_max_secs);
+            w.put_f64(r.meas_uplink_mean_secs);
         }
         w.put_usize(self.pending_evals.len());
         for p in &self.pending_evals {
@@ -760,6 +777,8 @@ impl Coordinator {
                 update_norm: r.take_f64()?,
                 fleet_devices: r.take_u64()?,
                 cohort_devices: r.take_u64()?,
+                meas_uplink_max_secs: r.take_f64()?,
+                meas_uplink_mean_secs: r.take_f64()?,
             });
         }
         let pend = r.take_usize()?;
@@ -793,15 +812,18 @@ impl Coordinator {
     /// accounting and the sink calls all proceed in ascending device
     /// order, so the wire log is byte-identical at any worker count.
     ///
-    /// Returns `(loss_sum, round_secs)` where `round_secs` is the round's
-    /// simulated critical path: the slowest participant's
-    /// `compute + uplink` seconds under the latency model.
+    /// Returns `(loss_sum, round_secs, latency)` where `round_secs` is
+    /// the round's simulated critical path — the slowest participant's
+    /// `compute + uplink` seconds under the latency model — and
+    /// `latency` is the *measured* host-clock uplink round-trip
+    /// ([`RoundLatency`]).  In-process there is no wire, so the measured
+    /// cells are `NaN`; only the remote path fills them.
     fn train_and_upload(
         &mut self,
         t: usize,
         cohort: &Cohort,
         mut sink: impl FnMut(usize, Upload) -> Result<()>,
-    ) -> Result<(f64, f64)> {
+    ) -> Result<(f64, f64, RoundLatency)> {
         if self.transport.is_some() {
             return self.train_and_upload_remote(t, cohort, sink);
         }
@@ -898,7 +920,7 @@ impl Coordinator {
                 slot += 1;
             }
         }
-        Ok((loss_sum, round_secs))
+        Ok((loss_sum, round_secs, RoundLatency::unmeasured()))
     }
 
     /// Compress via the configured backend (native quickselect, or the
@@ -916,7 +938,7 @@ impl Coordinator {
         t: usize,
         cohort: &Cohort,
         sink: impl FnMut(usize, Upload) -> Result<()>,
-    ) -> Result<(f64, f64)> {
+    ) -> Result<(f64, f64, RoundLatency)> {
         let mut transport = self
             .transport
             .take()
@@ -939,7 +961,7 @@ impl Coordinator {
         t: usize,
         cohort: &Cohort,
         mut sink: impl FnMut(usize, Upload) -> Result<()>,
-    ) -> Result<(f64, f64)> {
+    ) -> Result<(f64, f64, RoundLatency)> {
         let policy = self.algorithm.momentum_policy(t);
         let assignments: Vec<Assignment> = cohort
             .devices
@@ -963,7 +985,7 @@ impl Coordinator {
         let mut round_secs = 0.0f64;
         let ledger = &mut self.ledger;
         let latency = &self.latency;
-        transport.run_round(
+        let measured = transport.run_round(
             t as u64,
             &self.global.w,
             m,
@@ -977,7 +999,7 @@ impl Coordinator {
                 sink(slot, upload)
             },
         )?;
-        Ok((losses.iter().sum(), round_secs))
+        Ok((losses.iter().sum(), round_secs, measured))
     }
 
     /// Launch round `t`'s eval on a background thread: it snapshots the
@@ -1135,10 +1157,13 @@ pub(crate) fn local_run_cfg(cfg: &ExperimentConfig) -> LocalRunConfig {
 
 /// The one recipe for turning `(config, pool)` into the synthetic task
 /// and the fleet's [`ShardPlan`] — shared by [`Coordinator::fresh`] and
-/// (via [`build_task_and_devices`]) the remote device agent, so every
+/// the remote device agent ([`crate::transport::agent`]), so every
 /// process derives the byte-identical shards from the same seeds.  The
 /// plan is the lazy form: which samples belong to which device, with no
-/// shard data materialized yet.
+/// shard data materialized yet; both sides synthesize a sampled
+/// device's shard on demand via [`ShardPlan::materialize`] (pinned to
+/// equal the old eager `partition()` output), so memory stays
+/// O(cohort), not O(fleet), on either side of the wire.
 pub(crate) fn build_task_and_plan(
     cfg: &ExperimentConfig,
     pool: &EnginePool,
@@ -1154,27 +1179,6 @@ pub(crate) fn build_task_and_plan(
     let how = Partition::parse(cfg.iid, cfg.dirichlet_theta);
     let plan = ShardPlan::build(&task.train, cfg.devices, how, cfg.seed);
     (task, plan)
-}
-
-/// [`build_task_and_plan`] with every device eagerly materialized — the
-/// remote device agent's entry point (an agent owns a fixed slice of the
-/// fleet for the whole run, so lazy synthesis buys it nothing).
-/// `ShardPlan::materialize` is pinned to equal the old eager
-/// `partition()` output, so agents stay byte-identical to the in-process
-/// path.
-pub(crate) fn build_task_and_devices(
-    cfg: &ExperimentConfig,
-    pool: &EnginePool,
-) -> (synthetic::SyntheticTask, Vec<Device>) {
-    let (task, plan) = build_task_and_plan(cfg, pool);
-    let handle = pool.handle();
-    let devices: Vec<Device> = (0..cfg.devices)
-        .map(|i| {
-            let data = plan.materialize(&task.train, i);
-            Device::new(i, Shard { data }, handle.clone())
-        })
-        .collect();
-    (task, devices)
 }
 
 /// Compress one delta via the configured backend — the native algorithm

@@ -130,6 +130,12 @@ OPTIONS:
                           evicted entries go; required when the cap is
                           nonzero — validate rejects a capped store
                           with nowhere to spill)
+                          --set agent_state_dir=/tmp/astate (transport
+                          agents only: each agent journals its per-device
+                          compressor state to DIR/agent_<i>.state before
+                          sending uplinks, so a killed agent process
+                          restarted from nothing resumes bit-identically;
+                          empty (default) = agents are in-memory only)
     --out <dir>           write per-round CSV logs here
     --algorithms a,b,c    (compare) comma-separated algorithm ids
     --verbose             debug logging

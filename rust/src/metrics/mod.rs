@@ -37,6 +37,18 @@ pub struct RoundRecord {
     /// Realized cohort size this round (after participation sampling,
     /// availability traces and the deadline cut).
     pub cohort_devices: u64,
+    /// *Measured* wall-clock uplink round-trip latency of the round's
+    /// slowest device slot — RoundStart broadcast to validated Uplink
+    /// arrival at the transport server, in real host seconds.  Only a
+    /// socket run measures anything: in-process runs carry `NaN`
+    /// (emitted as an empty CSV cell / JSON `null`).  This is observed
+    /// host time — the measured counterpart of the *modeled* `sim_secs`
+    /// clock — so, like `wall_secs`, it sits outside the bit-identity
+    /// and journal-replay contracts.
+    pub meas_uplink_max_secs: f64,
+    /// Mean measured uplink round-trip latency across the round's device
+    /// slots (same measurement and caveats as `meas_uplink_max_secs`).
+    pub meas_uplink_mean_secs: f64,
 }
 
 /// A full experiment's log plus identifying metadata.
@@ -105,12 +117,12 @@ impl ExperimentLog {
             }
         }
         let mut out = String::from(
-            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,sim_secs,update_norm,fleet_devices,cohort_devices\n",
+            "round,train_loss,test_loss,test_accuracy,uplink_bits,downlink_bits,wall_secs,sim_secs,update_norm,fleet_devices,cohort_devices,meas_uplink_max_secs,meas_uplink_mean_secs\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 out,
-                "{},{:.6},{},{},{},{},{:.4},{},{:.6e},{},{}",
+                "{},{:.6},{},{},{},{},{:.4},{},{:.6e},{},{},{},{}",
                 r.round,
                 r.train_loss,
                 cell(r.test_loss),
@@ -121,7 +133,9 @@ impl ExperimentLog {
                 cell(r.sim_secs),
                 r.update_norm,
                 r.fleet_devices,
-                r.cohort_devices
+                r.cohort_devices,
+                cell(r.meas_uplink_max_secs),
+                cell(r.meas_uplink_mean_secs)
             );
         }
         out
@@ -157,6 +171,14 @@ impl ExperimentLog {
                 m.insert("update_norm".into(), Value::Num(r.update_norm));
                 m.insert("fleet_devices".into(), Value::Num(r.fleet_devices as f64));
                 m.insert("cohort_devices".into(), Value::Num(r.cohort_devices as f64));
+                m.insert(
+                    "meas_uplink_max_secs".into(),
+                    finite(r.meas_uplink_max_secs),
+                );
+                m.insert(
+                    "meas_uplink_mean_secs".into(),
+                    finite(r.meas_uplink_mean_secs),
+                );
                 Value::Obj(m)
             })
             .collect();
@@ -215,6 +237,8 @@ mod tests {
                     update_norm: 1.0,
                     fleet_devices: 100,
                     cohort_devices: 10 + i as u64,
+                    meas_uplink_max_secs: f64::NAN,
+                    meas_uplink_mean_secs: f64::NAN,
                 })
                 .collect(),
         }
@@ -239,51 +263,85 @@ mod tests {
     fn csv_non_eval_rounds_round_trip_without_nan() {
         // Non-eval rounds carry NaN internally; the CSV must emit empty
         // cells (never the literal `NaN`) and every other field must
-        // parse back to the exact written value.
+        // parse back to the exact written value.  All column indices are
+        // resolved from the header row, never hard-coded, so adding a
+        // column can't silently shift an assertion onto the wrong cell.
         let mut l = log();
         l.rounds[1].test_loss = f64::NAN;
         l.rounds[1].test_accuracy = f64::NAN;
         l.rounds[3].test_loss = f64::NAN;
         l.rounds[3].test_accuracy = f64::NAN;
         l.rounds[2].sim_secs = f64::NAN; // no simulated clock that round
+        l.rounds[4].meas_uplink_max_secs = 0.25; // "a transport run" that round
+        l.rounds[4].meas_uplink_mean_secs = 0.125;
         let csv = l.to_csv();
         assert!(!csv.contains("NaN"), "literal NaN leaked into CSV:\n{csv}");
 
         let lines: Vec<&str> = csv.lines().collect();
         let header: Vec<&str> = lines[0].split(',').collect();
-        assert_eq!(header.len(), 11);
-        assert_eq!(header[7], "sim_secs");
-        assert_eq!(header[9], "fleet_devices");
-        assert_eq!(header[10], "cohort_devices");
+        let col = |name: &str| {
+            header
+                .iter()
+                .position(|h| *h == name)
+                .unwrap_or_else(|| panic!("column {name} missing from header: {header:?}"))
+        };
         for (i, line) in lines[1..].iter().enumerate() {
             let cells: Vec<&str> = line.split(',').collect();
-            assert_eq!(cells.len(), 11, "row {i} lost a column: {line}");
+            assert_eq!(cells.len(), header.len(), "row {i} lost a column: {line}");
             // round + train_loss always parse.
-            assert_eq!(cells[0].parse::<usize>().unwrap(), i);
-            let train: f64 = cells[1].parse().unwrap();
+            assert_eq!(cells[col("round")].parse::<usize>().unwrap(), i);
+            let train: f64 = cells[col("train_loss")].parse().unwrap();
             assert!((train - l.rounds[i].train_loss).abs() < 1e-9);
             if l.rounds[i].test_loss.is_finite() {
-                let tl: f64 = cells[2].parse().unwrap();
-                let ta: f64 = cells[3].parse().unwrap();
+                let tl: f64 = cells[col("test_loss")].parse().unwrap();
+                let ta: f64 = cells[col("test_accuracy")].parse().unwrap();
                 assert!((tl - l.rounds[i].test_loss).abs() < 1e-9);
                 assert!((ta - l.rounds[i].test_accuracy).abs() < 1e-9);
             } else {
-                assert!(cells[2].is_empty(), "row {i}: want empty test_loss");
-                assert!(cells[3].is_empty(), "row {i}: want empty test_accuracy");
+                assert!(cells[col("test_loss")].is_empty(), "row {i}: want empty test_loss");
+                assert!(
+                    cells[col("test_accuracy")].is_empty(),
+                    "row {i}: want empty test_accuracy"
+                );
             }
             // Ledger columns survive exactly.
-            assert_eq!(cells[4].parse::<u64>().unwrap(), l.rounds[i].uplink_bits);
-            assert_eq!(cells[5].parse::<u64>().unwrap(), l.rounds[i].downlink_bits);
+            assert_eq!(
+                cells[col("uplink_bits")].parse::<u64>().unwrap(),
+                l.rounds[i].uplink_bits
+            );
+            assert_eq!(
+                cells[col("downlink_bits")].parse::<u64>().unwrap(),
+                l.rounds[i].downlink_bits
+            );
             // Simulated-clock cell: empty exactly when not simulated.
             if l.rounds[i].sim_secs.is_finite() {
-                let sim: f64 = cells[7].parse().unwrap();
+                let sim: f64 = cells[col("sim_secs")].parse().unwrap();
                 assert!((sim - l.rounds[i].sim_secs).abs() < 1e-9, "row {i}");
             } else {
-                assert!(cells[7].is_empty(), "row {i}: want empty sim_secs");
+                assert!(cells[col("sim_secs")].is_empty(), "row {i}: want empty sim_secs");
             }
             // Fleet/cohort sizes are plain integers, always present.
-            assert_eq!(cells[9].parse::<u64>().unwrap(), l.rounds[i].fleet_devices);
-            assert_eq!(cells[10].parse::<u64>().unwrap(), l.rounds[i].cohort_devices);
+            assert_eq!(
+                cells[col("fleet_devices")].parse::<u64>().unwrap(),
+                l.rounds[i].fleet_devices
+            );
+            assert_eq!(
+                cells[col("cohort_devices")].parse::<u64>().unwrap(),
+                l.rounds[i].cohort_devices
+            );
+            // Measured-latency cells: empty exactly when not measured
+            // (in-process rounds), numeric round-trip when measured.
+            for (name, want) in [
+                ("meas_uplink_max_secs", l.rounds[i].meas_uplink_max_secs),
+                ("meas_uplink_mean_secs", l.rounds[i].meas_uplink_mean_secs),
+            ] {
+                if want.is_finite() {
+                    let got: f64 = cells[col(name)].parse().unwrap();
+                    assert!((got - want).abs() < 1e-9, "row {i} {name}");
+                } else {
+                    assert!(cells[col(name)].is_empty(), "row {i}: want empty {name}");
+                }
+            }
         }
     }
 

@@ -14,15 +14,21 @@
 //! A remote run reproduces the in-process run byte for byte because
 //! every input to a device's round is identical:
 //!
-//! - the data shards come from [`crate::coordinator::build_task_and_devices`] —
-//!   the *same* synthetic generation + partition the coordinator runs,
-//!   seeded by the shared config (the fingerprint handshake refuses a
-//!   drifted config before any training happens);
+//! - the data shards come from [`crate::coordinator::build_task_and_plan`] —
+//!   the *same* synthetic generation + partition plan the coordinator
+//!   derives, seeded by the shared config (the fingerprint handshake
+//!   refuses a drifted config before any training happens); each owned
+//!   device's shard is synthesized on demand per round and dropped
+//!   after, so resident memory is O(owned-cohort · shard), not O(fleet);
 //! - local training is a pure function of `(w, m₀, v₀, run_cfg, shard)`;
 //! - all per-device compression state (error-feedback memories, moment
 //!   residuals) lives with the device's *owning agent*, and ownership is
 //!   static — so each device sees exactly the state history it would
 //!   have seen in process, regardless of how agents interleave.
+//!   `DeviceLocal` moments live in a lazily-materialized
+//!   [`ResidualStore`], so `Aggregated`-policy ids (which never touch
+//!   them) cost nothing and touched entries obey
+//!   `residual_resident_cap` like everywhere else.
 //!
 //! ## Duplicate rounds
 //!
@@ -30,23 +36,54 @@
 //! `RoundStart` on reconnect.  Retraining would mutate error-feedback
 //! state twice and break bit-identity, so the agent caches the encoded
 //! uplink frames of its latest round and replays them verbatim for a
-//! duplicate round number.  (A *fresh process* reconnecting mid-run is
-//! only bit-identical for stateless algorithms with `Aggregated`
-//! moments — stateful compressors live and die with their process.)
+//! duplicate round number.
+//!
+//! ## Durability (`agent_state_dir`)
+//!
+//! With `agent_state_dir` set, the agent appends one durable
+//! [`AgentSnapshot`] (algorithm state, device moments, the round's
+//! encoded frames) to its [`AgentStateLog`] per completed round —
+//! **after training, before sending** — so a *fresh process* pointed at
+//! the same directory resumes bit-identical for every stateful id.
+//! [`super::agent_state`]'s module docs walk each crash window; the
+//! short version is that the persist-before-send ordering makes the
+//! server's `RoundStart` replay and the cached-frame replay cover every
+//! interleaving between them.
 
 use std::io::Write;
+use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::algorithms::{self, LocalDelta, MomentumPolicy};
+use crate::algorithms::residual_store::ResidualStore;
+use crate::algorithms::{self, Algorithm, LocalDelta, MomentumPolicy};
 use crate::config::ExperimentConfig;
-use crate::coordinator::{build_task_and_devices, compress_wire_with, local_run_cfg};
+use crate::coordinator::{build_task_and_plan, compress_wire_with, local_run_cfg, Device};
+use crate::data::Shard;
 use crate::runtime::{EnginePool, Manifest};
 use crate::tensor;
+use crate::util::bytes::{ByteReader, ByteWriter};
 
+use super::agent_state::{AgentSnapshot, AgentStateLog};
 use super::frame::{read_frame, write_frame, FrameError};
 use super::msg::{Msg, Uplink, PROTOCOL_VERSION};
 use super::net::Stream;
+
+/// Crash injection for the kill-respawn durability suite: the agent
+/// returns (as a killed process would, from the server's point of view)
+/// at a precise point in the persist/send ordering.  Production callers
+/// use [`run_agent`], which never exits early.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AgentOptions {
+    /// Exit after round `r` completed fully: state persisted *and*
+    /// uplinks sent.
+    pub exit_after_round: Option<u64>,
+    /// Exit after round `r`'s state was persisted but **before any of
+    /// its uplinks were sent** — the crash window that only the durable
+    /// cached-frame replay can repair without double-mutating
+    /// error-feedback state.
+    pub exit_before_send_round: Option<u64>,
+}
 
 /// [`run_agent`] with the engine pool built from AOT artifacts — the
 /// `device-agent` binary's entry point.  Worker resolution mirrors
@@ -74,6 +111,17 @@ pub fn run_agent(
     addr: &str,
     index: usize,
 ) -> Result<()> {
+    run_agent_with(cfg, pool, addr, index, &AgentOptions::default())
+}
+
+/// [`run_agent`] with [`AgentOptions`] crash injection (tests only).
+pub fn run_agent_with(
+    cfg: &ExperimentConfig,
+    pool: &EnginePool,
+    addr: &str,
+    index: usize,
+    opts: &AgentOptions,
+) -> Result<()> {
     cfg.validate()?;
     let meta = pool.meta().clone();
     let mut stream = Stream::connect(addr)?;
@@ -100,19 +148,51 @@ pub fn run_agent(
     );
     log::info!("agent {index}/{agents} registered with {addr} (dim {dim})");
 
-    // The agent's world: the same devices, algorithm state and run
-    // config the in-process coordinator would build from this config.
-    let (_task, mut devices) = build_task_and_devices(cfg, pool);
+    // The agent's world, O(owned-cohort) resident: the shared corpus +
+    // shard plan (same seeds as the coordinator — shards synthesize per
+    // round on demand), the algorithm state, and the device-local
+    // moments in a lazily-materialized store (`Aggregated`-policy ids
+    // never touch it, so it costs nothing for them).
+    let (task, plan) = build_task_and_plan(cfg, pool);
     let mut algorithm = algorithms::build(cfg, meta.dim)?;
-    let mut device_moments: Vec<(Vec<f32>, Vec<f32>)> = (0..cfg.devices)
-        .map(|_| (vec![0.0f32; meta.dim], vec![0.0f32; meta.dim]))
-        .collect();
+    let mut device_moments =
+        ResidualStore::new(2 * meta.dim, cfg.residual_resident_cap, &cfg.residual_spill_dir);
     let run_cfg = local_run_cfg(cfg);
     let handle = pool.handle();
 
     // The latest round's encoded uplink frames, replayed verbatim if the
     // server re-sends that round (see the module docs).
     let mut cached: Option<(u64, Vec<Vec<u8>>)> = None;
+
+    // Durability: open the state log and restore the previous
+    // incarnation's checkpoint, if any.
+    let mut state_log: Option<AgentStateLog> = None;
+    let mut last_snap: Option<AgentSnapshot> = None;
+    if !cfg.agent_state_dir.is_empty() {
+        let (slog, restored) = AgentStateLog::open(
+            Path::new(&cfg.agent_state_dir),
+            index,
+            agents,
+            cfg.fingerprint(),
+            meta.dim,
+            cfg.snapshot_every,
+        )?;
+        if let Some(snap) = restored {
+            let mut r = ByteReader::new(&snap.algorithm);
+            algorithm
+                .load_state(&mut r)
+                .context("restoring algorithm state from the agent state log")?;
+            r.finish()?;
+            let mut r = ByteReader::new(&snap.moments);
+            device_moments
+                .load_state(&mut r)
+                .context("restoring device moments from the agent state log")?;
+            r.finish()?;
+            cached = Some((snap.round, snap.frames.clone()));
+            last_snap = Some(snap);
+        }
+        state_log = Some(slog);
+    }
 
     loop {
         let payload = match read_frame(&mut stream) {
@@ -139,9 +219,9 @@ pub fn run_agent(
                 for a in assignments.iter().filter(|a| a.device as usize % agents == index) {
                     let di = a.device as usize;
                     ensure!(
-                        di < devices.len(),
+                        di < cfg.devices,
                         "assignment names device {di} but only {} exist",
-                        devices.len()
+                        cfg.devices
                     );
                     let (m0, v0) = match policy {
                         MomentumPolicy::Aggregated => {
@@ -153,10 +233,19 @@ pub fn run_agent(
                                 .context("Aggregated moments missing from RoundStart")?;
                             (m.clone(), v.clone())
                         }
-                        MomentumPolicy::DeviceLocal => device_moments[di].clone(),
+                        MomentumPolicy::DeviceLocal => {
+                            let entry = device_moments.get_mut(di as u64);
+                            let (em, ev) = entry.split_at(meta.dim);
+                            (em.to_vec(), ev.to_vec())
+                        }
                     };
+                    // Synthesize this device's shard on demand (exactly
+                    // the bytes the eager partition would have built) and
+                    // drop it with the round.
+                    let data = plan.materialize(&task.train, di);
+                    let mut device = Device::new(di, Shard { data }, handle.clone());
                     let result =
-                        devices[di].train_round(mode, w.clone(), m0.clone(), v0.clone(), &run_cfg)?;
+                        device.train_round(mode, w.clone(), m0.clone(), v0.clone(), &run_cfg)?;
                     let delta = LocalDelta {
                         dw: tensor::sub(&result.w, &w),
                         dm: tensor::sub(&result.m, &m0),
@@ -165,7 +254,9 @@ pub fn run_agent(
                     };
                     let mean_loss = result.mean_loss;
                     if policy == MomentumPolicy::DeviceLocal {
-                        device_moments[di] = (result.m, result.v);
+                        let entry = device_moments.get_mut(di as u64);
+                        entry[..meta.dim].copy_from_slice(&result.m);
+                        entry[meta.dim..].copy_from_slice(&result.v);
                     }
                     let wire = compress_wire_with(cfg, &handle, algorithm.as_mut(), t, di, delta)?;
                     let body = wire.encode_body()?;
@@ -182,19 +273,62 @@ pub fn run_agent(
                         body,
                     });
                     let mut frame = Vec::new();
-                    write_frame(&mut frame, &msg.encode())
-                        .expect("Vec<u8> writes cannot fail");
-                    stream.write_all(&frame)?;
+                    write_frame(&mut frame, &msg.encode()).expect("Vec<u8> writes cannot fail");
                     frames.push(frame);
+                }
+                // Durability ordering: persist the completed round BEFORE
+                // sending any of its frames.  A crash before this append
+                // sent the server nothing (it will replay the round and
+                // the restored agent retrains it deterministically); a
+                // crash after it replays the durable frames verbatim.
+                if let Some(slog) = state_log.as_mut() {
+                    let snap = snapshot(round, algorithm.as_ref(), &device_moments, &frames);
+                    slog.append(&snap)?;
+                    last_snap = Some(snap);
+                }
+                if opts.exit_before_send_round == Some(round) {
+                    log::info!("agent {index}: injected exit before sending round {round}");
+                    return Ok(());
+                }
+                for frame in &frames {
+                    stream.write_all(frame)?;
                 }
                 stream.flush()?;
                 cached = Some((round, frames));
+                if opts.exit_after_round == Some(round) {
+                    log::info!("agent {index}: injected exit after round {round}");
+                    return Ok(());
+                }
             }
             Msg::Shutdown => {
+                // Clean shutdown: leave the log compacted to header +
+                // final state so the directory is tidy for inspection.
+                if let (Some(slog), Some(snap)) = (state_log.as_mut(), last_snap.as_ref()) {
+                    slog.compact(snap)?;
+                }
                 log::info!("agent {index}: server sent Shutdown, exiting");
                 return Ok(());
             }
             other => bail!("unexpected message from server: {other:?}"),
         }
+    }
+}
+
+/// Assemble the durable checkpoint for one completed round.
+fn snapshot(
+    round: u64,
+    algorithm: &dyn Algorithm,
+    device_moments: &ResidualStore,
+    frames: &[Vec<u8>],
+) -> AgentSnapshot {
+    let mut alg = ByteWriter::new();
+    algorithm.save_state(&mut alg);
+    let mut mom = ByteWriter::new();
+    device_moments.save_state(&mut mom);
+    AgentSnapshot {
+        round,
+        algorithm: alg.into_inner(),
+        moments: mom.into_inner(),
+        frames: frames.to_vec(),
     }
 }

@@ -1,0 +1,460 @@
+//! Durable per-agent compressor state: the crash-safe append log that
+//! lets a **fresh device-agent process** resume a stateful run
+//! bit-identically.
+//!
+//! FedAdam-SSM's compressors are stateful *on the device side*:
+//! error-feedback residuals, 1-bit warmup counters, and (for
+//! `DeviceLocal`-policy ids) per-device Adam moments all accumulate
+//! across rounds inside the agent process.  This module persists that
+//! state to `<agent_state_dir>/agent_<index>.state` so the state
+//! survives the process.
+//!
+//! ## File format
+//!
+//! The journal's record framing, reused verbatim: each record is
+//! `[len: u32 le][crc32(payload): u32 le][payload]`
+//! (see [`crate::coordinator::journal`]).  A torn final record —
+//! truncated frame, short payload, or CRC mismatch — is dropped on
+//! load, exactly like the journal's event log.  Payloads are tagged:
+//!
+//! - **Header** (tag 1, always record 0): format version, config
+//!   fingerprint, agent index, agent count, model dimension.  A file
+//!   whose header disagrees with the opening config is *foreign* and
+//!   rejected loudly — resuming someone else's state would silently
+//!   break bit-identity.
+//! - **State** (tag 2): one [`AgentSnapshot`] — the last completed
+//!   round, the algorithm's `save_state` bytes, the device-moment
+//!   store's `save_state` bytes, and the round's encoded uplink frames.
+//!
+//! ## Durability ordering
+//!
+//! The agent appends one state record per completed round **after
+//! training but before sending** that round's uplinks.  That ordering
+//! is what makes every crash window safe:
+//!
+//! - *Crash before the append*: the server saw no frames for the round,
+//!   so on reconnect it replays `RoundStart` and the restored agent
+//!   (at end-of-previous-round state) retrains it — deterministically
+//!   identical, since training mutated nothing durable.
+//! - *Crash after the append, before (or during) the send*: the
+//!   restored agent holds the round's frames verbatim and replays them
+//!   without retraining — retraining would mutate error-feedback state
+//!   twice.  Slots the server already accepted treat the replay as a
+//!   benign duplicate.
+//! - *Crash after the send*: the restored agent is simply at
+//!   end-of-round state and continues with the next `RoundStart`.
+//!
+//! Because the server only ever replays the *current* round, the record
+//! cadence must be every round; `snapshot_every` instead controls how
+//! often the log is **compacted** (rewritten as header + latest record
+//! via a temp file and an atomic rename) so it stays O(state), not
+//! O(rounds).  A clean [`Msg::Shutdown`](super::msg::Msg) also
+//! compacts.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::util::bytes::{crc32, ByteReader, ByteWriter};
+
+/// Agent state-log format version.  Independent of
+/// [`crate::coordinator::journal::JOURNAL_VERSION`]: the file shares the
+/// journal's *framing*, not its schema.
+pub const AGENT_STATE_VERSION: u32 = 1;
+
+/// Record tags (first payload byte).
+const TAG_HEADER: u8 = 1;
+const TAG_STATE: u8 = 2;
+
+/// One durable agent checkpoint: everything a fresh process needs to
+/// stand exactly where the old one stood at the end of `round`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AgentSnapshot {
+    /// Last completed round.
+    pub round: u64,
+    /// The algorithm's `save_state` bytes (error-feedback residuals,
+    /// 1-bit warmup, quantizer state, ...).
+    pub algorithm: Vec<u8>,
+    /// The device-moment `ResidualStore`'s `save_state` bytes
+    /// (touched entries only — `Aggregated`-policy runs stay empty).
+    pub moments: Vec<u8>,
+    /// The round's encoded uplink frames, replayed verbatim if the
+    /// server re-sends this round after a reconnect.
+    pub frames: Vec<Vec<u8>>,
+}
+
+/// The open per-agent state log: appends one framed [`AgentSnapshot`]
+/// record per completed round, compacting every `compact_every` appends
+/// and on demand (clean shutdown).
+pub struct AgentStateLog {
+    file: File,
+    path: PathBuf,
+    /// The encoded header payload (rewritten first on every compaction).
+    header: Vec<u8>,
+    compact_every: usize,
+    /// State records appended since the last compaction (or open).
+    records_since_compact: usize,
+}
+
+impl AgentStateLog {
+    /// Open (or create) `dir/agent_<agent>.state` for agent `agent` of
+    /// `agents` under config `fingerprint` / model dimension `dim`.
+    ///
+    /// Returns the log plus the latest durable [`AgentSnapshot`], if the
+    /// file already held one: a fresh process restores it and resumes
+    /// bit-identically.  A torn final record is dropped (and truncated
+    /// away before the next append); a file whose header names a
+    /// different fingerprint/agent/topology/dimension is rejected.
+    pub fn open(
+        dir: &Path,
+        agent: usize,
+        agents: usize,
+        fingerprint: u64,
+        dim: usize,
+        compact_every: usize,
+    ) -> Result<(AgentStateLog, Option<AgentSnapshot>)> {
+        ensure!(compact_every >= 1, "compact_every must be >= 1");
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating agent state dir {}", dir.display()))?;
+        let path = dir.join(format!("agent_{agent}.state"));
+        let header = encode_header(fingerprint, agent, agents, dim);
+
+        if path.is_file() {
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let (payloads, valid_len) = read_records(&bytes);
+            let Some(first) = payloads.first() else {
+                bail!(
+                    "agent state log {} exists but holds no valid records \
+                     (not even a header) — refusing to guess; delete it to start fresh",
+                    path.display()
+                );
+            };
+            verify_header(first, fingerprint, agent, agents, dim)
+                .with_context(|| format!("foreign agent state log {}", path.display()))?;
+            let mut latest: Option<AgentSnapshot> = None;
+            for payload in &payloads[1..] {
+                latest = Some(decode_state(payload).with_context(|| {
+                    format!("decoding state record in {}", path.display())
+                })?);
+            }
+            let file = OpenOptions::new()
+                .write(true)
+                .open(&path)
+                .with_context(|| format!("opening {} for append", path.display()))?;
+            // Drop the torn tail so new records continue from a
+            // checksummed prefix (no-op when the log ended cleanly).
+            file.set_len(valid_len)?;
+            use std::io::Seek;
+            let mut file = file;
+            file.seek(std::io::SeekFrom::End(0))?;
+            if let Some(snap) = &latest {
+                log::info!(
+                    "agent {agent}: restored durable state through round {} from {}",
+                    snap.round,
+                    path.display()
+                );
+            }
+            Ok((
+                AgentStateLog {
+                    file,
+                    path,
+                    header,
+                    compact_every,
+                    // Compact on a fresh cadence; the restored prefix is
+                    // already as long as it is.
+                    records_since_compact: payloads.len().saturating_sub(1),
+                },
+                latest,
+            ))
+        } else {
+            let mut file = File::create(&path)
+                .with_context(|| format!("creating {}", path.display()))?;
+            file.write_all(&frame(&header))?;
+            file.flush()?;
+            Ok((
+                AgentStateLog { file, path, header, compact_every, records_since_compact: 0 },
+                None,
+            ))
+        }
+    }
+
+    /// Durably record one completed round *before* its uplinks are sent
+    /// (the ordering the module docs prove safe).  Compacts instead of
+    /// appending when the cadence is due.
+    pub fn append(&mut self, snap: &AgentSnapshot) -> Result<()> {
+        if self.records_since_compact + 1 >= self.compact_every {
+            return self.compact(snap);
+        }
+        self.file
+            .write_all(&frame(&encode_state(snap)))
+            .with_context(|| format!("appending to {}", self.path.display()))?;
+        self.file.flush()?;
+        self.records_since_compact += 1;
+        Ok(())
+    }
+
+    /// Rewrite the log as header + `snap` only (temp file + atomic
+    /// rename), resetting the compaction cadence.  Called on cadence by
+    /// [`AgentStateLog::append`] and directly on clean shutdown.
+    pub fn compact(&mut self, snap: &AgentSnapshot) -> Result<()> {
+        let tmp = self.path.with_extension("state.tmp");
+        let mut out = File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        out.write_all(&frame(&self.header))?;
+        out.write_all(&frame(&encode_state(snap)))?;
+        out.flush()?;
+        drop(out);
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} over {}", tmp.display(), self.path.display()))?;
+        self.file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening {} after compaction", self.path.display()))?;
+        self.records_since_compact = 0;
+        Ok(())
+    }
+
+    /// The on-disk path (tests peek at it).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Frame one payload exactly like a journal record:
+/// `[len u32 le][crc32 u32 le][payload]`.
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Split a file image into framed payloads, stopping (not erroring) at a
+/// torn tail.  Returns the payloads and the byte length of the valid
+/// prefix (everything past it is truncated before the next append).
+fn read_records(bytes: &[u8]) -> (Vec<Vec<u8>>, u64) {
+    let mut payloads = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= 8 {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if bytes.len() - pos - 8 < len {
+            break; // torn: payload shorter than the frame promises
+        }
+        let payload = &bytes[pos + 8..pos + 8 + len];
+        if crc32(payload) != crc {
+            break; // torn or corrupt: checksum mismatch
+        }
+        payloads.push(payload.to_vec());
+        pos += 8 + len;
+    }
+    (payloads, pos as u64)
+}
+
+fn encode_header(fingerprint: u64, agent: usize, agents: usize, dim: usize) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(TAG_HEADER);
+    w.put_u32(AGENT_STATE_VERSION);
+    w.put_u64(fingerprint);
+    w.put_u32(agent as u32);
+    w.put_u32(agents as u32);
+    w.put_u64(dim as u64);
+    w.into_inner()
+}
+
+/// Record 0 must be a header matching this run's identity — anything
+/// else means the directory holds state from a different run, a
+/// different agent, or a different topology, and resuming from it would
+/// silently break bit-identity.
+fn verify_header(
+    payload: &[u8],
+    fingerprint: u64,
+    agent: usize,
+    agents: usize,
+    dim: usize,
+) -> Result<()> {
+    let mut r = ByteReader::new(payload);
+    let tag = r.take_u8()?;
+    ensure!(tag == TAG_HEADER, "record 0 has tag {tag}, expected a header");
+    let version = r.take_u32()?;
+    ensure!(
+        version == AGENT_STATE_VERSION,
+        "state log format version {version} != supported {AGENT_STATE_VERSION}"
+    );
+    let fp = r.take_u64()?;
+    ensure!(
+        fp == fingerprint,
+        "config fingerprint {fp:#018x} != this run's {fingerprint:#018x} \
+         (a determinism-bearing knob differs)"
+    );
+    let a = r.take_u32()? as usize;
+    ensure!(a == agent, "log belongs to agent {a}, this process is agent {agent}");
+    let n = r.take_u32()? as usize;
+    ensure!(n == agents, "log written under {n} agents, this run has {agents}");
+    let d = r.take_u64()? as usize;
+    ensure!(d == dim, "log written for model dim {d}, this model has {dim}");
+    r.finish()?;
+    Ok(())
+}
+
+fn encode_state(snap: &AgentSnapshot) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(TAG_STATE);
+    w.put_u64(snap.round);
+    w.put_bytes(&snap.algorithm);
+    w.put_bytes(&snap.moments);
+    w.put_usize(snap.frames.len());
+    for f in &snap.frames {
+        w.put_bytes(f);
+    }
+    w.into_inner()
+}
+
+fn decode_state(payload: &[u8]) -> Result<AgentSnapshot> {
+    let mut r = ByteReader::new(payload);
+    let tag = r.take_u8()?;
+    ensure!(tag == TAG_STATE, "expected a state record, got tag {tag}");
+    let round = r.take_u64()?;
+    let algorithm = r.take_bytes()?;
+    let moments = r.take_bytes()?;
+    let n = r.take_usize()?;
+    let mut frames = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        frames.push(r.take_bytes()?);
+    }
+    r.finish()?;
+    Ok(AgentSnapshot { round, algorithm, moments, frames })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("fedadam-agent-state-ut-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn snap(round: u64) -> AgentSnapshot {
+        AgentSnapshot {
+            round,
+            algorithm: vec![round as u8; 9],
+            moments: vec![0xAB, round as u8],
+            frames: vec![vec![1, 2, 3], vec![round as u8; 5]],
+        }
+    }
+
+    #[test]
+    fn round_trips_and_restores_the_latest_record() {
+        let dir = tmp("roundtrip");
+        let (mut log, restored) =
+            AgentStateLog::open(&dir, 1, 2, 0xFEED, 170, 100).unwrap();
+        assert!(restored.is_none(), "fresh log has nothing to restore");
+        log.append(&snap(0)).unwrap();
+        log.append(&snap(1)).unwrap();
+        log.append(&snap(2)).unwrap();
+        drop(log);
+
+        let (_log, restored) = AgentStateLog::open(&dir, 1, 2, 0xFEED, 170, 100).unwrap();
+        assert_eq!(restored, Some(snap(2)), "latest record wins");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn torn_tail_falls_back_to_the_previous_record() {
+        let dir = tmp("torn");
+        let (mut log, _) = AgentStateLog::open(&dir, 0, 1, 7, 10, 100).unwrap();
+        log.append(&snap(0)).unwrap();
+        log.append(&snap(1)).unwrap();
+        let path = log.path().to_path_buf();
+        drop(log);
+
+        // Tear the final record mid-payload — the crash window where the
+        // round's frames were never sent, so falling back one round is
+        // exactly the deterministic-retrain case.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        let (mut log, restored) = AgentStateLog::open(&dir, 0, 1, 7, 10, 100).unwrap();
+        assert_eq!(restored, Some(snap(0)), "torn record dropped, previous kept");
+
+        // The torn tail was truncated: appending now yields a clean log.
+        log.append(&snap(2)).unwrap();
+        drop(log);
+        let (_log, restored) = AgentStateLog::open(&dir, 0, 1, 7, 10, 100).unwrap();
+        assert_eq!(restored, Some(snap(2)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_logs_are_rejected_by_name() {
+        let dir = tmp("foreign");
+        let (mut log, _) = AgentStateLog::open(&dir, 0, 2, 0xAAAA, 10, 100).unwrap();
+        log.append(&snap(0)).unwrap();
+        drop(log);
+
+        for (agent, agents, fp, dim, needle) in [
+            (0usize, 2usize, 0xBBBBu64, 10usize, "fingerprint"),
+            (1, 2, 0xAAAA, 10, "agent"),
+            (0, 3, 0xAAAA, 10, "agents"),
+            (0, 2, 0xAAAA, 11, "dim"),
+        ] {
+            // Open the *same file* under a mismatched identity: agent 1
+            // gets its own path, so point it at agent 0's file first.
+            let err = if agent == 1 {
+                std::fs::copy(dir.join("agent_0.state"), dir.join("agent_1.state")).unwrap();
+                AgentStateLog::open(&dir, 1, 2, 0xAAAA, 10, 100)
+            } else {
+                AgentStateLog::open(&dir, agent, agents, fp, dim, 100)
+            };
+            let msg = format!("{:#}", err.err().expect("foreign log must be rejected"));
+            assert!(msg.contains(needle), "error {msg:?} must mention {needle:?}");
+            let _ = std::fs::remove_file(dir.join("agent_1.state"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_keeps_only_header_plus_latest_and_preserves_restore() {
+        let dir = tmp("compact");
+        // compact_every = 3: appends 0,1 stay, the 3rd triggers a rewrite.
+        let (mut log, _) = AgentStateLog::open(&dir, 0, 1, 9, 4, 3).unwrap();
+        log.append(&snap(0)).unwrap();
+        log.append(&snap(1)).unwrap();
+        let before = std::fs::metadata(log.path()).unwrap().len();
+        log.append(&snap(2)).unwrap(); // cadence due → compacted
+        let after = std::fs::metadata(log.path()).unwrap().len();
+        assert!(
+            after < before,
+            "compaction must shrink the log ({before} -> {after} bytes)"
+        );
+        let path = log.path().to_path_buf();
+        drop(log);
+
+        let bytes = std::fs::read(&path).unwrap();
+        let (payloads, valid) = read_records(&bytes);
+        assert_eq!(payloads.len(), 2, "header + latest only");
+        assert_eq!(valid, bytes.len() as u64, "no torn tail after compaction");
+        let (_log, restored) = AgentStateLog::open(&dir, 0, 1, 9, 4, 3).unwrap();
+        assert_eq!(restored, Some(snap(2)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_compact_then_append_continues_cleanly() {
+        let dir = tmp("shutdown");
+        let (mut log, _) = AgentStateLog::open(&dir, 0, 1, 9, 4, 100).unwrap();
+        log.append(&snap(0)).unwrap();
+        log.compact(&snap(0)).unwrap(); // the clean-shutdown path
+        log.append(&snap(1)).unwrap(); // and the log still appends after
+        drop(log);
+        let (_log, restored) = AgentStateLog::open(&dir, 0, 1, 9, 4, 100).unwrap();
+        assert_eq!(restored, Some(snap(1)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -21,6 +21,10 @@
 //! - [`agent`] — the device-agent round loop: own a static shard of the
 //!   device population (`device % agents == index`), train through the
 //!   executor seam, compress through the same algorithms, upload.
+//! - [`agent_state`] — the agent's crash-safe durability log
+//!   (`agent_state_dir`): per-round framed snapshots of the stateful
+//!   compressor (EF residuals, device-local moments, cached frames) so
+//!   a *fresh agent process* resumes bit-identically mid-run.
 //!
 //! The whole stack preserves the repo's determinism contract: a run
 //! over this transport produces the byte-identical final model, log
@@ -29,10 +33,11 @@
 //! processes, and `rust/tests/transport.rs` across threads.
 
 pub mod agent;
+pub mod agent_state;
 pub mod frame;
 pub mod msg;
 pub mod net;
 pub mod server;
 
-pub use agent::run_agent;
-pub use server::TransportServer;
+pub use agent::{run_agent, run_agent_with, AgentOptions};
+pub use server::{RoundLatency, TransportServer};

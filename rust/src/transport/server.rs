@@ -36,6 +36,32 @@ use super::net::{write_all_deadline, Listener, Stream};
 /// Poll-loop tick while waiting for bytes.
 const POLL_SLEEP: Duration = Duration::from_millis(2);
 
+/// Measured wall-clock uplink latency for one round: for each accepted
+/// slot, the elapsed real time from the `RoundStart` broadcast to that
+/// slot's validated `Uplink` arriving at the server.  This is *observed*
+/// host time — the measured counterpart of the simtime model's
+/// *predicted* `sim_secs` — and is pure observability: it never feeds
+/// back into anything determinism-bearing, and both fields are `NaN`
+/// when no slot was measured.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundLatency {
+    /// The slowest slot's RoundStart→Uplink seconds.
+    pub max_secs: f64,
+    /// Mean across the round's accepted slots.
+    pub mean_secs: f64,
+}
+
+impl RoundLatency {
+    /// The "no wire, nothing measured" value (both cells `NaN`) — what
+    /// an in-process round reports.
+    pub fn unmeasured() -> Self {
+        RoundLatency {
+            max_secs: f64::NAN,
+            mean_secs: f64::NAN,
+        }
+    }
+}
+
 /// One registered agent connection.
 struct AgentConn {
     stream: Stream,
@@ -186,9 +212,11 @@ impl TransportServer {
 
     /// Drive one round: broadcast the downlink, collect one valid uplink
     /// per assignment slot, feed each to `on_uplink(slot, device,
-    /// mean_loss, upload)` in arrival order.  Returns once every slot is
-    /// filled; errors if the round deadline (3 × `transport_timeout_secs`)
-    /// passes with slots missing, or if the sink itself errors.
+    /// mean_loss, upload)` in arrival order.  Returns the round's
+    /// [`RoundLatency`] (measured RoundStart→Uplink wall-clock per slot)
+    /// once every slot is filled; errors if the round deadline
+    /// (3 × `transport_timeout_secs`) passes with slots missing, or if
+    /// the sink itself errors.
     pub fn run_round(
         &mut self,
         round: u64,
@@ -197,13 +225,28 @@ impl TransportServer {
         v: Option<&[f32]>,
         assignments: &[Assignment],
         mut on_uplink: impl FnMut(usize, usize, f64, Upload) -> Result<()>,
-    ) -> Result<()> {
+    ) -> Result<RoundLatency> {
         self.ensure_registered()?;
         let downlink = round_start_frame(round, w, m, v, assignments);
         for agent in 0..self.num_agents {
-            self.send_frame(agent, &downlink)
-                .with_context(|| format!("sending RoundStart to agent {agent}"))?;
+            // A broadcast failure is not fatal: the agent process may have
+            // died since it last registered (its connection only surfaces
+            // as dead on the next I/O).  Drop the connection and let the
+            // poll loop's reconnect + downlink replay repair the round —
+            // only the round deadline decides the agent is truly gone.
+            if let Err(e) = self.send_frame(agent, &downlink) {
+                log::warn!(
+                    "transport: sending RoundStart to agent {agent} failed ({e:#}), \
+                     dropping its connection and awaiting a reconnect"
+                );
+                self.conns[agent] = None;
+            }
         }
+        // Latency is measured from the (attempted) broadcast: a slot
+        // served only after a reconnect honestly pays its recovery time.
+        let round_sent = Instant::now();
+        let mut lat_sum = 0.0f64;
+        let mut lat_max = f64::NAN;
 
         let mut filled = vec![false; assignments.len()];
         let mut done = 0usize;
@@ -263,6 +306,9 @@ impl TransportServer {
                             on_uplink(slot, device, mean_loss, upload)?;
                             filled[slot] = true;
                             done += 1;
+                            let secs = round_sent.elapsed().as_secs_f64();
+                            lat_sum += secs;
+                            lat_max = if lat_max.is_nan() { secs } else { lat_max.max(secs) };
                         }
                         Ok(None) => {} // benign duplicate after a replay
                         Err(viol) => {
@@ -316,7 +362,10 @@ impl TransportServer {
                 std::thread::sleep(POLL_SLEEP);
             }
         }
-        Ok(())
+        Ok(RoundLatency {
+            max_secs: lat_max,
+            mean_secs: if done == 0 { f64::NAN } else { lat_sum / done as f64 },
+        })
     }
 
     /// Non-blocking drain of agent `agent`'s socket into its frame

@@ -18,6 +18,7 @@
 //!   mispriced message is refused at *send* time in every build profile.
 
 use std::io::Write as _;
+use std::path::PathBuf;
 use std::time::Duration;
 
 use fedadam_ssm::algorithms::wire::{WireBody, WireUpload};
@@ -29,7 +30,7 @@ use fedadam_ssm::runtime::{reference_meta, reference_pool, ModelMeta};
 use fedadam_ssm::transport::frame::{read_frame, write_frame};
 use fedadam_ssm::transport::msg::{Assignment, Msg, Uplink, PROTOCOL_VERSION};
 use fedadam_ssm::transport::net::Stream;
-use fedadam_ssm::transport::{run_agent, TransportServer};
+use fedadam_ssm::transport::{run_agent, run_agent_with, AgentOptions, TransportServer};
 
 const INPUT_SHAPE: [usize; 3] = [4, 4, 1]; // row 16
 const CLASSES: usize = 10;
@@ -281,6 +282,182 @@ fn uds_remote_run_is_bit_identical_to_in_process() {
     let remote = run_remote(cfg, &listen, 2);
     assert_identical(&local, &remote, false, "ssm uds x2");
     assert!(!sock.exists(), "socket file not cleaned up on shutdown");
+}
+
+// ---------------------------------------------------------------------------
+// durability: a killed agent respawns as a FRESH process and stays
+// bit-identical (rust/src/transport/agent_state.rs)
+// ---------------------------------------------------------------------------
+
+fn tmp_state_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "fedadam-agentstate-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The experiment CSV with the non-deterministic cells normalized:
+/// `wall_secs` is host time and the measured uplink-latency cells are
+/// host time too (finite over a real wire, empty in process) — all three
+/// are outside the bit-identity contract; every other cell must match
+/// byte for byte.
+fn csv_normalized(log: &ExperimentLog) -> String {
+    let mut log = log.clone();
+    for r in &mut log.rounds {
+        r.wall_secs = 0.0;
+        r.meas_uplink_max_secs = f64::NAN;
+        r.meas_uplink_mean_secs = f64::NAN;
+    }
+    log.to_csv()
+}
+
+/// [`run_remote`], except agent `kill_agent` runs with `kill` crash
+/// injection and — once its first incarnation has exited — is replaced
+/// by a **fresh** [`run_agent`] call on a freshly-built pool.  All agent
+/// state is function-local or in `agent_state_dir`, so thread-exit +
+/// fresh call is observationally a process kill + respawn.
+fn run_remote_with_kill(
+    mut cfg: ExperimentConfig,
+    listen: &str,
+    agents: usize,
+    kill_agent: usize,
+    kill: AgentOptions,
+) -> RunOut {
+    cfg.transport_listen = listen.into();
+    cfg.transport_agents = agents;
+    cfg.transport_timeout_secs = 30.0;
+    let pool = reference_pool(meta(), cfg.num_workers).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg.clone(), pool).expect("coordinator");
+    let addr = coord.transport_addr().expect("transport bound");
+    let handles: Vec<_> = (0..agents)
+        .map(|i| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                if i == kill_agent {
+                    // First incarnation: dies at the injected point.
+                    let pool = reference_pool(meta(), 1)?;
+                    run_agent_with(&cfg, &pool, &addr, i, &kill)?;
+                    drop(pool);
+                    // Respawn: nothing survives but the state directory.
+                    let pool = reference_pool(meta(), 1)?;
+                    run_agent(&cfg, &pool, &addr, i)
+                } else {
+                    let pool = reference_pool(meta(), 1)?;
+                    run_agent(&cfg, &pool, &addr, i)
+                }
+            })
+        })
+        .collect();
+    let log = coord.run().expect("remote run with kill");
+    for (i, h) in handles.into_iter().enumerate() {
+        h.join()
+            .expect("agent thread panicked")
+            .unwrap_or_else(|e| panic!("agent {i} failed: {e:#}"));
+    }
+    let gs = coord.global();
+    (log, gs.w.clone(), gs.m.clone(), gs.v.clone())
+}
+
+/// Shared asserts for the kill-respawn suite: full bit-identity against
+/// the in-process run, CSV equality modulo the host-time cells, and the
+/// measured-latency columns populated on the wire / empty in process.
+fn assert_respawn_identical(local: &RunOut, remote: &RunOut, tag: &str) {
+    assert_identical(local, remote, false, tag);
+    assert_eq!(
+        csv_normalized(&local.0),
+        csv_normalized(&remote.0),
+        "{tag}: CSV diverged beyond the host-time cells"
+    );
+    for r in &remote.0.rounds {
+        assert!(
+            r.meas_uplink_max_secs.is_finite() && r.meas_uplink_mean_secs.is_finite(),
+            "{tag}: remote round {} missing measured uplink latency",
+            r.round
+        );
+        assert!(
+            r.meas_uplink_max_secs >= r.meas_uplink_mean_secs,
+            "{tag}: round {} max < mean",
+            r.round
+        );
+    }
+    for r in &local.0.rounds {
+        assert!(
+            r.meas_uplink_max_secs.is_nan() && r.meas_uplink_mean_secs.is_nan(),
+            "{tag}: in-process round {} claims a measured wire latency",
+            r.round
+        );
+    }
+}
+
+#[test]
+fn killed_agent_respawns_as_a_fresh_process_bit_identical() {
+    // EF state lives inside the algorithm on the owning agent; kill that
+    // agent after round 1 completed (state persisted, uplinks sent) and
+    // respawn it cold.  Without the durable state log the respawn would
+    // restart EF memories from zero and every later round would diverge.
+    // Grid: both EF ids x TCP/UDS x 1-or-2 agents.
+    let grid: [(&str, bool, usize); 4] = [
+        ("fedadam-ssm-ef", false, 2),
+        ("fedadam-ssm-qef", false, 1),
+        ("fedadam-ssm-ef", true, 1),
+        ("fedadam-ssm-qef", true, 2),
+    ];
+    for (algo, uds, agents) in grid {
+        let wire = if uds { "uds" } else { "tcp" };
+        let tag = format!("respawn-{algo}-{wire}-x{agents}");
+        let dir = tmp_state_dir(&tag);
+        let mut cfg = base_cfg(algo);
+        cfg.agent_state_dir = dir.to_string_lossy().into_owned();
+        let sock =
+            std::env::temp_dir().join(format!("fedadam-{}-{tag}.sock", std::process::id()));
+        let listen = if uds {
+            format!("unix:{}", sock.display())
+        } else {
+            "127.0.0.1:0".to_string()
+        };
+        let local = run_in_process(base_cfg(algo));
+        let kill = AgentOptions {
+            exit_after_round: Some(1),
+            ..AgentOptions::default()
+        };
+        let remote = run_remote_with_kill(cfg, &listen, agents, 0, kill);
+        assert_respawn_identical(&local, &remote, &tag);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn crash_between_persist_and_send_replays_durable_frames_verbatim() {
+    // The nastiest window: the round's state (post-compression EF
+    // mutations included) is durable, but NO uplink reached the server.
+    // The server replays the round on reconnect; retraining it would
+    // mutate EF state a second time, so the respawned agent must replay
+    // the persisted frames byte for byte instead.  Every stateful id:
+    // EF and quantized-EF (state in the algorithm), one-bit and
+    // efficient-adam (device-local moments; warmup_rounds=2 puts round 2
+    // in the stateful phase).
+    for algo in [
+        "fedadam-ssm-ef",
+        "fedadam-ssm-qef",
+        "onebit-adam",
+        "efficient-adam",
+    ] {
+        let tag = format!("presend-{algo}");
+        let dir = tmp_state_dir(&tag);
+        let mut cfg = base_cfg(algo);
+        cfg.agent_state_dir = dir.to_string_lossy().into_owned();
+        let local = run_in_process(base_cfg(algo));
+        let kill = AgentOptions {
+            exit_before_send_round: Some(2),
+            ..AgentOptions::default()
+        };
+        let remote = run_remote_with_kill(cfg, "127.0.0.1:0", 2, 1, kill);
+        assert_respawn_identical(&local, &remote, &tag);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -13,15 +13,20 @@
 #   4. resume lanes: the kill/resume + journal-purity suite pinned at
 #      FEDADAM_PIPELINE_DEPTH in {0, 2}
 #   5. transport lane: the socket bit-identity + hostile-bytes suites,
-#      then the multi-process demo (1 coordinator + 2 agent processes;
-#      its exit status is the byte-identity assert)
+#      the agent kill-respawn durability suite (a killed agent process
+#      restarted against its agent_state_dir stays bit-identical), then
+#      the multi-process demo (1 coordinator + 2 agent processes; its
+#      exit status is the byte-identity assert)
 #   6. clippy -D warnings + rustfmt --check (skipped with a note when the
 #      components aren't installed)
 #   7. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
 #   8. benches stay buildable (cargo bench --no-run)
 #   9. perf pins: e2e_round and transport_loopback --json vs the
 #      checked-in BENCH_*.json (prints WARN on >10% wall-clock
-#      regression; never fails — absolute numbers are host-dependent)
+#      regression; never fails — absolute numbers are host-dependent).
+#      transport_loopback additionally hard-asserts in-bench that a real
+#      device agent's RSS growth stays flat between fleet 1e3 and 1e5
+#      (the agent-round-fleet-* cases; -snap pins snapshot overhead)
 #  10. fleet lane: fleet_scaling in quick mode (fleets 1e3/1e5) — the
 #      per-round flatness assert and the dense-vs-spilled residual
 #      conformance leg are hard gates; the BENCH_fleet_scaling.json
@@ -81,6 +86,12 @@ step "transport: socket suite + hostile-bytes properties"
 cargo test -q --test transport
 cargo test -q --test proptests -- \
   prop_frame_mutation prop_msg_mutation prop_wire_body_mutation
+
+step "transport: agent kill-respawn durability (fresh-process resume)"
+# Named explicitly (they also ran in the full suite above) so a
+# durability regression is unmissable in the step log.
+cargo test -q --test transport -- \
+  killed_agent_respawns crash_between_persist_and_send
 
 step "transport: multi-process demo (exit status = byte-identity)"
 cargo run --release --example multiprocess_demo
