@@ -8,14 +8,25 @@
 //! reference executor, no PJRT artifacts needed.
 //!
 //! Run: `cargo bench --bench agg_scaling`.
+//!
+//! **JSON mode** (`-- --json`) — the CI perf pin: the sequential and
+//! widest-parallel points of each half (1 vs 8 shards, 1 vs 4 workers),
+//! emitting per-case `median_ns` plus the derived parallel speedups as
+//! `BENCH_agg_scaling.json` (`--json-out PATH` to redirect).  With
+//! `--baseline PATH` any >10% regression against the checked-in pin
+//! prints a `WARN:` line (informational — absolute numbers are
+//! host-dependent).
+
+use std::collections::BTreeMap;
 
 use fedadam_ssm::algorithms::{Recon, Upload};
-use fedadam_ssm::benchlib::{black_box, from_env};
+use fedadam_ssm::benchlib::{black_box, from_env, pin};
 use fedadam_ssm::coordinator::{aggregate_sharded, evaluate_model};
 use fedadam_ssm::data::synthetic;
 use fedadam_ssm::rng::Rng;
 use fedadam_ssm::runtime::{reference_meta, reference_pool};
 use fedadam_ssm::sparse::{top_k_indices, SparseVec};
+use fedadam_ssm::util::json::Value;
 
 /// 100-device cohort: mostly sparse uploads (the SSM regime) plus a few
 /// dense stragglers, at ResNet-ish lane counts.
@@ -41,7 +52,111 @@ fn make_uploads(d: usize, k: usize, devices: usize) -> Vec<Upload> {
     uploads
 }
 
+/// `--json` mode: the machine-readable perf pin (see the module docs).
+fn json_mode(args: &[String]) {
+    let out_path =
+        pin::opt(args, "--json-out").unwrap_or_else(|| "BENCH_agg_scaling.json".into());
+    let baseline = pin::opt(args, "--baseline");
+
+    let mut bench = from_env();
+    bench.max_iters = 30;
+    let mut cases: Vec<Value> = Vec::new();
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+
+    // Sharded aggregate: sequential vs widest point.
+    let d = 200_000;
+    let k = 10_000;
+    let uploads = make_uploads(d, k, 100);
+    let agg_base = aggregate_sharded(&uploads, d, 1);
+    for shards in [1usize, 8] {
+        let name = format!("aggregate-{shards}shards");
+        let med = bench
+            .run(name.clone(), || {
+                black_box(aggregate_sharded(&uploads, d, shards));
+            })
+            .p50_ns;
+        // Bit-identity re-check outside the timed region.
+        let agg = aggregate_sharded(&uploads, d, shards);
+        assert!(
+            agg.dw
+                .iter()
+                .zip(&agg_base.dw)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{shards} shards diverged from the sequential reduce"
+        );
+        medians.insert(name.clone(), med);
+        let mut extra = BTreeMap::new();
+        extra.insert("dim".into(), Value::Num(d as f64));
+        extra.insert("devices".into(), Value::Num(uploads.len() as f64));
+        extra.insert("shards".into(), Value::Num(shards as f64));
+        cases.push(pin::case(&name, "median_ns", med, extra));
+    }
+
+    // Pool-parallel eval: sequential vs widest point.
+    let meta = reference_meta(&[8, 8, 1], 10, 8, 32, 1);
+    let spec = synthetic::SyntheticSpec::for_input_shape(&meta.input_shape, 64, 4000);
+    let task = synthetic::generate(&spec, 3);
+    let data = task.test;
+    let mut eval_base: Option<(f64, f64)> = None;
+    for workers in [1usize, 4] {
+        let pool = reference_pool(meta.clone(), workers).expect("reference pool");
+        let h = pool.handle();
+        let w = h.init(1).expect("init");
+        let name = format!("eval-{workers}workers");
+        let med = bench
+            .run(name.clone(), || {
+                black_box(evaluate_model(&h, &w, &data, workers).unwrap());
+            })
+            .p50_ns;
+        let result = evaluate_model(&h, &w, &data, workers).unwrap();
+        match eval_base {
+            None => eval_base = Some(result),
+            Some((l, a)) => assert_eq!(
+                (l.to_bits(), a.to_bits()),
+                (result.0.to_bits(), result.1.to_bits()),
+                "{workers}-worker eval diverged from sequential"
+            ),
+        }
+        medians.insert(name.clone(), med);
+        let mut extra = BTreeMap::new();
+        extra.insert("samples".into(), Value::Num(data.len() as f64));
+        extra.insert("workers".into(), Value::Num(workers as f64));
+        cases.push(pin::case(&name, "median_ns", med, extra));
+    }
+
+    let mut speedups = BTreeMap::new();
+    speedups.insert(
+        "aggregate_8shards".into(),
+        Value::Num(medians["aggregate-1shards"] / medians["aggregate-8shards"].max(1.0)),
+    );
+    speedups.insert(
+        "eval_4workers".into(),
+        Value::Num(medians["eval-1workers"] / medians["eval-4workers"].max(1.0)),
+    );
+    let mut extra = BTreeMap::new();
+    extra.insert("parallel_speedup".into(), Value::Obj(speedups));
+    pin::write(
+        "agg_scaling",
+        "maintainer-machine pin; regenerate with: cargo bench --bench agg_scaling -- --json \
+         --json-out BENCH_agg_scaling.json (both halves stay bit-identical to their \
+         sequential baselines at any width — the pin tracks wall-clock only; medians are \
+         host-dependent, so ci_local.sh only WARNS on >10% regressions)",
+        &out_path,
+        cases,
+        extra,
+    );
+
+    if let Some(bp) = baseline {
+        pin::compare_with_baseline(&bp, "median_ns", &medians);
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        json_mode(&args);
+        return;
+    }
     let mut bench = from_env();
     bench.max_iters = 30;
 

@@ -1,13 +1,127 @@
-//! Quantizer microbench: 1-bit EF and s-level uniform compressors
-//! (the baselines' hot path) across model dimensions.
+//! Quantizer microbench: 1-bit EF and s-level uniform compressors (the
+//! baselines' hot path) across model dimensions, plus the PR-10 fused
+//! SSM-Q wire encoder against the staged gather→quantize→pack pipeline
+//! it replaced (byte-identity re-asserted outside the timed region).
 //!
 //! Run: `cargo bench --bench quant`.
+//!
+//! **JSON mode** (`-- --json`) — the CI perf pin: the dense quantizers
+//! and the fused-vs-staged SSM-Q encode at the small and large model
+//! scales, emitting per-case `median_ns` plus the derived fused-encode
+//! speedups as `BENCH_quant.json` (`--json-out PATH` to redirect).
+//! With `--baseline PATH` any >10% regression against the checked-in
+//! pin prints a `WARN:` line (informational — absolute numbers are
+//! host-dependent).
 
-use fedadam_ssm::benchlib::{black_box, from_env};
+use std::collections::BTreeMap;
+
+use fedadam_ssm::algorithms::wire::WireBody;
+use fedadam_ssm::benchlib::{black_box, from_env, pin};
+use fedadam_ssm::quant::sparse_uniform::{ssm_q_encode, ssm_q_encode_fused};
 use fedadam_ssm::quant::{onebit_compress, uniform_compress, ErrorFeedback};
 use fedadam_ssm::rng::Rng;
+use fedadam_ssm::sparse::top_k_indices;
+use fedadam_ssm::util::json::Value;
+
+const S_LEVELS: u32 = 16;
+
+/// The staged wire path the fused encoder replaced: gather the kept
+/// lanes into value lists, quantize each against its own scale, then
+/// bit-pack mask + codes into the body bytes.
+fn staged_encode(d: usize, idx: &[u32], dw: &[f32], dm: &[f32], dv: &[f32]) -> Vec<u8> {
+    let gather = |src: &[f32]| -> Vec<f32> { idx.iter().map(|&i| src[i as usize]).collect() };
+    let msg = ssm_q_encode(d, idx, &gather(dw), &gather(dm), &gather(dv), S_LEVELS);
+    WireBody::SsmQ(msg).encode()
+}
+
+/// `--json` mode: the machine-readable perf pin (see the module docs).
+fn json_mode(args: &[String]) {
+    let out_path = pin::opt(args, "--json-out").unwrap_or_else(|| "BENCH_quant.json".into());
+    let baseline = pin::opt(args, "--baseline");
+
+    let mut bench = from_env();
+    let mut rng = Rng::new(3);
+    let mut cases: Vec<Value> = Vec::new();
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+    let mut speedups = BTreeMap::new();
+    for &d in &[54_314usize, 1_663_370] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let k = d / 20;
+        let idx = top_k_indices(&x, k);
+        let dm: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+        let dv: Vec<f32> = (0..d).map(|_| (rng.normal() as f32).abs() * 0.01).collect();
+        let mut ef = ErrorFeedback::new(d);
+
+        let mut timed = BTreeMap::new();
+        for (name, f) in [
+            (format!("onebit-ef-d{d}"), 0usize),
+            (format!("uniform-s{S_LEVELS}-d{d}"), 1),
+            (format!("staged-ssm-q-encode-d{d}"), 2),
+            (format!("fused-ssm-q-encode-d{d}"), 3),
+        ] {
+            let med = bench
+                .run(name.clone(), || match f {
+                    0 => {
+                        black_box(onebit_compress(&x, &mut ef));
+                    }
+                    1 => {
+                        black_box(uniform_compress(&x, S_LEVELS));
+                    }
+                    2 => {
+                        black_box(staged_encode(d, &idx, &x, &dm, &dv));
+                    }
+                    _ => {
+                        black_box(ssm_q_encode_fused(d, &idx, &x, &dm, &dv, S_LEVELS));
+                    }
+                })
+                .p50_ns;
+            timed.insert(name.clone(), med);
+            medians.insert(name.clone(), med);
+            let mut extra = BTreeMap::new();
+            extra.insert("dim".into(), Value::Num(d as f64));
+            cases.push(pin::case(&name, "median_ns", med, extra));
+        }
+        // Byte-identity re-check outside the timed region.
+        assert_eq!(
+            ssm_q_encode_fused(d, &idx, &x, &dm, &dv, S_LEVELS).bytes,
+            staged_encode(d, &idx, &x, &dm, &dv),
+            "d={d}: fused encode diverged from the staged pipeline"
+        );
+        speedups.insert(
+            format!("d{d}"),
+            Value::Num(
+                timed[&format!("staged-ssm-q-encode-d{d}")]
+                    / timed[&format!("fused-ssm-q-encode-d{d}")].max(1.0),
+            ),
+        );
+    }
+
+    let mut extra = BTreeMap::new();
+    extra.insert("s_levels".into(), Value::Num(S_LEVELS as f64));
+    extra.insert("fused_encode_speedup".into(), Value::Obj(speedups));
+    pin::write(
+        "quant",
+        "maintainer-machine pin; regenerate with: cargo bench --bench quant -- --json \
+         --json-out BENCH_quant.json (PR 10 fused sparsify->quantize->pack into one pass \
+         over the kept lanes — byte-identical output, pinned here at >=2x under the staged \
+         gather+quantize+pack cases it replaced; medians are host-dependent, so ci_local.sh \
+         only WARNS on >10% regressions)",
+        &out_path,
+        cases,
+        extra,
+    );
+
+    if let Some(bp) = baseline {
+        pin::compare_with_baseline(&bp, "median_ns", &medians);
+    }
+}
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        json_mode(&args);
+        return;
+    }
     let mut bench = from_env();
     let mut rng = Rng::new(3);
 
@@ -22,8 +136,24 @@ fn main() {
                 black_box(uniform_compress(&x, s));
             });
         }
+        // Fused vs staged SSM-Q wire encode at the paper's alpha = 0.05.
+        let k = d / 20;
+        let idx = top_k_indices(&x, k);
+        let dm: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+        let dv: Vec<f32> = (0..d).map(|_| (rng.normal() as f32).abs() * 0.01).collect();
+        bench.run(format!("staged ssm-q encode d={d} k={k}"), || {
+            black_box(staged_encode(d, &idx, &x, &dm, &dv));
+        });
+        bench.run(format!("fused ssm-q encode d={d} k={k}"), || {
+            black_box(ssm_q_encode_fused(d, &idx, &x, &dm, &dv, S_LEVELS));
+        });
+        assert_eq!(
+            ssm_q_encode_fused(d, &idx, &x, &dm, &dv, S_LEVELS).bytes,
+            staged_encode(d, &idx, &x, &dm, &dv),
+            "d={d}: fused encode diverged from the staged pipeline"
+        );
     }
 
-    bench.report("quantizers");
+    bench.report("quantizers + fused wire encode");
     println!("\n{}", bench.to_csv());
 }

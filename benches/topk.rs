@@ -1,21 +1,32 @@
 //! Top-k selection microbench (the SSM hot path, DESIGN.md §Perf L3).
 //!
-//! Compares quickselect (`sparse::topk`) against a full sort baseline at
-//! the paper's α = 0.05 across model dimensions, plus α scaling at fixed d.
+//! Compares the MSB-radix select (`sparse::topk`, PR 10) against a full
+//! sort baseline at the paper's α = 0.05 across model dimensions, plus α
+//! scaling at fixed d.  Outside every timed region the radix output is
+//! re-asserted identical to the sort oracle.
 //!
 //! Run: `cargo bench --bench topk` (env `FEDADAM_BENCH_QUICK=1` for CI).
+//!
+//! **JSON mode** (`-- --json`) — the CI perf pin: radix select and the
+//! sort baseline at the small and large model scales, emitting per-case
+//! `median_ns` plus the derived select-vs-sort speedups as
+//! `BENCH_topk.json` (`--json-out PATH` to redirect).  With `--baseline
+//! PATH` any >10% regression against the checked-in pin prints a `WARN:`
+//! line (informational — absolute numbers are host-dependent).
 
-use fedadam_ssm::benchlib::{black_box, from_env};
+use std::collections::BTreeMap;
+
+use fedadam_ssm::benchlib::{black_box, from_env, pin};
 use fedadam_ssm::rng::Rng;
 use fedadam_ssm::sparse::top_k_indices;
+use fedadam_ssm::util::json::Value;
 
 fn sort_baseline(x: &[f32], k: usize) -> Vec<u32> {
     let mut idx: Vec<u32> = (0..x.len() as u32).collect();
     idx.sort_by(|&a, &b| {
         x[b as usize]
             .abs()
-            .partial_cmp(&x[a as usize].abs())
-            .unwrap()
+            .total_cmp(&x[a as usize].abs())
             .then(a.cmp(&b))
     });
     let mut out: Vec<u32> = idx[..k].to_vec();
@@ -23,7 +34,82 @@ fn sort_baseline(x: &[f32], k: usize) -> Vec<u32> {
     out
 }
 
+/// `--json` mode: the machine-readable perf pin (see the module docs).
+fn json_mode(args: &[String]) {
+    let out_path = pin::opt(args, "--json-out").unwrap_or_else(|| "BENCH_topk.json".into());
+    let baseline = pin::opt(args, "--baseline");
+
+    let mut bench = from_env();
+    let mut rng = Rng::new(42);
+    let mut cases: Vec<Value> = Vec::new();
+    let mut medians: BTreeMap<String, f64> = BTreeMap::new();
+    let mut speedups = BTreeMap::new();
+    for &d in &[54_314usize, 1_663_370] {
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let k = d / 20;
+        let mut timed = BTreeMap::new();
+        let sel = format!("radix-select-d{d}");
+        timed.insert(
+            sel.clone(),
+            bench
+                .run(sel.clone(), || {
+                    black_box(top_k_indices(&x, k));
+                })
+                .p50_ns,
+        );
+        let srt = format!("sort-baseline-d{d}");
+        timed.insert(
+            srt.clone(),
+            bench
+                .run(srt.clone(), || {
+                    black_box(sort_baseline(&x, k));
+                })
+                .p50_ns,
+        );
+        // Correctness outside the timed region: radix == sort oracle.
+        assert_eq!(
+            top_k_indices(&x, k),
+            sort_baseline(&x, k),
+            "d={d} k={k}: radix select diverged from the sort oracle"
+        );
+        speedups.insert(
+            format!("d{d}"),
+            Value::Num(timed[&srt] / timed[&sel].max(1.0)),
+        );
+        for (name, med) in timed {
+            medians.insert(name.clone(), med);
+            let mut extra = BTreeMap::new();
+            extra.insert("dim".into(), Value::Num(d as f64));
+            extra.insert("k".into(), Value::Num(k as f64));
+            cases.push(pin::case(&name, "median_ns", med, extra));
+        }
+    }
+
+    let mut extra = BTreeMap::new();
+    extra.insert("select_speedup_vs_sort".into(), Value::Obj(speedups));
+    pin::write(
+        "topk",
+        "maintainer-machine pin; regenerate with: cargo bench --bench topk -- --json \
+         --json-out BENCH_topk.json (PR 10 replaced the scalar quickselect with an exact \
+         MSB-radix select — identical output, pinned here at >=2x below the retired \
+         quickselect's medians of ~410us at d=54314 and ~14.9ms at d=1663370; medians are \
+         host-dependent, so ci_local.sh only WARNS on >10% regressions)",
+        &out_path,
+        cases,
+        extra,
+    );
+
+    if let Some(bp) = baseline {
+        pin::compare_with_baseline(&bp, "median_ns", &medians);
+    }
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--json") {
+        json_mode(&args);
+        return;
+    }
     let mut bench = from_env();
     let mut rng = Rng::new(42);
 
@@ -31,12 +117,17 @@ fn main() {
     for &d in &[54_314usize, 176_778, 1_663_370] {
         let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
         let k = d / 20;
-        bench.run(format!("quickselect d={d} k={k}"), || {
+        bench.run(format!("radix-select d={d} k={k}"), || {
             black_box(top_k_indices(&x, k));
         });
         bench.run(format!("sort-baseline d={d} k={k}"), || {
             black_box(sort_baseline(&x, k));
         });
+        assert_eq!(
+            top_k_indices(&x, k),
+            sort_baseline(&x, k),
+            "d={d}: radix select diverged from the sort oracle"
+        );
     }
 
     // alpha sweep at cnn_small's d.
@@ -44,7 +135,7 @@ fn main() {
     let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
     for &alpha in &[0.01f64, 0.05, 0.2, 0.5] {
         let k = ((d as f64 * alpha) as usize).max(1);
-        bench.run(format!("quickselect d={d} alpha={alpha}"), || {
+        bench.run(format!("radix-select d={d} alpha={alpha}"), || {
             black_box(top_k_indices(&x, k));
         });
     }

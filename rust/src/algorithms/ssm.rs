@@ -13,8 +13,11 @@
 //!
 //! Uplink: one mask + three k-value lists = `min{3kq + d, k(3q + log₂ d)}`.
 
+use anyhow::Result;
+
+use super::wire::{WireBody, WireUpload, KIND_SHARED_MASK};
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
-use crate::sparse::codec::cost;
+use crate::sparse::codec::{cost, pack_positions, BitPacker, Q};
 use crate::sparse::{top_k_indices, SparseVec};
 
 /// Which delta supplies the shared mask.
@@ -68,6 +71,65 @@ impl Algorithm for FedAdamSsm {
             weight: delta.weight,
             bits: cost::fedadam_ssm(self.dim, self.k),
         }
+    }
+
+    fn compress_wire(
+        &mut self,
+        _round: usize,
+        _device: usize,
+        delta: LocalDelta,
+    ) -> Result<WireUpload> {
+        // Fused wire path: write the shared-mask body straight from the
+        // dense deltas — the positions word-at-a-time, the kept lanes'
+        // f32 bits gathered in place — with no intermediate `SparseVec`s.
+        // Byte-identical by construction to the staged
+        // `compress → from_upload → SharedMask::encode` path (the f32
+        // payload bits pass through verbatim); debug builds assert it.
+        let source = match self.source {
+            MaskSource::W => &delta.dw,
+            MaskSource::M => &delta.dm,
+            MaskSource::V => &delta.dv,
+        };
+        let idx = top_k_indices(source, self.k);
+        let bits = cost::fedadam_ssm(self.dim, self.k);
+        let mut p = BitPacker::with_capacity(bits as usize);
+        pack_positions(&mut p, self.dim, &idx);
+        for src in [&delta.dw, &delta.dm, &delta.dv] {
+            for &i in &idx {
+                p.push(src[i as usize].to_bits() as u64, Q);
+            }
+        }
+        let bytes = p.finish();
+        #[cfg(debug_assertions)]
+        {
+            let gather = |src: &[f32]| -> Vec<f32> {
+                idx.iter().map(|&i| src[i as usize]).collect()
+            };
+            let staged = WireBody::SharedMask {
+                dim: self.dim,
+                indices: idx.clone(),
+                w: gather(&delta.dw),
+                m: gather(&delta.dm),
+                v: gather(&delta.dv),
+            };
+            debug_assert_eq!(staged.wire_bits(), bits);
+            debug_assert_eq!(
+                staged.encode(),
+                bytes,
+                "fused SSM wire encode is not byte-identical to the staged path"
+            );
+        }
+        Ok(WireUpload {
+            body: WireBody::Packed {
+                kind: KIND_SHARED_MASK,
+                dim: self.dim,
+                k: idx.len(),
+                levels: 0,
+                bytes,
+            },
+            weight: delta.weight,
+            bits,
+        })
     }
 
     fn downlink_bits(&self, agg: &Aggregate) -> u64 {

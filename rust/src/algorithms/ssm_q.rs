@@ -25,23 +25,26 @@
 use anyhow::Result;
 
 use super::residual_store::ResidualStore;
-use super::wire::{WireBody, WireUpload};
+use super::wire::{WireBody, WireUpload, KIND_SSM_Q};
 use super::{Aggregate, Algorithm, LocalDelta, Recon, Upload};
-use crate::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
-use crate::quant::SsmQUplink;
+use crate::quant::sparse_uniform::ssm_q_encode_fused;
 use crate::sparse::codec::cost;
 use crate::sparse::{top_k_indices, SparseVec};
 use crate::util::bytes::{ByteReader, ByteWriter};
 
 /// Gather `src[indices]` as a plain value list (mask handled separately).
+#[cfg(debug_assertions)]
 fn gather_vals(src: &[f32], indices: &[u32]) -> Vec<f32> {
     indices.iter().map(|&i| src[i as usize]).collect()
 }
 
-/// Compress one `(ΔW, ΔM, ΔV)` triple under a shared mask through the
-/// quantized wire format, returning the wire message itself alongside the
-/// exact dequantized reconstructions (the transport path ships the
-/// former; the in-process aggregation path consumes the latter).
+/// Compress one dense `(ΔW, ΔM, ΔV)` triple under a shared mask through
+/// the **fused** quantized wire encoder — one pass over the `k` kept
+/// lanes writes the packed contiguous wire body and yields the exact
+/// dequantized reconstructions (the transport path ships the former; the
+/// in-process aggregation path consumes the latter).  Debug builds
+/// re-run the staged `gather → ssm_q_encode → repack` oracle and assert
+/// byte identity.
 fn compress_triple(
     dim: usize,
     idx: &[u32],
@@ -49,19 +52,45 @@ fn compress_triple(
     dm: &[f32],
     dv: &[f32],
     s_levels: u32,
-) -> (SsmQUplink, SparseVec, SparseVec, SparseVec, u64) {
-    let msg = ssm_q_encode(
+) -> (WireBody, SparseVec, SparseVec, SparseVec, u64) {
+    let fused = ssm_q_encode_fused(dim, idx, dw, dm, dv, s_levels);
+    debug_assert_eq!(fused.bits, cost::fedadam_ssm_q(dim, idx.len(), s_levels as usize));
+    #[cfg(debug_assertions)]
+    {
+        use crate::quant::sparse_uniform::{ssm_q_decode, ssm_q_encode};
+        let staged = ssm_q_encode(
+            dim,
+            idx,
+            &gather_vals(dw, idx),
+            &gather_vals(dm, idx),
+            &gather_vals(dv, idx),
+            s_levels,
+        );
+        debug_assert_eq!(staged.wire_bits(), fused.bits);
+        let (sw, sm, sv) = ssm_q_decode(&staged);
+        debug_assert_eq!(sw.values, fused.w, "fused dequantization diverged from staged");
+        debug_assert_eq!(sm.values, fused.m);
+        debug_assert_eq!(sv.values, fused.v);
+        debug_assert_eq!(
+            WireBody::SsmQ(staged).encode(),
+            fused.bytes,
+            "fused SSM-Q encode is not byte-identical to the staged path"
+        );
+    }
+    let bits = fused.bits;
+    let body = WireBody::Packed {
+        kind: KIND_SSM_Q,
         dim,
-        idx,
-        &gather_vals(dw, idx),
-        &gather_vals(dm, idx),
-        &gather_vals(dv, idx),
-        s_levels,
-    );
-    let bits = cost::fedadam_ssm_q(dim, idx.len(), s_levels as usize);
-    debug_assert_eq!(bits, msg.wire_bits());
-    let (sw, sm, sv) = ssm_q_decode(&msg);
-    (msg, sw, sm, sv, bits)
+        k: idx.len(),
+        levels: s_levels - 1,
+        bytes: fused.bytes,
+    };
+    let mk = |values: Vec<f32>| SparseVec {
+        dim,
+        indices: idx.to_vec(),
+        values,
+    };
+    (body, mk(fused.w), mk(fused.m), mk(fused.v), bits)
 }
 
 pub struct FedAdamSsmQ {
@@ -78,10 +107,10 @@ impl FedAdamSsmQ {
     }
 
     /// Shared core of [`Algorithm::compress`] and
-    /// [`Algorithm::compress_wire`] — one encode, both views.
-    fn compress_inner(&mut self, delta: &LocalDelta) -> (SsmQUplink, Upload) {
+    /// [`Algorithm::compress_wire`] — one fused encode, both views.
+    fn compress_inner(&mut self, delta: &LocalDelta) -> (WireBody, Upload) {
         let idx = top_k_indices(&delta.dw, self.k);
-        let (msg, sw, sm, sv, bits) =
+        let (body, sw, sm, sv, bits) =
             compress_triple(self.dim, &idx, &delta.dw, &delta.dm, &delta.dv, self.levels);
         let up = Upload {
             dw: Recon::Sparse(sw),
@@ -90,7 +119,7 @@ impl FedAdamSsmQ {
             weight: delta.weight,
             bits,
         };
-        (msg, up)
+        (body, up)
     }
 }
 
@@ -109,9 +138,9 @@ impl Algorithm for FedAdamSsmQ {
         _device: usize,
         delta: LocalDelta,
     ) -> Result<WireUpload> {
-        let (msg, up) = self.compress_inner(&delta);
+        let (body, up) = self.compress_inner(&delta);
         Ok(WireUpload {
-            body: WireBody::SsmQ(msg),
+            body,
             weight: up.weight,
             bits: up.bits,
         })
@@ -151,7 +180,7 @@ impl FedAdamSsmQEf {
     /// Shared core of [`Algorithm::compress`] and
     /// [`Algorithm::compress_wire`] — the per-device EF memory mutates
     /// exactly once per call regardless of which view the caller takes.
-    fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (SsmQUplink, Upload) {
+    fn compress_inner(&mut self, device: usize, delta: &LocalDelta) -> (WireBody, Upload) {
         let dim = self.dim;
         let entry = self.memory.get_mut(device as u64);
         let (mem_w, rest) = entry.split_at_mut(dim);
@@ -162,7 +191,7 @@ impl FedAdamSsmQEf {
         let cv: Vec<f32> = delta.dv.iter().zip(mem_v.iter()).map(|(a, b)| a + b).collect();
         // SSM from the compensated ΔW (eq. 28 on c_w), then quantize.
         let idx = top_k_indices(&cw, self.k);
-        let (msg, sw, sm, sv, bits) = compress_triple(dim, &idx, &cw, &cm, &cv, self.levels);
+        let (body, sw, sm, sv, bits) = compress_triple(dim, &idx, &cw, &cm, &cv, self.levels);
         // Residual = compensated − transmitted: subtracting the
         // *dequantized* kept values folds the quantization error into the
         // memory alongside the masked-out mass.
@@ -184,7 +213,7 @@ impl FedAdamSsmQEf {
             weight: delta.weight,
             bits,
         };
-        (msg, up)
+        (body, up)
     }
 }
 
@@ -203,9 +232,9 @@ impl Algorithm for FedAdamSsmQEf {
         device: usize,
         delta: LocalDelta,
     ) -> Result<WireUpload> {
-        let (msg, up) = self.compress_inner(device, &delta);
+        let (body, up) = self.compress_inner(device, &delta);
         Ok(WireUpload {
-            body: WireBody::SsmQ(msg),
+            body,
             weight: up.weight,
             bits: up.bits,
         })

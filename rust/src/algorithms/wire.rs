@@ -32,8 +32,8 @@ use crate::quant::{
     UniformPacket,
 };
 use crate::sparse::codec::{
-    cost, decode_positions, encode_positions, index_bits, mask_bits, BitPacker, BitUnpacker,
-    DecodeError, MaskEncoding, Q,
+    cost, decode_positions, encode_positions, index_bits, mask_bits, pack_positions, BitPacker,
+    BitUnpacker, DecodeError, MaskEncoding, Q,
 };
 use crate::sparse::SparseVec;
 
@@ -148,6 +148,20 @@ pub enum WireBody {
     },
     /// Quantized shared mask — `fedadam-ssm-q`/`-qef`.
     SsmQ(SsmQUplink),
+    /// A body the fused device-side encoders already serialized: the
+    /// canonical contiguous bitstream of the `kind`-tagged variant, plus
+    /// the header fields the transport frame needs.  [`WireBody::encode`]
+    /// returns the bytes verbatim (the fused encoder is debug-asserted
+    /// byte-identical to the staged path), so the hot path never re-packs.
+    /// Never produced by [`WireBody::try_decode`] — decoding yields the
+    /// structured variant.
+    Packed {
+        kind: u8,
+        dim: usize,
+        k: usize,
+        levels: u32,
+        bytes: Vec<u8>,
+    },
     /// Error-compensated sign quantization — `onebit-adam` post-warmup.
     OneBit(OneBitPacket),
     /// Dense s-level uniform quantization — `efficient-adam`.
@@ -172,6 +186,7 @@ impl WireBody {
             WireBody::SharedMask { .. } => KIND_SHARED_MASK,
             WireBody::SparseTriple { .. } => KIND_SPARSE_TRIPLE,
             WireBody::SsmQ(_) => KIND_SSM_Q,
+            WireBody::Packed { kind, .. } => *kind,
             WireBody::OneBit(_) => KIND_ONEBIT,
             WireBody::UniformQ(_) => KIND_UNIFORM_Q,
         }
@@ -185,6 +200,7 @@ impl WireBody {
             WireBody::SharedMask { indices, .. } => indices.len(),
             WireBody::SparseTriple { w, .. } => w.nnz(),
             WireBody::SsmQ(msg) => msg.k,
+            WireBody::Packed { k, .. } => *k,
             _ => 0,
         }
     }
@@ -193,6 +209,7 @@ impl WireBody {
     pub fn levels(&self) -> u32 {
         match self {
             WireBody::SsmQ(msg) => msg.w.levels,
+            WireBody::Packed { levels, .. } => *levels,
             WireBody::UniformQ(p) => p.levels,
             _ => 0,
         }
@@ -209,6 +226,14 @@ impl WireBody {
             }
             WireBody::SparseTriple { w, .. } => 3 * (mask_bits(w.dim, w.nnz()).0 + w.nnz() as u64 * Q),
             WireBody::SsmQ(msg) => msg.wire_bits(),
+            WireBody::Packed {
+                kind,
+                dim,
+                k,
+                levels,
+                ..
+            } => WireBody::expected_bits(*kind, *dim, *k, *levels)
+                .expect("fused packed body carries a valid header"),
             WireBody::OneBit(p) => p.wire_bits(),
             WireBody::UniformQ(p) => p.wire_bits(),
         }
@@ -217,6 +242,9 @@ impl WireBody {
     /// Pack the body into one contiguous LSB-first bitstream; the result
     /// is exactly `ceil(wire_bits / 8)` bytes.
     pub fn encode(&self) -> Vec<u8> {
+        if let WireBody::Packed { bytes, .. } = self {
+            return bytes.clone();
+        }
         let mut p = BitPacker::with_capacity(self.wire_bits() as usize);
         match self {
             WireBody::Dense3 { dw, dm, dv } => {
@@ -270,6 +298,7 @@ impl WireBody {
                 }
                 p.push(packet.scale.to_bits() as u64, Q);
             }
+            WireBody::Packed { .. } => unreachable!("returned verbatim above"),
         }
         p.finish()
     }
@@ -473,6 +502,20 @@ impl WireBody {
                     Some(Recon::Sparse(v)),
                 )
             }
+            WireBody::Packed {
+                kind,
+                dim,
+                k,
+                levels,
+                bytes,
+            } => {
+                // A fused pre-encoded body decodes through the same
+                // untrusted path a socket peer's bytes would, then
+                // converts structurally — one code path for
+                // "bytes → upload", no trusted shortcut.
+                return WireBody::try_decode(kind, dim, k, levels, bits, &bytes)?
+                    .try_into_upload(weight);
+            }
             WireBody::OneBit(packet) => (Recon::Dense(try_onebit_decompress(&packet)?), None, None),
             WireBody::UniformQ(packet) => {
                 (Recon::Dense(try_uniform_decompress(&packet)?), None, None)
@@ -491,29 +534,11 @@ impl WireBody {
 /// Push the canonical `min{bitmap, index-list}` position coding for
 /// `indices` (sorted unique, `< dim`) into the contiguous stream —
 /// bit-for-bit the coding [`encode_positions`] produces, minus its byte
-/// padding.
+/// padding.  Delegates to the shared word-at-a-time packer in
+/// [`crate::sparse::codec`] (the same routine the fused device-side
+/// encoders write through).
 fn push_positions(p: &mut BitPacker, dim: usize, indices: &[u32]) {
-    let (_, enc) = mask_bits(dim, indices.len());
-    match enc {
-        MaskEncoding::Bitmap => {
-            let mut next = indices.iter().peekable();
-            for i in 0..dim as u32 {
-                let bit = if next.peek() == Some(&&i) {
-                    next.next();
-                    1
-                } else {
-                    0
-                };
-                p.push(bit, 1);
-            }
-        }
-        MaskEncoding::IndexList => {
-            let bits = index_bits(dim);
-            for &i in indices {
-                p.push(i as u64, bits);
-            }
-        }
-    }
+    pack_positions(p, dim, indices);
 }
 
 /// Pull the canonical position coding back out, validating exactly `k`
@@ -636,6 +661,7 @@ mod tests {
             WireBody::SharedMask { dim, .. } => *dim,
             WireBody::SparseTriple { w, .. } => w.dim,
             WireBody::SsmQ(msg) => msg.dim,
+            WireBody::Packed { dim, .. } => *dim,
             WireBody::OneBit(p) => p.dim,
             WireBody::UniformQ(p) => p.dim,
         };
@@ -692,6 +718,57 @@ mod tests {
         }
         let mut ef = ErrorFeedback::new(d);
         roundtrip(WireBody::OneBit(onebit_compress(&x, &mut ef)));
+    }
+
+    #[test]
+    fn packed_body_is_transparent() {
+        // A fused pre-encoded body must be indistinguishable on the wire
+        // from the staged structured body it shortcuts: same header
+        // accessors, same bytes, same reconstructed upload.
+        let mut rng = Rng::new(78);
+        let d = 170;
+        let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+        let idx: Vec<u32> = vec![0, 8, 13, 42, 169];
+        let vals: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        for s in [2u32, 3, 16] {
+            let staged = WireBody::SsmQ(ssm_q_encode(d, &idx, &vals, &vals, &vals, s));
+            let fused = crate::quant::sparse_uniform::ssm_q_encode_fused(d, &idx, &x, &x, &x, s);
+            let packed = WireBody::Packed {
+                kind: KIND_SSM_Q,
+                dim: d,
+                k: idx.len(),
+                levels: s - 1,
+                bytes: fused.bytes,
+            };
+            assert_eq!(packed.kind(), staged.kind());
+            assert_eq!(packed.k(), staged.k());
+            assert_eq!(packed.levels(), staged.levels());
+            assert_eq!(packed.wire_bits(), staged.wire_bits());
+            assert_eq!(packed.encode(), staged.encode(), "s={s}");
+            let a = packed.try_into_upload(1.0).unwrap();
+            let b = staged.try_into_upload(1.0).unwrap();
+            assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        }
+        // The f32 shared-mask family takes the same shortcut.
+        let staged = WireBody::SharedMask {
+            dim: d,
+            indices: idx.clone(),
+            w: vals.clone(),
+            m: vals.clone(),
+            v: vals.clone(),
+        };
+        let packed = WireBody::Packed {
+            kind: KIND_SHARED_MASK,
+            dim: d,
+            k: idx.len(),
+            levels: 0,
+            bytes: staged.encode(),
+        };
+        assert_eq!(packed.wire_bits(), staged.wire_bits());
+        assert_eq!(
+            format!("{:?}", packed.try_into_upload(1.0).unwrap()),
+            format!("{:?}", staged.try_into_upload(1.0).unwrap())
+        );
     }
 
     #[test]

@@ -147,6 +147,108 @@ fn summarize(name: String, iters: usize, mut samples: Vec<f64>) -> BenchResult {
     }
 }
 
+/// Shared machinery for the benches' `--json` perf-pin modes: flag
+/// parsing, pin-document assembly and the warn-only baseline diff that
+/// `scripts/ci_local.sh` (and the CI perf step) run against the
+/// checked-in `BENCH_*.json` files.  Absolute medians are
+/// host-dependent, so the diff WARNS on >10% regressions and never
+/// fails the build.
+pub mod pin {
+    use std::collections::BTreeMap;
+
+    use crate::util::json::{self, Value};
+
+    /// Value of a `--flag PATH` style bench argument.
+    pub fn opt(args: &[String], flag: &str) -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    }
+
+    /// One `cases[]` entry: the case name, its pinned metric, plus any
+    /// bench-specific fields.
+    pub fn case(name: &str, metric: &str, value: f64, extra: BTreeMap<String, Value>) -> Value {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Value::Str(name.into()));
+        obj.insert(metric.into(), Value::Num(value));
+        for (k, v) in extra {
+            obj.insert(k, v);
+        }
+        Value::Obj(obj)
+    }
+
+    /// Write the pin document `{bench, note, <extra...>, cases}` to
+    /// `out_path`.  The note travels with regenerated files so a
+    /// copy-over re-pin keeps the provenance line intact.
+    pub fn write(
+        bench_name: &str,
+        note: &str,
+        out_path: &str,
+        cases: Vec<Value>,
+        extra: BTreeMap<String, Value>,
+    ) {
+        let mut root = BTreeMap::new();
+        root.insert("bench".into(), Value::Str(bench_name.into()));
+        root.insert("note".into(), Value::Str(note.into()));
+        for (k, v) in extra {
+            root.insert(k, v);
+        }
+        root.insert("cases".into(), Value::Arr(cases));
+        std::fs::write(out_path, Value::Obj(root).render() + "\n").expect("writing bench json");
+        println!("wrote {out_path}");
+    }
+
+    /// Warn (never fail) when a fresh median regresses >10% against the
+    /// `metric` field of the baseline pin's `cases` at `path`.
+    pub fn compare_with_baseline(path: &str, metric: &str, medians: &BTreeMap<String, f64>) {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("no baseline at {path}: {e}");
+                return;
+            }
+        };
+        let base = match json::parse(&text) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("unparseable baseline {path}: {e}");
+                return;
+            }
+        };
+        let Some(base_cases) = base.get("cases").and_then(|c| c.as_arr()) else {
+            eprintln!("baseline {path} has no cases array");
+            return;
+        };
+        let mut warned = false;
+        for c in base_cases {
+            let name = c.get("name").and_then(|v| v.as_str());
+            let old = c.get(metric).and_then(|v| v.as_f64());
+            let (Some(name), Some(old)) = (name, old) else {
+                continue;
+            };
+            let Some(&new) = medians.get(name) else {
+                continue;
+            };
+            let ratio = new / old.max(1.0);
+            if ratio > 1.10 {
+                warned = true;
+                println!(
+                    "WARN: {name}: median {:.3} ms vs baseline {:.3} ms (+{:.0}%)",
+                    new / 1e6,
+                    old / 1e6,
+                    (ratio - 1.0) * 100.0
+                );
+            } else {
+                println!("ok: {name}: {ratio:.2}x baseline");
+            }
+        }
+        if !warned {
+            println!("no >10% wall-clock regressions vs {path}");
+        }
+    }
+}
+
 /// `FEDADAM_BENCH_QUICK=1` switches every bench binary to quick mode.
 pub fn from_env() -> Bench {
     if std::env::var("FEDADAM_BENCH_QUICK").is_ok() {

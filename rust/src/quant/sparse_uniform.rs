@@ -15,8 +15,8 @@
 //! `SparseVec::from_dense`'s warning about exact-zero kept lanes).
 
 use crate::sparse::codec::{
-    cost, decode_positions, encode_positions, index_bits, mask_bits, try_decode_positions,
-    DecodeError, MaskEncoding, Q,
+    cost, decode_positions, encode_positions, index_bits, mask_bits, pack_positions,
+    try_decode_positions, BitPacker, DecodeError, MaskEncoding, Q,
 };
 use crate::sparse::SparseVec;
 
@@ -172,6 +172,92 @@ pub fn ssm_q_encode(
     msg
 }
 
+/// Output of the fused single-pass encoder [`ssm_q_encode_fused`]: the
+/// canonical contiguous wire-body bytes plus the exact dequantized
+/// kept-lane values (the reconstructions the in-process aggregation path
+/// consumes — [`ssm_q_decode`] of the equivalent staged message yields
+/// bitwise the same values).
+#[derive(Clone, Debug)]
+pub struct SsmQFused {
+    /// The contiguous LSB-first wire body — byte-for-byte what
+    /// `WireBody::SsmQ(ssm_q_encode(..)).encode()` produces, exactly
+    /// `ceil(bits / 8)` bytes.
+    pub bytes: Vec<u8>,
+    /// Priced size: [`cost::fedadam_ssm_q`]`(dim, k, s)`.
+    pub bits: u64,
+    /// Dequantized kept-lane values of `ΔW` (index order of the mask).
+    pub w: Vec<f32>,
+    /// Dequantized kept-lane values of `ΔM`.
+    pub m: Vec<f32>,
+    /// Dequantized kept-lane values of `ΔV`.
+    pub v: Vec<f32>,
+}
+
+/// Quantize one vector's kept lanes straight into the open bitstream and
+/// return their dequantized values — the fused form of
+/// `gather → uniform_compress → repack → dequantize_codes`, with the grid
+/// math kept expression-for-expression identical so the codes and the
+/// reconstructions are bitwise those of the staged path.
+fn quantize_lanes_into(
+    p: &mut BitPacker,
+    indices: &[u32],
+    src: &[f32],
+    levels: u32,
+    code_bits: u64,
+) -> Vec<f32> {
+    // Same fold as `uniform_compress` over the gathered (index-ascending)
+    // values: f32::max is order-sensitive only around NaN, so matching the
+    // walk order keeps the scale bit-identical.
+    let scale = indices
+        .iter()
+        .fold(0.0f32, |a, &i| a.max(src[i as usize].abs()));
+    let safe = scale.max(1e-30);
+    let mut out = Vec::with_capacity(indices.len());
+    for &i in indices {
+        let t = (src[i as usize] / safe).clamp(-1.0, 1.0);
+        let q = ((t + 1.0) * 0.5 * levels as f32).round() as u64;
+        p.push(q, code_bits);
+        out.push(if scale == 0.0 {
+            0.0
+        } else {
+            (q as f32 / levels as f32 * 2.0 - 1.0) * scale
+        });
+    }
+    p.push(scale.to_bits() as u64, Q);
+    out
+}
+
+/// Fused single-pass sparsify→quantize→pack encoder for the quantized-SSM
+/// uplink: walks the `k` selected lanes of the **dense** `(ΔW, ΔM, ΔV)`
+/// directly, quantizes each kept lane, and writes the packed contiguous
+/// wire body in place — no intermediate gathered `Vec`, per-section code
+/// buffer, or [`SsmQUplink`] struct.  Byte-identical by construction to
+/// the staged `gather → ssm_q_encode → WireBody::SsmQ::encode` path
+/// (debug-asserted there and property-tested in `tests/proptests.rs`),
+/// and the returned dequantized values are bitwise the staged
+/// [`ssm_q_decode`] reconstructions.
+pub fn ssm_q_encode_fused(
+    dim: usize,
+    indices: &[u32],
+    dw: &[f32],
+    dm: &[f32],
+    dv: &[f32],
+    s_levels: u32,
+) -> SsmQFused {
+    assert!(s_levels >= 2, "need at least 2 levels");
+    let levels = s_levels - 1;
+    let code_bits = index_bits(s_levels as usize);
+    let bits = cost::fedadam_ssm_q(dim, indices.len(), s_levels as usize);
+    let mut p = BitPacker::with_capacity(bits as usize);
+    pack_positions(&mut p, dim, indices);
+    let w = quantize_lanes_into(&mut p, indices, dw, levels, code_bits);
+    let m = quantize_lanes_into(&mut p, indices, dm, levels, code_bits);
+    let v = quantize_lanes_into(&mut p, indices, dv, levels, code_bits);
+    let bytes = p.finish();
+    debug_assert_eq!(bytes.len() as u64, bits.div_ceil(8));
+    SsmQFused { bytes, bits, w, m, v }
+}
+
 /// Decode to the three exact dequantized [`SparseVec`]s the server sees.
 ///
 /// Trusted in-process path (the message came from [`ssm_q_encode`] in
@@ -316,6 +402,52 @@ mod tests {
         let mut wrong_enc = msg;
         wrong_enc.encoding = MaskEncoding::Bitmap;
         assert!(try_ssm_q_decode(&wrong_enc).is_err());
+    }
+
+    #[test]
+    fn fused_encode_matches_staged_bytes_and_recons() {
+        use crate::algorithms::wire::WireBody;
+        let mut rng = Rng::new(31);
+        for &d in &[1usize, 64, 170, 1000, 4096] {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let y: Vec<f32> = (0..d).map(|_| rng.normal() as f32 * 0.1).collect();
+            let z: Vec<f32> = (0..d).map(|_| (rng.normal() as f32).abs() * 0.01).collect();
+            for &k in &[1usize, d / 3 + 1, d] {
+                let idx = top_k_indices(&x, k);
+                for &s in &[2u32, 3, 16, 256] {
+                    let fused = super::ssm_q_encode_fused(d, &idx, &x, &y, &z, s);
+                    let gather =
+                        |src: &[f32]| idx.iter().map(|&i| src[i as usize]).collect::<Vec<f32>>();
+                    let staged =
+                        ssm_q_encode(d, &idx, &gather(&x), &gather(&y), &gather(&z), s);
+                    let (sw, sm, sv) = ssm_q_decode(&staged);
+                    assert_eq!(fused.bits, staged.wire_bits(), "d={d} k={k} s={s}");
+                    assert_eq!(
+                        fused.bytes,
+                        WireBody::SsmQ(staged).encode(),
+                        "d={d} k={k} s={s}: fused bytes diverge from staged wire body"
+                    );
+                    assert_eq!(fused.w, sw.values, "d={d} k={k} s={s}");
+                    assert_eq!(fused.m, sm.values);
+                    assert_eq!(fused.v, sv.values);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_encode_zero_scale_vector() {
+        // A vector whose kept lanes are all exactly 0.0 has scale 0 and
+        // must reconstruct exactly 0.0 on every kept lane.
+        let d = 100;
+        let idx = [3u32, 10, 77];
+        let w = vec![0.0f32; d];
+        let m: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let fused = super::ssm_q_encode_fused(d, &idx, &w, &m, &w, 16);
+        assert_eq!(fused.w, vec![0.0; 3]);
+        assert_eq!(fused.v, vec![0.0; 3]);
+        assert_eq!(fused.bits, cost::fedadam_ssm_q(d, 3, 16));
+        assert_eq!(fused.bytes.len() as u64, fused.bits.div_ceil(8));
     }
 
     #[test]

@@ -20,4 +20,6 @@ pub mod reference;
 pub use engine::{Arg, Engine, EngineHandle, Prog};
 pub use manifest::{AdamConfig, Manifest, ModelMeta};
 pub use pool::{EnginePool, Executor, PoolHandle, WorkClass};
-pub use reference::{reference_meta, reference_pool, ReferenceExecutor};
+pub use reference::{
+    reference_meta, reference_pool, reference_pool_with_mode, KernelMode, ReferenceExecutor,
+};

@@ -22,6 +22,18 @@
 //!
 //! Model: `logits = W·x + b` with `W: [classes, row]` row-major followed
 //! by `b: [classes]`, so `dim = classes·(row + 1)`.
+//!
+//! **Float epoch**: since PR 10 the default [`KernelMode::Blocked`]
+//! computes logits through blocked kernels whose dot products use eight
+//! fixed-order partial accumulators ([`dot8`] — vectorizable because the
+//! loop-carried serial dependency is gone).  That reassociates float sums
+//! versus the seed-era per-sample scalar loops, so trajectories are close
+//! but **not bit-identical** to the old epoch — the PR-8 alias-table
+//! precedent: the epoch change is declared here, the conformance grids
+//! (run-vs-run comparisons) re-pin automatically, and the retired
+//! [`KernelMode::PerSample`] path is retained as the differential oracle
+//! (`tests/reference_kernels.rs`).  Each mode by itself remains a pure
+//! function of its arguments, bitwise reproducible at any worker count.
 
 use std::collections::BTreeMap;
 
@@ -35,6 +47,57 @@ use super::pool::{EnginePool, Executor};
 const BETA1: f32 = 0.9;
 const BETA2: f32 = 0.999;
 const EPS: f32 = 1e-6;
+
+/// Samples per block in the blocked logit kernel: small enough that a
+/// block of logits stays in L1, large enough to amortize each weight-row
+/// load across the block.
+const SAMPLE_BLOCK: usize = 8;
+
+/// Which float epoch the executor's training kernels compute in.
+///
+/// Both modes are pure functions of their arguments and bitwise
+/// reproducible at any worker count; they differ only in the
+/// *association order* of the logit dot-product sums (see the module
+/// docs).  `Blocked` is the default; `PerSample` is kept as the
+/// seed-era oracle for the differential suite.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Blocked matrix-matrix kernels with fixed-order 8-lane partial
+    /// accumulators ([`dot8`]).  Current epoch.
+    #[default]
+    Blocked,
+    /// The original per-sample scalar triple loops.  Retired epoch,
+    /// retained as the differential-test oracle.
+    PerSample,
+}
+
+/// Fixed-order 8-accumulator dot product.
+///
+/// Splitting the sum across eight independent partial accumulators
+/// removes the loop-carried dependency of the serial `z += a[j]*b[j]`
+/// form, so the compiler can vectorize it without `-ffast-math`-style
+/// licence.  The combine order — `((s0+s4)+(s2+s6)) + ((s1+s5)+(s3+s7))`
+/// then the scalar tail — is fixed, making the function a pure,
+/// platform-deterministic map from its inputs to one `f32`.
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 8;
+    let mut acc = [0.0f32; 8];
+    for ch in 0..chunks {
+        let o = ch * 8;
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += a[o + l] * b[o + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 8..n {
+        tail += a[j] * b[j];
+    }
+    let s0 = (acc[0] + acc[4]) + (acc[2] + acc[6]);
+    let s1 = (acc[1] + acc[5]) + (acc[3] + acc[7]);
+    (s0 + s1) + tail
+}
 
 /// Build the [`ModelMeta`] for a reference linear model.
 ///
@@ -59,11 +122,23 @@ pub fn reference_meta(
     }
 }
 
-/// An [`EnginePool`] whose every worker runs a [`ReferenceExecutor`].
+/// An [`EnginePool`] whose every worker runs a [`ReferenceExecutor`]
+/// in the default [`KernelMode::Blocked`].
 pub fn reference_pool(meta: ModelMeta, num_workers: usize) -> Result<EnginePool> {
+    reference_pool_with_mode(meta, num_workers, KernelMode::default())
+}
+
+/// [`reference_pool`] with an explicit [`KernelMode`] — used by the
+/// differential suite to run the retired per-sample epoch side by side
+/// with the blocked one.
+pub fn reference_pool_with_mode(
+    meta: ModelMeta,
+    num_workers: usize,
+    mode: KernelMode,
+) -> Result<EnginePool> {
     let factory_meta = meta.clone();
     EnginePool::with_factory(meta, num_workers, move |_worker| {
-        ReferenceExecutor::new(factory_meta.clone())
+        ReferenceExecutor::with_mode(factory_meta.clone(), mode)
     })
 }
 
@@ -74,10 +149,16 @@ pub struct ReferenceExecutor {
     dim: usize,
     /// Fixed scan length of the `epoch` program (`meta.epoch_batches`).
     epoch_batches: usize,
+    /// Float epoch the training kernels compute in.
+    mode: KernelMode,
 }
 
 impl ReferenceExecutor {
     pub fn new(meta: ModelMeta) -> Result<ReferenceExecutor> {
+        Self::with_mode(meta, KernelMode::default())
+    }
+
+    pub fn with_mode(meta: ModelMeta, mode: KernelMode) -> Result<ReferenceExecutor> {
         let row = meta.row();
         let classes = meta.num_classes;
         if meta.dim != classes * (row + 1) {
@@ -92,6 +173,7 @@ impl ReferenceExecutor {
             classes,
             dim: meta.dim,
             epoch_batches: meta.epoch_batches.max(1),
+            mode,
         })
     }
 
@@ -101,7 +183,8 @@ impl ReferenceExecutor {
         (0..self.dim).map(|_| (rng.normal() * 0.05) as f32).collect()
     }
 
-    /// `out = W·x + b` for one sample.
+    /// `out = W·x + b` for one sample — serial scalar accumulation
+    /// (the retired per-sample epoch).
     fn logits(&self, w: &[f32], x: &[f32], out: &mut [f32]) {
         let (row, c) = (self.row, self.classes);
         for (cls, o) in out.iter_mut().enumerate() {
@@ -111,6 +194,25 @@ impl ReferenceExecutor {
                 z += wrow[j] * x[j];
             }
             *o = z;
+        }
+    }
+
+    /// Logits for a block of `bl` samples, sample-major into
+    /// `out[s*classes + cls]`.  The class-major loop order reuses each
+    /// weight row across the whole block (one load per `SAMPLE_BLOCK`
+    /// samples instead of one per sample); each entry is `bias +
+    /// dot8(wrow, xs)` — the blocked float epoch.
+    fn logits_block(&self, w: &[f32], xs: &[f32], bl: usize, out: &mut [f32]) {
+        let (row, c) = (self.row, self.classes);
+        debug_assert_eq!(xs.len(), bl * row);
+        debug_assert!(out.len() >= bl * c);
+        for cls in 0..c {
+            let wrow = &w[cls * row..(cls + 1) * row];
+            let bias = w[c * row + cls];
+            for s in 0..bl {
+                let xi = &xs[s * row..(s + 1) * row];
+                out[s * c + cls] = bias + dot8(wrow, xi);
+            }
         }
     }
 
@@ -138,7 +240,16 @@ impl ReferenceExecutor {
     }
 
     /// Mean-batch softmax gradient into `g`; returns the mean loss.
+    /// Dispatches on the executor's [`KernelMode`].
     fn grad_batch(&self, w: &[f32], x: &[f32], y: &[i32], g: &mut [f32]) -> f32 {
+        match self.mode {
+            KernelMode::Blocked => self.grad_batch_blocked(w, x, y, g),
+            KernelMode::PerSample => self.grad_batch_per_sample(w, x, y, g),
+        }
+    }
+
+    /// Retired per-sample scalar epoch (differential oracle).
+    fn grad_batch_per_sample(&self, w: &[f32], x: &[f32], y: &[i32], g: &mut [f32]) -> f32 {
         let (row, c) = (self.row, self.classes);
         let b = y.len();
         let inv_b = 1.0 / b as f32;
@@ -166,6 +277,45 @@ impl ReferenceExecutor {
         loss_sum * inv_b
     }
 
+    /// Blocked epoch: logits come from [`Self::logits_block`]; the
+    /// softmax and the gradient scatter then run per sample in the SAME
+    /// ascending order (and same axpy association) as the per-sample
+    /// path, so only the logit dot products reassociate between modes.
+    fn grad_batch_blocked(&self, w: &[f32], x: &[f32], y: &[i32], g: &mut [f32]) -> f32 {
+        let (row, c) = (self.row, self.classes);
+        let b = y.len();
+        let inv_b = 1.0 / b as f32;
+        let mut zb = vec![0.0f32; SAMPLE_BLOCK * c];
+        let mut loss_sum = 0.0f32;
+        let mut base = 0usize;
+        while base < b {
+            let bl = (b - base).min(SAMPLE_BLOCK);
+            self.logits_block(w, &x[base * row..(base + bl) * row], bl, &mut zb);
+            for s in 0..bl {
+                let i = base + s;
+                let xi = &x[i * row..(i + 1) * row];
+                let label = (y[i].rem_euclid(c as i32)) as usize;
+                let z = &mut zb[s * c..(s + 1) * c];
+                let (loss, _pred) = Self::softmax_loss(z, label);
+                loss_sum += loss;
+                for cls in 0..c {
+                    let mut gz = z[cls];
+                    if cls == label {
+                        gz -= 1.0;
+                    }
+                    let gz = gz * inv_b;
+                    g[c * row + cls] += gz;
+                    let grow = &mut g[cls * row..(cls + 1) * row];
+                    for j in 0..row {
+                        grow[j] += gz * xi[j];
+                    }
+                }
+            }
+            base += bl;
+        }
+        loss_sum * inv_b
+    }
+
     /// One Adam step in place (no bias correction — matches the stateless
     /// AOT `train` program, which has no step counter input).
     fn adam_step(w: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], eta: f32) {
@@ -177,7 +327,16 @@ impl ReferenceExecutor {
     }
 
     /// Weighted eval: `(Σ wᵢ·lossᵢ, Σ wᵢ·[predᵢ = yᵢ], Σ wᵢ)`.
+    /// Dispatches on the executor's [`KernelMode`].
     fn eval(&self, w: &[f32], x: &[f32], y: &[i32], wt: &[f32]) -> (f32, f32, f32) {
+        match self.mode {
+            KernelMode::Blocked => self.eval_blocked(w, x, y, wt),
+            KernelMode::PerSample => self.eval_per_sample(w, x, y, wt),
+        }
+    }
+
+    /// Retired per-sample scalar epoch (differential oracle).
+    fn eval_per_sample(&self, w: &[f32], x: &[f32], y: &[i32], wt: &[f32]) -> (f32, f32, f32) {
         let (row, c) = (self.row, self.classes);
         let mut z = vec![0.0f32; c];
         let mut loss_sum = 0.0f32;
@@ -193,6 +352,36 @@ impl ReferenceExecutor {
                 correct += wt[i];
             }
             weight += wt[i];
+        }
+        (loss_sum, correct, weight)
+    }
+
+    /// Blocked eval: block logits via [`Self::logits_block`], then the
+    /// softmax / reductions per sample in the same ascending order as
+    /// the per-sample path.
+    fn eval_blocked(&self, w: &[f32], x: &[f32], y: &[i32], wt: &[f32]) -> (f32, f32, f32) {
+        let (row, c) = (self.row, self.classes);
+        let b = y.len();
+        let mut zb = vec![0.0f32; SAMPLE_BLOCK * c];
+        let mut loss_sum = 0.0f32;
+        let mut correct = 0.0f32;
+        let mut weight = 0.0f32;
+        let mut base = 0usize;
+        while base < b {
+            let bl = (b - base).min(SAMPLE_BLOCK);
+            self.logits_block(w, &x[base * row..(base + bl) * row], bl, &mut zb);
+            for s in 0..bl {
+                let i = base + s;
+                let label = (y[i].rem_euclid(c as i32)) as usize;
+                let z = &mut zb[s * c..(s + 1) * c];
+                let (loss, pred) = Self::softmax_loss(z, label);
+                loss_sum += wt[i] * loss;
+                if pred == label {
+                    correct += wt[i];
+                }
+                weight += wt[i];
+            }
+            base += bl;
         }
         (loss_sum, correct, weight)
     }
@@ -455,5 +644,59 @@ mod tests {
         // Same request through different workers is bitwise stable.
         let again = h.init(9).unwrap();
         assert_eq!(w, again);
+    }
+
+    #[test]
+    fn dot8_is_deterministic_and_close_to_serial() {
+        let mut rng = crate::rng::Rng::new(42);
+        // Length 103 = 12 full 8-lane chunks + a 7-element scalar tail.
+        let a: Vec<f32> = (0..103).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..103).map(|_| rng.normal() as f32).collect();
+        let d1 = dot8(&a, &b);
+        let d2 = dot8(&a, &b);
+        assert_eq!(d1.to_bits(), d2.to_bits(), "dot8 must be pure");
+        let serial: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!(
+            (d1 - serial).abs() <= 1e-4 * (1.0 + serial.abs()),
+            "dot8 {d1} strayed from serial {serial}"
+        );
+    }
+
+    #[test]
+    fn blocked_and_per_sample_epochs_agree_closely() {
+        // row 17 exercises dot8's chunk + tail split; batch 12 spans a
+        // full SAMPLE_BLOCK plus a partial trailing block.
+        let meta = reference_meta(&[17], 5, 12, 12, 1);
+        let blocked = ReferenceExecutor::with_mode(meta.clone(), KernelMode::Blocked).unwrap();
+        let per = ReferenceExecutor::with_mode(meta, KernelMode::PerSample).unwrap();
+        let dim = blocked.dim;
+        let mut rng = crate::rng::Rng::new(7);
+        let w: Vec<f32> = (0..dim).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let x: Vec<f32> = (0..12 * 17).map(|_| rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..12i32).map(|i| i % 5).collect();
+
+        let mut gb = vec![0.0f32; dim];
+        let mut gp = vec![0.0f32; dim];
+        let lb = blocked.grad_batch(&w, &x, &y, &mut gb);
+        let lp = per.grad_batch(&w, &x, &y, &mut gp);
+        assert!((lb - lp).abs() <= 1e-4 * (1.0 + lp.abs()), "loss: {lb} vs {lp}");
+        for (a, b) in gb.iter().zip(&gp) {
+            assert!((a - b).abs() <= 1e-4, "grad lane diverged: {a} vs {b}");
+        }
+
+        let wt = vec![1.0f32; 12];
+        let (el_b, ec_b, ew_b) = blocked.eval(&w, &x, &y, &wt);
+        let (el_p, ec_p, ew_p) = per.eval(&w, &x, &y, &wt);
+        assert!((el_b - el_p).abs() <= 1e-3 * (1.0 + el_p.abs()));
+        // A logit near-tie may flip one argmax between epochs; more than
+        // one flip on random data means the kernels disagree for real.
+        assert!((ec_b - ec_p).abs() <= 1.0, "correct: {ec_b} vs {ec_p}");
+        assert_eq!(ew_b, ew_p);
+
+        // Each epoch is itself bitwise reproducible call-to-call.
+        let mut gb2 = vec![0.0f32; dim];
+        let lb2 = blocked.grad_batch(&w, &x, &y, &mut gb2);
+        assert_eq!(lb.to_bits(), lb2.to_bits());
+        assert_eq!(gb, gb2);
     }
 }

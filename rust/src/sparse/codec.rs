@@ -177,6 +177,47 @@ fn mask_bits_for(enc: MaskEncoding, dim: usize, k: usize) -> (u64, MaskEncoding)
     }
 }
 
+/// Push the canonical `min{bitmap, index-list}` position coding for
+/// `indices` (sorted unique, `< dim`) into an open contiguous stream —
+/// bit-for-bit the coding [`encode_positions`] produces, minus its byte
+/// padding.  This is the shared mid-stream form every wire body uses
+/// (`algorithms::wire` and the fused device-side encoders).
+///
+/// The bitmap branch emits whole 64-lane words (`push(word, ≤64)`), not
+/// one bit per lane: the LSB-first stream order makes the word write
+/// byte-identical to `d` single-bit pushes while costing `O(k + d/64)`
+/// instead of `O(d)` packer calls — this coding is on the device hot path
+/// once per round per device.
+pub fn pack_positions(p: &mut BitPacker, dim: usize, indices: &[u32]) {
+    let (_, enc) = mask_bits(dim, indices.len());
+    match enc {
+        MaskEncoding::Bitmap => {
+            let mut next = indices.iter().peekable();
+            let mut base = 0usize;
+            while base < dim {
+                let n = (dim - base).min(64);
+                let mut word = 0u64;
+                while let Some(&&i) = next.peek() {
+                    let off = (i as usize).wrapping_sub(base);
+                    if off >= n {
+                        break;
+                    }
+                    word |= 1u64 << off;
+                    next.next();
+                }
+                p.push(word, n as u64);
+                base += n;
+            }
+        }
+        MaskEncoding::IndexList => {
+            let bits = index_bits(dim);
+            for &i in indices {
+                p.push(i as u64, bits);
+            }
+        }
+    }
+}
+
 /// Pack `indices` (sorted unique lanes of `[0, dim)`) with the cheaper
 /// position encoding — the shared front half of every sparse wire format
 /// (f32 [`encode`] and the quantized [`crate::quant::SsmQUplink`] alike).
@@ -675,6 +716,24 @@ mod tests {
             try_decode(&short_pos),
             Err(DecodeError::PayloadSize { .. })
         ));
+    }
+
+    #[test]
+    fn pack_positions_is_byte_identical_to_encode_positions() {
+        // The mid-stream packer (word-at-a-time bitmap) must write exactly
+        // the bits `encode_positions` does — same coding choice, same
+        // order, same zero padding once the stream ends on the boundary.
+        let mut rng = Rng::new(41);
+        for &d in &[1usize, 7, 8, 63, 64, 65, 100, 1000, 4096] {
+            let x: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            for k in [0usize, 1, d / 7 + 1, d / 2, d.saturating_sub(1), d] {
+                let idx = top_k_indices(&x, k);
+                let (_, staged) = encode_positions(d, &idx);
+                let mut p = BitPacker::with_capacity(d);
+                pack_positions(&mut p, d, &idx);
+                assert_eq!(p.finish(), staged, "d={d} k={k}");
+            }
+        }
     }
 
     #[test]

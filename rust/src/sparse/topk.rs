@@ -1,17 +1,31 @@
 //! Exact top-k selection by magnitude (paper Definition 1).
 //!
 //! The SSM is `1_{Top_k}(ΔW)` (eq. 28), so top-k selection sits on the
-//! device hot path once per round per device.  A full sort is `O(d log d)`;
-//! this module uses **quickselect** over the magnitudes (`O(d)` expected)
-//! followed by a small sort of the selected indices.  Ties at the threshold
+//! device hot path once per round per device.  This module uses a chunked
+//! **MSB-radix select** over a monotone integer key of `|x|`: for any f32,
+//! `to_bits(x) & 0x7FFF_FFFF` orders non-negative magnitudes exactly as
+//! the values do (zeros, subnormals and infinities included; NaN payloads
+//! sort above `+inf`, matching `total_cmp` on the absolute value).  Four
+//! byte-granularity passes narrow the candidate pool to the threshold key,
+//! then one ascending scan emits the selected indices — `O(d)` worst case
+//! (quickselect's adversarial `O(d²)` is gone) and the output is produced
+//! already sorted, so no post-hoc sort is needed.  Ties at the threshold
 //! are broken by lower-index-first so the mask always has *exactly* `k`
 //! ones — `Definition 1`'s permutation tie-break — which keeps the wire
 //! cost model exact (the python kernel keeps ties instead; the cross-layer
 //! tests use tie-free inputs).
 
+/// Monotone sort key: integer order of `key(x)` == value order of `|x|`.
+#[inline]
+fn key(v: f32) -> u32 {
+    v.to_bits() & 0x7FFF_FFFF
+}
+
 /// Indices of the `k` largest `|x|`, returned sorted ascending.
 ///
 /// `k` is clamped to `[0, d]`.  Exactly `min(k, d)` indices are returned.
+/// Tie-break: magnitude descending, then index ascending — identical to a
+/// stable full sort on `(|x| desc, index asc)`.
 pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
     let d = x.len();
     let k = k.min(d);
@@ -21,61 +35,83 @@ pub fn top_k_indices(x: &[f32], k: usize) -> Vec<u32> {
     if k == d {
         return (0..d as u32).collect();
     }
-    // Quickselect on (magnitude, index) keys; order: larger magnitude first,
-    // then smaller index first.
-    let mut idx: Vec<u32> = (0..d as u32).collect();
-    let mut lo = 0usize;
-    let mut hi = d;
-    let mut state = 0x9E37_79B9_7F4A_7C15u64 ^ (d as u64);
-    while hi - lo > 1 {
-        // Pseudo-random pivot avoids adversarial quadratic behaviour.
-        state ^= state << 13;
-        state ^= state >> 7;
-        state ^= state << 17;
-        let pivot_at = lo + (state as usize) % (hi - lo);
-        idx.swap(lo, pivot_at);
-        let pivot = idx[lo];
-        let pm = mag(x, pivot);
-        let mut i = lo + 1;
-        let mut j = hi - 1;
+    let keys: Vec<u32> = x.iter().map(|&v| key(v)).collect();
+
+    // MSB-radix refinement: after each level we know the top bytes of the
+    // threshold key `t` (the k-th largest key) and hold the candidate pool
+    // of indices whose key matches that prefix.  `need` counts how many of
+    // the pool must still be selected.
+    let mut prefix: u32 = 0;
+    let mut pool: Vec<u32> = Vec::new();
+    let mut need = k;
+    let mut take_all_shift: Option<u32> = None;
+    for (level, shift) in [24u32, 16, 8, 0].into_iter().enumerate() {
+        let mut hist = [0usize; 256];
+        if level == 0 {
+            for &ky in &keys {
+                hist[((ky >> shift) & 0xFF) as usize] += 1;
+            }
+        } else {
+            for &i in &pool {
+                hist[((keys[i as usize] >> shift) & 0xFF) as usize] += 1;
+            }
+        }
+        // Walk buckets high→low to the one containing the need-th largest.
+        let mut b = 255usize;
         loop {
-            while i <= j && before(x, idx[i], pm, pivot) {
-                i += 1;
-            }
-            while i <= j && !before(x, idx[j], pm, pivot) {
-                j -= 1;
-            }
-            if i >= j {
+            let c = hist[b];
+            if need <= c {
                 break;
             }
-            idx.swap(i, j);
+            need -= c;
+            b -= 1;
         }
-        idx.swap(lo, i - 1);
-        let rank = i - 1; // pivot's final position
-        match rank.cmp(&k) {
-            std::cmp::Ordering::Equal => break,
-            std::cmp::Ordering::Less => lo = rank + 1,
-            std::cmp::Ordering::Greater => hi = rank,
-        }
-        if lo >= k {
+        prefix |= (b as u32) << shift;
+        if need == hist[b] {
+            // The whole bucket is selected: every key whose top bits are
+            // >= the prefix (at this granularity) is in the top-k, and
+            // nothing else is.  No finer refinement can change the set.
+            take_all_shift = Some(shift);
             break;
         }
+        if level == 0 {
+            pool = (0..d as u32)
+                .filter(|&i| ((keys[i as usize] >> shift) & 0xFF) as usize == b)
+                .collect();
+        } else {
+            pool.retain(|&i| ((keys[i as usize] >> shift) & 0xFF) as usize == b);
+        }
     }
-    let mut out: Vec<u32> = idx[..k].to_vec();
-    out.sort_unstable();
+
+    // One ascending scan emits exactly k indices, already sorted.  The
+    // ascending order *is* the smallest-index tie-break at the threshold.
+    let mut out = Vec::with_capacity(k);
+    match take_all_shift {
+        Some(shift) => {
+            let p = prefix >> shift;
+            for i in 0..d as u32 {
+                if keys[i as usize] >> shift >= p {
+                    out.push(i);
+                }
+            }
+        }
+        None => {
+            // All four levels ran: `prefix` is the exact threshold key and
+            // `need` of its ties are taken, lowest index first.
+            let mut eq_left = need;
+            for i in 0..d as u32 {
+                let ky = keys[i as usize];
+                if ky > prefix {
+                    out.push(i);
+                } else if ky == prefix && eq_left > 0 {
+                    out.push(i);
+                    eq_left -= 1;
+                }
+            }
+        }
+    }
+    debug_assert_eq!(out.len(), k);
     out
-}
-
-#[inline]
-fn mag(x: &[f32], i: u32) -> f32 {
-    x[i as usize].abs()
-}
-
-/// Strict ordering: does element `a` come before the pivot?
-#[inline]
-fn before(x: &[f32], a: u32, pivot_mag: f32, pivot_idx: u32) -> bool {
-    let am = mag(x, a);
-    am > pivot_mag || (am == pivot_mag && a < pivot_idx)
 }
 
 /// The k-th largest magnitude (the Pallas kernel's `tau`).
@@ -113,11 +149,12 @@ mod tests {
 
     fn brute_force(x: &[f32], k: usize) -> Vec<u32> {
         let mut idx: Vec<u32> = (0..x.len() as u32).collect();
+        // total_cmp, not partial_cmp().unwrap(): a stray NaN input should
+        // fail the equality assert honestly, not panic the comparator.
         idx.sort_by(|&a, &b| {
             x[b as usize]
                 .abs()
-                .partial_cmp(&x[a as usize].abs())
-                .unwrap()
+                .total_cmp(&x[a as usize].abs())
                 .then(a.cmp(&b))
         });
         let mut out: Vec<u32> = idx[..k.min(x.len())].to_vec();
@@ -148,6 +185,16 @@ mod tests {
         assert!(top_k_indices(&[], 3).is_empty());
         assert!(top_k_indices(&[1.0, 2.0], 0).is_empty());
         assert_eq!(top_k_indices(&[1.0, 2.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn signed_zeros_and_subnormals() {
+        // -0.0 and +0.0 share magnitude 0 (key 0): index tie-break applies.
+        let x = vec![-0.0f32, 0.0, 1.0e-42, -1.0e-44, 0.0];
+        assert_eq!(top_k_indices(&x, 1), vec![2]); // largest subnormal
+        assert_eq!(top_k_indices(&x, 2), vec![2, 3]);
+        assert_eq!(top_k_indices(&x, 3), vec![0, 2, 3]); // first zero by index
+        assert_eq!(top_k_indices(&x, 4), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use fedadam_ssm::coordinator::sampler::{self, AvailabilitySampler, Participation
 use fedadam_ssm::coordinator::{aggregate, aggregate_sharded, GlobalState, ShardedAccumulator};
 use fedadam_ssm::quant::sparse_uniform::{
     reconstruct, sparse_uniform_compress, sparse_uniform_decompress, ssm_q_decode, ssm_q_encode,
+    ssm_q_encode_fused,
 };
 use fedadam_ssm::quant::{onebit_compress, onebit_decompress, uniform_compress, uniform_decompress, ErrorFeedback};
 use fedadam_ssm::rng::Rng;
@@ -266,6 +267,173 @@ fn prop_ssm_q_packed_bits_equal_priced_ledger_formula() {
         assert_eq!(sw.values, sparse_uniform_decompress(&msg.w));
         assert_eq!(sm.values, sv.values, "same input values, same grid");
     }
+}
+
+#[test]
+fn prop_fused_ssm_q_encode_is_byte_identical_to_staged_pipeline() {
+    // PR 10 tentpole contract: the single-pass fused encoder
+    // (sparsify→quantize→pack straight into the wire body) must produce
+    // EXACTLY the bytes of the staged `ssm_q_encode` → `WireBody::SsmQ`
+    // → `encode()` pipeline — and the same dequantized lane values — for
+    // random (d, k, s) with exact-zero kept lanes, all-zero (scale-0)
+    // vectors, and code widths that land on and off byte boundaries.
+    let mut rng = Rng::new(5001);
+    let mut cases = 0usize;
+    for trial in 0..288 {
+        let d = 1 + rng.below(4000);
+        let k = 1 + rng.below(d);
+        // Cycle forced widths (1-bit, 2-bit, 8-bit codes) with random s.
+        let s = match trial % 4 {
+            0 => 2u32,
+            1 => 4,
+            2 => 256,
+            _ => 2 + rng.below(300) as u32,
+        };
+        let scores = gen_vec(&mut rng, d);
+        let idx = top_k_indices(&scores, k);
+        let all_zero = trial % 9 == 0;
+        let mut gen_dense = |with_zero_lanes: bool| -> Vec<f32> {
+            (0..d)
+                .map(|_| {
+                    if all_zero || (with_zero_lanes && rng.below(4) == 0) {
+                        0.0
+                    } else {
+                        rng.normal() as f32
+                    }
+                })
+                .collect()
+        };
+        let dw = gen_dense(true);
+        let dm = gen_dense(false);
+        let dv = gen_dense(true);
+
+        let fused = ssm_q_encode_fused(d, &idx, &dw, &dm, &dv, s);
+        let gather = |src: &[f32]| -> Vec<f32> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let staged = ssm_q_encode(d, &idx, &gather(&dw), &gather(&dm), &gather(&dv), s);
+        assert_eq!(fused.bits, staged.wire_bits(), "trial {trial}: d={d} k={k} s={s}");
+        let (sw, sm, sv) = ssm_q_decode(&staged);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&fused.w), bits(&sw.values), "trial {trial}: w recon");
+        assert_eq!(bits(&fused.m), bits(&sm.values), "trial {trial}: m recon");
+        assert_eq!(bits(&fused.v), bits(&sv.values), "trial {trial}: v recon");
+        assert_eq!(
+            fused.bytes,
+            WireBody::SsmQ(staged).encode(),
+            "trial {trial}: d={d} k={k} s={s}: fused bytes diverge from staged pack"
+        );
+        cases += 1;
+    }
+    assert!(cases >= 256, "property needs >= 256 cases, ran {cases}");
+}
+
+#[test]
+fn prop_fused_shared_mask_wire_is_byte_identical_to_staged() {
+    // The f32 SSM codec's fused path: `compress_wire` on fedadam-ssm
+    // writes the SharedMask body in one pass (word-at-a-time bitmap +
+    // verbatim f32 bits); it must match a hand-staged SharedMask encode
+    // bit for bit, and price the same ledger bits.
+    let mut rng = Rng::new(5002);
+    for trial in 0..100 {
+        let d = 2 + rng.below(2000);
+        let mut cfg = ExperimentConfig::default();
+        cfg.algorithm = "fedadam-ssm".into();
+        cfg.devices = 1;
+        cfg.sparsity = 0.01 + 0.6 * rng.uniform();
+        let mut a = algorithms::build(&cfg, d).unwrap();
+        let delta = LocalDelta {
+            dw: gen_vec(&mut rng, d),
+            dm: gen_vec(&mut rng, d),
+            dv: gen_vec(&mut rng, d),
+            weight: 1.0,
+        };
+        let wire = a.compress_wire(trial, 0, delta.clone()).unwrap();
+        let k = wire.body.k();
+        let idx = top_k_indices(&delta.dw, k);
+        let gather = |src: &[f32]| -> Vec<f32> { idx.iter().map(|&i| src[i as usize]).collect() };
+        let staged = WireBody::SharedMask {
+            dim: d,
+            indices: idx,
+            w: gather(&delta.dw),
+            m: gather(&delta.dm),
+            v: gather(&delta.dv),
+        };
+        assert_eq!(staged.wire_bits(), wire.bits, "trial {trial}: d={d} k={k}");
+        assert_eq!(
+            staged.encode(),
+            wire.encode_body().unwrap(),
+            "trial {trial}: d={d} k={k}: fused SharedMask bytes diverge"
+        );
+    }
+}
+
+#[test]
+fn prop_radix_topk_matches_sort_oracle_on_adversarial_inputs() {
+    // PR 10: `top_k_indices` is an MSB-radix select over the monotone
+    // u32 key of |x|.  Its contract is UNCHANGED from the scalar
+    // quickselect: exactly the k largest by (|x| desc, index asc), output
+    // ascending — checked against a brute-force total_cmp sort oracle on
+    // adversarial inputs (all-equal, ±0.0, subnormals, tie-heavy small
+    // alphabets, d up to 1e5), plus the k=0 ⇒ +inf threshold contract.
+    let mut rng = Rng::new(5003);
+    let mut cases = 0usize;
+    for trial in 0..300 {
+        let d = if trial % 25 == 0 {
+            1 + rng.below(100_000)
+        } else {
+            1 + rng.below(3000)
+        };
+        let x: Vec<f32> = match trial % 5 {
+            0 => vec![1.25f32; d], // all equal: pure index tie-break
+            1 => (0..d).map(|i| if i % 2 == 0 { 0.0 } else { -0.0 }).collect(),
+            2 => (0..d)
+                .map(|_| match rng.below(5) {
+                    0 => -0.0,
+                    1 => 1.0e-42,  // subnormal
+                    2 => -1.0e-45, // smallest-magnitude subnormal
+                    3 => f32::MIN_POSITIVE,
+                    _ => rng.normal() as f32,
+                })
+                .collect(),
+            3 => (0..d)
+                .map(|_| [0.0f32, 1.0, -1.0, 2.0][rng.below(4)])
+                .collect(), // tie-heavy
+            _ => gen_vec(&mut rng, d),
+        };
+        let k = match trial % 7 {
+            0 => 0,
+            1 => d,
+            _ => rng.below(d + 1),
+        };
+
+        let idx = top_k_indices(&x, k);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_by(|&a, &b| {
+            x[b as usize]
+                .abs()
+                .total_cmp(&x[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut want = order[..k].to_vec();
+        want.sort_unstable();
+        assert_eq!(idx, want, "trial {trial}: d={d} k={k}");
+
+        let tau = top_k_threshold(&x, k);
+        if k == 0 {
+            assert_eq!(tau, f32::INFINITY, "trial {trial}: k=0 threshold");
+        } else {
+            let min_kept = idx
+                .iter()
+                .map(|&i| x[i as usize].abs())
+                .fold(f32::INFINITY, f32::min);
+            assert_eq!(
+                tau.to_bits(),
+                min_kept.to_bits(),
+                "trial {trial}: d={d} k={k} threshold"
+            );
+        }
+        cases += 1;
+    }
+    assert!(cases >= 256, "property needs >= 256 cases, ran {cases}");
 }
 
 #[test]

@@ -1,0 +1,154 @@
+//! Differential suite for the PR-10 blocked reference kernels.
+//!
+//! [`KernelMode::Blocked`] (the default float epoch: blocked logits via
+//! fixed-order 8-lane partial accumulators) is checked against the
+//! retained [`KernelMode::PerSample`] oracle (the seed-era scalar
+//! loops) on full coordinator trajectories: losses and accuracy must
+//! agree within float-reassociation tolerance, never bit-for-bit — and
+//! the blocked path must itself hold the repo's determinism contract,
+//! bit-identical across `num_workers` × `agg_shards` × `pipeline_depth`.
+
+use fedadam_ssm::config::{ExperimentConfig, ParticipationMode};
+use fedadam_ssm::coordinator::Coordinator;
+use fedadam_ssm::metrics::ExperimentLog;
+use fedadam_ssm::runtime::{reference_meta, reference_pool_with_mode, KernelMode, ModelMeta};
+
+const INPUT_SHAPE: [usize; 3] = [4, 4, 1]; // row 16
+const CLASSES: usize = 10;
+
+fn meta() -> ModelMeta {
+    // dim = 10 * (16 + 1) = 170
+    reference_meta(&INPUT_SHAPE, CLASSES, 4, 8, 2)
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "reference-kernels".into();
+    cfg.model = "reference-linear".into();
+    cfg.algorithm = "fedadam-ssm".into();
+    cfg.participation_mode = ParticipationMode::Uniform;
+    cfg.rounds = 4;
+    cfg.devices = 3;
+    cfg.local_epochs = 1;
+    cfg.max_batches_per_epoch = 2;
+    cfg.lr = 0.02;
+    cfg.train_samples = 96;
+    cfg.test_samples = 50; // ragged final eval batch: pads every eval
+    cfg.seed = 7;
+    cfg.eval_every = 1;
+    cfg.warmup_rounds = 2;
+    cfg.num_workers = 2;
+    cfg.agg_shards = 0;
+    cfg
+}
+
+fn run(cfg: ExperimentConfig, mode: KernelMode) -> (ExperimentLog, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let pool = reference_pool_with_mode(meta(), cfg.num_workers, mode).expect("reference pool");
+    let mut coord = Coordinator::with_pool(cfg, pool).expect("coordinator");
+    let log = coord.run().expect("run");
+    let gs = coord.global();
+    (log, gs.w.clone(), gs.m.clone(), gs.v.clone())
+}
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+#[test]
+fn blocked_trajectory_tracks_the_per_sample_oracle() {
+    // The two float epochs differ only in the association order of the
+    // logit dot products, so full training trajectories must stay close
+    // — a kernel bug (wrong lane, dropped tail, bad block boundary)
+    // diverges by orders of magnitude, while legitimate reassociation
+    // noise stays in the low decimals over 4 rounds of this model.
+    let (log_b, w_b, _, _) = run(base_cfg(), KernelMode::Blocked);
+    let (log_p, w_p, _, _) = run(base_cfg(), KernelMode::PerSample);
+    assert_eq!(log_b.rounds.len(), log_p.rounds.len());
+    for (a, b) in log_b.rounds.iter().zip(&log_p.rounds) {
+        assert!(a.train_loss.is_finite() && b.train_loss.is_finite());
+        assert!(
+            rel_close(a.train_loss, b.train_loss, 0.05),
+            "round {}: train loss diverged: {} vs {}",
+            a.round,
+            a.train_loss,
+            b.train_loss
+        );
+        assert!(
+            rel_close(a.test_loss, b.test_loss, 0.05),
+            "round {}: test loss diverged: {} vs {}",
+            a.round,
+            a.test_loss,
+            b.test_loss
+        );
+        // 50 test samples: each argmax flip moves accuracy by 0.02.
+        assert!(
+            (a.test_accuracy - b.test_accuracy).abs() <= 0.2,
+            "round {}: accuracy diverged: {} vs {}",
+            a.round,
+            a.test_accuracy,
+            b.test_accuracy
+        );
+        // The ledger prices wire bits, not floats: both epochs must
+        // charge exactly the same bits every round.
+        assert_eq!(a.uplink_bits, b.uplink_bits, "round {}", a.round);
+        assert_eq!(a.downlink_bits, b.downlink_bits, "round {}", a.round);
+    }
+    // Final models agree lane-by-lane within reassociation tolerance.
+    assert_eq!(w_b.len(), w_p.len());
+    for (i, (a, b)) in w_b.iter().zip(&w_p).enumerate() {
+        assert!(
+            (a - b).abs() <= 0.05 * (1.0 + a.abs().max(b.abs())),
+            "final W lane {i} diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn blocked_path_is_bit_identical_across_workers_shards_depth() {
+    // The new epoch inherits the full determinism contract: blocked
+    // kernels are pure functions of their arguments, so every logged
+    // number and the final (W, M, V) are byte-identical at any
+    // (num_workers, agg_shards, pipeline_depth).
+    let run_with = |workers: usize, shards: usize, depth: usize| {
+        let mut cfg = base_cfg();
+        cfg.rounds = 5;
+        cfg.eval_every = 2;
+        cfg.participation = 0.75; // exercise the sampler path too
+        cfg.num_workers = workers;
+        cfg.agg_shards = shards;
+        cfg.pipeline_depth = depth;
+        run(cfg, KernelMode::Blocked)
+    };
+    let (log1, w1, m1, v1) = run_with(1, 1, 0);
+    for (workers, shards, depth) in [(2, 1, 0), (1, 4, 1), (3, 7, 2), (2, 170, 3)] {
+        let (log, w, m, v) = run_with(workers, shards, depth);
+        let tag = format!("({workers}w/{shards}s/d{depth})");
+        assert_eq!(w1, w, "{tag}: global W diverged");
+        assert_eq!(m1, m, "{tag}: global M diverged");
+        assert_eq!(v1, v, "{tag}: global V diverged");
+        assert_eq!(log1.rounds.len(), log.rounds.len());
+        for (a, b) in log1.rounds.iter().zip(&log.rounds) {
+            let tag = format!("{tag} round {}", a.round);
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "{tag}");
+            assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{tag}");
+            assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits(), "{tag}");
+            assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+            assert_eq!(a.downlink_bits, b.downlink_bits, "{tag}");
+            assert_eq!(a.update_norm.to_bits(), b.update_norm.to_bits(), "{tag}");
+        }
+    }
+}
+
+#[test]
+fn per_sample_oracle_is_itself_reproducible() {
+    // The retired epoch stays a valid oracle only if it is still a pure
+    // function of its inputs: two independent runs must be bit-identical.
+    let (log_a, w_a, _, _) = run(base_cfg(), KernelMode::PerSample);
+    let (log_b, w_b, _, _) = run(base_cfg(), KernelMode::PerSample);
+    assert_eq!(w_a, w_b);
+    for (a, b) in log_a.rounds.iter().zip(&log_b.rounds) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+        assert_eq!(a.test_accuracy.to_bits(), b.test_accuracy.to_bits());
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+}

@@ -21,12 +21,15 @@
 #      components aren't installed)
 #   7. rustdoc with -D warnings (broken intra-doc links fail) + doc-tests
 #   8. benches stay buildable (cargo bench --no-run)
-#   9. perf pins: e2e_round and transport_loopback --json vs the
-#      checked-in BENCH_*.json (prints WARN on >10% wall-clock
-#      regression; never fails — absolute numbers are host-dependent).
-#      transport_loopback additionally hard-asserts in-bench that a real
-#      device agent's RSS growth stays flat between fleet 1e3 and 1e5
-#      (the agent-round-fleet-* cases; -snap pins snapshot overhead)
+#   9. perf pins: e2e_round, transport_loopback, topk, quant and
+#      agg_scaling --json vs the checked-in BENCH_*.json (prints WARN on
+#      >10% wall-clock regression; never fails — absolute numbers are
+#      host-dependent).  transport_loopback additionally hard-asserts
+#      in-bench that a real device agent's RSS growth stays flat between
+#      fleet 1e3 and 1e5 (the agent-round-fleet-* cases; -snap pins
+#      snapshot overhead); topk/quant re-assert in-bench that the radix
+#      select matches the sort oracle and the fused encode stays
+#      byte-identical to the staged pipeline
 #  10. fleet lane: fleet_scaling in quick mode (fleets 1e3/1e5) — the
 #      per-round flatness assert and the dense-vs-spilled residual
 #      conformance leg are hard gates; the BENCH_fleet_scaling.json
@@ -126,6 +129,24 @@ FEDADAM_BENCH_QUICK=1 \
   cargo bench --bench transport_loopback -- --json \
     --json-out target/BENCH_transport_loopback.json \
     --baseline BENCH_transport_loopback.json
+
+step "perf pin: topk --json vs BENCH_topk.json (warn-only)"
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench topk -- --json \
+    --json-out target/BENCH_topk.json \
+    --baseline BENCH_topk.json
+
+step "perf pin: quant --json vs BENCH_quant.json (warn-only)"
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench quant -- --json \
+    --json-out target/BENCH_quant.json \
+    --baseline BENCH_quant.json
+
+step "perf pin: agg_scaling --json vs BENCH_agg_scaling.json (warn-only)"
+FEDADAM_BENCH_QUICK=1 \
+  cargo bench --bench agg_scaling -- --json \
+    --json-out target/BENCH_agg_scaling.json \
+    --baseline BENCH_agg_scaling.json
 
 step "fleet lane: fleet_scaling flatness + spill conformance (quick: 1e3/1e5)"
 # Hard gates (in-bench asserts): per-round wall-clock flat in fleet size,
